@@ -1,0 +1,157 @@
+//! END-TO-END DRIVER (the repo's required full-system validation).
+//!
+//! Exercises every layer of the stack on a real workload, proving they
+//! compose:
+//!
+//!   L1 Pallas fake-quant/erf kernels ──lowered into──► L2 JAX calib
+//!   graphs ──AOT──► HLO text ──PJRT──► L3 Rust pipeline:
+//!
+//! 1. FP32 baseline evaluation (2,048 held-out images).
+//! 2. Weight-only 4-bit PTQ with Attention Round (1,024-image
+//!    calibration, per-module Adam — the paper's headline configuration)
+//!    vs the Nearest baseline.
+//! 3. Weights + activations 4/4.
+//! 4. Mixed-precision Algorithm-1 allocation at [3,4,5,6].
+//! 5. Throughput + phase timing report (feeds EXPERIMENTS.md).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use std::time::Instant;
+
+use attention_round::coordinator::config::CalibConfig;
+use attention_round::coordinator::evaluate::evaluate;
+use attention_round::coordinator::model::LoadedModel;
+use attention_round::coordinator::pipeline::{
+    quantize_and_eval, resolve_uniform_bits, QuantSpec,
+};
+use attention_round::data::Split;
+use attention_round::io::manifest::Manifest;
+use attention_round::mixed;
+use attention_round::quant::rounding::Rounding;
+use attention_round::report::Table;
+use attention_round::runtime::Runtime;
+use attention_round::util::logging;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    logging::init();
+    let t_start = Instant::now();
+    let artifacts = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let model_name =
+        std::env::var("REPRO_MODEL").unwrap_or_else(|_| "resnet18t".into());
+
+    let manifest = Manifest::load(&artifacts)?;
+    let rt = Runtime::new(artifacts.as_str())?;
+    let model = LoadedModel::load(&manifest, &model_name)?;
+    let data_dir = manifest.path(&manifest.dataset.dir);
+    let calib = Split::load(&data_dir, "calib")?;
+    let eval = Split::load(&data_dir, "eval")?;
+    println!(
+        "== end-to-end: {} ({} layers, {} params) on {} ==",
+        model_name,
+        model.num_layers(),
+        model.total_params(),
+        rt.platform()
+    );
+
+    let mut table = Table::new(
+        format!("End-to-end results — {model_name}"),
+        &["Stage", "Bits(W/A)", "Top-1 %", "Wall s"],
+    );
+
+    // 1. FP32 baseline (re-measured through the PJRT path, not trusted
+    //    from the manifest).
+    let t0 = Instant::now();
+    let fp_acc = evaluate(&rt, &manifest, &model, &model.weights, &eval)?;
+    table.row(vec![
+        "FP32 eval".into(),
+        "32/32".into(),
+        format!("{:.2}", fp_acc * 100.0),
+        format!("{:.1}", t0.elapsed().as_secs_f64()),
+    ]);
+    let drift = (fp_acc - model.info.fp_acc).abs();
+    assert!(
+        drift < 0.01,
+        "PJRT eval drifted {drift} from the build-time accuracy — artifact mismatch?"
+    );
+
+    // 2. 4-bit weights: Nearest baseline vs Attention Round.
+    let cfg = CalibConfig::quick();
+    for (label, method) in [
+        ("Nearest PTQ", Rounding::Nearest),
+        ("Attention Round PTQ", Rounding::Attention),
+    ] {
+        let mut c = cfg.clone();
+        c.method = method;
+        let out = quantize_and_eval(
+            &rt,
+            &manifest,
+            &QuantSpec {
+                model: model_name.clone(),
+                wbits: resolve_uniform_bits(&model, 4),
+                abits: None,
+            },
+            &c,
+            &calib,
+            &eval,
+        )?;
+        table.row(vec![
+            label.into(),
+            "4/32".into(),
+            format!("{:.2}", out.acc * 100.0),
+            format!("{:.1}", out.wall_s),
+        ]);
+    }
+
+    // 3. Weights + activations.
+    let out44 = quantize_and_eval(
+        &rt,
+        &manifest,
+        &QuantSpec {
+            model: model_name.clone(),
+            wbits: resolve_uniform_bits(&model, 4),
+            abits: Some(4),
+        },
+        &cfg,
+        &calib,
+        &eval,
+    )?;
+    table.row(vec![
+        "Attention Round PTQ".into(),
+        "4/4".into(),
+        format!("{:.2}", out44.acc * 100.0),
+        format!("{:.1}", out44.wall_s),
+    ]);
+
+    // 4. Mixed precision via Algorithm 1.
+    let alloc = mixed::allocate(&model.info.layers, &model.weights, &[3, 4, 5, 6], 1e-3)?;
+    let out_mixed = quantize_and_eval(
+        &rt,
+        &manifest,
+        &QuantSpec {
+            model: model_name.clone(),
+            wbits: alloc.bits.clone(),
+            abits: None,
+        },
+        &cfg,
+        &calib,
+        &eval,
+    )?;
+    table.row(vec![
+        format!("Mixed [3,4,5,6] ({})", mixed::format_size_mb(alloc.size_bytes)),
+        "mixed/32".into(),
+        format!("{:.2}", out_mixed.acc * 100.0),
+        format!("{:.1}", out_mixed.wall_s),
+    ]);
+
+    println!("{}", table.render());
+    println!("--- pipeline metrics ---\n{}", rt.metrics.report());
+    println!("total wall: {:.1}s", t_start.elapsed().as_secs_f64());
+
+    // Invariants this driver asserts (the "does it compose" signal):
+    let rows: Vec<f64> = vec![fp_acc, out44.acc, out_mixed.acc];
+    assert!(rows.iter().all(|&a| a.is_finite() && a > 1.0 / 16.0),
+        "every stage must beat random chance");
+    Ok(())
+}

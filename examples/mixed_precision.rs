@@ -1,0 +1,94 @@
+//! Mixed-precision allocation (paper §3.4, Algorithm 1) walkthrough:
+//! compute per-layer coding lengths, cluster them onto a bit list, then
+//! calibrate + evaluate the mixed model against single-precision at the
+//! same size budget.
+//!
+//! ```bash
+//! cargo run --release --example mixed_precision
+//! ```
+
+use attention_round::coordinator::config::CalibConfig;
+use attention_round::coordinator::model::LoadedModel;
+use attention_round::coordinator::pipeline::{
+    quantize_and_eval, resolve_uniform_bits, QuantSpec,
+};
+use attention_round::data::Split;
+use attention_round::io::manifest::Manifest;
+use attention_round::mixed;
+use attention_round::runtime::Runtime;
+use attention_round::util::logging;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    logging::init();
+    let artifacts = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = Manifest::load(&artifacts)?;
+    let rt = Runtime::new(artifacts.as_str())?;
+    let model = LoadedModel::load(&manifest, "resnet18t")?;
+    let data_dir = manifest.path(&manifest.dataset.dir);
+    let calib = Split::load(&data_dir, "calib")?;
+    let eval = Split::load(&data_dir, "eval")?;
+
+    // Algorithm 1: coding length per layer -> 1-D k-means -> bit list.
+    let bit_list = [3u8, 4, 5, 6];
+    let alloc = mixed::allocate(&model.info.layers, &model.weights, &bit_list, 1e-3)?;
+    println!("Algorithm 1 allocation (ε²=1e-3):");
+    for (l, (&bits, &len)) in model
+        .info
+        .layers
+        .iter()
+        .zip(alloc.bits.iter().zip(alloc.lengths.iter()))
+    {
+        println!(
+            "  {:<16} L(W)={:>8.1} bits -> {}b{}",
+            l.name,
+            len,
+            bits,
+            if l.downsample {
+                "  (downsample, narrowest — §4.5.3)"
+            } else {
+                ""
+            }
+        );
+    }
+    println!("mixed model size: {}", mixed::format_size_mb(alloc.size_bytes));
+
+    let cfg = CalibConfig::quick();
+    let mixed_out = quantize_and_eval(
+        &rt,
+        &manifest,
+        &QuantSpec {
+            model: model.info.name.clone(),
+            wbits: alloc.bits.clone(),
+            abits: None,
+        },
+        &cfg,
+        &calib,
+        &eval,
+    )?;
+
+    // single-precision 4-bit reference at a similar size
+    let single = mixed::uniform_allocation(&model.info.layers, 4);
+    let single_out = quantize_and_eval(
+        &rt,
+        &manifest,
+        &QuantSpec {
+            model: model.info.name.clone(),
+            wbits: resolve_uniform_bits(&model, 4),
+            abits: None,
+        },
+        &cfg,
+        &calib,
+        &eval,
+    )?;
+
+    println!(
+        "mixed {:?}: {:.2}% @ {}   |   single 4b: {:.2}% @ {}   (FP {:.2}%)",
+        bit_list,
+        mixed_out.acc * 100.0,
+        mixed::format_size_mb(alloc.size_bytes),
+        single_out.acc * 100.0,
+        mixed::format_size_mb(single.size_bytes),
+        mixed_out.fp_acc * 100.0
+    );
+    Ok(())
+}

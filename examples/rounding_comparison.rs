@@ -1,0 +1,66 @@
+//! The paper's Table-5 ablation in miniature: every rounding function on
+//! the same model/bits, demonstrating the ordering
+//! Ours > AdaRound > Nearest > Stochastic ≫ Floor/Ceil.
+//!
+//! ```bash
+//! cargo run --release --example rounding_comparison
+//! ```
+
+use attention_round::coordinator::config::CalibConfig;
+use attention_round::coordinator::model::LoadedModel;
+use attention_round::coordinator::pipeline::{
+    quantize_and_eval, resolve_uniform_bits, QuantSpec,
+};
+use attention_round::data::Split;
+use attention_round::io::manifest::Manifest;
+use attention_round::quant::rounding::Rounding;
+use attention_round::report::Table;
+use attention_round::runtime::Runtime;
+use attention_round::util::logging;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    logging::init();
+    let artifacts = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = Manifest::load(&artifacts)?;
+    let rt = Runtime::new(artifacts.as_str())?;
+    let model = LoadedModel::load(&manifest, "resnet18t")?;
+    let data_dir = manifest.path(&manifest.dataset.dir);
+    let calib = Split::load(&data_dir, "calib")?;
+    let eval = Split::load(&data_dir, "eval")?;
+
+    let mut table = Table::new(
+        "Rounding functions, resnet18t 4/32",
+        &["Rounding", "Top-1 %", "Wall s"],
+    );
+    for method in [
+        Rounding::Floor,
+        Rounding::Ceil,
+        Rounding::Stochastic,
+        Rounding::Nearest,
+        Rounding::AdaRound,
+        Rounding::Attention,
+    ] {
+        let mut cfg = CalibConfig::quick();
+        cfg.method = method;
+        let out = quantize_and_eval(
+            &rt,
+            &manifest,
+            &QuantSpec {
+                model: model.info.name.clone(),
+                wbits: resolve_uniform_bits(&model, 4),
+                abits: None,
+            },
+            &cfg,
+            &calib,
+            &eval,
+        )?;
+        table.row(vec![
+            method.name().to_string(),
+            format!("{:.2}", out.acc * 100.0),
+            format!("{:.1}", out.wall_s),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(FP32 reference: {:.2}%)", model.info.fp_acc * 100.0);
+    Ok(())
+}

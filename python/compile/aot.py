@@ -1,0 +1,293 @@
+"""AOT build driver: dataset → pretraining → HLO lowering → manifest.
+
+Runs once at `make artifacts`; Python never appears on the request path
+afterwards. Every executable the Rust coordinator needs is lowered here to
+**HLO text** (xla_extension 0.5.1 rejects jax≥0.5 serialized protos — the
+text parser reassigns the 64-bit instruction ids, see
+/opt/xla-example/README.md) and indexed in artifacts/manifest.json.
+
+Layer-level executables are deduplicated by shape signature: two layers
+with identical (kind, kernel, stride, groups, weight shape, input shape)
+share one artifact. This collapses ~100 zoo layers to a few dozen HLO
+modules and keeps both lowering time and Rust compile time bounded.
+
+Layout:
+  artifacts/
+    data/{train,calib,eval}_{x,y}.npy
+    weights/<model>/<idx>_<name>.{w,b}.npy
+    hlo/<sig or model>.hlo.txt
+    manifest.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as dataset
+from . import quant
+from .layers import ModelDef, layer_io_shapes
+from .models import ZOO, build
+from .train import train_model
+
+CALIB_BATCH = 32
+EVAL_BATCH = 128
+QAT_BATCH = 64
+QAT_MODELS = ("resnet18t", "mobilenetv2t")
+# K-step fused calibration (lax.scan) — one PJRT dispatch per K Adam
+# iterations. 8 keeps the largest per-sig (xs, y_refs) stack < 40 MB.
+SCAN_K = 8
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, specs, path: str, force: bool = False) -> None:
+    if os.path.exists(path) and not force:
+        return
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+SCALAR = sds(())
+
+
+def layer_sig(spec, in_shape) -> str:
+    w = "x".join(map(str, spec.wshape))
+    i = "x".join(map(str, in_shape))
+    return f"{spec.kind}_k{spec.ksize}_s{spec.stride}_g{spec.feature_group_count}_w{w}_i{i}"
+
+
+# ---------------------------------------------------------------------------
+
+def export_dataset(out: str) -> dict:
+    ddir = os.path.join(out, "data")
+    for split in dataset.SPLITS:
+        dataset.load_or_make(ddir, split)
+    return {
+        "dir": "data",
+        "num_classes": dataset.NUM_CLASSES,
+        "image_hw": dataset.IMG,
+        "channels": dataset.CHANNELS,
+        "splits": {k: {"n": n, "seed": s} for k, (n, s) in dataset.SPLITS.items()},
+        "calib_batch": CALIB_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "qat_batch": QAT_BATCH,
+    }
+
+
+def train_or_load(name: str, out: str):
+    """Pretrain (or reuse cached weights) and export per-layer npy files."""
+    wdir = os.path.join(out, "weights", name)
+    meta_path = os.path.join(wdir, "meta.json")
+    mdef = build(name)
+    if os.path.exists(meta_path):
+        meta = json.load(open(meta_path))
+        ws = [np.load(os.path.join(wdir, f)) for f in meta["w_files"]]
+        bs = [np.load(os.path.join(wdir, f)) for f in meta["b_files"]]
+        return mdef, ws, bs, meta["fp_acc"]
+    mdef, ws, bs, acc = train_model(name, os.path.join(out, "data"))
+    os.makedirs(wdir, exist_ok=True)
+    w_files, b_files = [], []
+    for i, (spec, w, b) in enumerate(zip(mdef.convs, ws, bs)):
+        safe = spec.name.replace(".", "_")
+        wf, bf = f"{i:02d}_{safe}.w.npy", f"{i:02d}_{safe}.b.npy"
+        np.save(os.path.join(wdir, wf), w)
+        np.save(os.path.join(wdir, bf), b)
+        w_files.append(wf)
+        b_files.append(bf)
+    json.dump(
+        {"fp_acc": acc, "w_files": w_files, "b_files": b_files},
+        open(meta_path, "w"),
+    )
+    return mdef, ws, bs, acc
+
+
+def lower_layer_artifacts(mdef: ModelDef, out: str, lowered_sigs: set) -> list:
+    """Per-layer calib/adaround/layer_fwd executables, dedup by signature."""
+    hdir = os.path.join(out, "hlo")
+    io = layer_io_shapes(mdef, CALIB_BATCH)
+    entries = []
+    for li, (spec, (in_shape, out_shape)) in enumerate(zip(mdef.convs, io)):
+        sig = layer_sig(spec, in_shape)
+        if sig not in lowered_sigs:
+            lowered_sigs.add(sig)
+            w, xs, ys = sds(spec.wshape), sds(in_shape), sds(out_shape)
+            lower_to_file(
+                quant.make_attention_calib_step(spec),
+                # (w, x, y_ref, alpha, m, v, t, lr, tau_over_s, s, lo, hi)
+                (w, xs, ys, w, w, w) + (SCALAR,) * 6,
+                os.path.join(hdir, f"calib_{sig}.hlo.txt"),
+            )
+            lower_to_file(
+                quant.make_adaround_calib_step(spec),
+                # (w, x, y_ref, V, m, v, t, lr, beta, lam, s, lo, hi)
+                (w, xs, ys, w, w, w) + (SCALAR,) * 7,
+                os.path.join(hdir, f"adaround_{sig}.hlo.txt"),
+            )
+            lower_to_file(
+                quant.make_layer_fwd(spec),
+                (xs, w),
+                os.path.join(hdir, f"layerfwd_{sig}.hlo.txt"),
+            )
+            xss = sds((SCAN_K,) + tuple(in_shape))
+            yss = sds((SCAN_K,) + tuple(out_shape))
+            lower_to_file(
+                quant.make_attention_calib_scan(spec, SCAN_K),
+                # (w, xs, y_refs, alpha, m, v, t0, lr, tau_over_s, s, lo, hi)
+                (w, xss, yss, w, w, w) + (SCALAR,) * 6,
+                os.path.join(hdir, f"calibscan_{sig}.hlo.txt"),
+            )
+            lower_to_file(
+                quant.make_adaround_calib_scan(spec, SCAN_K),
+                (w, xss, yss, w, w, w) + (SCALAR,) * 7,
+                os.path.join(hdir, f"adascan_{sig}.hlo.txt"),
+            )
+        entries.append(
+            {
+                "index": li,
+                "name": spec.name,
+                "kind": spec.kind,
+                "ksize": spec.ksize,
+                "stride": spec.stride,
+                "groups": spec.feature_group_count,
+                "act": spec.act,
+                "wshape": list(spec.wshape),
+                "params": spec.params,
+                "coding_n": spec.coding_view()[0],
+                "coding_m": spec.coding_view()[1],
+                "in_shape": list(in_shape),
+                "out_shape": list(out_shape),
+                "pinned_8bit": li in (0, len(mdef.convs) - 1),
+                "downsample": spec.name.endswith(".down"),
+                "sig": sig,
+                "calib_step": f"hlo/calib_{sig}.hlo.txt",
+                "adaround_step": f"hlo/adaround_{sig}.hlo.txt",
+                "layer_fwd": f"hlo/layerfwd_{sig}.hlo.txt",
+                "calib_scan": f"hlo/calibscan_{sig}.hlo.txt",
+                "adaround_scan": f"hlo/adascan_{sig}.hlo.txt",
+            }
+        )
+    return entries
+
+
+def lower_model_artifacts(mdef: ModelDef, out: str) -> dict:
+    hdir = os.path.join(out, "hlo")
+    k = len(mdef.convs)
+    wspecs = [sds(s.wshape) for s in mdef.convs]
+    bspecs = [sds((s.out_ch,)) for s in mdef.convs]
+    x_eval = sds((EVAL_BATCH, mdef.input_hw, mdef.input_hw, 3))
+    x_calib = sds((CALIB_BATCH, mdef.input_hw, mdef.input_hw, 3))
+
+    paths = {
+        "forward": f"hlo/forward_{mdef.name}.hlo.txt",
+        "forward_actq": f"hlo/forward_actq_{mdef.name}.hlo.txt",
+        "collect": f"hlo/collect_{mdef.name}.hlo.txt",
+    }
+    lower_to_file(
+        quant.make_forward(mdef),
+        (x_eval, *wspecs, *bspecs),
+        os.path.join(out, paths["forward"]),
+    )
+    lower_to_file(
+        quant.make_forward_actq(mdef),
+        (x_eval, *wspecs, *bspecs, sds((k,)), sds((k,)), sds((k,))),
+        os.path.join(out, paths["forward_actq"]),
+    )
+    lower_to_file(
+        quant.make_collect(mdef),
+        (x_calib, *wspecs, *bspecs),
+        os.path.join(out, paths["collect"]),
+    )
+    if mdef.name in QAT_MODELS:
+        paths["qat_step"] = f"hlo/qat_{mdef.name}.hlo.txt"
+        xq = sds((QAT_BATCH, mdef.input_hw, mdef.input_hw, 3))
+        yq = sds((QAT_BATCH,), jnp.int32)
+        lower_to_file(
+            quant.make_qat_step(mdef),
+            (xq, yq, *wspecs, *bspecs, *wspecs, *bspecs) + (SCALAR,) * 3,
+            os.path.join(out, paths["qat_step"]),
+        )
+    return paths
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(ZOO))
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(os.path.join(out, "hlo"), exist_ok=True)
+
+    t0 = time.time()
+    ds_meta = export_dataset(out)
+    print(f"[aot] dataset ready ({time.time() - t0:.1f}s)", flush=True)
+
+    manifest = {
+        "format_version": 1,
+        "paper": "Attention Round for Post-Training Quantization (Diao et al., 2022)",
+        "dataset": ds_meta,
+        "scan_k": SCAN_K,
+        "arg_conventions": {
+            "calib_step": "(w, x, y_ref, alpha, m, v, t, lr, tau_over_s, s, lo, hi) -> (alpha, m, v, loss)",
+            "calib_scan": "(w, xs[K], y_refs[K], alpha, m, v, t0, lr, tau_over_s, s, lo, hi) -> (alpha, m, v, mean_loss)",
+            "adaround_scan": "(w, xs[K], y_refs[K], V, m, v, t0, lr, beta, lam, s, lo, hi) -> (V, m, v, mean_recon)",
+            "adaround_step": "(w, x, y_ref, V, m, v, t, lr, beta, lam, s, lo, hi) -> (V, m, v, recon_loss)",
+            "layer_fwd": "(x, w) -> y_preact",
+            "forward": "(x, w..., b...) -> logits",
+            "forward_actq": "(x, w..., b..., ascales[k], azeros[k], ahis[k]) -> logits",
+            "collect": "(x, w..., b...) -> (layer_inputs..., logits)",
+            "qat_step": "(x, y, w..., b..., mw..., mb..., lr, whi, ahi) -> (w..., b..., mw..., mb..., loss)",
+        },
+        "models": {},
+    }
+
+    lowered_sigs: set = set()
+    for name in args.models.split(","):
+        t1 = time.time()
+        mdef, ws, bs, acc = train_or_load(name, out)
+        print(f"[aot] {name}: fp_acc={acc:.4f} ({time.time() - t1:.1f}s)", flush=True)
+        t1 = time.time()
+        layers = lower_layer_artifacts(mdef, out, lowered_sigs)
+        paths = lower_model_artifacts(mdef, out)
+        print(f"[aot] {name}: lowered {len(layers)} layers ({time.time() - t1:.1f}s)",
+              flush=True)
+        manifest["models"][name] = {
+            "fp_acc": acc,
+            "num_layers": len(layers),
+            "weights_dir": f"weights/{name}",
+            "w_files": [f"weights/{name}/{f}" for f in
+                        json.load(open(os.path.join(out, "weights", name, "meta.json")))["w_files"]],
+            "b_files": [f"weights/{name}/{f}" for f in
+                        json.load(open(os.path.join(out, "weights", name, "meta.json")))["b_files"]],
+            "layers": layers,
+            **paths,
+        }
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written; total {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Synthetic image dataset — the ImageNet stand-in (DESIGN.md §2).
+
+Post-training quantization calibrates on *in-distribution activations*;
+the semantic content of the images is irrelevant to the paper's claims
+(all methods see identical data, so the relative ordering of rounding
+functions is preserved). We therefore generate a deterministic procedural
+dataset: 16 classes of oriented sinusoidal gratings ("gabor" textures)
+with class-specific frequency / orientation / color bias, randomized
+phase, contrast, spatial jitter and additive Gaussian noise. Difficulty
+is tuned so the FP models land around 85-95% top-1 — high enough that
+quantization damage is measurable, low enough that the task is non-trivial.
+
+Everything is keyed off a single integer seed; the same generator is
+ported to Rust (rust/src/data/synth.rs) for bench workload generation,
+and cross-checked against these arrays in tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 16
+IMG = 32  # height == width
+CHANNELS = 3
+
+# Per-class texture parameters, fixed by construction (not by RNG) so the
+# Rust port can reproduce them exactly.
+def class_params(c: int) -> dict:
+    """Deterministic texture parameters for class c."""
+    freq = 1.5 + 0.45 * (c % 8)             # cycles across the image
+    theta = (c * 137.508) % 180.0           # golden-angle orientations
+    color_phase = (c * 2.399) % (2 * np.pi) # color rotation
+    return {
+        "freq": freq,
+        "theta_deg": theta,
+        "color": np.array(
+            [
+                0.6 + 0.4 * np.sin(color_phase),
+                0.6 + 0.4 * np.sin(color_phase + 2.094),
+                0.6 + 0.4 * np.sin(color_phase + 4.189),
+            ],
+            dtype=np.float64,
+        ),
+        "second_freq": 2.2 + 0.3 * ((c // 8) % 2),
+    }
+
+
+def generate_split(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate (images NHWC float32, labels int32).
+
+    Images are roughly zero-mean unit-ish scale (normalized like standard
+    ImageNet preprocessing), which keeps conv activations in a sane range.
+    """
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    xs = np.empty((n, IMG, IMG, CHANNELS), dtype=np.float32)
+
+    yy, xx = np.meshgrid(np.arange(IMG), np.arange(IMG), indexing="ij")
+    yy = yy.astype(np.float64) / IMG
+    xx = xx.astype(np.float64) / IMG
+
+    for i in range(n):
+        c = int(labels[i])
+        p = class_params(c)
+        th = np.deg2rad(p["theta_deg"] + rng.normal(0.0, 9.0))
+        phase = rng.uniform(0.0, 2 * np.pi)
+        contrast = rng.uniform(0.45, 1.2)
+        # primary grating
+        u = np.cos(th) * xx + np.sin(th) * yy
+        g = np.sin(2 * np.pi * p["freq"] * u + phase)
+        # secondary orthogonal grating (weaker) -> texture, not pure stripes
+        v = -np.sin(th) * xx + np.cos(th) * yy
+        g2 = np.sin(2 * np.pi * p["second_freq"] * v + phase * 0.5)
+        tex = contrast * (0.8 * g + 0.35 * g2)
+        img = tex[:, :, None] * p["color"][None, None, :]
+        img = img + rng.normal(0.0, 1.0, size=img.shape)  # heavy noise floor
+        # random occlusion patch (cutout) — forces non-local features
+        ph, pw = rng.integers(8, 17), rng.integers(8, 17)
+        py, px = rng.integers(0, IMG - ph + 1), rng.integers(0, IMG - pw + 1)
+        img[py : py + ph, px : px + pw, :] = 0.0
+        xs[i] = img.astype(np.float32)
+    return xs, labels
+
+
+# Canonical splits (seeds are part of the repo's reproducibility contract).
+SPLITS = {
+    "train": (8192, 1000),
+    "calib": (1024, 2000),   # the paper's 1,024-image calibration set
+    "eval": (2048, 3000),
+}
+
+
+def load_or_make(out_dir, split: str):
+    """Generate a split lazily and cache it under out_dir as .npy."""
+    import os
+
+    n, seed = SPLITS[split]
+    xp = os.path.join(out_dir, f"{split}_x.npy")
+    yp = os.path.join(out_dir, f"{split}_y.npy")
+    if os.path.exists(xp) and os.path.exists(yp):
+        return np.load(xp), np.load(yp)
+    os.makedirs(out_dir, exist_ok=True)
+    xs, ys = generate_split(n, seed)
+    np.save(xp, xs)
+    np.save(yp, ys)
+    return xs, ys

@@ -1,0 +1,162 @@
+"""Layer-1 Pallas kernels for Attention Round (paper Eq. 3-7).
+
+Two kernels:
+
+* ``fakequant``       — forward Eq. (3):  ŵ = s·clip(⌊w/s + α⌉, lo, hi)
+* ``attention_grad``  — backward Eq. (6): the Gaussian-attention decay rule
+                        dz/dα = 0.5 ± 0.5·erf(α / (√2·τ/s))
+
+Both are elementwise over arbitrarily-shaped weight tensors. The wrapper
+flattens + pads to (8, 128) float32 TPU tiles (sublane × lane) and runs a
+1-D grid of tiles, so each grid step touches exactly one VMEM-resident
+tile — the HBM↔VMEM schedule a TPU would want. On this CPU-only image the
+kernels are lowered with ``interpret=True`` (mandatory; Mosaic custom-calls
+cannot run on the CPU PJRT plugin), so the tile loop becomes a plain XLA
+while-loop with identical numerics.
+
+``attention_quant`` glues them into a ``jax.custom_vjp`` so Layer-2 graphs
+differentiate through the quantizer with the paper's update rule instead
+of a straight-through estimator.
+
+VMEM/MXU accounting for the real-TPU estimate lives in DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# float32 TPU tile: 8 sublanes x 128 lanes.
+SUBLANE = 8
+LANE = 128
+TILE = SUBLANE * LANE
+
+
+def _pad2d(flat):
+    """Pad a 1-D array to a whole number of (8,128) tiles, reshape 2-D."""
+    n = flat.shape[0]
+    rows = max((n + LANE - 1) // LANE, SUBLANE)
+    rows = ((rows + SUBLANE - 1) // SUBLANE) * SUBLANE
+    padded = jnp.zeros((rows * LANE,), flat.dtype).at[:n].set(flat)
+    return padded.reshape(rows, LANE), rows
+
+
+def _elementwise_call(kernel, scalars, tensors, rows):
+    """Run an elementwise kernel over a (rows, LANE) grid of (8,128) tiles.
+
+    scalars: tuple of f32[1] arrays, broadcast to every tile.
+    tensors: tuple of (rows, LANE) arrays, tiled along rows.
+    """
+    grid = (rows // SUBLANE,)
+    scalar_specs = [pl.BlockSpec((1,), lambda i: (0,)) for _ in scalars]
+    tensor_specs = [pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)) for _ in tensors]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=scalar_specs + tensor_specs,
+        out_specs=pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=True,
+    )(*scalars, *tensors)
+
+
+# ---------------------------------------------------------------------------
+# forward kernel — Eq. (3)
+# ---------------------------------------------------------------------------
+
+def _fakequant_kernel(s_ref, lo_ref, hi_ref, w_ref, a_ref, o_ref):
+    s = s_ref[0]
+    inv = 1.0 / s  # multiply beats divide on both VPU and host
+    q = jnp.round(w_ref[...] * inv + a_ref[...])
+    o_ref[...] = s * jnp.clip(q, lo_ref[0], hi_ref[0])
+
+
+def fakequant(w, alpha, s, lo, hi):
+    """Eq. (3) over an arbitrary-shape tensor; s/lo/hi runtime scalars."""
+    shape = w.shape
+    flat, rows = _pad2d(w.reshape(-1))
+    aflat, _ = _pad2d(alpha.reshape(-1))
+    sc = lambda v: jnp.asarray(v, jnp.float32).reshape((1,))
+    out = _elementwise_call(
+        _fakequant_kernel, (sc(s), sc(lo), sc(hi)), (flat, aflat), rows
+    )
+    return out.reshape(-1)[: w.size].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# backward kernel — Eq. (6)
+# ---------------------------------------------------------------------------
+
+def erf_poly(x):
+    """Abramowitz–Stegun 7.1.26 erf (|err| < 1.5e-7), built from primitive
+    HLO ops only.
+
+    Two reasons not to use jax.lax.erf: (1) the image's xla_extension
+    0.5.1 HLO text parser predates the `erf` opcode jax ≥0.8 emits, so
+    artifacts would fail to load; (2) this polynomial is bit-identical to
+    the Rust host-side quant::erf, keeping the L1/L3 numerics contract
+    exact.
+    """
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    y = 1.0 - (
+        ((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
+        * t
+        + 0.254829592
+    ) * t * jnp.exp(-ax * ax)
+    return sign * y
+
+
+def _attention_grad_kernel(t_ref, g_ref, a_ref, o_ref):
+    t = jnp.maximum(t_ref[0], 1e-8)  # τ/s; keep τ=0 finite (Fig. 2 sweep)
+    g = g_ref[...]
+    e = erf_poly(a_ref[...] * (1.0 / (jnp.sqrt(2.0) * t)))
+    dz = jnp.where(g > 0, 0.5 + 0.5 * e, 0.5 - 0.5 * e)
+    o_ref[...] = g * dz
+
+
+def attention_grad(g, alpha, tau_over_s):
+    """Eq. (6): dL/dα given upstream dL/dz, elementwise."""
+    shape = g.shape
+    gflat, rows = _pad2d(g.reshape(-1))
+    aflat, _ = _pad2d(alpha.reshape(-1))
+    t = jnp.asarray(tau_over_s, jnp.float32).reshape((1,))
+    out = _elementwise_call(_attention_grad_kernel, (t,), (gflat, aflat), rows)
+    return out.reshape(-1)[: g.size].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# the differentiable quantizer
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def attention_quant(w, alpha, s, lo, hi, tau_over_s):
+    """Differentiable Attention-Round quantizer.
+
+    Forward is Eq. (3); backward routes the output cotangent through the
+    Gaussian-attention rule of Eq. (6) into α only (w is the frozen
+    pretrained weight — PTQ never updates it).
+    """
+    return fakequant(w, alpha, s, lo, hi)
+
+
+def _aq_fwd(w, alpha, s, lo, hi, tau_over_s):
+    return fakequant(w, alpha, s, lo, hi), (alpha, s, tau_over_s)
+
+
+def _aq_bwd(res, g):
+    alpha, s, tau_over_s = res
+    # dz/dŵ = s on the integer grid; the paper folds the scale into the
+    # learning rate, so dL/dα = attention_grad(dL/dz, α). We keep the
+    # mathematically consistent s-scaled form.
+    da = attention_grad(g * s, alpha, tau_over_s)
+    zero = lambda x: jnp.zeros_like(x)
+    return (zero(alpha), da, jnp.zeros(()), jnp.zeros(()), jnp.zeros(()),
+            jnp.zeros(()))
+
+
+attention_quant.defvjp(_aq_fwd, _aq_bwd)

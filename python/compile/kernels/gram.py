@@ -1,0 +1,39 @@
+"""Layer-1 Pallas kernel: tiled Gram matrix G = W·Wᵀ.
+
+Feeds the rate-distortion coding length (paper Eq. 9-12): the bit
+allocator needs det(I + n/(mε²)·WWᵀ) per layer, and the Gram product is
+the only O(n²m) piece. Tiled (BM, BM) output blocks with the full row
+panels VMEM-resident; the Cholesky/log-det tail is tiny and lives in the
+Rust linalg substrate (rust/src/linalg/). interpret=True as everywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+
+
+def _gram_kernel(w_ref, wt_ref, o_ref):
+    o_ref[...] = w_ref[...] @ wt_ref[...].T
+
+
+def gram(w):
+    """G = w @ w.T for a 2-D (m, n) matrix (m vectors of dim n)."""
+    m, n = w.shape
+    mp = ((m + BM - 1) // BM) * BM
+    wpad = jnp.zeros((mp, n), w.dtype).at[:m, :].set(w)
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(mp // BM, mp // BM),
+        in_specs=[
+            pl.BlockSpec((BM, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((BM, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BM, BM), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+        interpret=True,
+    )(wpad, wpad)
+    return out[:m, :m]

@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel: fake-quantized matmul (the MXU showcase).
+
+The paper's inference hot-spot is quantized GEMM (convs lower to GEMMs).
+On a GPU the usual trick is dequantize-on-load into shared memory; the TPU
+re-think (DESIGN.md §3) is: fake-quant is fused into the HBM→VMEM tile
+load, the MXU consumes the dequantized tile directly, and the grid walks
+(M/BM, N/BN) output tiles with the full K panel resident in VMEM.
+
+Block sizing: BM = BN = 128 matches the 128×128 MXU systolic array; the
+zoo's K never exceeds 1152, so an (128, K) + (K, 128) + (128, 128) working
+set is ≤ 1.3 MiB of f32 VMEM — comfortably inside the ~16 MiB budget, with
+double-buffering headroom. interpret=True on this image (see
+attention_round.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BN = 128
+
+
+def _qmm_kernel(sx_ref, sw_ref, lox_ref, hix_ref, low_ref, hiw_ref,
+                x_ref, w_ref, o_ref):
+    sx, sw = sx_ref[0], sw_ref[0]
+    xq = sx * jnp.clip(jnp.round(x_ref[...] * (1.0 / sx)), lox_ref[0], hix_ref[0])
+    wq = sw * jnp.clip(jnp.round(w_ref[...] * (1.0 / sw)), low_ref[0], hiw_ref[0])
+    # f32 accumulate — on TPU this is the MXU path (bf16 inputs would halve
+    # VMEM; we keep f32 to match the oracle bit-for-bit).
+    o_ref[...] = xq @ wq
+
+
+def _pad_to(a, rows, cols):
+    out = jnp.zeros((rows, cols), a.dtype)
+    return out.at[: a.shape[0], : a.shape[1]].set(a)
+
+
+def qmatmul(x, w, sx, sw, lo_x, hi_x, lo_w, hi_w):
+    """(M,K) @ (K,N) with both operands fake-quantized on tile load."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    mp = ((m + BM - 1) // BM) * BM
+    np_ = ((n + BN - 1) // BN) * BN
+    xpad = _pad_to(x, mp, k)
+    wpad = _pad_to(w, k, np_)
+    sc = lambda v: jnp.asarray(v, jnp.float32).reshape((1,))
+    scalars = [sc(v) for v in (sx, sw, lo_x, hi_x, lo_w, hi_w)]
+    grid = (mp // BM, np_ // BN)
+    out = pl.pallas_call(
+        _qmm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i, j: (0,)) for _ in scalars]
+        + [
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(*scalars, xpad, wpad)
+    return out[:m, :n]

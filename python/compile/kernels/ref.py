@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contracts: pytest + hypothesis sweep shapes and
+dtypes and assert the Pallas kernels (interpret=True) match these
+references to float32 tolerance. They are also what the L2 graphs would
+fall back to on a backend without Pallas support.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fakequant_ref(w, alpha, s, lo, hi):
+    """Attention-Round forward, Eq. (3): ŵ = s·clip(⌊w/s + α⌉, lo, hi).
+
+    `jnp.round` is round-half-to-even; the paper's ⌊·⌉ is unspecified at
+    halves — half-to-even is what both layers implement, so the contract
+    is consistent across the stack.
+    """
+    return s * jnp.clip(jnp.round(w / s + alpha), lo, hi)
+
+
+def attention_grad_ref(g, alpha, tau_over_s):
+    """Attention-decay backward rule, Eq. (6).
+
+    dz/dα = 0.5 + 0.5·erf(α/(√2·τ/s)) when the upstream gradient is
+    positive, and 0.5 − 0.5·erf(·) otherwise; dL/dα = g · dz/dα.
+    τ=0 appears in the Figure-2 sweep; a tiny epsilon keeps the erf
+    argument finite there (the rule degenerates to a step function).
+    """
+    t = jnp.maximum(tau_over_s, 1e-8)
+    e = jax.lax.erf(alpha / (jnp.sqrt(2.0) * t))
+    dz = jnp.where(g > 0, 0.5 + 0.5 * e, 0.5 - 0.5 * e)
+    return g * dz
+
+
+def qmatmul_ref(x, w, sx, sw, lo_x, hi_x, lo_w, hi_w):
+    """Fake-quantized matmul: both operands round-to-nearest quantized,
+    accumulated in f32 (the MXU-style reference)."""
+    xq = sx * jnp.clip(jnp.round(x / sx), lo_x, hi_x)
+    wq = sw * jnp.clip(jnp.round(w / sw), lo_w, hi_w)
+    return xq @ wq
+
+
+def gram_ref(w):
+    """Gram matrix W·Wᵀ (rows are the coding-length vectors, Eq. 9)."""
+    return w @ w.T
+
+
+def nearest_round_ref(w, s, lo, hi):
+    return s * jnp.clip(jnp.round(w / s), lo, hi)
+
+
+def coding_length_ref(w2d, eps2):
+    """Eq. (12): L(W) = ½·log2 det(I + n/(m·ε²)·W Wᵀ), computed on the
+    smaller Gram side (Sylvester's determinant identity)."""
+    n, m = w2d.shape  # n = filter dim, m = #filters (paper's W ∈ R^{n×m})
+    if n <= m:
+        g = w2d @ w2d.T
+        eye = jnp.eye(n)
+    else:
+        g = w2d.T @ w2d
+        eye = jnp.eye(m)
+    a = eye + (n / (m * eps2)) * g
+    sign, logdet = jnp.linalg.slogdet(a)
+    return 0.5 * logdet / jnp.log(2.0)

@@ -1,0 +1,281 @@
+"""Functional NN layers + a tiny declarative model IR.
+
+Models are described as a flat list of *nodes* operating on a small named
+environment (`x`, `skip0`, `skip1`, ...). Quantizable layers (convs and the
+final linear) are `ConvSpec`s; everything the rest of the stack needs —
+pretraining with BatchNorm, BN folding, activation capture, activation
+fake-quant insertion, AOT lowering, and the Rust manifest — is derived
+mechanically from this IR. That uniformity is what lets `aot.py` emit
+per-layer calibration executables for five architectures without
+special-casing any of them.
+
+Conventions: NHWC activations, HWIO conv weights, (in, out) linear weights.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@dataclass
+class ConvSpec:
+    """One quantizable layer (conv / depthwise / group conv / linear)."""
+
+    name: str
+    kind: str          # 'conv' | 'dwconv' | 'gconv' | 'linear'
+    in_ch: int
+    out_ch: int
+    ksize: int = 1
+    stride: int = 1
+    groups: int = 1
+    act: str = "none"  # activation applied after conv+BN: none|relu|relu6
+    bn: bool = True    # BatchNorm during pretraining (folded at export)
+
+    @property
+    def wshape(self) -> tuple:
+        if self.kind == "linear":
+            return (self.in_ch, self.out_ch)
+        if self.kind == "dwconv":
+            return (self.ksize, self.ksize, 1, self.out_ch)
+        return (self.ksize, self.ksize, self.in_ch // self.groups, self.out_ch)
+
+    @property
+    def params(self) -> int:
+        n = 1
+        for d in self.wshape:
+            n *= d
+        return n
+
+    @property
+    def feature_group_count(self) -> int:
+        return self.in_ch if self.kind == "dwconv" else self.groups
+
+    def coding_view(self) -> tuple:
+        """(n, m) view for the rate-distortion coding length (paper Eq. 12):
+        m output filters, each a vector of dim n = kh*kw*in_ch/groups."""
+        if self.kind == "linear":
+            return (self.in_ch, self.out_ch)
+        kh, kw, ci, co = self.wshape
+        return (kh * kw * ci, co)
+
+
+# ---------------------------------------------------------------------------
+# node helpers (the IR)
+# ---------------------------------------------------------------------------
+
+def n_conv(spec: ConvSpec, src: str = "x", dst: str = "x") -> dict:
+    return {"op": "conv", "spec": spec, "src": src, "dst": dst}
+
+
+def n_save(dst: str, src: str = "x") -> dict:
+    return {"op": "save", "src": src, "dst": dst}
+
+
+def n_add(other: str, src: str = "x", dst: str = "x", act: str = "none") -> dict:
+    return {"op": "add", "src": src, "other": other, "dst": dst, "act": act}
+
+
+def n_gap() -> dict:  # global average pool NHWC -> NC
+    return {"op": "gap"}
+
+
+@dataclass
+class ModelDef:
+    name: str
+    nodes: list = field(default_factory=list)
+    input_hw: int = 32
+    num_classes: int = 16
+
+    @property
+    def convs(self) -> list:
+        return [n["spec"] for n in self.nodes if n["op"] == "conv"]
+
+    def conv_index(self, name: str) -> int:
+        for i, s in enumerate(self.convs):
+            if s.name == name:
+                return i
+        raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# primitive ops
+# ---------------------------------------------------------------------------
+
+def act_fn(x, act: str):
+    if act == "relu":
+        return jax.nn.relu(x)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if act == "none":
+        return x
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def conv_op(x, w, spec: ConvSpec):
+    """Raw convolution / linear matmul (no bias, no activation)."""
+    if spec.kind == "linear":
+        return x @ w
+    pad = (spec.ksize - 1) // 2
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(spec.stride, spec.stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=spec.feature_group_count,
+    )
+
+
+def batchnorm_train(y, p, momentum=0.9, eps=1e-5):
+    """BatchNorm over N,H,W (or N for linear); returns (out, new_running)."""
+    axes = tuple(range(y.ndim - 1))
+    mean = jnp.mean(y, axis=axes)
+    var = jnp.var(y, axis=axes)
+    out = (y - mean) / jnp.sqrt(var + eps) * p["gamma"] + p["beta"]
+    new_mean = momentum * p["mean"] + (1 - momentum) * mean
+    new_var = momentum * p["var"] + (1 - momentum) * var
+    return out, {"mean": new_mean, "var": new_var}
+
+
+def fold_bn(w, p, eps=1e-5):
+    """Fold BN (gamma, beta, running mean/var) into conv weight + bias.
+
+    Output-channel is the last weight axis for every kind we support.
+    """
+    scale = p["gamma"] / np.sqrt(p["var"] + eps)
+    w_f = w * scale.reshape((1,) * (w.ndim - 1) + (-1,))
+    b_f = p["beta"] - p["mean"] * scale
+    return w_f, b_f
+
+
+# ---------------------------------------------------------------------------
+# forward interpreters
+# ---------------------------------------------------------------------------
+
+def forward_train(mdef: ModelDef, params: dict, x):
+    """Pretraining path: conv -> BN(batch stats) -> act. Returns
+    (logits, bn_updates) where bn_updates maps layer name -> new running."""
+    env = {"x": x}
+    updates = {}
+    for node in mdef.nodes:
+        if node["op"] == "conv":
+            spec = node["spec"]
+            p = params[spec.name]
+            y = conv_op(env[node["src"]], p["w"], spec)
+            if spec.bn:
+                y, upd = batchnorm_train(y, p)
+                updates[spec.name] = upd
+            else:
+                y = y + p["b"]
+            env[node["dst"]] = act_fn(y, spec.act)
+        elif node["op"] == "save":
+            env[node["dst"]] = env[node["src"]]
+        elif node["op"] == "add":
+            env[node["dst"]] = act_fn(env[node["src"]] + env[node["other"]], node["act"])
+        elif node["op"] == "gap":
+            env["x"] = jnp.mean(env["x"], axis=(1, 2))
+        else:
+            raise ValueError(node["op"])
+    return env["x"], updates
+
+
+def forward_infer(mdef: ModelDef, weights: list, biases: list, x,
+                  act_fq=None, capture=None):
+    """Inference path over *folded* per-layer (w, b) lists.
+
+    act_fq: optional callable (x, layer_index) -> x applied to every
+        quantizable layer's input (activation fake-quant).
+    capture: optional list collecting each quantizable layer's input
+        (activation capture for calibration).
+    """
+    env = {"x": x}
+    li = 0
+    for node in mdef.nodes:
+        if node["op"] == "conv":
+            spec = node["spec"]
+            xin = env[node["src"]]
+            if capture is not None:
+                capture.append(xin)
+            if act_fq is not None:
+                xin = act_fq(xin, li)
+            y = conv_op(xin, weights[li], spec) + biases[li]
+            env[node["dst"]] = act_fn(y, spec.act)
+            li += 1
+        elif node["op"] == "save":
+            env[node["dst"]] = env[node["src"]]
+        elif node["op"] == "add":
+            env[node["dst"]] = act_fn(env[node["src"]] + env[node["other"]], node["act"])
+        elif node["op"] == "gap":
+            env["x"] = jnp.mean(env["x"], axis=(1, 2))
+        else:
+            raise ValueError(node["op"])
+    assert li == len(mdef.convs)
+    return env["x"]
+
+
+def layer_io_shapes(mdef: ModelDef, batch: int) -> list:
+    """(in_shape, out_shape_preact) per quantizable layer via abstract eval."""
+    shapes = []
+
+    def record(x, li):
+        shapes.append(tuple(x.shape))
+        return x
+
+    zeros = [jnp.zeros(s.wshape, jnp.float32) for s in mdef.convs]
+    zb = [jnp.zeros((s.out_ch,), jnp.float32) for s in mdef.convs]
+    x = jnp.zeros((batch, mdef.input_hw, mdef.input_hw, 3), jnp.float32)
+    jax.eval_shape(lambda x: forward_infer(mdef, zeros, zb, x, act_fq=record), x)
+    out = []
+    for spec, in_shape in zip(mdef.convs, shapes):
+        y = jax.eval_shape(
+            lambda xx, ww, s=spec: conv_op(xx, ww, s),
+            jax.ShapeDtypeStruct(in_shape, jnp.float32),
+            jax.ShapeDtypeStruct(spec.wshape, jnp.float32),
+        )
+        out.append((in_shape, tuple(y.shape)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(mdef: ModelDef, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for spec in mdef.convs:
+        fan_in = spec.params // spec.out_ch
+        w = rng.normal(0.0, np.sqrt(2.0 / max(fan_in, 1)), spec.wshape)
+        p = {"w": jnp.asarray(w, jnp.float32)}
+        if spec.bn:
+            p["gamma"] = jnp.ones((spec.out_ch,), jnp.float32)
+            p["beta"] = jnp.zeros((spec.out_ch,), jnp.float32)
+            p["mean"] = jnp.zeros((spec.out_ch,), jnp.float32)
+            p["var"] = jnp.ones((spec.out_ch,), jnp.float32)
+        else:
+            p["b"] = jnp.zeros((spec.out_ch,), jnp.float32)
+        params[spec.name] = p
+    return params
+
+
+def fold_model(mdef: ModelDef, params: dict):
+    """Fold BN into per-layer (weights, biases) lists, ordered like convs."""
+    ws, bs = [], []
+    for spec in mdef.convs:
+        p = params[spec.name]
+        w = np.asarray(p["w"])
+        if spec.bn:
+            w_f, b_f = fold_bn(
+                w,
+                {k: np.asarray(p[k]) for k in ("gamma", "beta", "mean", "var")},
+            )
+        else:
+            w_f, b_f = w, np.asarray(p["b"])
+        ws.append(np.asarray(w_f, np.float32))
+        bs.append(np.asarray(b_f, np.float32))
+    return ws, bs

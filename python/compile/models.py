@@ -1,0 +1,186 @@
+"""The model zoo — tiny counterparts of the paper's five architectures.
+
+Each model exercises the conv variant the paper chose it for:
+
+* ``resnet18t``    — ordinary 3x3 convs, basic residual blocks
+* ``resnet50t``    — 1x1/3x3/1x1 bottleneck residual blocks
+* ``mobilenetv2t`` — depthwise-separable inverted residual blocks (ReLU6)
+* ``regnett``      — group-conv X-blocks (RegNetX style)
+* ``mnasnett``     — NAS-style mix of sepconv + MBConv with k=5 kernels
+
+The paper's structural features that matter for its experiments are kept:
+BatchNorm after every conv (folded before quantization, §4.1), a conv stem,
+residual topology with 1x1 downsample branches (the layers Figure 3-5 show
+getting the narrowest bits), and a final linear classifier (first + last
+layers are pinned to 8-bit, §4.1).
+"""
+
+from __future__ import annotations
+
+from .layers import ConvSpec, ModelDef, n_add, n_conv, n_gap, n_save
+
+
+def _c(name, kind, ci, co, k=1, s=1, g=1, act="none", bn=True) -> ConvSpec:
+    return ConvSpec(name=name, kind=kind, in_ch=ci, out_ch=co, ksize=k,
+                    stride=s, groups=g, act=act, bn=bn)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (basic blocks)
+# ---------------------------------------------------------------------------
+
+def resnet18t() -> ModelDef:
+    m = ModelDef("resnet18t")
+    nodes = m.nodes
+    nodes.append(n_conv(_c("stem", "conv", 3, 16, k=3, s=1, act="relu")))
+    ci = 16
+    widths = [16, 32, 64, 128]
+    for si, co in enumerate(widths):
+        for bi in range(2):
+            s = 2 if (si > 0 and bi == 0) else 1
+            pre = f"s{si}b{bi}"
+            nodes.append(n_save("skip"))
+            nodes.append(n_conv(_c(f"{pre}.conv1", "conv", ci, co, k=3, s=s, act="relu")))
+            nodes.append(n_conv(_c(f"{pre}.conv2", "conv", co, co, k=3, s=1)))
+            if s != 1 or ci != co:
+                nodes.append(n_conv(_c(f"{pre}.down", "conv", ci, co, k=1, s=s),
+                                    src="skip", dst="skip"))
+            nodes.append(n_add("skip", act="relu"))
+            ci = co
+    nodes.append(n_gap())
+    nodes.append(n_conv(_c("fc", "linear", ci, m.num_classes, bn=False)))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# ResNet-50 (bottleneck blocks, expansion 2)
+# ---------------------------------------------------------------------------
+
+def resnet50t() -> ModelDef:
+    m = ModelDef("resnet50t")
+    nodes = m.nodes
+    nodes.append(n_conv(_c("stem", "conv", 3, 16, k=3, s=1, act="relu")))
+    ci = 16
+    exp = 2
+    cfg = [(16, 1, 1), (32, 2, 2), (64, 2, 2), (128, 1, 2)]  # (mid, blocks, stride)
+    for si, (mid, blocks, stride) in enumerate(cfg):
+        co = mid * exp
+        for bi in range(blocks):
+            s = stride if bi == 0 else 1
+            pre = f"s{si}b{bi}"
+            nodes.append(n_save("skip"))
+            nodes.append(n_conv(_c(f"{pre}.conv1", "conv", ci, mid, k=1, act="relu")))
+            nodes.append(n_conv(_c(f"{pre}.conv2", "conv", mid, mid, k=3, s=s, act="relu")))
+            nodes.append(n_conv(_c(f"{pre}.conv3", "conv", mid, co, k=1)))
+            if s != 1 or ci != co:
+                nodes.append(n_conv(_c(f"{pre}.down", "conv", ci, co, k=1, s=s),
+                                    src="skip", dst="skip"))
+            nodes.append(n_add("skip", act="relu"))
+            ci = co
+    nodes.append(n_gap())
+    nodes.append(n_conv(_c("fc", "linear", ci, m.num_classes, bn=False)))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2 (inverted residuals, ReLU6)
+# ---------------------------------------------------------------------------
+
+def mobilenetv2t() -> ModelDef:
+    m = ModelDef("mobilenetv2t")
+    nodes = m.nodes
+    nodes.append(n_conv(_c("stem", "conv", 3, 16, k=3, s=1, act="relu6")))
+    ci = 16
+    # (out, stride, expansion)
+    cfg = [(16, 1, 1), (24, 2, 4), (24, 1, 4), (32, 2, 4), (32, 1, 4),
+           (64, 2, 4), (64, 1, 4)]
+    for bi, (co, s, e) in enumerate(cfg):
+        pre = f"b{bi}"
+        mid = ci * e
+        residual = (s == 1 and ci == co)
+        if residual:
+            nodes.append(n_save("skip"))
+        if e != 1:
+            nodes.append(n_conv(_c(f"{pre}.expand", "conv", ci, mid, k=1, act="relu6")))
+        nodes.append(n_conv(_c(f"{pre}.dw", "dwconv", mid, mid, k=3, s=s, act="relu6")))
+        nodes.append(n_conv(_c(f"{pre}.project", "conv", mid, co, k=1)))
+        if residual:
+            nodes.append(n_add("skip"))
+        ci = co
+    nodes.append(n_conv(_c("head", "conv", ci, 128, k=1, act="relu6")))
+    nodes.append(n_gap())
+    nodes.append(n_conv(_c("fc", "linear", 128, m.num_classes, bn=False)))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# RegNetX-style (group-conv X blocks)
+# ---------------------------------------------------------------------------
+
+def regnett() -> ModelDef:
+    m = ModelDef("regnett")
+    nodes = m.nodes
+    nodes.append(n_conv(_c("stem", "conv", 3, 16, k=3, s=1, act="relu")))
+    ci = 16
+    cfg = [(32, 1, 1), (64, 2, 2), (128, 2, 2)]  # (width, blocks, stride); g=8
+    for si, (co, blocks, stride) in enumerate(cfg):
+        for bi in range(blocks):
+            s = stride if bi == 0 else 1
+            pre = f"s{si}b{bi}"
+            nodes.append(n_save("skip"))
+            nodes.append(n_conv(_c(f"{pre}.conv1", "conv", ci, co, k=1, act="relu")))
+            nodes.append(n_conv(_c(f"{pre}.conv2", "gconv", co, co, k=3, s=s, g=8, act="relu")))
+            nodes.append(n_conv(_c(f"{pre}.conv3", "conv", co, co, k=1)))
+            if s != 1 or ci != co:
+                nodes.append(n_conv(_c(f"{pre}.down", "conv", ci, co, k=1, s=s),
+                                    src="skip", dst="skip"))
+            nodes.append(n_add("skip", act="relu"))
+            ci = co
+    nodes.append(n_gap())
+    nodes.append(n_conv(_c("fc", "linear", ci, m.num_classes, bn=False)))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# MnasNet-style (NAS mix: sepconv + MBConv k3/k5)
+# ---------------------------------------------------------------------------
+
+def mnasnett() -> ModelDef:
+    m = ModelDef("mnasnett")
+    nodes = m.nodes
+    nodes.append(n_conv(_c("stem", "conv", 3, 16, k=3, s=1, act="relu6")))
+    # sepconv block
+    nodes.append(n_conv(_c("sep.dw", "dwconv", 16, 16, k=3, act="relu6")))
+    nodes.append(n_conv(_c("sep.pw", "conv", 16, 16, k=1)))
+    ci = 16
+    # (out, stride, expansion, kernel)
+    cfg = [(24, 2, 3, 3), (24, 1, 3, 3), (40, 2, 3, 5), (40, 1, 3, 5),
+           (80, 2, 6, 5), (96, 1, 6, 3)]
+    for bi, (co, s, e, k) in enumerate(cfg):
+        pre = f"mb{bi}"
+        mid = ci * e
+        residual = (s == 1 and ci == co)
+        if residual:
+            nodes.append(n_save("skip"))
+        nodes.append(n_conv(_c(f"{pre}.expand", "conv", ci, mid, k=1, act="relu6")))
+        nodes.append(n_conv(_c(f"{pre}.dw", "dwconv", mid, mid, k=k, s=s, act="relu6")))
+        nodes.append(n_conv(_c(f"{pre}.project", "conv", mid, co, k=1)))
+        if residual:
+            nodes.append(n_add("skip"))
+        ci = co
+    nodes.append(n_gap())
+    nodes.append(n_conv(_c("fc", "linear", ci, m.num_classes, bn=False)))
+    return m
+
+
+ZOO = {
+    "resnet18t": resnet18t,
+    "resnet50t": resnet50t,
+    "mobilenetv2t": mobilenetv2t,
+    "regnett": regnett,
+    "mnasnett": mnasnett,
+}
+
+
+def build(name: str) -> ModelDef:
+    return ZOO[name]()

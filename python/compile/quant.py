@@ -1,0 +1,285 @@
+"""Layer-2 quantization compute graphs — everything the Rust coordinator
+executes at runtime, defined once here and AOT-lowered by aot.py.
+
+Per (layer-shape signature):
+  * ``attention_calib_step`` — one Adam iteration of the paper's Attention
+    Round calibration: reconstruction loss ‖ŵx − wx‖² with the custom-VJP
+    quantizer (kernels/attention_round.py), Adam carried in-graph so the
+    whole 2k-iteration loop never leaves the device.
+  * ``adaround_calib_step`` — the AdaRound baseline (rectified sigmoid
+    h(V), annealed-β regularizer) with identical calling shape.
+  * ``layer_fwd`` — y = conv(x, w): reference outputs + act capture.
+
+Per model:
+  * ``forward``      — logits from (x, w…, b…): evaluation with any weights.
+  * ``forward_actq`` — same + per-layer activation fake-quant, scales and
+    integer range as runtime inputs (Tables 2/3/5).
+  * ``qat_step``     — STE fake-quant SGD step (the Table 3 comparator).
+
+Argument orders are frozen here and recorded in the manifest; the Rust
+runtime asserts them at load time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention_round import attention_quant
+from .layers import ConvSpec, ModelDef, conv_op, forward_infer
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# per-layer calibration steps
+# ---------------------------------------------------------------------------
+
+def make_attention_calib_step(spec: ConvSpec):
+    """(w, x, y_ref, alpha, m, v, t, lr, tau_over_s, s, lo, hi)
+       -> (alpha', m', v', loss)"""
+
+    def step(w, x, y_ref, alpha, m, v, t, lr, tau_over_s, s, lo, hi):
+        def loss_fn(a):
+            w_hat = attention_quant(w, a, s, lo, hi, tau_over_s)
+            y = conv_op(x, w_hat, spec)
+            return jnp.mean((y - y_ref) ** 2)
+
+        loss, g = jax.value_and_grad(loss_fn)(alpha)
+        t1 = t + 1.0
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m / (1.0 - ADAM_B1**t1)
+        vhat = v / (1.0 - ADAM_B2**t1)
+        alpha = alpha - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        return alpha, m, v, loss
+
+    return step
+
+
+def make_attention_calib_scan(spec: ConvSpec, k: int):
+    """K fused calibration steps via lax.scan — the device-resident hot
+    loop. (w, xs[K], y_refs[K], alpha, m, v, t0, lr, tau_over_s, s, lo, hi)
+    -> (alpha', m', v', mean_loss).
+
+    One host↔device round trip per K Adam iterations instead of per
+    iteration; EXPERIMENTS.md §Perf measures the difference.
+    """
+    step = make_attention_calib_step(spec)
+
+    def scan_fn(w, xs, y_refs, alpha, m, v, t0, lr, tau_over_s, s, lo, hi):
+        def body(carry, xy):
+            alpha, m, v, t = carry
+            x, y_ref = xy
+            alpha, m, v, loss = step(
+                w, x, y_ref, alpha, m, v, t, lr, tau_over_s, s, lo, hi
+            )
+            return (alpha, m, v, t + 1.0), loss
+
+        (alpha, m, v, _), losses = jax.lax.scan(
+            body, (alpha, m, v, t0), (xs, y_refs), length=k
+        )
+        return alpha, m, v, jnp.mean(losses)
+
+    return scan_fn
+
+
+def make_adaround_calib_scan(spec: ConvSpec, k: int):
+    """K fused AdaRound steps (same shape as the attention scan, plus the
+    β/λ regularizer scalars)."""
+    step = make_adaround_calib_step(spec)
+
+    def scan_fn(w, xs, y_refs, vv, m, v, t0, lr, beta, lam, s, lo, hi):
+        def body(carry, xy):
+            vv, m, v, t = carry
+            x, y_ref = xy
+            vv, m, v, loss = step(w, x, y_ref, vv, m, v, t, lr, beta, lam, s, lo, hi)
+            return (vv, m, v, t + 1.0), loss
+
+        (vv, m, v, _), losses = jax.lax.scan(
+            body, (vv, m, v, t0), (xs, y_refs), length=k
+        )
+        return vv, m, v, jnp.mean(losses)
+
+    return scan_fn
+
+
+def adaround_h(vv):
+    """Rectified sigmoid h(V) = clip(sigmoid(V)·(ξ−γ)+γ, 0, 1), ξ=1.1 γ=−0.1."""
+    return jnp.clip(jax.nn.sigmoid(vv) * 1.2 - 0.1, 0.0, 1.0)
+
+
+def make_adaround_calib_step(spec: ConvSpec):
+    """(w, x, y_ref, V, m, v, t, lr, beta, lam, s, lo, hi)
+       -> (V', m', v', loss)
+
+    AdaRound (Nagel et al. 2020) exactly as §1 of the paper describes it:
+    ŵ = s·clip(⌊w/s⌋ + h(V), lo, hi), loss = ‖ŵx − wx‖² + λ·f(V) with
+    f(V) = Σ 1 − |2h(V)−1|^β, β annealed by the Rust driver via the runtime
+    scalar input.
+    """
+
+    def step(w, x, y_ref, vv, m, v, t, lr, beta, lam, s, lo, hi):
+        w_floor = jnp.floor(w / s)
+
+        def loss_fn(vv):
+            h = adaround_h(vv)
+            w_hat = s * jnp.clip(w_floor + h, lo, hi)
+            y = conv_op(x, w_hat, spec)
+            recon = jnp.mean((y - y_ref) ** 2)
+            reg = jnp.sum(1.0 - jnp.abs(2.0 * h - 1.0) ** beta)
+            return recon + lam * reg, recon
+
+        (loss, recon), g = jax.value_and_grad(loss_fn, has_aux=True)(vv)
+        t1 = t + 1.0
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m / (1.0 - ADAM_B1**t1)
+        vhat = v2 / (1.0 - ADAM_B2**t1)
+        vv = vv - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        return vv, m, v2, recon
+
+    return step
+
+
+def make_layer_fwd(spec: ConvSpec):
+    """(x, w) -> pre-activation layer output (no bias; it cancels in the
+    reconstruction loss)."""
+
+    def fwd(x, w):
+        return conv_op(x, w, spec)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# whole-model executables
+# ---------------------------------------------------------------------------
+
+def act_fakequant(x, s, hi):
+    """Unsigned activation fake-quant (post-ReLU activations are ≥ 0; the
+    stem input is shifted by the observer on the Rust side). hi = 2^b − 1.
+    A scale of s with hi huge degenerates to identity — used for the
+    'activations FP' rows."""
+    return s * jnp.clip(jnp.round(x / s), 0.0, hi)
+
+
+def make_forward(mdef: ModelDef):
+    """(x, w_0..w_k, b_0..b_k) -> logits"""
+    k = len(mdef.convs)
+
+    def fwd(*args):
+        x = args[0]
+        ws = list(args[1 : 1 + k])
+        bs = list(args[1 + k : 1 + 2 * k])
+        return forward_infer(mdef, ws, bs, x)
+
+    return fwd
+
+
+def make_forward_actq(mdef: ModelDef):
+    """(x, w_0..w_k, b_0..b_k, ascales f32[k], azeros f32[k], ahis f32[k])
+    -> logits
+
+    ascales[i] / azeros[i] / ahis[i] are layer i's activation scale,
+    zero-shift, and integer max (2^b − 1; per-layer so the first/last
+    layers can stay 8-bit per §4.1). Inputs are shifted by the zero-point
+    (post-ReLU activations are already ≥ 0; the stem input needs the
+    affine shift), quantized on an unsigned grid, and shifted back.
+    """
+    k = len(mdef.convs)
+
+    def fwd(*args):
+        x = args[0]
+        ws = list(args[1 : 1 + k])
+        bs = list(args[1 + k : 1 + 2 * k])
+        ascales = args[1 + 2 * k]
+        azeros = args[2 + 2 * k]
+        ahis = args[3 + 2 * k]
+
+        def fq(xin, li):
+            return act_fakequant(xin - azeros[li], ascales[li], ahis[li]) + azeros[li]
+
+        return forward_infer(mdef, ws, bs, x, act_fq=fq)
+
+    return fwd
+
+
+def make_collect(mdef: ModelDef):
+    """(x, w_0..w_k, b_0..b_k) -> (layer inputs..., logits)
+
+    One forward pass that materializes every quantizable layer's input —
+    the calibration activation-capture pass. Works with FP weights (paper
+    default) or already-quantized prefixes (config flag on the Rust side).
+    """
+    k = len(mdef.convs)
+
+    def fwd(*args):
+        x = args[0]
+        ws = list(args[1 : 1 + k])
+        bs = list(args[1 + k : 1 + 2 * k])
+        cap = []
+        logits = forward_infer(mdef, ws, bs, x, capture=cap)
+        return tuple(cap) + (logits,)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# STE-QAT comparator (Table 3)
+# ---------------------------------------------------------------------------
+
+def _ste_fq_weight(w, hi):
+    """Symmetric signed STE fake-quant with dynamic max-abs scale."""
+    s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / hi
+    wq = s * jnp.clip(jnp.round(w / s), -hi - 1.0, hi)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def _ste_fq_act(x, hi):
+    s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / hi
+    xq = s * jnp.clip(jnp.round(x / s), 0.0, hi)
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def make_qat_step(mdef: ModelDef):
+    """(x, y, w…, b…, mw…, mb…, lr, whi, ahi) -> (w…, b…, mw…, mb…, loss)
+
+    SGD-momentum training with STE fake-quant on weights and activations —
+    the budgeted stand-in for the paper's PACT/DSQ/LSQ rows (DESIGN.md §2).
+    First and last layers stay 8-bit like every other experiment.
+    """
+    k = len(mdef.convs)
+
+    def step(*args):
+        x, y = args[0], args[1]
+        ws = list(args[2 : 2 + k])
+        bs = list(args[2 + k : 2 + 2 * k])
+        mws = list(args[2 + 2 * k : 2 + 3 * k])
+        mbs = list(args[2 + 3 * k : 2 + 4 * k])
+        lr, whi, ahi = args[2 + 4 * k], args[3 + 4 * k], args[4 + 4 * k]
+
+        def loss_fn(ws, bs):
+            hi8 = 127.0
+            wq = [
+                _ste_fq_weight(w, hi8 if i in (0, k - 1) else whi)
+                for i, w in enumerate(ws)
+            ]
+
+            def fq(xin, li):
+                return _ste_fq_act(xin, 255.0 if li in (0, k - 1) else ahi)
+
+            logits = forward_infer(mdef, wq, bs, x, act_fq=fq)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+        loss, (gw, gb) = jax.value_and_grad(loss_fn, argnums=(0, 1))(ws, bs)
+        mws = [0.9 * m + g for m, g in zip(mws, gw)]
+        mbs = [0.9 * m + g for m, g in zip(mbs, gb)]
+        ws = [w - lr * m for w, m in zip(ws, mws)]
+        bs = [b - lr * m for b, m in zip(bs, mbs)]
+        return tuple(ws) + tuple(bs) + tuple(mws) + tuple(mbs) + (loss,)
+
+    return step

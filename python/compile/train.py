@@ -1,0 +1,126 @@
+"""Pretraining — produces the FP32 checkpoints that PTQ starts from.
+
+This is the build-time substitute for "download a pretrained torchvision
+model" (DESIGN.md §2): each zoo model is trained to convergence on the
+synthetic dataset with Adam + cosine LR, BatchNorm in train mode, then the
+BN parameters are folded into conv weight+bias pairs and exported as
+per-layer .npy files for the Rust coordinator.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as dataset
+from .layers import ModelDef, fold_model, forward_infer, forward_train, init_params
+from .models import build
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_step(mdef: ModelDef, base_lr: float, total_steps: int):
+    """One jitted Adam training step over the params pytree."""
+
+    def loss_fn(trainable, frozen, x, y):
+        params = merge(mdef, trainable, frozen)
+        logits, updates = forward_train(mdef, params, x)
+        return cross_entropy(logits, y), updates
+
+    def step(trainable, frozen, opt, x, y, t):
+        (loss, updates), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            trainable, frozen, x, y
+        )
+        lr = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * t / total_steps))
+        m, v = opt
+        m = jax.tree.map(lambda a, g: 0.9 * a + 0.1 * g, m, grads)
+        v = jax.tree.map(lambda a, g: 0.999 * a + 0.001 * g * g, v, grads)
+        tt = t + 1.0
+        new_trainable = jax.tree.map(
+            lambda p, mm, vv: p
+            - lr * (mm / (1 - 0.9**tt)) / (jnp.sqrt(vv / (1 - 0.999**tt)) + 1e-8),
+            trainable, m, v,
+        )
+        # fold BN running-stat updates back into the frozen side
+        new_frozen = dict(frozen)
+        for name, upd in updates.items():
+            nf = dict(new_frozen[name])
+            nf.update(upd)
+            new_frozen[name] = nf
+        return new_trainable, new_frozen, (m, v), loss
+
+    return jax.jit(step)
+
+
+def split_params(mdef: ModelDef, params: dict):
+    """(trainable, frozen): running BN stats are not differentiated."""
+    trainable, frozen = {}, {}
+    for name, p in params.items():
+        t = {k: v for k, v in p.items() if k in ("w", "b", "gamma", "beta")}
+        f = {k: v for k, v in p.items() if k in ("mean", "var")}
+        trainable[name] = t
+        frozen[name] = f
+    return trainable, frozen
+
+
+def merge(mdef: ModelDef, trainable: dict, frozen: dict) -> dict:
+    return {
+        name: {**trainable[name], **frozen.get(name, {})} for name in trainable
+    }
+
+
+def evaluate_fp(mdef: ModelDef, ws, bs, xs, ys, batch=128) -> float:
+    fwd = jax.jit(lambda x: forward_infer(mdef, [jnp.asarray(w) for w in ws],
+                                          [jnp.asarray(b) for b in bs], x))
+    correct = 0
+    n = (len(xs) // batch) * batch
+    for i in range(0, n, batch):
+        logits = fwd(jnp.asarray(xs[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(ys[i : i + batch])))
+    return correct / n
+
+
+def train_model(name: str, data_dir: str, steps: int | None = None, batch: int = 64,
+                lr: float = 2e-3, seed: int = 0, verbose: bool = True):
+    """steps default: AR_TRAIN_STEPS env (350) — the build knob the
+    Makefile exposes for constrained CI machines."""
+    import os
+
+    if steps is None:
+        steps = int(os.environ.get("AR_TRAIN_STEPS", "350"))
+    """Train one zoo model; returns (mdef, folded_ws, folded_bs, fp_acc)."""
+    mdef = build(name)
+    xs, ys = dataset.load_or_make(data_dir, "train")
+    params = init_params(mdef, seed=seed)
+    trainable, frozen = split_params(mdef, params)
+    opt = (
+        jax.tree.map(jnp.zeros_like, trainable),
+        jax.tree.map(jnp.zeros_like, trainable),
+    )
+    step = make_step(mdef, lr, steps)
+    rng = np.random.default_rng(seed + 7)
+    t0 = time.time()
+    loss = None
+    for t in range(steps):
+        idx = rng.integers(0, len(xs), size=batch)
+        trainable, frozen, opt, loss = step(
+            trainable, frozen, opt,
+            jnp.asarray(xs[idx]), jnp.asarray(ys[idx]), float(t),
+        )
+        if verbose and (t % 100 == 0 or t == steps - 1):
+            print(f"[{name}] step {t:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    params = merge(mdef, trainable, frozen)
+    ws, bs = fold_model(mdef, params)
+    ex, ey = dataset.load_or_make(data_dir, "eval")
+    acc = evaluate_fp(mdef, ws, bs, ex, ey)
+    if verbose:
+        print(f"[{name}] FP32 top-1 {acc * 100:.2f}%  ({time.time() - t0:.1f}s)",
+              flush=True)
+    return mdef, ws, bs, acc

@@ -1,0 +1,49 @@
+"""Dataset generator contracts (mirrored by rust/src/data/synth.rs tests)."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_determinism():
+    a, la = data.generate_split(16, 42)
+    b, lb = data.generate_split(16, 42)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+    c, _ = data.generate_split(16, 43)
+    assert not np.array_equal(a, c)
+
+
+def test_shapes_and_dtypes():
+    xs, ys = data.generate_split(8, 0)
+    assert xs.shape == (8, 32, 32, 3)
+    assert xs.dtype == np.float32
+    assert ys.dtype == np.int32
+    assert ys.min() >= 0 and ys.max() < data.NUM_CLASSES
+
+
+def test_moments():
+    xs, _ = data.generate_split(64, 1)
+    assert abs(float(xs.mean())) < 0.1
+    assert 0.5 < float(xs.var()) < 2.0
+
+
+def test_class_params_stable():
+    """The closed-form class parameters are a cross-language contract with
+    rust/src/data/synth.rs — pin a few values."""
+    p3 = data.class_params(3)
+    assert abs(p3["freq"] - 2.85) < 1e-9
+    assert abs(p3["theta_deg"] - (3 * 137.508) % 180.0) < 1e-9
+    p8 = data.class_params(8)
+    assert abs(p8["second_freq"] - 2.5) < 1e-9
+
+
+def test_cutout_present():
+    xs, _ = data.generate_split(4, 7)
+    for img in xs:
+        assert (img == 0.0).sum() >= 8 * 8 * 3
+
+
+def test_splits_config():
+    assert data.SPLITS["calib"][0] == 1024  # the paper's calibration budget
+    assert data.SPLITS["train"][0] >= 4 * data.SPLITS["calib"][0]

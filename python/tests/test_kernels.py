@@ -1,0 +1,138 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, scales, and hyperparameters; every kernel must
+match its oracle to f32 tolerance. This is the core correctness signal for
+the quantizer the whole stack executes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.attention_round import (
+    attention_grad,
+    attention_quant,
+    fakequant,
+)
+from compile.kernels.gram import gram
+from compile.kernels.qmatmul import qmatmul
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, shape).astype(np.float32))
+
+
+shapes = st.sampled_from(
+    [(4,), (3, 5), (2, 3, 7), (1, 1, 1, 9), (65,), (128,), (257,), (8, 128),
+     (3, 3, 16, 16), (1030,)]
+)
+
+
+@given(shape=shapes, s=st.sampled_from([0.01, 0.1, 0.5]),
+       bits=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 10))
+def test_fakequant_matches_ref(shape, s, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, shape)
+    a = rand(rng, shape, 0.5)
+    half = 1 << (bits - 1)
+    lo, hi = float(-half), float(half - 1)
+    out = fakequant(w, a, s, lo, hi)
+    exp = ref.fakequant_ref(w, a, s, lo, hi)
+    np.testing.assert_allclose(out, exp, rtol=0, atol=1e-6)
+
+
+@given(shape=shapes, tau=st.sampled_from([0.0, 0.05, 0.5, 1.0]),
+       seed=st.integers(0, 10))
+def test_attention_grad_matches_ref(shape, tau, seed):
+    rng = np.random.default_rng(seed + 100)
+    g = rand(rng, shape)
+    a = rand(rng, shape, 0.7)
+    out = attention_grad(g, a, tau)
+    exp = ref.attention_grad_ref(g, a, tau)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-6)
+
+
+def test_attention_grad_sign_rule():
+    """Eq. (6): for g>0 the gradient magnitude grows with α (already past
+    the target cell), for g<0 it shrinks."""
+    a = jnp.asarray([-2.0, 0.0, 2.0], jnp.float32)
+    gp = attention_grad(jnp.ones(3), a, 0.5)
+    assert gp[0] < gp[1] < gp[2]
+    gn = attention_grad(-jnp.ones(3), a, 0.5)
+    assert gn[0] < gn[1] < gn[2]  # g<0: -1*(0.5-0.5erf) increasing in α
+    # symmetric at α=0: |dz/dα| = 0.5
+    np.testing.assert_allclose(gp[1], 0.5, atol=1e-6)
+    np.testing.assert_allclose(gn[1], -0.5, atol=1e-6)
+
+
+@given(seed=st.integers(0, 5), tau=st.sampled_from([0.1, 0.5]))
+def test_custom_vjp_routes_grad_to_alpha_only(seed, tau):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, (6, 7))
+    a = rand(rng, (6, 7), 0.4)
+
+    def loss(w_, a_):
+        return jnp.sum(attention_quant(w_, a_, 0.1, -8.0, 7.0, tau) ** 2)
+
+    gw, ga = jax.grad(loss, argnums=(0, 1))(w, a)
+    assert float(jnp.max(jnp.abs(gw))) == 0.0  # w is frozen in PTQ
+    z = ref.fakequant_ref(w, a, 0.1, -8.0, 7.0)
+    exp = ref.attention_grad_ref(2.0 * z * 0.1, a, tau)
+    np.testing.assert_allclose(ga, exp, rtol=1e-5, atol=1e-6)
+
+
+@given(m=st.sampled_from([1, 7, 50, 130]), k=st.sampled_from([3, 16, 70]),
+       n=st.sampled_from([2, 33, 129]), seed=st.integers(0, 5))
+def test_qmatmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed + 7)
+    x = rand(rng, (m, k))
+    w = rand(rng, (k, n))
+    out = qmatmul(x, w, 0.05, 0.04, 0.0, 255.0, -8.0, 7.0)
+    exp = ref.qmatmul_ref(x, w, 0.05, 0.04, 0.0, 255.0, -8.0, 7.0)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-4)
+
+
+@given(m=st.sampled_from([2, 16, 100, 140]), n=st.sampled_from([3, 27, 300]),
+       seed=st.integers(0, 5))
+def test_gram_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed + 13)
+    w = rand(rng, (m, n))
+    np.testing.assert_allclose(gram(w), ref.gram_ref(w), rtol=1e-5, atol=1e-4)
+
+
+def test_fakequant_idempotent():
+    """Quantizing an already-quantized tensor is the identity."""
+    rng = np.random.default_rng(0)
+    w = rand(rng, (33,))
+    zero = jnp.zeros_like(w)
+    q1 = fakequant(w, zero, 0.1, -8.0, 7.0)
+    q2 = fakequant(q1, zero, 0.1, -8.0, 7.0)
+    np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+
+def test_fakequant_output_on_grid():
+    rng = np.random.default_rng(1)
+    w = rand(rng, (101,))
+    a = rand(rng, (101,), 0.3)
+    s = 0.25
+    out = np.asarray(fakequant(w, a, s, -8.0, 7.0))
+    q = out / s
+    np.testing.assert_allclose(q, np.round(q), atol=1e-5)
+    assert q.min() >= -8.0 and q.max() <= 7.0
+
+
+def test_coding_length_ref_monotone():
+    rng = np.random.default_rng(2)
+    w_small = jnp.asarray(rng.normal(0, 0.01, (16, 64)).astype(np.float32))
+    w_big = jnp.asarray(rng.normal(0, 1.0, (16, 64)).astype(np.float32))
+    assert ref.coding_length_ref(w_big, 1e-3) > ref.coding_length_ref(w_small, 1e-3)

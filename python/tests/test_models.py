@@ -1,0 +1,117 @@
+"""L2 model-zoo contracts: shapes, BN folding, IR consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.layers import (
+    fold_model,
+    forward_infer,
+    forward_train,
+    init_params,
+    layer_io_shapes,
+)
+from compile.models import ZOO, build
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_forward_shapes(name):
+    mdef = build(name)
+    params = init_params(mdef, seed=0)
+    ws, bs = fold_model(mdef, params)
+    x = jnp.zeros((2, 32, 32, 3), jnp.float32)
+    logits = forward_infer(mdef, [jnp.asarray(w) for w in ws],
+                           [jnp.asarray(b) for b in bs], x)
+    assert logits.shape == (2, 16)
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_layer_io_shapes_consistent(name):
+    mdef = build(name)
+    io = layer_io_shapes(mdef, 4)
+    assert len(io) == len(mdef.convs)
+    for spec, (in_shape, out_shape) in zip(mdef.convs, io):
+        assert in_shape[0] == 4 and out_shape[0] == 4
+        assert out_shape[-1] == spec.out_ch
+        if spec.kind != "linear":
+            assert in_shape[-1] == spec.in_ch
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_first_last_layers(name):
+    mdef = build(name)
+    convs = mdef.convs
+    assert convs[0].name == "stem"
+    assert convs[-1].kind == "linear"
+    assert not convs[-1].bn  # classifier has a real bias
+
+
+def test_bn_folding_matches_eval_mode():
+    """After folding, inference must equal conv+BN(running stats)+act."""
+    mdef = build("resnet18t")
+    params = init_params(mdef, seed=3)
+    # push the BN stats away from init so folding is non-trivial
+    rng = np.random.default_rng(0)
+    for p in params.values():
+        if "mean" in p:
+            p["mean"] = jnp.asarray(rng.normal(0, 0.2, p["mean"].shape), jnp.float32)
+            p["var"] = jnp.asarray(rng.uniform(0.5, 2.0, p["var"].shape), jnp.float32)
+            p["gamma"] = jnp.asarray(rng.uniform(0.5, 1.5, p["gamma"].shape), jnp.float32)
+            p["beta"] = jnp.asarray(rng.normal(0, 0.1, p["beta"].shape), jnp.float32)
+    ws, bs = fold_model(mdef, params)
+    x = jnp.asarray(rng.normal(0, 1, (2, 32, 32, 3)), jnp.float32)
+    folded = forward_infer(mdef, [jnp.asarray(w) for w in ws],
+                           [jnp.asarray(b) for b in bs], x)
+
+    # manual eval-mode BN reference via forward_train with batch stats
+    # replaced by running stats: emulate by scaling inputs through the
+    # folded math layer-by-layer — instead compare against a direct
+    # recomputation using the BN formula on the conv output.
+    from compile.layers import act_fn, conv_op
+
+    env = {"x": x}
+    li = 0
+    for node in mdef.nodes:
+        if node["op"] == "conv":
+            spec = node["spec"]
+            p = params[spec.name]
+            y = conv_op(env[node["src"]], p["w"], spec)
+            if spec.bn:
+                y = (y - p["mean"]) / jnp.sqrt(p["var"] + 1e-5) * p["gamma"] + p["beta"]
+            else:
+                y = y + p["b"]
+            env[node["dst"]] = act_fn(y, spec.act)
+            li += 1
+        elif node["op"] == "save":
+            env[node["dst"]] = env[node["src"]]
+        elif node["op"] == "add":
+            env[node["dst"]] = act_fn(env[node["src"]] + env[node["other"]], node["act"])
+        elif node["op"] == "gap":
+            env["x"] = jnp.mean(env["x"], axis=(1, 2))
+    np.testing.assert_allclose(folded, env["x"], rtol=1e-4, atol=1e-4)
+
+
+def test_forward_train_updates_bn_stats():
+    mdef = build("regnett")
+    params = init_params(mdef, seed=1)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (8, 32, 32, 3)), jnp.float32)
+    _, updates = forward_train(mdef, params, x)
+    assert updates  # every BN layer reports new running stats
+    for name, upd in updates.items():
+        assert set(upd) == {"mean", "var"}
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_unique_layer_names(name):
+    mdef = build(name)
+    names = [s.name for s in mdef.convs]
+    assert len(names) == len(set(names))
+
+
+def test_coding_view_dims():
+    mdef = build("mobilenetv2t")
+    for spec in mdef.convs:
+        n, m = spec.coding_view()
+        assert n * m == spec.params
+        assert m == spec.out_ch

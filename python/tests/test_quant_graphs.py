@@ -1,0 +1,159 @@
+"""L2 calibration-graph semantics: the step executables must actually
+reduce reconstruction loss, the scan must equal K single steps, and the
+activation fake-quant path must degrade gracefully with bits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import quant
+from compile.layers import ConvSpec
+from compile.models import build
+from compile.layers import fold_model, init_params
+
+
+def small_conv_spec():
+    return ConvSpec(name="t", kind="conv", in_ch=4, out_ch=8, ksize=3, act="none")
+
+
+def make_problem(seed=0):
+    rng = np.random.default_rng(seed)
+    spec = small_conv_spec()
+    w = jnp.asarray(rng.normal(0, 0.2, spec.wshape), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (4, 8, 8, 4)), jnp.float32)
+    y_ref = quant.make_layer_fwd(spec)(x, w)
+    return spec, w, x, y_ref
+
+
+def grid_params(w, bits=4):
+    s = float(jnp.max(jnp.abs(w))) / (1 << (bits - 1))
+    half = 1 << (bits - 1)
+    return s, float(-half), float(half - 1)
+
+
+def test_attention_step_reduces_loss():
+    spec, w, x, y_ref = make_problem()
+    s, lo, hi = grid_params(w)
+    step = jax.jit(quant.make_attention_calib_step(spec))
+    alpha = jnp.asarray(np.random.default_rng(1).normal(0, 0.5, w.shape), jnp.float32)
+    m = jnp.zeros_like(w)
+    v = jnp.zeros_like(w)
+    losses = []
+    for t in range(60):
+        alpha, m, v, loss = step(w, x, y_ref, alpha, m, v, float(t), 0.05, 0.5,
+                                 s, lo, hi)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_adaround_step_reduces_loss():
+    spec, w, x, y_ref = make_problem(2)
+    s, lo, hi = grid_params(w)
+    step = jax.jit(quant.make_adaround_calib_step(spec))
+    rng = np.random.default_rng(3)
+    vv = jnp.asarray(rng.normal(0, 1, w.shape), jnp.float32)
+    m = jnp.zeros_like(w)
+    v = jnp.zeros_like(w)
+    losses = []
+    for t in range(60):
+        vv, m, v, loss = step(w, x, y_ref, vv, m, v, float(t), 0.05, 20.0, 0.0,
+                              s, lo, hi)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9
+
+
+def test_scan_equals_k_single_steps():
+    spec, w, x, y_ref = make_problem(4)
+    s, lo, hi = grid_params(w)
+    k = 4
+    step = jax.jit(quant.make_attention_calib_step(spec))
+    scan = jax.jit(quant.make_attention_calib_scan(spec, k))
+    rng = np.random.default_rng(5)
+    alpha0 = jnp.asarray(rng.normal(0, 0.5, w.shape), jnp.float32)
+    xs = jnp.stack([x] * k)
+    ys = jnp.stack([y_ref] * k)
+    a_scan, m_scan, v_scan, mean_loss = scan(
+        w, xs, ys, alpha0, jnp.zeros_like(w), jnp.zeros_like(w), 0.0, 0.05,
+        0.5, s, lo, hi
+    )
+    alpha, m, v = alpha0, jnp.zeros_like(w), jnp.zeros_like(w)
+    losses = []
+    for t in range(k):
+        alpha, m, v, loss = step(w, x, y_ref, alpha, m, v, float(t), 0.05, 0.5,
+                                 s, lo, hi)
+        losses.append(float(loss))
+    np.testing.assert_allclose(a_scan, alpha, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(mean_loss), np.mean(losses), rtol=1e-5)
+
+
+def test_adaround_h_range():
+    v = jnp.linspace(-10, 10, 101)
+    h = quant.adaround_h(v)
+    assert float(h.min()) == 0.0 and float(h.max()) == 1.0
+
+
+def test_forward_actq_identity_at_high_bits():
+    """Huge activation range ⇒ actq forward ≈ plain forward."""
+    mdef = build("resnet18t")
+    params = init_params(mdef, seed=0)
+    ws, bs = fold_model(mdef, params)
+    ws = [jnp.asarray(w) for w in ws]
+    bs = [jnp.asarray(b) for b in bs]
+    k = len(ws)
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (2, 32, 32, 3)), jnp.float32)
+    plain = quant.make_forward(mdef)(x, *ws, *bs)
+    # Untrained activations reach O(100); cover [-1024, ~7400] with a
+    # 1e-4 step so fake-quant is numerically the identity.
+    scales = jnp.full((k,), 1e-4, jnp.float32)
+    zeros = jnp.full((k,), -1024.0, jnp.float32)
+    his = jnp.full((k,), 2.0**26, jnp.float32)
+    fq = quant.make_forward_actq(mdef)(x, *ws, *bs, scales, zeros, his)
+    np.testing.assert_allclose(plain, fq, rtol=1e-2, atol=1e-2)
+
+
+def test_forward_actq_monotone_in_bits():
+    """Lower activation bits must not beat higher bits on logit fidelity."""
+    mdef = build("resnet18t")
+    params = init_params(mdef, seed=2)
+    ws, bs = fold_model(mdef, params)
+    ws = [jnp.asarray(w) for w in ws]
+    bs = [jnp.asarray(b) for b in bs]
+    k = len(ws)
+    x = jnp.asarray(np.random.default_rng(3).normal(0, 1, (4, 32, 32, 3)), jnp.float32)
+    plain = quant.make_forward(mdef)(x, *ws, *bs)
+    errs = []
+    # fixed clip range wide enough for the untrained activations (~O(100));
+    # only the grid step varies with bits, so error must grow as bits drop
+    for bits in (8, 4, 2):
+        hi = float(2**bits - 1)
+        scales = jnp.full((k,), 1024.0 / hi, jnp.float32)
+        zeros = jnp.full((k,), -512.0, jnp.float32)
+        his = jnp.full((k,), hi, jnp.float32)
+        out = quant.make_forward_actq(mdef)(x, *ws, *bs, scales, zeros, his)
+        errs.append(float(jnp.mean((out - plain) ** 2)))
+    assert errs[0] <= errs[1] <= errs[2], errs
+
+
+def test_qat_step_shapes_and_loss_decrease():
+    mdef = build("resnet18t")
+    params = init_params(mdef, seed=4)
+    ws, bs = fold_model(mdef, params)
+    ws = [jnp.asarray(w) for w in ws]
+    bs = [jnp.asarray(b) for b in bs]
+    k = len(ws)
+    mws = [jnp.zeros_like(w) for w in ws]
+    mbs = [jnp.zeros_like(b) for b in bs]
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(0, 1, (8, 32, 32, 3)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 16, 8), jnp.int32)
+    step = jax.jit(quant.make_qat_step(mdef))
+    losses = []
+    for _ in range(8):
+        outs = step(x, y, *ws, *bs, *mws, *mbs, 0.05, 7.0, 15.0)
+        ws = list(outs[:k])
+        bs = list(outs[k : 2 * k])
+        mws = list(outs[2 * k : 3 * k])
+        mbs = list(outs[3 * k : 4 * k])
+        losses.append(float(outs[-1]))
+    assert losses[-1] < losses[0], losses

@@ -1,0 +1,38 @@
+//! Shared setup for the bench binaries (criterion substitute — see
+//! bench_harness).
+
+use attention_round::bench_harness::artifacts_dir;
+use attention_round::coordinator::config::CalibConfig;
+use attention_round::coordinator::experiments::Ctx;
+
+/// Build an experiment context with a bench-sized calibration budget, or
+/// None (with a notice) when artifacts haven't been built yet — benches
+/// must not fail a bare `cargo bench` on a fresh checkout.
+pub fn bench_ctx(iters: usize) -> Option<Ctx> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!(
+            "SKIP: no artifacts at {} (run `make artifacts` first)",
+            dir.display()
+        );
+        return None;
+    }
+    let mut cfg = CalibConfig::quick();
+    cfg.iters = iters;
+    cfg.calib_samples = 256; // bench scale; full runs via `repro reproduce`
+    let mut ctx = Ctx::new(
+        dir.to_str().expect("utf8 artifacts path"),
+        cfg,
+        "target/bench_results",
+    )
+    .expect("bench ctx");
+    // Shrink the eval split to two batches: benches measure pipeline
+    // latency, not statistical accuracy.
+    let eb = ctx.manifest.dataset.eval_batch;
+    let n = (eb * 2).min(ctx.eval.images.shape()[0]);
+    ctx.eval = attention_round::data::Split {
+        images: ctx.eval.images.slice_axis0(0, n).expect("slice"),
+        labels: ctx.eval.labels[..n].to_vec(),
+    };
+    Some(ctx)
+}

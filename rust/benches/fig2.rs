@@ -1,0 +1,32 @@
+//! Bench: regenerate Figure 2 (τ sweep) at bench scale.
+//! Full-scale: `repro reproduce fig2 --taus 0,0.1,...,1.0`.
+
+mod common;
+
+use attention_round::coordinator::experiments;
+
+fn main() {
+    let Some(ctx) = common::bench_ctx(16) else { return };
+    // bench-scale: two τ points weights-only (full sweep incl. W+A via
+    // `repro reproduce fig2`)
+    use attention_round::coordinator::model::LoadedModel;
+    use attention_round::coordinator::pipeline::{
+        quantize_and_eval, resolve_uniform_bits, QuantSpec,
+    };
+    let loaded = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    for tau in [0.0f32, 0.5] {
+        let mut cfg = ctx.cfg.clone();
+        cfg.tau = tau;
+        let spec = QuantSpec {
+            model: "resnet18t".into(),
+            wbits: resolve_uniform_bits(&loaded, 4),
+            abits: None,
+        };
+        let out = quantize_and_eval(
+            &ctx.rt, &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
+        )
+        .expect("run");
+        println!("fig2 bench point: τ={tau} -> {:.2}%", out.acc * 100.0);
+    }
+    let _ = experiments::fig2 as usize;
+}

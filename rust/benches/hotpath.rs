@@ -1,0 +1,206 @@
+//! Hot-path microbenchmarks — the §Perf profiling surface.
+//!
+//! Device-path benches:
+//!   * calib scan throughput (steps/s) vs single-step (quantifies the
+//!     K-step fusion win)
+//!   * eval throughput (imgs/s)
+//!   * executable compile latency
+//! Host-path benches:
+//!   * MSE scale search, rounding kernels, coding length + k-means,
+//!     JSON/npy parsing, RNG, batch gather.
+
+mod common;
+
+use attention_round::bench_harness::{artifacts_dir, Bencher};
+use attention_round::coordinator::capture::{capture, reference_outputs};
+use attention_round::coordinator::model::LoadedModel;
+use attention_round::data::{synth, Split};
+use attention_round::io::npy;
+use attention_round::mixed::{self, kmeans};
+use attention_round::quant::rounding;
+use attention_round::quant::scale::mse_optimal_scale;
+use attention_round::quant::QGrid;
+use attention_round::tensor::Tensor;
+use attention_round::util::json;
+use attention_round::util::rng::Rng;
+
+fn host_benches() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(1);
+
+    // RNG + gaussian fill
+    let mut buf = vec![0.0f32; 1 << 16];
+    b.run("host/rng_gaussian_64k", || {
+        rng.fill_gaussian(&mut buf, 0.0, 1.0);
+    });
+
+    // rounding kernels on a resnet-sized layer (3x3x128x128)
+    let mut w = vec![0.0f32; 3 * 3 * 128 * 128];
+    Rng::new(2).fill_gaussian(&mut w, 0.0, 0.05);
+    let grid = QGrid::signed(4, 0.01).unwrap();
+    b.run("host/nearest_147k", || rounding::nearest(&w, &grid));
+    let alpha = vec![0.1f32; w.len()];
+    b.run("host/attention_finalize_147k", || {
+        rounding::attention_finalize(&w, &alpha, &grid)
+    });
+
+    // MSE-optimal scale search (3 refinement rounds x 25 candidates)
+    b.run("host/mse_scale_search_147k", || {
+        mse_optimal_scale(&w, 4).unwrap()
+    });
+
+    // coding length on the largest zoo layer view (1152 x 128)
+    let wt = Tensor::new(vec![1152, 128], w.clone()).unwrap();
+    b.run("host/coding_length_1152x128", || {
+        let m = mixed::coding_view(&wt, 1152, 128).unwrap();
+        mixed::coding_length(&m, 1e-3).unwrap()
+    });
+
+    // exact 1-D k-means over 24 layer lengths
+    let lengths: Vec<f64> = (0..24).map(|i| (i as f64 * 7.3) % 97.0).collect();
+    b.run("host/kmeans_dp_24x4", || {
+        kmeans::cluster_1d(&lengths, 4).unwrap()
+    });
+
+    // synthetic workload generation (bench workload path)
+    b.run("host/synth_generate_32", || synth::generate(32, 7));
+
+    // JSON manifest parse (if present)
+    let dir = artifacts_dir();
+    if let Ok(text) = std::fs::read_to_string(dir.join("manifest.json")) {
+        b.run("host/json_parse_manifest", || json::parse(&text).unwrap());
+    }
+
+    // npy read of a weight file (if present)
+    if let Some(m) = json_first_weight(&dir) {
+        b.run("host/npy_read_weight", || npy::read_f32(&m).unwrap());
+    }
+
+    // batch gather (the calibration sampling path)
+    let cache = Tensor::zeros(vec![1024, 16, 16, 16]);
+    let mut r2 = Rng::new(3);
+    b.run("host/gather_8x32_batches", || {
+        let idx: Vec<usize> = (0..256).map(|_| r2.below(1024)).collect();
+        cache.gather_axis0(&idx).unwrap()
+    });
+}
+
+fn json_first_weight(dir: &std::path::Path) -> Option<std::path::PathBuf> {
+    let j = json::parse(&std::fs::read_to_string(dir.join("manifest.json")).ok()?).ok()?;
+    let models = j.get("models").ok()?.as_obj().ok()?;
+    let (_, m) = models.iter().next()?;
+    let f = m.get("w_files").ok()?.as_arr().ok()?.first()?.as_str().ok()?;
+    Some(dir.join(f))
+}
+
+fn device_benches() {
+    let Some(ctx) = common::bench_ctx(16) else { return };
+    let b = Bencher::quick();
+
+    // executable compile latency
+    let model = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    let layer = &model.info.layers[1];
+    b.run("device/compile_calib_scan", || {
+        // fresh runtime so the cache doesn't absorb the cost
+        let rt = attention_round::runtime::Runtime::new(
+            artifacts_dir().to_str().unwrap(),
+        )
+        .unwrap();
+        rt.load(&layer.calib_scan).unwrap()
+    });
+
+    // eval throughput
+    let eval_batch = ctx.manifest.dataset.eval_batch;
+    let stats = b.run("device/eval_forward_batch128", || {
+        use attention_round::coordinator::evaluate::evaluate;
+        let small = Split {
+            images: ctx.eval.images.slice_axis0(0, eval_batch).unwrap(),
+            labels: ctx.eval.labels[..eval_batch].to_vec(),
+        };
+        evaluate(&ctx.rt, &ctx.manifest, &model, &model.weights, &small).unwrap()
+    });
+    println!(
+        "  -> eval throughput ~{:.0} imgs/s",
+        stats.throughput(eval_batch as f64)
+    );
+
+    // calibration scan throughput: K fused steps per dispatch
+    let cache = capture(
+        &ctx.rt, &ctx.manifest, &model, &model.weights, &ctx.calib, 256,
+    )
+    .expect("capture");
+    let x = cache.peek(1).expect("layer1 acts").clone();
+    let yref = reference_outputs(
+        &ctx.rt,
+        &layer.layer_fwd,
+        &x,
+        &model.weights[1],
+        ctx.manifest.dataset.calib_batch,
+    )
+    .expect("yref");
+    let mut cfg = ctx.cfg.clone();
+    let scan_k = ctx.manifest.scan_k;
+    cfg.iters = scan_k; // exactly one scan call per bench iter
+    let mut rng = Rng::new(5);
+    let stats = b.run("device/calib_scan_K_steps", || {
+        attention_round::coordinator::calibrate::calibrate_attention(
+            &ctx.rt,
+            layer,
+            &model.weights[1],
+            &x,
+            &yref,
+            4,
+            &cfg,
+            scan_k,
+            ctx.manifest.dataset.calib_batch,
+            &mut rng,
+        )
+        .unwrap()
+    });
+    println!(
+        "  -> calibration ~{:.0} Adam steps/s (scan_k={scan_k})",
+        stats.throughput(scan_k as f64)
+    );
+
+    // single-step loop for the same K steps (the naive baseline the scan
+    // replaces — quantifies the §Perf fusion win)
+    let exe = ctx.rt.load(&layer.calib_step).expect("calib_step");
+    let w = &model.weights[1];
+    let stats1 = b.run("device/calib_single_K_steps", || {
+        use attention_round::runtime::literal_to_tensor;
+        let wbuf = ctx.rt.upload(w).unwrap();
+        let mut alpha = Tensor::zeros(w.shape().to_vec());
+        let mut m = Tensor::zeros(w.shape().to_vec());
+        let mut v = Tensor::zeros(w.shape().to_vec());
+        let lr = ctx.rt.upload_scalar(1e-3).unwrap();
+        let tau = ctx.rt.upload_scalar(0.5).unwrap();
+        let s = ctx.rt.upload_scalar(0.01).unwrap();
+        let lo = ctx.rt.upload_scalar(-8.0).unwrap();
+        let hi = ctx.rt.upload_scalar(7.0).unwrap();
+        let cb = ctx.manifest.dataset.calib_batch;
+        for t in 0..scan_k {
+            let idx: Vec<usize> = (0..cb).map(|_| rng.below(x.shape()[0])).collect();
+            let xb = ctx.rt.upload(&x.gather_axis0(&idx).unwrap()).unwrap();
+            let yb = ctx.rt.upload(&yref.gather_axis0(&idx).unwrap()).unwrap();
+            let ab = ctx.rt.upload(&alpha).unwrap();
+            let mb = ctx.rt.upload(&m).unwrap();
+            let vb = ctx.rt.upload(&v).unwrap();
+            let tb = ctx.rt.upload_scalar(t as f32).unwrap();
+            let outs = exe
+                .run_b(&[&wbuf, &xb, &yb, &ab, &mb, &vb, &tb, &lr, &tau, &s, &lo, &hi])
+                .unwrap();
+            alpha = literal_to_tensor(&outs[0]).unwrap();
+            m = literal_to_tensor(&outs[1]).unwrap();
+            v = literal_to_tensor(&outs[2]).unwrap();
+        }
+    });
+    println!(
+        "  -> scan fusion speedup: {:.2}x",
+        stats1.mean_s / stats.mean_s
+    );
+}
+
+fn main() {
+    host_benches();
+    device_benches();
+}

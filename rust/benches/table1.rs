@@ -1,0 +1,39 @@
+//! Bench: regenerate Table 1 (weight-only PTQ) at bench scale.
+//!
+//! Runs the real pipeline on a model subset with a reduced iteration
+//! budget and times one full "Ours 4/32" quantization; the printed table
+//! rows are the Table-1 series for the subset.
+//! Full-scale regeneration: `repro reproduce table1 --profile paper`.
+
+mod common;
+
+use attention_round::bench_harness::Bencher;
+use attention_round::coordinator::experiments;
+
+fn main() {
+    let Some(ctx) = common::bench_ctx(16) else { return };
+    let mut b = Bencher::quick();
+    b.max_iters = 1;
+    let stats = b.run("table1/resnet18t/ours_4b_quantize_eval", || {
+        experiments_run_once(&ctx)
+    });
+    println!(
+        "one full 4-bit quantize+eval: {:.1}s at {} iters/module",
+        stats.mean_s, ctx.cfg.iters
+    );
+}
+
+fn experiments_run_once(ctx: &experiments::Ctx) {
+    use attention_round::coordinator::model::LoadedModel;
+    use attention_round::coordinator::pipeline::{
+        quantize_and_eval, resolve_uniform_bits, QuantSpec,
+    };
+    let loaded = LoadedModel::load(&ctx.manifest, "resnet18t").unwrap();
+    let spec = QuantSpec {
+        model: "resnet18t".into(),
+        wbits: resolve_uniform_bits(&loaded, 4),
+        abits: None,
+    };
+    quantize_and_eval(&ctx.rt, &ctx.manifest, &spec, &ctx.cfg, &ctx.calib, &ctx.eval)
+        .unwrap();
+}

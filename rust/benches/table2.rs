@@ -1,0 +1,32 @@
+//! Bench: regenerate Table 2 (weights + activations PTQ) at bench scale.
+//! Full-scale: `repro reproduce table2`.
+
+mod common;
+
+use attention_round::coordinator::experiments;
+
+fn main() {
+    let Some(ctx) = common::bench_ctx(16) else { return };
+    // bench-scale: one W+A row end-to-end (full table via `repro reproduce table2`)
+    use attention_round::coordinator::model::LoadedModel;
+    use attention_round::coordinator::pipeline::{
+        quantize_and_eval, resolve_uniform_bits, QuantSpec,
+    };
+    let loaded = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    let spec = QuantSpec {
+        model: "resnet18t".into(),
+        wbits: resolve_uniform_bits(&loaded, 4),
+        abits: Some(4),
+    };
+    let out = quantize_and_eval(
+        &ctx.rt, &ctx.manifest, &spec, &ctx.cfg, &ctx.calib, &ctx.eval,
+    )
+    .expect("4/4 run");
+    println!(
+        "table2 bench row: resnet18t 4/4 -> {:.2}% (fp {:.2}%) in {:.1}s",
+        out.acc * 100.0,
+        out.fp_acc * 100.0,
+        out.wall_s
+    );
+    let _ = experiments::table2 as usize; // full harness exercised by `repro reproduce`
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate Table 3 (PTQ vs budgeted QAT) at bench scale.
+//! Times the QAT step loop — the most expensive single executable in the
+//! repo (full fwd+bwd of the model).
+//! Full-scale: `repro reproduce table3 --steps 1000`.
+
+mod common;
+
+use attention_round::coordinator::experiments;
+
+fn main() {
+    let Some(ctx) = common::bench_ctx(16) else { return };
+    // bench-scale QAT: a short step budget; full table via `repro reproduce table3`
+    use attention_round::coordinator::qat::run_qat;
+    use attention_round::data::Split;
+    let dir = ctx.manifest.path(&ctx.manifest.dataset.dir);
+    let train = Split::load(&dir, "train").expect("train split");
+    let out = run_qat(
+        &ctx.rt, &ctx.manifest, "resnet18t", 4, 4, 20, 1e-3, &train, &ctx.eval, 7,
+    )
+    .expect("qat");
+    println!(
+        "table3 bench row: STE-QAT resnet18t 4/4, 20 steps -> {:.2}% in {:.1}s",
+        out.acc * 100.0,
+        out.wall_s
+    );
+    let _ = experiments::table3 as usize;
+}

@@ -1,0 +1,57 @@
+//! Bench: regenerate Table 4 (mixed vs single precision) at bench scale,
+//! and time Algorithm 1 itself (the paper's "avoids combinatorial
+//! search" claim — allocation must be ≪ 1 s).
+//! Full-scale: `repro reproduce table4`.
+
+mod common;
+
+use attention_round::bench_harness::Bencher;
+use attention_round::coordinator::experiments;
+use attention_round::coordinator::model::LoadedModel;
+use attention_round::mixed;
+
+fn main() {
+    let Some(ctx) = common::bench_ctx(48) else { return };
+
+    // Algorithm 1 timing across the zoo (pure Rust, no device).
+    let b = Bencher::default();
+    for name in ["resnet18t", "resnet50t", "mobilenetv2t"] {
+        let model = LoadedModel::load(&ctx.manifest, name).expect("model");
+        let stats = b.run(&format!("table4/allocate/{name}"), || {
+            mixed::allocate(&model.info.layers, &model.weights, &[3, 4, 5, 6], 1e-3)
+                .unwrap()
+        });
+        assert!(
+            stats.mean_s < 1.0,
+            "Algorithm 1 must run in < 1s (paper's efficiency claim), got {}",
+            stats.mean_s
+        );
+    }
+
+    // one mixed-precision quantize+eval end to end (full table via
+    // `repro reproduce table4`)
+    use attention_round::coordinator::pipeline::{quantize_and_eval, QuantSpec};
+    let model = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    let alloc = mixed::allocate(&model.info.layers, &model.weights, &[3, 4, 5, 6], 1e-3)
+        .expect("alloc");
+    let out = quantize_and_eval(
+        &ctx.rt,
+        &ctx.manifest,
+        &QuantSpec {
+            model: "resnet18t".into(),
+            wbits: alloc.bits.clone(),
+            abits: None,
+        },
+        &ctx.cfg,
+        &ctx.calib,
+        &ctx.eval,
+    )
+    .expect("mixed run");
+    println!(
+        "table4 bench row: resnet18t mixed[3,4,5,6] ({}) -> {:.2}% in {:.1}s",
+        mixed::format_size_mb(alloc.size_bytes),
+        out.acc * 100.0,
+        out.wall_s
+    );
+    let _ = experiments::table4 as usize;
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate Table 5 (rounding-function ablation) at bench scale.
+//! Full-scale: `repro reproduce table5 --profile paper`.
+
+mod common;
+
+use attention_round::coordinator::experiments;
+
+fn main() {
+    let Some(ctx) = common::bench_ctx(16) else { return };
+    // bench-scale: static roundings + ours, weights-only (full 6-method
+    // W+A table via `repro reproduce table5`)
+    use attention_round::coordinator::model::LoadedModel;
+    use attention_round::coordinator::pipeline::{
+        quantize_and_eval, resolve_uniform_bits, QuantSpec,
+    };
+    use attention_round::quant::rounding::Rounding;
+    let loaded = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    let spec = QuantSpec {
+        model: "resnet18t".into(),
+        wbits: resolve_uniform_bits(&loaded, 4),
+        abits: None,
+    };
+    let mut accs = std::collections::BTreeMap::new();
+    for m in [
+        Rounding::Floor,
+        Rounding::Ceil,
+        Rounding::Stochastic,
+        Rounding::Nearest,
+        Rounding::Attention,
+    ] {
+        let mut cfg = ctx.cfg.clone();
+        cfg.method = m;
+        let out = quantize_and_eval(
+            &ctx.rt, &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
+        )
+        .expect("run");
+        println!("table5 bench row: {:<10} 4/32 -> {:.2}%", m.name(), out.acc * 100.0);
+        accs.insert(m.name(), out.acc);
+    }
+    // The static-rounding collapse must hold even at bench scale; the
+    // trained methods need a real iteration budget to separate (16 iters
+    // leaves attention ≈ nearest within noise — Table 5 proper uses
+    // `repro reproduce table5 --profile paper`), so allow a 3% margin.
+    assert!(accs["attention"] >= accs["nearest"] - 0.03);
+    assert!(accs["nearest"] > accs["floor"] + 0.5);
+    assert!(accs["nearest"] > accs["ceil"] + 0.5);
+    let _ = experiments::table5 as usize;
+}

@@ -1,0 +1,174 @@
+//! Benchmark harness substrate (criterion is not offline-available).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call into
+//! this module: warmup, timed iterations, and robust statistics (median /
+//! mean / p95 / stddev), printed in a criterion-like one-line format plus
+//! an optional machine-readable CSV appended to `target/bench_results.csv`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} {:>10}  med {:>10}  p95 {:>10}  ±{:>9}  ({} iters)",
+            self.name,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.median_s),
+            fmt_dur(self.p95_s),
+            fmt_dur(self.stddev_s),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+pub struct Bencher {
+    /// Minimum measurement budget per benchmark.
+    pub budget: Duration,
+    /// Max iterations regardless of budget (slow end-to-end benches).
+    pub max_iters: usize,
+    pub warmup_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_secs(3),
+            max_iters: 1000,
+            warmup_iters: 2,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher {
+            budget: Duration::from_millis(500),
+            max_iters: 10,
+            warmup_iters: 1,
+        }
+    }
+
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < 3 || start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let stats = compute_stats(name, &samples);
+        stats.print();
+        append_csv(&stats);
+        stats
+    }
+}
+
+fn compute_stats(name: &str, samples: &[f64]) -> Stats {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let var = sorted.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        median_s: sorted[n / 2],
+        p95_s: sorted[(n as f64 * 0.95) as usize % n.max(1)],
+        stddev_s: var.sqrt(),
+        min_s: sorted[0],
+        max_s: sorted[n - 1],
+    }
+}
+
+fn append_csv(s: &Stats) {
+    use std::io::Write as _;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("target/bench_results.csv")
+    {
+        let _ = writeln!(
+            f,
+            "{},{},{:.9},{:.9},{:.9},{:.9}",
+            s.name, s.iters, s.mean_s, s.median_s, s.p95_s, s.stddev_s
+        );
+    }
+}
+
+/// Locate the artifacts directory for bench binaries (env override first).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("REPRO_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = compute_stats("t", &[1.0, 2.0, 3.0]);
+        assert_eq!(s.iters, 3);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+        assert_eq!(s.median_s, 2.0);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 3.0);
+    }
+
+    #[test]
+    fn bencher_runs_at_least_three() {
+        let b = Bencher {
+            budget: Duration::from_millis(1),
+            max_iters: 100,
+            warmup_iters: 0,
+        };
+        let mut count = 0usize;
+        let s = b.run("noop", || count += 1);
+        assert!(s.iters >= 3);
+        assert!(count >= 3);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+        assert!(fmt_dur(5e-6).ends_with("µs"));
+        assert!(fmt_dur(3e-3).ends_with("ms"));
+        assert!(fmt_dur(2.5).ends_with('s'));
+    }
+}

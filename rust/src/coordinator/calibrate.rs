@@ -1,0 +1,232 @@
+//! Per-layer calibration — the paper's §3.3 (Attention Round) and the
+//! AdaRound baseline, driven over the AOT step/scan executables.
+//!
+//! The reconstruction objective is ‖ŵx − wx‖²_F per module (paper §3.1,
+//! Taylor-expansion argument); Adam runs *inside* the executable, and the
+//! K-step `calib_scan` variant keeps α/m/v on device for K iterations per
+//! host round trip.
+//!
+//! τ convention: the executables receive τ in integer-grid units (α lives
+//! on the grid: ŵ = s·clip(⌊w/s + α⌉, l, h)). The paper's Figure-2 sweep
+//! over τ ∈ [0, 1] with optimum ≈ 0.5 only makes dimensional sense on the
+//! grid (half a quantization cell); DESIGN.md §2 records this reading.
+
+use crate::coordinator::config::CalibConfig;
+use crate::io::manifest::LayerInfo;
+use crate::quant::rounding::{adaround_h, adaround_finalize, attention_finalize};
+use crate::quant::scale::mse_optimal_scale;
+use crate::quant::QGrid;
+use crate::runtime::{convert::literal_scalar, literal_to_tensor, Runtime};
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Outcome of calibrating one layer.
+#[derive(Debug, Clone)]
+pub struct CalibratedLayer {
+    pub qweight: Tensor,
+    pub grid: QGrid,
+    /// Mean reconstruction loss over the first / last scan call —
+    /// convergence diagnostics surfaced in the run report.
+    pub first_loss: f32,
+    pub last_loss: f32,
+    /// Trained rounding variable (α or V) for ablation inspection.
+    pub variable: Tensor,
+}
+
+/// Sample a (K·B) stack of x / y_ref batches from the caches.
+fn sample_stack(
+    xcache: &Tensor,
+    yref: &Tensor,
+    rng: &mut Rng,
+    k: usize,
+    batch: usize,
+) -> Result<(Tensor, Tensor)> {
+    let n = xcache.shape()[0];
+    let idx: Vec<usize> = (0..k * batch).map(|_| rng.below(n)).collect();
+    let xs = xcache.gather_axis0(&idx)?;
+    let ys = yref.gather_axis0(&idx)?;
+    let mut xshape = vec![k, batch];
+    xshape.extend_from_slice(&xcache.shape()[1..]);
+    let mut yshape = vec![k, batch];
+    yshape.extend_from_slice(&yref.shape()[1..]);
+    Ok((xs.reshape(xshape)?, ys.reshape(yshape)?))
+}
+
+/// Calibrate one layer with Attention Round (paper §3.3).
+#[allow(clippy::too_many_arguments)]
+pub fn calibrate_attention(
+    rt: &Runtime,
+    layer: &LayerInfo,
+    w_fp: &Tensor,
+    xcache: &Tensor,
+    yref: &Tensor,
+    bits: u8,
+    cfg: &CalibConfig,
+    scan_k: usize,
+    calib_batch: usize,
+    rng: &mut Rng,
+) -> Result<CalibratedLayer> {
+    let scale = mse_optimal_scale(w_fp.data(), bits)?;
+    let grid = QGrid::signed(bits, scale)?;
+
+    // α ~ N(0, τ²) on the integer grid (paper §3.3 initialization).
+    let mut alpha = Tensor::zeros(w_fp.shape().to_vec());
+    if cfg.tau > 0.0 {
+        rng.fill_gaussian(alpha.data_mut(), 0.0, cfg.tau);
+    }
+    let mut m = Tensor::zeros(w_fp.shape().to_vec());
+    let mut v = Tensor::zeros(w_fp.shape().to_vec());
+
+    let exe = rt.load(&layer.calib_scan)?;
+    let wbuf = rt.upload(w_fp)?;
+    let lr = rt.upload_scalar(cfg.lr)?;
+    let tau = rt.upload_scalar(cfg.tau)?;
+    let s = rt.upload_scalar(grid.scale)?;
+    let lo = rt.upload_scalar(grid.lo)?;
+    let hi = rt.upload_scalar(grid.hi)?;
+
+    let calls = cfg.iters.div_ceil(scan_k).max(1);
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    let mut t = 0f32;
+    rt.metrics.time("pipeline.calibrate", || -> Result<()> {
+        for call in 0..calls {
+            let (xs, ys) = sample_stack(xcache, yref, rng, scan_k, calib_batch)?;
+            let xbuf = rt.upload(&xs)?;
+            let ybuf = rt.upload(&ys)?;
+            let abuf = rt.upload(&alpha)?;
+            let mbuf = rt.upload(&m)?;
+            let vbuf = rt.upload(&v)?;
+            let tbuf = rt.upload_scalar(t)?;
+            let outs = exe.run_b(&[
+                &wbuf, &xbuf, &ybuf, &abuf, &mbuf, &vbuf, &tbuf, &lr, &tau, &s,
+                &lo, &hi,
+            ])?;
+            if outs.len() != 4 {
+                return Err(Error::runtime(format!(
+                    "calib_scan returned {} outputs",
+                    outs.len()
+                )));
+            }
+            alpha = literal_to_tensor(&outs[0])?;
+            m = literal_to_tensor(&outs[1])?;
+            v = literal_to_tensor(&outs[2])?;
+            let loss = literal_scalar(&outs[3])?;
+            if call == 0 {
+                first_loss = loss;
+            }
+            last_loss = loss;
+            t += scan_k as f32;
+            rt.metrics.incr("pipeline.calib_steps", scan_k as u64);
+        }
+        Ok(())
+    })?;
+
+    let qdata = attention_finalize(w_fp.data(), alpha.data(), &grid);
+    Ok(CalibratedLayer {
+        qweight: Tensor::new(w_fp.shape().to_vec(), qdata)?,
+        grid,
+        first_loss,
+        last_loss,
+        variable: alpha,
+    })
+}
+
+/// Calibrate one layer with AdaRound (Nagel et al. 2020 — the paper's
+/// strongest baseline in Tables 1/2/5).
+#[allow(clippy::too_many_arguments)]
+pub fn calibrate_adaround(
+    rt: &Runtime,
+    layer: &LayerInfo,
+    w_fp: &Tensor,
+    xcache: &Tensor,
+    yref: &Tensor,
+    bits: u8,
+    cfg: &CalibConfig,
+    scan_k: usize,
+    calib_batch: usize,
+    rng: &mut Rng,
+) -> Result<CalibratedLayer> {
+    let _ = rng; // deterministic init; signature symmetric with attention
+    let scale = mse_optimal_scale(w_fp.data(), bits)?;
+    let grid = QGrid::signed(bits, scale)?;
+
+    // V init so that h(V) equals the fractional part of w/s (AdaRound's
+    // standard warm start: ŵ starts at round-to-nearest).
+    let mut vvar = Tensor::zeros(w_fp.shape().to_vec());
+    for (vv, &wv) in vvar.data_mut().iter_mut().zip(w_fp.data()) {
+        let frac = (wv / grid.scale - (wv / grid.scale).floor()).clamp(0.01, 0.99);
+        let sig = ((frac + 0.1) / 1.2).clamp(1e-4, 1.0 - 1e-4);
+        *vv = (sig / (1.0 - sig)).ln();
+        debug_assert!((adaround_h(*vv) - frac).abs() < 1e-2);
+    }
+    let mut m = Tensor::zeros(w_fp.shape().to_vec());
+    let mut v = Tensor::zeros(w_fp.shape().to_vec());
+
+    let exe = rt.load(&layer.adaround_scan)?;
+    let wbuf = rt.upload(w_fp)?;
+    let lr = rt.upload_scalar(cfg.lr)?;
+    let lam = rt.upload_scalar(cfg.ada_lambda)?;
+    let s = rt.upload_scalar(grid.scale)?;
+    let lo = rt.upload_scalar(grid.lo)?;
+    let hi = rt.upload_scalar(grid.hi)?;
+
+    let calls = cfg.iters.div_ceil(scan_k).max(1);
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    let mut t = 0f32;
+    rt.metrics.time("pipeline.calibrate", || -> Result<()> {
+        for call in 0..calls {
+            let progress = call as f32 / calls.max(1) as f32;
+            let beta = cfg.ada_beta_hi + (cfg.ada_beta_lo - cfg.ada_beta_hi) * progress;
+            let (xs, ys) = sample_stack(xcache, yref, rng, scan_k, calib_batch)?;
+            let xbuf = rt.upload(&xs)?;
+            let ybuf = rt.upload(&ys)?;
+            let vvbuf = rt.upload(&vvar)?;
+            let mbuf = rt.upload(&m)?;
+            let vbuf = rt.upload(&v)?;
+            let tbuf = rt.upload_scalar(t)?;
+            let bbuf = rt.upload_scalar(beta)?;
+            let outs = exe.run_b(&[
+                &wbuf, &xbuf, &ybuf, &vvbuf, &mbuf, &vbuf, &tbuf, &lr, &bbuf,
+                &lam, &s, &lo, &hi,
+            ])?;
+            vvar = literal_to_tensor(&outs[0])?;
+            m = literal_to_tensor(&outs[1])?;
+            v = literal_to_tensor(&outs[2])?;
+            let loss = literal_scalar(&outs[3])?;
+            if call == 0 {
+                first_loss = loss;
+            }
+            last_loss = loss;
+            t += scan_k as f32;
+            rt.metrics.incr("pipeline.calib_steps", scan_k as u64);
+        }
+        Ok(())
+    })?;
+
+    let qdata = adaround_finalize(w_fp.data(), vvar.data(), &grid);
+    Ok(CalibratedLayer {
+        qweight: Tensor::new(w_fp.shape().to_vec(), qdata)?,
+        grid,
+        first_loss,
+        last_loss,
+        variable: vvar,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_stack_shapes() {
+        let xc = Tensor::new(vec![10, 2, 2], (0..40).map(|i| i as f32).collect()).unwrap();
+        let yc = Tensor::new(vec![10, 3], (0..30).map(|i| i as f32).collect()).unwrap();
+        let mut rng = Rng::new(0);
+        let (xs, ys) = sample_stack(&xc, &yc, &mut rng, 4, 2).unwrap();
+        assert_eq!(xs.shape(), &[4, 2, 2, 2]);
+        assert_eq!(ys.shape(), &[4, 2, 3]);
+    }
+}

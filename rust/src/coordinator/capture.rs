@@ -1,0 +1,138 @@
+//! Activation capture — phase 1 of the pipeline.
+//!
+//! Runs the model's `collect` executable over the calibration split in
+//! CALIB_BATCH chunks and materializes every quantizable layer's input
+//! tensor for all N calibration samples. Weights are supplied per call,
+//! so the same executable serves FP capture (paper default) and
+//! quantized-prefix re-capture (`recapture_every` config).
+//!
+//! Memory: per-layer caches are taken (moved out) by the calibration loop
+//! as it walks the layers, so peak usage is one full capture plus one
+//! layer's reference outputs.
+
+use crate::coordinator::model::LoadedModel;
+use crate::data::Split;
+use crate::io::manifest::Manifest;
+use crate::runtime::{literal_to_tensor, Runtime};
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Per-layer activation caches for the calibration set.
+pub struct ActCache {
+    slots: Vec<Option<Tensor>>,
+    pub samples: usize,
+}
+
+impl ActCache {
+    /// Take layer `li`'s cache (freeing it from the pool).
+    pub fn take(&mut self, li: usize) -> Result<Tensor> {
+        self.slots
+            .get_mut(li)
+            .and_then(Option::take)
+            .ok_or_else(|| Error::invariant(format!("activation cache for layer {li} already taken")))
+    }
+
+    /// Borrow without consuming (observers need a look before calibration).
+    pub fn peek(&self, li: usize) -> Result<&Tensor> {
+        self.slots
+            .get(li)
+            .and_then(Option::as_ref)
+            .ok_or_else(|| Error::invariant(format!("activation cache for layer {li} missing")))
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+/// Capture all layer inputs with the given weights (usually FP).
+pub fn capture(
+    rt: &Runtime,
+    manifest: &Manifest,
+    model: &LoadedModel,
+    weights: &[Tensor],
+    calib: &Split,
+    samples: usize,
+) -> Result<ActCache> {
+    let cb = manifest.dataset.calib_batch;
+    let samples = samples.min(calib.len()) / cb * cb;
+    if samples == 0 {
+        return Err(Error::config(format!(
+            "need at least {cb} calibration samples"
+        )));
+    }
+    let exe = rt.load(&model.info.collect)?;
+    let k = model.num_layers();
+
+    // Upload weights + biases once for the whole pass.
+    let wbufs = rt.upload_all(weights)?;
+    let bbufs = rt.upload_all(&model.biases)?;
+
+    let mut slots: Vec<Option<Tensor>> = vec![None; k];
+    rt.metrics.time("pipeline.capture", || -> Result<()> {
+        for start in (0..samples).step_by(cb) {
+            let (x, _) = calib.batch(start, cb)?;
+            let xbuf = rt.upload(&x)?;
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + 2 * k);
+            args.push(&xbuf);
+            args.extend(wbufs.iter());
+            args.extend(bbufs.iter());
+            let outs = exe.run_b(&args)?;
+            if outs.len() != k + 1 {
+                return Err(Error::runtime(format!(
+                    "collect returned {} outputs, expected {} layers + logits",
+                    outs.len(),
+                    k
+                )));
+            }
+            for li in 0..k {
+                let t = literal_to_tensor(&outs[li])?;
+                let slot = &mut slots[li];
+                if slot.is_none() {
+                    let mut shape = t.shape().to_vec();
+                    shape[0] = samples;
+                    *slot = Some(Tensor::zeros(shape));
+                }
+                slot.as_mut().unwrap().write_axis0(start, &t)?;
+            }
+        }
+        Ok(())
+    })?;
+
+    Ok(ActCache {
+        slots,
+        samples,
+    })
+}
+
+/// Reference outputs y_ref = layer_fwd(x, w_fp) for a whole cache, in
+/// calib-batch chunks (phase 2 input for the reconstruction loss).
+pub fn reference_outputs(
+    rt: &Runtime,
+    layer_fwd_path: &str,
+    xcache: &Tensor,
+    w_fp: &Tensor,
+    batch: usize,
+) -> Result<Tensor> {
+    let exe = rt.load(layer_fwd_path)?;
+    let wbuf = rt.upload(w_fp)?;
+    let samples = xcache.shape()[0];
+    let mut out: Option<Tensor> = None;
+    for start in (0..samples).step_by(batch) {
+        let x = xcache.slice_axis0(start, batch)?;
+        let xbuf = rt.upload(&x)?;
+        let outs = exe.run_b(&[&xbuf, &wbuf])?;
+        let y = literal_to_tensor(&outs[0])?;
+        if out.is_none() {
+            let mut shape = y.shape().to_vec();
+            shape[0] = samples;
+            out = Some(Tensor::zeros(shape));
+        }
+        out.as_mut().unwrap().write_axis0(start, &y)?;
+    }
+    out.ok_or_else(|| Error::invariant("empty activation cache"))
+}

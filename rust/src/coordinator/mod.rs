@@ -1,0 +1,32 @@
+//! The Layer-3 coordinator: everything between "a directory of AOT
+//! artifacts" and "a quantized, evaluated model".
+//!
+//! Pipeline (DESIGN.md §5):
+//!
+//! ```text
+//! capture ──► scale search ──► per-layer calibration ──► finalize
+//!    │                              (attention / adaround /          │
+//!    │                               static rounding)                ▼
+//!    └────► activation observers ─────────────────────────► evaluate
+//! ```
+//!
+//! Sub-modules:
+//! * [`config`]    — run configuration (quick/paper profiles, overrides).
+//! * [`model`]     — loading FP checkpoints from the manifest.
+//! * [`capture`]   — activation capture over the calibration set.
+//! * [`calibrate`] — the per-layer Adam loops driving the AOT step/scan
+//!   executables (Attention Round + AdaRound).
+//! * [`evaluate`]  — batched top-1 evaluation (FP / weight-only / W+A).
+//! * [`pipeline`]  — the end-to-end `quantize` entry point.
+//! * [`qat`]       — the budgeted STE-QAT comparator (Table 3).
+//! * [`experiments`] — regenerates every paper table and figure.
+
+pub mod calibrate;
+pub mod capture;
+pub mod config;
+pub mod evaluate;
+pub mod experiments;
+pub mod model;
+pub mod pipeline;
+pub mod qat;
+pub mod state;

@@ -1,0 +1,57 @@
+//! Loading FP32 checkpoints described by the manifest.
+
+use crate::io::manifest::{Manifest, ModelInfo};
+use crate::io::npy;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// A model's folded FP weights + biases, in manifest layer order.
+#[derive(Debug, Clone)]
+pub struct LoadedModel {
+    pub info: ModelInfo,
+    pub weights: Vec<Tensor>,
+    pub biases: Vec<Tensor>,
+}
+
+impl LoadedModel {
+    pub fn load(manifest: &Manifest, name: &str) -> Result<Self> {
+        let info = manifest.model(name)?.clone();
+        if info.w_files.len() != info.layers.len() {
+            return Err(Error::invariant(format!(
+                "{name}: {} weight files vs {} layers",
+                info.w_files.len(),
+                info.layers.len()
+            )));
+        }
+        let mut weights = Vec::with_capacity(info.layers.len());
+        let mut biases = Vec::with_capacity(info.layers.len());
+        for (li, layer) in info.layers.iter().enumerate() {
+            let w = npy::read_f32(&manifest.path(&info.w_files[li]))?;
+            if w.shape() != layer.wshape.as_slice() {
+                return Err(Error::shape(format!(
+                    "{name}/{}: weight file shape {:?} != manifest {:?}",
+                    layer.name,
+                    w.shape(),
+                    layer.wshape
+                )));
+            }
+            let b = npy::read_f32(&manifest.path(&info.b_files[li]))?;
+            weights.push(w);
+            biases.push(b);
+        }
+        Ok(LoadedModel {
+            info,
+            weights,
+            biases,
+        })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.info.layers.len()
+    }
+
+    /// Total parameter count over quantizable layers.
+    pub fn total_params(&self) -> usize {
+        self.info.layers.iter().map(|l| l.params).sum()
+    }
+}

@@ -1,0 +1,273 @@
+//! The end-to-end PTQ pipeline (DESIGN.md §5): capture → scale → per-layer
+//! calibration → finalize → (activation observers) → evaluate.
+
+use std::time::Instant;
+
+use crate::coordinator::calibrate::{calibrate_adaround, calibrate_attention};
+use crate::coordinator::capture::{capture, reference_outputs, ActCache};
+use crate::coordinator::config::CalibConfig;
+use crate::coordinator::evaluate::{evaluate, evaluate_actq};
+use crate::coordinator::model::LoadedModel;
+use crate::data::Split;
+use crate::io::manifest::Manifest;
+use crate::quant::observer::{observe, ActQuantParams};
+use crate::quant::rounding::{self, Rounding};
+use crate::quant::scale::mse_optimal_scale;
+use crate::quant::QGrid;
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// What to quantize and how wide.
+#[derive(Debug, Clone)]
+pub struct QuantSpec {
+    pub model: String,
+    /// Per-layer weight bits (use [`resolve_uniform_bits`] for the single-
+    /// precision setting; `mixed::allocate` for Algorithm 1).
+    pub wbits: Vec<u8>,
+    /// Activation bits (None = FP32 activations, the "W/32" rows).
+    pub abits: Option<u8>,
+}
+
+/// Uniform `bits` everywhere except the pinned (first/last) 8-bit layers —
+/// the paper's single-precision setting (§4.1).
+pub fn resolve_uniform_bits(model: &LoadedModel, bits: u8) -> Vec<u8> {
+    model
+        .info
+        .layers
+        .iter()
+        .map(|l| if l.pinned_8bit { 8 } else { bits })
+        .collect()
+}
+
+/// Per-layer activation bits under the same pinning rule.
+pub fn resolve_act_bits(model: &LoadedModel, abits: u8) -> Vec<u8> {
+    model
+        .info
+        .layers
+        .iter()
+        .map(|l| if l.pinned_8bit { 8 } else { abits })
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerOutcome {
+    pub name: String,
+    pub bits: u8,
+    pub scale: f32,
+    pub first_loss: f32,
+    pub last_loss: f32,
+}
+
+#[derive(Debug)]
+pub struct Outcome {
+    pub model: String,
+    pub method: Rounding,
+    pub acc: f64,
+    pub fp_acc: f64,
+    pub per_layer: Vec<LayerOutcome>,
+    pub qweights: Vec<Tensor>,
+    pub act_params: Option<Vec<ActQuantParams>>,
+    pub wall_s: f64,
+}
+
+/// Quantize a model per `spec`/`cfg` and evaluate top-1 on `eval`.
+pub fn quantize_and_eval(
+    rt: &crate::runtime::Runtime,
+    manifest: &Manifest,
+    spec: &QuantSpec,
+    cfg: &CalibConfig,
+    calib: &Split,
+    eval: &Split,
+) -> Result<Outcome> {
+    let t0 = Instant::now();
+    let model = LoadedModel::load(manifest, &spec.model)?;
+    let k = model.num_layers();
+    assert_eq!(spec.wbits.len(), k, "wbits arity");
+    let mut rng = Rng::new(cfg.seed);
+    let scan_k = manifest.scan_k.max(1);
+    let cb = manifest.dataset.calib_batch;
+
+    let needs_capture = spec.abits.is_some()
+        || matches!(cfg.method, Rounding::Attention | Rounding::AdaRound);
+    let mut cache: Option<ActCache> = if needs_capture {
+        Some(capture(
+            rt,
+            manifest,
+            &model,
+            &model.weights,
+            calib,
+            cfg.calib_samples,
+        )?)
+    } else {
+        None
+    };
+
+    let mut qweights: Vec<Tensor> = Vec::with_capacity(k);
+    let mut per_layer: Vec<LayerOutcome> = Vec::with_capacity(k);
+    let mut act_params: Vec<ActQuantParams> = Vec::with_capacity(k);
+    let act_bits = spec.abits.map(|b| resolve_act_bits(&model, b));
+
+    for li in 0..k {
+        let layer = &model.info.layers[li];
+        let w_fp = &model.weights[li];
+        let bits = spec.wbits[li];
+
+        // Optional quantized-prefix re-capture (config flag).
+        if let (Some(c), true) = (&cache, cfg.recapture_every > 0) {
+            if li > 0 && li % cfg.recapture_every == 0 && c.len() > li {
+                let mut mixed: Vec<Tensor> = qweights.clone();
+                mixed.extend_from_slice(&model.weights[li..]);
+                cache = Some(capture(
+                    rt,
+                    manifest,
+                    &model,
+                    &mixed,
+                    calib,
+                    cfg.calib_samples,
+                )?);
+            }
+        }
+
+        let xcache = match &mut cache {
+            Some(c) => Some(c.take(li)?),
+            None => None,
+        };
+
+        // Activation observer on this layer's captured inputs.
+        if let (Some(bits_a), Some(x)) = (&act_bits, &xcache) {
+            act_params.push(observe(x.data(), bits_a[li], cfg.observer)?);
+        }
+
+        let (qw, outcome) = match cfg.method {
+            Rounding::Attention | Rounding::AdaRound => {
+                let x = xcache.expect("capture ran for trained methods");
+                let yref = rt.metrics.time("pipeline.reference_outputs", || {
+                    reference_outputs(rt, &layer.layer_fwd, &x, w_fp, cb)
+                })?;
+                let cal = if cfg.method == Rounding::Attention {
+                    calibrate_attention(
+                        rt, layer, w_fp, &x, &yref, bits, cfg, scan_k, cb, &mut rng,
+                    )?
+                } else {
+                    calibrate_adaround(
+                        rt, layer, w_fp, &x, &yref, bits, cfg, scan_k, cb, &mut rng,
+                    )?
+                };
+                log::debug!(
+                    "{}/{}: {}b loss {:.3e} -> {:.3e}",
+                    spec.model,
+                    layer.name,
+                    bits,
+                    cal.first_loss,
+                    cal.last_loss
+                );
+                (
+                    cal.qweight,
+                    LayerOutcome {
+                        name: layer.name.clone(),
+                        bits,
+                        scale: cal.grid.scale,
+                        first_loss: cal.first_loss,
+                        last_loss: cal.last_loss,
+                    },
+                )
+            }
+            method => {
+                let scale = mse_optimal_scale(w_fp.data(), bits)?;
+                let grid = QGrid::signed(bits, scale)?;
+                let qdata = match method {
+                    Rounding::Nearest => rounding::nearest(w_fp.data(), &grid),
+                    Rounding::Floor => rounding::floor(w_fp.data(), &grid),
+                    Rounding::Ceil => rounding::ceil(w_fp.data(), &grid),
+                    Rounding::Stochastic => {
+                        rounding::stochastic(w_fp.data(), &grid, &mut rng)
+                    }
+                    _ => unreachable!(),
+                };
+                (
+                    Tensor::new(w_fp.shape().to_vec(), qdata)?,
+                    LayerOutcome {
+                        name: layer.name.clone(),
+                        bits,
+                        scale,
+                        first_loss: f32::NAN,
+                        last_loss: f32::NAN,
+                    },
+                )
+            }
+        };
+        qweights.push(qw);
+        per_layer.push(outcome);
+    }
+
+    let acc = match (&act_bits, spec.abits) {
+        (Some(bits_a), Some(_)) => evaluate_actq(
+            rt, manifest, &model, &qweights, &act_params, bits_a, eval,
+        )?,
+        _ => evaluate(rt, manifest, &model, &qweights, eval)?,
+    };
+
+    Ok(Outcome {
+        model: spec.model.clone(),
+        method: cfg.method,
+        acc,
+        fp_acc: model.info.fp_acc,
+        per_layer,
+        qweights,
+        act_params: spec.abits.map(|_| act_params),
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::manifest::LayerInfo;
+
+    fn layer(pinned: bool) -> LayerInfo {
+        LayerInfo {
+            index: 0,
+            name: "l".into(),
+            kind: "conv".into(),
+            act: "relu".into(),
+            wshape: vec![1],
+            params: 1,
+            coding_n: 1,
+            coding_m: 1,
+            in_shape: vec![],
+            out_shape: vec![],
+            pinned_8bit: pinned,
+            downsample: false,
+            sig: "s".into(),
+            calib_step: String::new(),
+            adaround_step: String::new(),
+            layer_fwd: String::new(),
+            calib_scan: String::new(),
+            adaround_scan: String::new(),
+        }
+    }
+
+    #[test]
+    fn uniform_bits_pin_first_last() {
+        use crate::io::manifest::ModelInfo;
+        let info = ModelInfo {
+            name: "m".into(),
+            fp_acc: 0.9,
+            layers: vec![layer(true), layer(false), layer(true)],
+            w_files: vec![],
+            b_files: vec![],
+            forward: String::new(),
+            forward_actq: String::new(),
+            collect: String::new(),
+            qat_step: None,
+        };
+        let model = LoadedModel {
+            info,
+            weights: vec![],
+            biases: vec![],
+        };
+        assert_eq!(resolve_uniform_bits(&model, 4), vec![8, 4, 8]);
+        assert_eq!(resolve_act_bits(&model, 3), vec![8, 3, 8]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Budgeted STE-QAT comparator (Table 3).
+//!
+//! The paper compares its 1,024-sample / ~10-minute PTQ against PACT, DSQ
+//! and LSQ trained on the full 1.2M-image ImageNet for 100+ GPU-hours. We
+//! substitute a straight-through-estimator QAT (dynamic max-abs fake-quant
+//! on weights and activations, SGD-momentum) trained on the full synthetic
+//! train split for a bounded step budget — the cost/accuracy trade-off the
+//! table demonstrates survives the substitution (DESIGN.md §2).
+
+use std::time::Instant;
+
+use crate::coordinator::evaluate::evaluate;
+use crate::coordinator::model::LoadedModel;
+use crate::data::Split;
+use crate::io::manifest::Manifest;
+use crate::quant::rounding::nearest;
+use crate::quant::scale::absmax_scale;
+use crate::quant::QGrid;
+use crate::runtime::{convert::literal_scalar, literal_to_tensor, Runtime};
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+#[derive(Debug)]
+pub struct QatOutcome {
+    pub acc: f64,
+    pub fp_acc: f64,
+    pub steps: usize,
+    pub train_samples_seen: usize,
+    pub final_loss: f32,
+    pub wall_s: f64,
+}
+
+/// Run STE-QAT for `steps` SGD steps at (wbits, abits), then nearest-
+/// quantize the trained weights and evaluate.
+#[allow(clippy::too_many_arguments)]
+pub fn run_qat(
+    rt: &Runtime,
+    manifest: &Manifest,
+    model_name: &str,
+    wbits: u8,
+    abits: u8,
+    steps: usize,
+    lr: f32,
+    train: &Split,
+    eval: &Split,
+    seed: u64,
+) -> Result<QatOutcome> {
+    let t0 = Instant::now();
+    let model = LoadedModel::load(manifest, model_name)?;
+    let qat_path = model.info.qat_step.clone().ok_or_else(|| {
+        Error::config(format!("{model_name} has no qat_step artifact"))
+    })?;
+    let exe = rt.load(&qat_path)?;
+    let k = model.num_layers();
+    let batch = manifest.dataset.qat_batch;
+    let mut rng = Rng::new(seed);
+
+    let mut ws = model.weights.clone();
+    let mut bs = model.biases.clone();
+    let mut mws: Vec<Tensor> = ws.iter().map(|w| Tensor::zeros(w.shape().to_vec())).collect();
+    let mut mbs: Vec<Tensor> = bs.iter().map(|b| Tensor::zeros(b.shape().to_vec())).collect();
+
+    let whi = rt.upload_scalar(((1i64 << (wbits - 1)) - 1) as f32)?;
+    let ahi = rt.upload_scalar(((1i64 << abits) - 1) as f32)?;
+    let mut final_loss = f32::NAN;
+
+    rt.metrics.time("qat.train", || -> Result<()> {
+        for step in 0..steps {
+            // cosine LR decay
+            let lr_t =
+                lr * 0.5 * (1.0 + (std::f32::consts::PI * step as f32 / steps as f32).cos());
+            let (x, y) = train.sample(&mut rng, batch)?;
+            let xbuf = rt.upload(&x)?;
+            let ybuf = rt.upload_i32(&y, &[batch])?;
+            let lrbuf = rt.upload_scalar(lr_t)?;
+            let mut bufs = Vec::with_capacity(4 * k);
+            for t in ws.iter().chain(bs.iter()).chain(mws.iter()).chain(mbs.iter()) {
+                bufs.push(rt.upload(t)?);
+            }
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 * k + 5);
+            args.push(&xbuf);
+            args.push(&ybuf);
+            args.extend(bufs.iter());
+            args.push(&lrbuf);
+            args.push(&whi);
+            args.push(&ahi);
+            let outs = exe.run_b(&args)?;
+            if outs.len() != 4 * k + 1 {
+                return Err(Error::runtime(format!(
+                    "qat_step returned {} outputs, expected {}",
+                    outs.len(),
+                    4 * k + 1
+                )));
+            }
+            for i in 0..k {
+                ws[i] = literal_to_tensor(&outs[i])?;
+                bs[i] = literal_to_tensor(&outs[k + i])?;
+                mws[i] = literal_to_tensor(&outs[2 * k + i])?;
+                mbs[i] = literal_to_tensor(&outs[3 * k + i])?;
+            }
+            final_loss = literal_scalar(&outs[4 * k])?;
+            rt.metrics.incr("qat.steps", 1);
+            if step % 50 == 0 {
+                log::debug!("qat {model_name} step {step} loss {final_loss:.4}");
+            }
+        }
+        Ok(())
+    })?;
+
+    // Deploy-time quantization of the QAT weights: nearest on the dynamic
+    // max-abs grid the STE trained against (first/last pinned to 8-bit).
+    let mut qws = Vec::with_capacity(k);
+    for (i, w) in ws.iter().enumerate() {
+        let b = if i == 0 || i == k - 1 { 8 } else { wbits };
+        let grid = QGrid::signed(b, absmax_scale(w.data(), b))?;
+        qws.push(Tensor::new(w.shape().to_vec(), nearest(w.data(), &grid))?);
+    }
+    let eval_model = LoadedModel {
+        info: model.info.clone(),
+        weights: qws.clone(),
+        biases: bs,
+    };
+    let acc = evaluate(rt, manifest, &eval_model, &qws, eval)?;
+
+    Ok(QatOutcome {
+        acc,
+        fp_acc: model.info.fp_acc,
+        steps,
+        train_samples_seen: steps * batch,
+        final_loss,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,205 @@
+//! Quantized-model state store: persist a calibration outcome to disk and
+//! reload it for serving/evaluation without re-running calibration.
+//!
+//! Format: a directory with `qmodel.json` (metadata: model, per-layer
+//! bits/scales/method, activation params, accuracy) plus one `.npy` per
+//! quantized weight. Everything round-trips through the in-repo JSON and
+//! npy codecs, so a saved model is loadable by any future build.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::pipeline::Outcome;
+use crate::io::npy;
+use crate::quant::observer::ActQuantParams;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// A reloadable quantized model.
+#[derive(Debug)]
+pub struct QuantizedModel {
+    pub model: String,
+    pub method: String,
+    pub acc: f64,
+    pub fp_acc: f64,
+    pub bits: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub qweights: Vec<Tensor>,
+    pub act_params: Option<Vec<ActQuantParams>>,
+}
+
+/// Persist a pipeline outcome under `dir`.
+pub fn save(outcome: &Outcome, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut wfiles = Vec::new();
+    for (i, (q, l)) in outcome
+        .qweights
+        .iter()
+        .zip(&outcome.per_layer)
+        .enumerate()
+    {
+        let fname = format!("{i:02}_{}.q.npy", l.name.replace('.', "_"));
+        npy::write_f32(&dir.join(&fname), q)?;
+        wfiles.push(Json::str(fname));
+    }
+    let layers: Vec<Json> = outcome
+        .per_layer
+        .iter()
+        .map(|l| {
+            Json::obj(vec![
+                ("name", Json::str(l.name.clone())),
+                ("bits", Json::num(l.bits as f64)),
+                ("scale", Json::num(l.scale as f64)),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("format_version", Json::num(1.0)),
+        ("model", Json::str(outcome.model.clone())),
+        ("method", Json::str(outcome.method.name())),
+        ("acc", Json::num(outcome.acc)),
+        ("fp_acc", Json::num(outcome.fp_acc)),
+        ("layers", Json::arr(layers)),
+        ("weight_files", Json::arr(wfiles)),
+    ];
+    if let Some(ap) = &outcome.act_params {
+        let aps: Vec<Json> = ap
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("scale", Json::num(p.scale as f64)),
+                    ("zero", Json::num(p.zero as f64)),
+                ])
+            })
+            .collect();
+        fields.push(("act_params", Json::arr(aps)));
+    }
+    std::fs::write(
+        dir.join("qmodel.json"),
+        Json::obj(fields).to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+/// Reload a saved quantized model.
+pub fn load(dir: &Path) -> Result<QuantizedModel> {
+    let j = json::parse_file(&dir.join("qmodel.json"))?;
+    let layers = j.get("layers")?.as_arr()?;
+    let wfiles = j.get("weight_files")?.str_vec()?;
+    if layers.len() != wfiles.len() {
+        return Err(Error::parse("qmodel.json: layers/weights arity mismatch"));
+    }
+    let mut bits = Vec::new();
+    let mut scales = Vec::new();
+    for l in layers {
+        bits.push(l.get("bits")?.as_usize()? as u8);
+        scales.push(l.get("scale")?.as_f64()? as f32);
+    }
+    let qweights: Vec<Tensor> = wfiles
+        .iter()
+        .map(|f| npy::read_f32(&dir.join(f)))
+        .collect::<Result<_>>()?;
+    let act_params = match j.opt("act_params") {
+        Some(ap) => {
+            let mut out = Vec::new();
+            for p in ap.as_arr()? {
+                out.push(ActQuantParams {
+                    scale: p.get("scale")?.as_f64()? as f32,
+                    zero: p.get("zero")?.as_f64()? as f32,
+                });
+            }
+            Some(out)
+        }
+        None => None,
+    };
+    Ok(QuantizedModel {
+        model: j.get("model")?.as_str()?.to_string(),
+        method: j.get("method")?.as_str()?.to_string(),
+        acc: j.get("acc")?.as_f64()?,
+        fp_acc: j.get("fp_acc")?.as_f64()?,
+        bits,
+        scales,
+        qweights,
+        act_params,
+    })
+}
+
+/// Where the CLI stores quantized models by default.
+pub fn default_dir(out_root: &Path, model: &str, tag: &str) -> PathBuf {
+    out_root.join("qmodels").join(format!("{model}-{tag}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::LayerOutcome;
+    use crate::quant::rounding::Rounding;
+
+    fn fake_outcome(with_acts: bool) -> Outcome {
+        Outcome {
+            model: "m".into(),
+            method: Rounding::Attention,
+            acc: 0.5,
+            fp_acc: 0.9,
+            per_layer: vec![
+                LayerOutcome {
+                    name: "stem".into(),
+                    bits: 8,
+                    scale: 0.01,
+                    first_loss: 1.0,
+                    last_loss: 0.5,
+                },
+                LayerOutcome {
+                    name: "fc".into(),
+                    bits: 4,
+                    scale: 0.02,
+                    first_loss: 2.0,
+                    last_loss: 0.25,
+                },
+            ],
+            qweights: vec![
+                Tensor::new(vec![2, 2], vec![0.01, -0.02, 0.0, 0.03]).unwrap(),
+                Tensor::new(vec![3], vec![0.02, 0.04, -0.06]).unwrap(),
+            ],
+            act_params: with_acts.then(|| {
+                vec![
+                    ActQuantParams { scale: 0.1, zero: -1.0 },
+                    ActQuantParams { scale: 0.2, zero: 0.0 },
+                ]
+            }),
+            wall_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ar_state_{}", std::process::id()));
+        let out = fake_outcome(true);
+        save(&out, &dir).unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.model, "m");
+        assert_eq!(back.method, "attention");
+        assert_eq!(back.bits, vec![8, 4]);
+        assert_eq!(back.qweights[0], out.qweights[0]);
+        assert_eq!(back.qweights[1], out.qweights[1]);
+        let ap = back.act_params.unwrap();
+        assert_eq!(ap[0].scale, 0.1);
+        assert_eq!(ap[0].zero, -1.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_load_without_act_params() {
+        let dir =
+            std::env::temp_dir().join(format!("ar_state_na_{}", std::process::id()));
+        save(&fake_outcome(false), &dir).unwrap();
+        let back = load(&dir).unwrap();
+        assert!(back.act_params.is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(load(Path::new("/nonexistent/qmodel")).is_err());
+    }
+}

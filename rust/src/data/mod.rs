@@ -1,0 +1,110 @@
+//! Dataset handling: loading the artifact splits, batching, and the Rust
+//! port of the synthetic generator (bench workload generation without
+//! touching Python).
+
+pub mod synth;
+
+use std::path::Path;
+
+use crate::io::npy;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// One dataset split held in memory (NHWC images + labels).
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub images: Tensor,
+    pub labels: Vec<i32>,
+}
+
+impl Split {
+    pub fn load(dir: &Path, split: &str) -> Result<Self> {
+        let images = npy::read_f32(&dir.join(format!("{split}_x.npy")))?;
+        let (lshape, labels) = npy::read_i32(&dir.join(format!("{split}_y.npy")))?;
+        if lshape.len() != 1 || lshape[0] != images.shape()[0] {
+            return Err(Error::shape(format!(
+                "labels {lshape:?} do not match images {:?}",
+                images.shape()
+            )));
+        }
+        Ok(Split { images, labels })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Contiguous batch [start, start+n).
+    pub fn batch(&self, start: usize, n: usize) -> Result<(Tensor, &[i32])> {
+        let x = self.images.slice_axis0(start, n)?;
+        Ok((x, &self.labels[start..start + n]))
+    }
+
+    /// Random batch of size n (with replacement across calls, without
+    /// within a batch).
+    pub fn sample(&self, rng: &mut Rng, n: usize) -> Result<(Tensor, Vec<i32>)> {
+        let idx = rng.sample_indices(self.len(), n);
+        let x = self.images.gather_axis0(&idx)?;
+        let y = idx.iter().map(|&i| self.labels[i]).collect();
+        Ok((x, y))
+    }
+
+    /// Number of whole batches of size n.
+    pub fn num_batches(&self, n: usize) -> usize {
+        self.len() / n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_split(n: usize) -> Split {
+        let images = Tensor::new(
+            vec![n, 2, 2, 1],
+            (0..n * 4).map(|i| i as f32).collect(),
+        )
+        .unwrap();
+        let labels = (0..n as i32).collect();
+        Split { images, labels }
+    }
+
+    #[test]
+    fn batch_slicing() {
+        let s = fake_split(10);
+        let (x, y) = s.batch(2, 3).unwrap();
+        assert_eq!(x.shape(), &[3, 2, 2, 1]);
+        assert_eq!(y, &[2, 3, 4]);
+        assert_eq!(s.num_batches(3), 3);
+    }
+
+    #[test]
+    fn sample_shapes_and_label_alignment() {
+        let s = fake_split(10);
+        let mut rng = Rng::new(1);
+        let (x, y) = s.sample(&mut rng, 4).unwrap();
+        assert_eq!(x.shape(), &[4, 2, 2, 1]);
+        // each sampled image's first pixel is 4*label
+        for (b, &lab) in y.iter().enumerate() {
+            assert_eq!(x.data()[b * 4], (lab * 4) as f32);
+        }
+    }
+
+    #[test]
+    fn roundtrip_via_npy() {
+        let dir = std::env::temp_dir().join(format!("ar_split_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let s = fake_split(6);
+        npy::write_f32(&dir.join("t_x.npy"), &s.images).unwrap();
+        npy::write_i32(&dir.join("t_y.npy"), &[6], &s.labels).unwrap();
+        let back = Split::load(&dir, "t").unwrap();
+        assert_eq!(back.images, s.images);
+        assert_eq!(back.labels, s.labels);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

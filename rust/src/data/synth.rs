@@ -1,0 +1,140 @@
+//! Rust port of the synthetic dataset generator (python/compile/data.py).
+//!
+//! Used by the bench harness to create unlimited workload batches without
+//! the Python build path. The class-conditional texture *parameters* are
+//! identical by construction (same closed-form formulas); the sample-level
+//! RNG differs (xorshift vs NumPy PCG), so the two generators agree in
+//! distribution, not bitwise — tests assert matching moments and the
+//! classifier transfers across both (the integration test feeds Rust
+//! samples through the FP model and checks accuracy stays in-band).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const NUM_CLASSES: usize = 16;
+pub const IMG: usize = 32;
+pub const CHANNELS: usize = 3;
+
+/// Class-conditional texture parameters — must mirror data.py exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassParams {
+    pub freq: f64,
+    pub theta_deg: f64,
+    pub color: [f64; 3],
+    pub second_freq: f64,
+}
+
+pub fn class_params(c: usize) -> ClassParams {
+    let cf = c as f64;
+    let color_phase = (cf * 2.399) % (2.0 * std::f64::consts::PI);
+    ClassParams {
+        freq: 1.5 + 0.45 * ((c % 8) as f64),
+        theta_deg: (cf * 137.508) % 180.0,
+        color: [
+            0.6 + 0.4 * color_phase.sin(),
+            0.6 + 0.4 * (color_phase + 2.094).sin(),
+            0.6 + 0.4 * (color_phase + 4.189).sin(),
+        ],
+        second_freq: 2.2 + 0.3 * (((c / 8) % 2) as f64),
+    }
+}
+
+/// Generate n samples; returns (images NHWC, labels).
+pub fn generate(n: usize, seed: u64) -> (Tensor, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let mut labels = Vec::with_capacity(n);
+    let mut data = vec![0.0f32; n * IMG * IMG * CHANNELS];
+
+    for i in 0..n {
+        let c = rng.below(NUM_CLASSES);
+        labels.push(c as i32);
+        let p = class_params(c);
+        let th = (p.theta_deg + rng.gaussian() * 9.0).to_radians();
+        let phase = rng.next_f64() * 2.0 * std::f64::consts::PI;
+        let contrast = 0.45 + rng.next_f64() * 0.75;
+        let (sin_t, cos_t) = th.sin_cos();
+
+        let img = &mut data[i * IMG * IMG * CHANNELS..(i + 1) * IMG * IMG * CHANNELS];
+        for yy in 0..IMG {
+            for xx in 0..IMG {
+                let fy = yy as f64 / IMG as f64;
+                let fx = xx as f64 / IMG as f64;
+                let u = cos_t * fx + sin_t * fy;
+                let v = -sin_t * fx + cos_t * fy;
+                let g = (2.0 * std::f64::consts::PI * p.freq * u + phase).sin();
+                let g2 =
+                    (2.0 * std::f64::consts::PI * p.second_freq * v + phase * 0.5).sin();
+                let tex = contrast * (0.8 * g + 0.35 * g2);
+                for ch in 0..CHANNELS {
+                    let noise = rng.gaussian();
+                    img[(yy * IMG + xx) * CHANNELS + ch] =
+                        (tex * p.color[ch] + noise) as f32;
+                }
+            }
+        }
+        // cutout patch, mirroring data.py
+        let ph = 8 + rng.below(9);
+        let pw = 8 + rng.below(9);
+        let py = rng.below(IMG - ph + 1);
+        let px = rng.below(IMG - pw + 1);
+        for yy in py..py + ph {
+            for xx in px..px + pw {
+                for ch in 0..CHANNELS {
+                    img[(yy * IMG + xx) * CHANNELS + ch] = 0.0;
+                }
+            }
+        }
+    }
+    (
+        Tensor::new(vec![n, IMG, IMG, CHANNELS], data).unwrap(),
+        labels,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+
+    #[test]
+    fn shapes_and_label_range() {
+        let (x, y) = generate(8, 42);
+        assert_eq!(x.shape(), &[8, 32, 32, 3]);
+        assert!(y.iter().all(|&l| (0..16).contains(&l)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (a, _) = generate(4, 7);
+        let (b, _) = generate(4, 7);
+        assert_eq!(a, b);
+        let (c, _) = generate(4, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn moments_are_sane() {
+        // zero-ish mean, unit-ish std (noise sigma 1 dominates)
+        let (x, _) = generate(64, 0);
+        let mean = ops::mean(x.data());
+        let var = ops::sum_sq(x.data()) / x.len() as f64 - (mean as f64).powi(2);
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((0.5..2.0).contains(&var), "var {var}");
+    }
+
+    #[test]
+    fn class_params_match_python_formulas() {
+        let p = class_params(3);
+        assert!((p.freq - (1.5 + 0.45 * 3.0)).abs() < 1e-12);
+        assert!((p.theta_deg - ((3.0 * 137.508) % 180.0)).abs() < 1e-9);
+        let p8 = class_params(8);
+        assert!((p8.second_freq - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cutout_leaves_zero_patch() {
+        let (x, _) = generate(1, 123);
+        let zeros = x.data().iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros >= 8 * 8 * 3, "expected a cutout patch, {zeros} zeros");
+    }
+}

@@ -1,0 +1,231 @@
+//! Typed view over `artifacts/manifest.json` — the contract between the
+//! Python build path and the Rust coordinator.
+//!
+//! aot.py freezes executable argument orders and layer metadata here; the
+//! runtime asserts arities at load time so a stale artifacts directory
+//! fails loudly instead of mis-executing.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::{parse_file, Json};
+
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub index: usize,
+    pub name: String,
+    pub kind: String,
+    pub act: String,
+    pub wshape: Vec<usize>,
+    pub params: usize,
+    /// Rate-distortion view (paper Eq. 12): n = filter dim, m = #filters.
+    pub coding_n: usize,
+    pub coding_m: usize,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    /// First/last layers are pinned to 8-bit (paper §4.1).
+    pub pinned_8bit: bool,
+    /// Residual 1x1 downsample branch (paper §4.5.3 singles these out).
+    pub downsample: bool,
+    pub sig: String,
+    pub calib_step: String,
+    pub adaround_step: String,
+    pub layer_fwd: String,
+    /// K-step fused calibration executables (lax.scan; the hot path).
+    pub calib_scan: String,
+    pub adaround_scan: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub fp_acc: f64,
+    pub layers: Vec<LayerInfo>,
+    pub w_files: Vec<String>,
+    pub b_files: Vec<String>,
+    pub forward: String,
+    pub forward_actq: String,
+    pub collect: String,
+    pub qat_step: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub dir: String,
+    pub num_classes: usize,
+    pub image_hw: usize,
+    pub channels: usize,
+    pub calib_batch: usize,
+    pub eval_batch: usize,
+    pub qat_batch: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub dataset: DatasetInfo,
+    pub models: Vec<ModelInfo>,
+    /// Steps fused per calib_scan invocation (aot.py SCAN_K).
+    pub scan_k: usize,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let j = parse_file(&path)?;
+        let d = j.get("dataset")?;
+        let dataset = DatasetInfo {
+            dir: d.get("dir")?.as_str()?.to_string(),
+            num_classes: d.get("num_classes")?.as_usize()?,
+            image_hw: d.get("image_hw")?.as_usize()?,
+            channels: d.get("channels")?.as_usize()?,
+            calib_batch: d.get("calib_batch")?.as_usize()?,
+            eval_batch: d.get("eval_batch")?.as_usize()?,
+            qat_batch: d.get("qat_batch")?.as_usize()?,
+        };
+        let mut models = Vec::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            models.push(parse_model(name, m)?);
+        }
+        let scan_k = j
+            .opt("scan_k")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(1);
+        Ok(Manifest {
+            root,
+            dataset,
+            models,
+            scan_k,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "model {name:?} not in manifest (have: {})",
+                    self.models
+                        .iter()
+                        .map(|m| m.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
+    let mut layers = Vec::new();
+    for l in m.get("layers")?.as_arr()? {
+        layers.push(LayerInfo {
+            index: l.get("index")?.as_usize()?,
+            name: l.get("name")?.as_str()?.to_string(),
+            kind: l.get("kind")?.as_str()?.to_string(),
+            act: l.get("act")?.as_str()?.to_string(),
+            wshape: l.get("wshape")?.usize_vec()?,
+            params: l.get("params")?.as_usize()?,
+            coding_n: l.get("coding_n")?.as_usize()?,
+            coding_m: l.get("coding_m")?.as_usize()?,
+            in_shape: l.get("in_shape")?.usize_vec()?,
+            out_shape: l.get("out_shape")?.usize_vec()?,
+            pinned_8bit: l.get("pinned_8bit")?.as_bool()?,
+            downsample: l.get("downsample")?.as_bool()?,
+            sig: l.get("sig")?.as_str()?.to_string(),
+            calib_step: l.get("calib_step")?.as_str()?.to_string(),
+            adaround_step: l.get("adaround_step")?.as_str()?.to_string(),
+            layer_fwd: l.get("layer_fwd")?.as_str()?.to_string(),
+            calib_scan: l
+                .opt("calib_scan")
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_default(),
+            adaround_scan: l
+                .opt("adaround_scan")
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_default(),
+        });
+    }
+    // layers must arrive ordered; the pipeline indexes by position.
+    for (i, l) in layers.iter().enumerate() {
+        if l.index != i {
+            return Err(Error::parse(format!(
+                "manifest layers out of order at {i} (index {})",
+                l.index
+            )));
+        }
+    }
+    Ok(ModelInfo {
+        name: name.to_string(),
+        fp_acc: m.get("fp_acc")?.as_f64()?,
+        layers,
+        w_files: m.get("w_files")?.str_vec()?,
+        b_files: m.get("b_files")?.str_vec()?,
+        forward: m.get("forward")?.as_str()?.to_string(),
+        forward_actq: m.get("forward_actq")?.as_str()?.to_string(),
+        collect: m.get("collect")?.as_str()?.to_string(),
+        qat_step: m
+            .opt("qat_step")
+            .map(|j| j.as_str().map(str::to_string))
+            .transpose()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal manifest fixture exercising the full parse path.
+    const FIXTURE: &str = r#"{
+      "format_version": 1,
+      "dataset": {"dir": "data", "num_classes": 16, "image_hw": 32,
+                  "channels": 3, "calib_batch": 32, "eval_batch": 128,
+                  "qat_batch": 64,
+                  "splits": {"calib": {"n": 1024, "seed": 2000}}},
+      "models": {
+        "m": {
+          "fp_acc": 0.9,
+          "num_layers": 1,
+          "w_files": ["weights/m/00_stem.w.npy"],
+          "b_files": ["weights/m/00_stem.b.npy"],
+          "forward": "hlo/forward_m.hlo.txt",
+          "forward_actq": "hlo/forward_actq_m.hlo.txt",
+          "collect": "hlo/collect_m.hlo.txt",
+          "layers": [{
+            "index": 0, "name": "stem", "kind": "conv", "ksize": 3,
+            "stride": 1, "groups": 1, "act": "relu",
+            "wshape": [3,3,3,16], "params": 432,
+            "coding_n": 27, "coding_m": 16,
+            "in_shape": [32,32,32,3], "out_shape": [32,32,32,16],
+            "pinned_8bit": true, "downsample": false, "sig": "s",
+            "calib_step": "hlo/calib_s.hlo.txt",
+            "adaround_step": "hlo/adaround_s.hlo.txt",
+            "layer_fwd": "hlo/layerfwd_s.hlo.txt"
+          }]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_fixture() {
+        let dir = std::env::temp_dir().join(format!("ar_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), FIXTURE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dataset.calib_batch, 32);
+        let model = m.model("m").unwrap();
+        assert_eq!(model.layers.len(), 1);
+        assert!(model.layers[0].pinned_8bit);
+        assert!(model.qat_step.is_none());
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,4 @@
+//! Artifact I/O: the `.npy` codec and the manifest loader.
+
+pub mod manifest;
+pub mod npy;

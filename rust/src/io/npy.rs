@@ -1,0 +1,287 @@
+//! NumPy `.npy` reader/writer (format spec v1.0).
+//!
+//! The interchange format between the Python build path (weights,
+//! datasets) and the Rust coordinator. Reading supports little-endian
+//! f32/f64/i32/i64 C-order arrays (everything aot.py emits, plus the f64
+//! and i64 defaults NumPy falls back to); writing emits `<f4` / `<i4`.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dtype {
+    F32,
+    F64,
+    I32,
+    I64,
+}
+
+impl Dtype {
+    fn from_descr(descr: &str) -> Result<Self> {
+        match descr {
+            "<f4" | "|f4" => Ok(Dtype::F32),
+            "<f8" | "|f8" => Ok(Dtype::F64),
+            "<i4" | "|i4" => Ok(Dtype::I32),
+            "<i8" | "|i8" => Ok(Dtype::I64),
+            other => Err(Error::parse(format!("unsupported npy dtype {other:?}"))),
+        }
+    }
+
+    fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F64 | Dtype::I64 => 8,
+        }
+    }
+}
+
+struct Header {
+    dtype: Dtype,
+    shape: Vec<usize>,
+}
+
+fn parse_header(text: &str) -> Result<Header> {
+    // Python dict literal, e.g.
+    // {'descr': '<f4', 'fortran_order': False, 'shape': (1024, 32, 32, 3), }
+    let descr = extract_quoted(text, "descr")?;
+    let dtype = Dtype::from_descr(&descr)?;
+    if text.contains("'fortran_order': True") {
+        return Err(Error::parse("fortran-order npy not supported"));
+    }
+    let shape_src = text
+        .split("'shape':")
+        .nth(1)
+        .ok_or_else(|| Error::parse("npy header missing shape"))?;
+    let open = shape_src
+        .find('(')
+        .ok_or_else(|| Error::parse("npy shape missing '('"))?;
+    let close = shape_src
+        .find(')')
+        .ok_or_else(|| Error::parse("npy shape missing ')'"))?;
+    let mut shape = Vec::new();
+    for part in shape_src[open + 1..close].split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        shape.push(
+            part.parse::<usize>()
+                .map_err(|_| Error::parse(format!("bad npy dim {part:?}")))?,
+        );
+    }
+    Ok(Header { dtype, shape })
+}
+
+fn extract_quoted(text: &str, key: &str) -> Result<String> {
+    let pat = format!("'{key}':");
+    let rest = text
+        .split(&pat)
+        .nth(1)
+        .ok_or_else(|| Error::parse(format!("npy header missing {key}")))?;
+    let start = rest
+        .find('\'')
+        .ok_or_else(|| Error::parse("npy header quote"))?;
+    let end = rest[start + 1..]
+        .find('\'')
+        .ok_or_else(|| Error::parse("npy header quote"))?;
+    Ok(rest[start + 1..start + 1 + end].to_string())
+}
+
+fn read_header(r: &mut impl Read) -> Result<Header> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic[..6] != MAGIC {
+        return Err(Error::parse("not an npy file (bad magic)"));
+    }
+    let (major, _minor) = (magic[6], magic[7]);
+    let hlen = if major == 1 {
+        let mut b = [0u8; 2];
+        r.read_exact(&mut b)?;
+        u16::from_le_bytes(b) as usize
+    } else {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        u32::from_le_bytes(b) as usize
+    };
+    let mut htext = vec![0u8; hlen];
+    r.read_exact(&mut htext)?;
+    parse_header(
+        std::str::from_utf8(&htext).map_err(|_| Error::parse("npy header utf-8"))?,
+    )
+}
+
+/// Read an npy file as f32 (f64 narrowed, integer types converted).
+pub fn read_f32(path: &Path) -> Result<Tensor> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| Error::parse(format!("open {}: {e}", path.display())))?;
+    let h = read_header(&mut f)?;
+    let n: usize = h.shape.iter().product();
+    let mut raw = vec![0u8; n * h.dtype.size()];
+    f.read_exact(&mut raw)?;
+    let data: Vec<f32> = match h.dtype {
+        Dtype::F32 => raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        Dtype::F64 => raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+            .collect(),
+        Dtype::I32 => raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as f32)
+            .collect(),
+        Dtype::I64 => raw
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()) as f32)
+            .collect(),
+    };
+    Tensor::new(h.shape, data)
+}
+
+/// Read an npy file of integer labels as i32.
+pub fn read_i32(path: &Path) -> Result<(Vec<usize>, Vec<i32>)> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| Error::parse(format!("open {}: {e}", path.display())))?;
+    let h = read_header(&mut f)?;
+    let n: usize = h.shape.iter().product();
+    let mut raw = vec![0u8; n * h.dtype.size()];
+    f.read_exact(&mut raw)?;
+    let data: Vec<i32> = match h.dtype {
+        Dtype::I32 => raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        Dtype::I64 => raw
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()) as i32)
+            .collect(),
+        Dtype::F32 => raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as i32)
+            .collect(),
+        Dtype::F64 => raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as i32)
+            .collect(),
+    };
+    Ok((h.shape, data))
+}
+
+fn header_bytes(descr: &str, shape: &[usize]) -> Vec<u8> {
+    let shape_txt = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut dict = format!(
+        "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_txt}, }}"
+    );
+    // total header (magic 8 + len 2 + dict) must be a multiple of 64
+    let base = 8 + 2;
+    let total = ((base + dict.len() + 1 + 63) / 64) * 64;
+    while base + dict.len() + 1 < total {
+        dict.push(' ');
+    }
+    dict.push('\n');
+    let mut out = Vec::with_capacity(total);
+    out.extend_from_slice(MAGIC);
+    out.push(1);
+    out.push(0);
+    out.extend_from_slice(&(dict.len() as u16).to_le_bytes());
+    out.extend_from_slice(dict.as_bytes());
+    out
+}
+
+pub fn write_f32(path: &Path, t: &Tensor) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&header_bytes("<f4", t.shape()))?;
+    let mut raw = Vec::with_capacity(t.len() * 4);
+    for &v in t.data() {
+        raw.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&raw)?;
+    Ok(())
+}
+
+pub fn write_i32(path: &Path, shape: &[usize], data: &[i32]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&header_bytes("<i4", shape))?;
+    let mut raw = Vec::with_capacity(data.len() * 4);
+    for &v in data {
+        raw.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&raw)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("ar_npy_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1.5, -2.0, 0.0, 3.25, 4.0, -5.5]).unwrap();
+        let p = tmpfile("f32");
+        write_f32(&p, &t).unwrap();
+        let back = read_f32(&p).unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let p = tmpfile("i32");
+        write_i32(&p, &[4], &[1, -2, 3, 40000]).unwrap();
+        let (shape, data) = read_i32(&p).unwrap();
+        assert_eq!(shape, vec![4]);
+        assert_eq!(data, vec![1, -2, 3, 40000]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn scalar_and_1d_headers() {
+        let p = tmpfile("hdr");
+        write_f32(&p, &Tensor::scalar(7.0)).unwrap();
+        let t = read_f32(&p).unwrap();
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.data(), &[7.0]);
+        write_f32(&p, &Tensor::from_vec(vec![1.0, 2.0])).unwrap();
+        assert_eq!(read_f32(&p).unwrap().shape(), &[2]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmpfile("bad");
+        std::fs::write(&p, b"NOTNUMPYATALL").unwrap();
+        assert!(read_f32(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        for shape in [vec![], vec![7], vec![128, 64, 3, 3]] {
+            let h = header_bytes("<f4", &shape);
+            assert_eq!(h.len() % 64, 0, "shape {shape:?}");
+        }
+    }
+}

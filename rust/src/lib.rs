@@ -1,0 +1,43 @@
+//! # attention-round
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! *"Attention Round for Post-Training Quantization"* (Diao, Li, Xu, Hao,
+//! 2022).
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the calibration
+//! pipeline, the mixed-precision bit allocator, every rounding baseline,
+//! and the experiment harness that regenerates the paper's Tables 1–5 and
+//! Figures 2–5. Compute graphs (Layer 2, JAX) and quantization kernels
+//! (Layer 1, Pallas) are AOT-compiled at build time by
+//! `python/compile/aot.py` into `artifacts/` and executed here through the
+//! PJRT C API — Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — substrates the offline registry lacks: JSON, CLI args,
+//!   RNG, logging, thread pool, timing.
+//! * [`io`] — `.npy` codec and the artifact manifest loader.
+//! * [`tensor`] — dense f32 tensors.
+//! * [`linalg`] — matmul / Cholesky / log-det for the coding length.
+//! * [`data`] — dataset loading, batching, and the synthetic generator.
+//! * [`quant`] — quantizer math: scales, rounding functions, observers.
+//! * [`mixed`] — rate-distortion coding length + 1-D k-means allocator
+//!   (paper §3.4, Algorithm 1).
+//! * [`runtime`] — PJRT executable loading and device-resident execution.
+//! * [`coordinator`] — the calibration pipeline and experiment drivers.
+//! * [`report`] — tables, ASCII charts, CSV.
+//! * [`bench_harness`] — the in-repo criterion replacement.
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod io;
+pub mod linalg;
+pub mod mixed;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use util::error::{Error, Result};

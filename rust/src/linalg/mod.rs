@@ -1,0 +1,224 @@
+//! Dense linear algebra substrate for the bit allocator.
+//!
+//! The coding length (paper Eq. 12) needs `log2 det(I + c·W·Wᵀ)` per
+//! layer. The matrix is symmetric positive definite by construction, so
+//! log-det comes from a Cholesky factorization: log det(A) = 2·Σ log Lᵢᵢ.
+//! Sizes are small (the Gram side is min(n, m) ≤ a few hundred for the
+//! zoo), so straightforward cache-friendly loops are plenty.
+
+use crate::util::error::{Error, Result};
+
+/// Row-major dense matrix of f64 (the determinant accumulates across
+/// hundreds of multiplications — f32 would visibly drift).
+#[derive(Debug, Clone)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows_f32(rows: usize, cols: usize, data: &[f32]) -> Result<Self> {
+        if rows * cols != data.len() {
+            return Err(Error::shape(format!(
+                "{rows}x{cols} != {} elements",
+                data.len()
+            )));
+        }
+        Ok(Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&v| v as f64).collect(),
+        })
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Gram matrix G = A·Aᵀ (rows as vectors). ikj loop order for cache
+    /// friendliness; G is symmetric so only the lower triangle is computed
+    /// then mirrored.
+    pub fn gram(&self) -> Mat {
+        let n = self.rows;
+        let k = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for i in 0..n {
+            let ri = &self.data[i * k..(i + 1) * k];
+            for j in 0..=i {
+                let rj = &self.data[j * k..(j + 1) * k];
+                let mut acc = 0.0;
+                for t in 0..k {
+                    acc += ri[t] * rj[t];
+                }
+                *g.at_mut(i, j) = acc;
+                *g.at_mut(j, i) = acc;
+            }
+        }
+        g
+    }
+
+    /// C = self · other.
+    pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        if self.cols != other.rows {
+            return Err(Error::shape(format!(
+                "matmul {}x{} @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            for t in 0..k {
+                let a = self.at(i, t);
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[t * n..(t + 1) * n];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(c)
+    }
+
+    /// In-place A ← A + s·I.
+    pub fn add_scaled_identity(&mut self, s: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += s;
+        }
+    }
+
+    /// In-place A ← c·A.
+    pub fn scale(&mut self, c: f64) {
+        for v in &mut self.data {
+            *v *= c;
+        }
+    }
+}
+
+/// Cholesky factorization A = L·Lᵀ for symmetric positive-definite A.
+/// Returns the lower-triangular L; errors on non-PD input.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    if a.rows != a.cols {
+        return Err(Error::shape("cholesky needs a square matrix"));
+    }
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j);
+            for k in 0..j {
+                sum -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(Error::invariant(format!(
+                        "matrix not positive definite (pivot {i}: {sum})"
+                    )));
+                }
+                *l.at_mut(i, j) = sum.sqrt();
+            } else {
+                *l.at_mut(i, j) = sum / l.at(j, j);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// log₂ det(A) for symmetric positive-definite A via Cholesky.
+pub fn log2_det_spd(a: &Mat) -> Result<f64> {
+    let l = cholesky(a)?;
+    let mut acc = 0.0;
+    for i in 0..a.rows {
+        acc += l.at(i, i).log2();
+    }
+    Ok(2.0 * acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_matches_manual() {
+        // rows: [1,2], [3,4]
+        let a = Mat::from_rows_f32(2, 2, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let g = a.gram();
+        assert_eq!(g.at(0, 0), 5.0);
+        assert_eq!(g.at(0, 1), 11.0);
+        assert_eq!(g.at(1, 0), 11.0);
+        assert_eq!(g.at(1, 1), 25.0);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows_f32(2, 3, &[1., 2., 3., 4., 5., 6.]).unwrap();
+        let i3 = Mat::eye(3);
+        let c = a.matmul(&i3).unwrap();
+        assert_eq!(c.data, a.data);
+        assert!(a.matmul(&Mat::eye(2)).is_err());
+    }
+
+    #[test]
+    fn cholesky_known() {
+        // A = [[4, 2], [2, 3]] -> L = [[2, 0], [1, sqrt(2)]]
+        let mut a = Mat::zeros(2, 2);
+        a.data.copy_from_slice(&[4.0, 2.0, 2.0, 3.0]);
+        let l = cholesky(&a).unwrap();
+        assert!((l.at(0, 0) - 2.0).abs() < 1e-12);
+        assert!((l.at(1, 0) - 1.0).abs() < 1e-12);
+        assert!((l.at(1, 1) - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log2det_diag() {
+        // det(diag(2, 4, 8)) = 64 -> log2 = 6
+        let mut a = Mat::zeros(3, 3);
+        for (i, v) in [2.0, 4.0, 8.0].iter().enumerate() {
+            *a.at_mut(i, i) = *v;
+        }
+        assert!((log2_det_spd(&a).unwrap() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::zeros(2, 2);
+        a.data.copy_from_slice(&[1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn log2det_matches_gram_identity_shift() {
+        // A = I + G with G PSD -> det >= 1 -> log2 det >= 0
+        let w = Mat::from_rows_f32(3, 5, &(0..15).map(|i| (i as f32) * 0.1).collect::<Vec<_>>()).unwrap();
+        let mut a = w.gram();
+        a.add_scaled_identity(1.0);
+        assert!(log2_det_spd(&a).unwrap() > 0.0);
+    }
+}

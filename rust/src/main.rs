@@ -1,0 +1,307 @@
+//! `repro` — the attention-round CLI.
+//!
+//! ```text
+//! repro info                          artifact + model inventory
+//! repro evaluate  --model M           FP32 top-1 on the eval split
+//! repro quantize  --model M --wbits B [--abits B] [--method ...]
+//! repro allocate  --model M --bits 3,4,5,6      Algorithm-1 bit allocation
+//! repro qat       --model M --steps N           budgeted STE-QAT
+//! repro reproduce <table1..5|fig2|fig3|fig4|fig5|all>
+//! ```
+//!
+//! Every subcommand takes `--artifacts DIR` (default `artifacts`),
+//! `--profile quick|paper`, and repeatable `--set key=value` overrides
+//! (see coordinator::config).
+
+use attention_round::coordinator::config::CalibConfig;
+use attention_round::coordinator::experiments::{self, Ctx, ALL_MODELS};
+use attention_round::coordinator::model::LoadedModel;
+use attention_round::coordinator::pipeline::{
+    quantize_and_eval, resolve_uniform_bits, QuantSpec,
+};
+use attention_round::coordinator::{evaluate, qat};
+use attention_round::data::Split;
+use attention_round::io::manifest::Manifest;
+use attention_round::mixed;
+use attention_round::quant::rounding::Rounding;
+use attention_round::report::pct;
+use attention_round::runtime::Runtime;
+use attention_round::util::args::Parser;
+use attention_round::util::{error::Error, error::Result, logging};
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn parser() -> Parser {
+    Parser::new("repro", "Attention Round PTQ — paper reproduction CLI")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("out", Some("results"), "output directory for reports")
+        .opt("profile", Some("quick"), "calibration profile: quick|paper")
+        .opt("set", None, "config override key=value (comma-separated)")
+        .opt("model", None, "model name")
+        .opt("models", None, "comma-separated model subset for reproduce")
+        .opt("wbits", Some("4"), "weight bits")
+        .opt("abits", None, "activation bits (omit = FP32 activations)")
+        .opt("method", Some("attention"), "rounding: nearest|floor|ceil|stochastic|adaround|attention")
+        .opt("bits", Some("3,4,5,6"), "bit list for allocate")
+        .opt("eps2", Some("0.001"), "coding-length error tolerance ε²")
+        .opt("steps", Some("300"), "QAT training steps")
+        .opt("taus", Some("0,0.25,0.5,0.75,1"), "τ values for fig2")
+        .flag("save", "persist the quantized model under <out>/qmodels/")
+        .flag("help", "print usage")
+}
+
+fn build_cfg(a: &attention_round::util::args::Args) -> Result<CalibConfig> {
+    let mut cfg = CalibConfig::profile(a.get("profile")?)?;
+    if let Ok(sets) = a.get("set") {
+        for kv in sets.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| Error::config(format!("--set wants key=value, got {kv:?}")))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let p = parser();
+    let a = p.parse(argv)?;
+    if a.has_flag("help") || a.positional.is_empty() {
+        println!("{}", p.usage());
+        println!("subcommands: info | evaluate | quantize | allocate | qat | reproduce <target>");
+        return Ok(());
+    }
+    let cmd = a.positional[0].as_str();
+    let artifacts = a.get("artifacts")?.to_string();
+
+    match cmd {
+        "info" => info(&artifacts),
+        "evaluate" => cmd_evaluate(&artifacts, &a),
+        "quantize" => cmd_quantize(&artifacts, &a),
+        "allocate" => cmd_allocate(&artifacts, &a),
+        "qat" => cmd_qat(&artifacts, &a),
+        "reproduce" => cmd_reproduce(&artifacts, &a),
+        other => Err(Error::config(format!("unknown subcommand {other:?}"))),
+    }
+}
+
+fn info(artifacts: &str) -> Result<()> {
+    let m = Manifest::load(artifacts)?;
+    println!(
+        "artifacts: {} (scan_k={}, calib_batch={}, eval_batch={})",
+        m.root.display(),
+        m.scan_k,
+        m.dataset.calib_batch,
+        m.dataset.eval_batch
+    );
+    println!(
+        "dataset: {} classes, {}x{}x{}",
+        m.dataset.num_classes, m.dataset.image_hw, m.dataset.image_hw, m.dataset.channels
+    );
+    for model in &m.models {
+        let params: usize = model.layers.iter().map(|l| l.params).sum();
+        println!(
+            "  {:<14} fp_acc={:.2}%  layers={}  params={}  qat={}",
+            model.name,
+            model.fp_acc * 100.0,
+            model.layers.len(),
+            params,
+            model.qat_step.is_some()
+        );
+    }
+    Ok(())
+}
+
+fn load_ctx(artifacts: &str, a: &attention_round::util::args::Args) -> Result<Ctx> {
+    Ctx::new(artifacts, build_cfg(a)?, a.get("out")?)
+}
+
+fn cmd_evaluate(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let manifest = Manifest::load(artifacts)?;
+    let model = LoadedModel::load(&manifest, a.get("model")?)?;
+    let eval = Split::load(&manifest.path(&manifest.dataset.dir), "eval")?;
+    let acc = evaluate::evaluate(&rt, &manifest, &model, &model.weights, &eval)?;
+    println!(
+        "{}: FP32 top-1 {} (manifest said {})",
+        model.info.name,
+        pct(acc),
+        pct(model.info.fp_acc)
+    );
+    Ok(())
+}
+
+fn cmd_quantize(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
+    let ctx = load_ctx(artifacts, a)?;
+    let mut cfg = ctx.cfg.clone();
+    cfg.method = Rounding::parse(a.get("method")?)
+        .ok_or_else(|| Error::config("bad --method"))?;
+    let model_name = a.get("model")?;
+    let loaded = LoadedModel::load(&ctx.manifest, model_name)?;
+    let wbits: u8 = a.get_usize("wbits")? as u8;
+    let abits = a.get("abits").ok().map(|s| s.parse::<u8>()).transpose()
+        .map_err(|_| Error::config("bad --abits"))?;
+    let spec = QuantSpec {
+        model: model_name.to_string(),
+        wbits: resolve_uniform_bits(&loaded, wbits),
+        abits,
+    };
+    let out = quantize_and_eval(&ctx.rt, &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval)?;
+    println!(
+        "{} {}/{} via {:?}: top-1 {}% (FP {}%), {:.1}s",
+        model_name,
+        wbits,
+        abits.map(|b| b.to_string()).unwrap_or_else(|| "32".into()),
+        cfg.method,
+        pct(out.acc),
+        pct(out.fp_acc),
+        out.wall_s
+    );
+    for l in &out.per_layer {
+        log::info!(
+            "  {:<18} {}b s={:.5} loss {:.3e} -> {:.3e}",
+            l.name, l.bits, l.scale, l.first_loss, l.last_loss
+        );
+    }
+    if a.has_flag("save") {
+        let tag = format!(
+            "{}w{}a{}",
+            cfg.method.name(),
+            wbits,
+            abits.map(|b| b.to_string()).unwrap_or_else(|| "fp".into())
+        );
+        let dir = attention_round::coordinator::state::default_dir(
+            &ctx.out_dir, model_name, &tag,
+        );
+        attention_round::coordinator::state::save(&out, &dir)?;
+        println!("saved quantized model to {}", dir.display());
+    }
+    println!("--- pipeline metrics ---\n{}", ctx.rt.metrics.report());
+    Ok(())
+}
+
+fn cmd_allocate(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let model = LoadedModel::load(&manifest, a.get("model")?)?;
+    let bits: Vec<u8> = a
+        .get("bits")?
+        .split(',')
+        .map(|s| s.trim().parse::<u8>().map_err(|_| Error::config("bad --bits")))
+        .collect::<Result<_>>()?;
+    let eps2 = a.get_f64("eps2")?;
+    let alloc = mixed::allocate(&model.info.layers, &model.weights, &bits, eps2)?;
+    println!(
+        "{}: bit list {:?}, size {}",
+        model.info.name,
+        bits,
+        mixed::format_size_mb(alloc.size_bytes)
+    );
+    for (l, (&b, &len)) in model
+        .info
+        .layers
+        .iter()
+        .zip(alloc.bits.iter().zip(alloc.lengths.iter()))
+    {
+        println!(
+            "  {:<20} {:>6} params  L={:>8.1} bits  -> {}b{}{}",
+            l.name,
+            l.params,
+            len,
+            b,
+            if l.pinned_8bit { " (pinned)" } else { "" },
+            if l.downsample { " (downsample)" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_qat(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let manifest = Manifest::load(artifacts)?;
+    let dir = manifest.path(&manifest.dataset.dir);
+    let train = Split::load(&dir, "train")?;
+    let eval = Split::load(&dir, "eval")?;
+    let out = qat::run_qat(
+        &rt,
+        &manifest,
+        a.get("model")?,
+        a.get_usize("wbits")? as u8,
+        a.get("abits").ok().and_then(|s| s.parse().ok()).unwrap_or(4),
+        a.get_usize("steps")?,
+        1e-3,
+        &train,
+        &eval,
+        7,
+    )?;
+    println!(
+        "QAT {}: top-1 {}% (FP {}%), {} steps / {} samples, {:.1}s",
+        a.get("model")?,
+        pct(out.acc),
+        pct(out.fp_acc),
+        out.steps,
+        out.train_samples_seen,
+        out.wall_s
+    );
+    Ok(())
+}
+
+fn cmd_reproduce(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
+    let target = a
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::config("reproduce needs a target (table1..5, fig2, fig3..5, all)"))?
+        .clone();
+    let ctx = load_ctx(artifacts, a)?;
+    let models_owned: Vec<String> = match a.get("models") {
+        Ok(s) => s.split(',').map(|m| m.trim().to_string()).collect(),
+        Err(_) => ALL_MODELS
+            .iter()
+            .map(|m| m.to_string())
+            // tolerate zoo subsets: artifacts may be built for fewer
+            // models on constrained machines (see Makefile knobs)
+            .filter(|m| ctx.manifest.model(m).is_ok())
+            .collect(),
+    };
+    let models: Vec<&str> = models_owned.iter().map(String::as_str).collect();
+    let eps2 = a.get_f64("eps2")?;
+    let taus: Vec<f32> = a
+        .get("taus")?
+        .split(',')
+        .map(|s| s.trim().parse::<f32>().map_err(|_| Error::config("bad --taus")))
+        .collect::<Result<_>>()?;
+    let qat_steps = a.get_usize("steps")?;
+
+    let run_one = |t: &str| -> Result<()> {
+        match t {
+            "table1" => experiments::table1(&ctx, &models).map(|_| ()),
+            "table2" => experiments::table2(&ctx, &models).map(|_| ()),
+            "table3" => experiments::table3(&ctx, qat_steps).map(|_| ()),
+            "table4" => experiments::table4(&ctx, &models, eps2).map(|_| ()),
+            "table5" => experiments::table5(&ctx).map(|_| ()),
+            "fig2" => experiments::fig2(&ctx, &["resnet18t"], &taus).map(|_| ()),
+            "fig3" => experiments::fig_alloc(&ctx, "resnet18t", eps2).map(|_| ()),
+            "fig4" => experiments::fig_alloc(&ctx, "resnet50t", eps2).map(|_| ()),
+            "fig5" => experiments::fig_alloc(&ctx, "mobilenetv2t", eps2).map(|_| ()),
+            other => Err(Error::config(format!("unknown target {other:?}"))),
+        }
+    };
+    if target == "all" {
+        for t in [
+            "fig3", "fig4", "fig5", "table5", "table1", "table2", "table3",
+            "table4", "fig2",
+        ] {
+            run_one(t)?;
+        }
+    } else {
+        run_one(&target)?;
+    }
+    println!("--- pipeline metrics ---\n{}", ctx.rt.metrics.report());
+    Ok(())
+}

@@ -1,0 +1,192 @@
+//! Exact 1-D k-means via dynamic programming.
+//!
+//! Algorithm 1 clusters per-layer coding lengths into |bit list| groups.
+//! In one dimension, optimal k-means clusters are contiguous in sorted
+//! order, so an O(k·n²) DP finds the *global* optimum — no Lloyd
+//! restarts, fully deterministic, which matters for reproducible bit
+//! allocations (Figures 3-5 must come out identical run to run).
+
+use crate::util::error::{Error, Result};
+
+/// Cluster 1-D values into k groups. Returns per-value cluster ids,
+/// numbered by ascending cluster center (0 = smallest).
+pub fn cluster_1d(values: &[f64], k: usize) -> Result<Vec<usize>> {
+    let n = values.len();
+    if k == 0 {
+        return Err(Error::config("k must be > 0"));
+    }
+    if n == 0 {
+        return Ok(vec![]);
+    }
+    let k = k.min(n);
+
+    // sort indices
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap());
+    let sorted: Vec<f64> = order.iter().map(|&i| values[i]).collect();
+
+    // prefix sums for O(1) within-cluster SSE
+    let mut pre = vec![0.0f64; n + 1];
+    let mut pre2 = vec![0.0f64; n + 1];
+    for i in 0..n {
+        pre[i + 1] = pre[i] + sorted[i];
+        pre2[i + 1] = pre2[i] + sorted[i] * sorted[i];
+    }
+    // SSE of sorted[i..j] (exclusive j)
+    let sse = |i: usize, j: usize| -> f64 {
+        let cnt = (j - i) as f64;
+        if cnt <= 0.0 {
+            return 0.0;
+        }
+        let s = pre[j] - pre[i];
+        let s2 = pre2[j] - pre2[i];
+        (s2 - s * s / cnt).max(0.0)
+    };
+
+    // dp[c][j] = min cost of clustering sorted[0..j] into c+1 clusters
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; n + 1]; k];
+    let mut back = vec![vec![0usize; n + 1]; k];
+    for j in 1..=n {
+        dp[0][j] = sse(0, j);
+    }
+    for c in 1..k {
+        for j in c + 1..=n {
+            for split in c..j {
+                let cost = dp[c - 1][split] + sse(split, j);
+                if cost < dp[c][j] {
+                    dp[c][j] = cost;
+                    back[c][j] = split;
+                }
+            }
+        }
+    }
+
+    // recover boundaries
+    let mut boundaries = vec![n];
+    let mut j = n;
+    // the number of clusters actually used (some may be empty when values
+    // have duplicates and k > distinct count — DP handles it by smallest
+    // feasible c)
+    let mut c = k - 1;
+    while c > 0 {
+        let split = back[c][j];
+        boundaries.push(split);
+        j = split;
+        c -= 1;
+    }
+    boundaries.push(0);
+    boundaries.reverse(); // [0, b1, ..., n]
+
+    // assign cluster ids in sorted order, then scatter back
+    let mut ids_sorted = vec![0usize; n];
+    for ci in 0..boundaries.len() - 1 {
+        for i in boundaries[ci]..boundaries[ci + 1] {
+            ids_sorted[i] = ci;
+        }
+    }
+    let mut out = vec![0usize; n];
+    for (pos, &orig) in order.iter().enumerate() {
+        out[orig] = ids_sorted[pos];
+    }
+    Ok(out)
+}
+
+/// Cluster centers (means), ascending — diagnostics for the reports.
+pub fn centers(values: &[f64], ids: &[usize], k: usize) -> Vec<f64> {
+    let mut sums = vec![0.0f64; k];
+    let mut counts = vec![0usize; k];
+    for (&v, &id) in values.iter().zip(ids) {
+        sums[id] += v;
+        counts[id] += 1;
+    }
+    (0..k)
+        .map(|i| {
+            if counts[i] > 0 {
+                sums[i] / counts[i] as f64
+            } else {
+                f64::NAN
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn well_separated_clusters() {
+        let values = [0.1, 0.2, 5.0, 5.1, 10.0, 10.2];
+        let ids = cluster_1d(&values, 3).unwrap();
+        assert_eq!(ids, vec![0, 0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn unsorted_input_scatters_correctly() {
+        let values = [10.0, 0.1, 5.0, 0.2, 10.2, 5.1];
+        let ids = cluster_1d(&values, 3).unwrap();
+        assert_eq!(ids, vec![2, 0, 1, 0, 2, 1]);
+    }
+
+    #[test]
+    fn k_ge_n_gives_singletons() {
+        let values = [3.0, 1.0, 2.0];
+        let ids = cluster_1d(&values, 5).unwrap();
+        assert_eq!(ids, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn k1_single_cluster() {
+        let ids = cluster_1d(&[1.0, 2.0, 3.0], 1).unwrap();
+        assert_eq!(ids, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn optimality_vs_bruteforce() {
+        // DP must match exhaustive search on small instances.
+        let values = [0.0, 1.0, 1.5, 4.0, 4.1, 9.0, 9.5, 10.0];
+        let k = 3;
+        let ids = cluster_1d(&values, k).unwrap();
+        let cost = |assignment: &[usize]| -> f64 {
+            let c = centers(&values, assignment, k);
+            values
+                .iter()
+                .zip(assignment)
+                .map(|(&v, &id)| (v - c[id]).powi(2))
+                .sum()
+        };
+        let dp_cost = cost(&ids);
+        // brute force over contiguous splits (optimal is contiguous)
+        let n = values.len();
+        let mut best = f64::INFINITY;
+        for b1 in 1..n - 1 {
+            for b2 in b1 + 1..n {
+                let mut a = vec![0usize; n];
+                for i in b1..b2 {
+                    a[i] = 1;
+                }
+                for i in b2..n {
+                    a[i] = 2;
+                }
+                best = best.min(cost(&a));
+            }
+        }
+        assert!((dp_cost - best).abs() < 1e-9, "dp {dp_cost} vs brute {best}");
+    }
+
+    #[test]
+    fn centers_ascending() {
+        let values = [0.1, 5.0, 10.0, 0.2, 5.1];
+        let ids = cluster_1d(&values, 3).unwrap();
+        let c = centers(&values, &ids, 3);
+        assert!(c[0] < c[1] && c[1] < c[2]);
+    }
+
+    #[test]
+    fn duplicates_dont_crash() {
+        let values = [2.0; 10];
+        let ids = cluster_1d(&values, 3).unwrap();
+        assert_eq!(ids.len(), 10);
+    }
+}

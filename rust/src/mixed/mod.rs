@@ -1,0 +1,262 @@
+//! Mixed-precision bit allocation (paper §3.4, Algorithm 1).
+//!
+//! Rate-distortion view: each layer's weight matrix W ∈ R^{n×m} (m filter
+//! vectors of dim n) has a lossy coding length
+//!
+//!   L(W) = ½ · log₂ det(I + n/(m·ε²) · W·Wᵀ)          (Eq. 12)
+//!
+//! Layers with longer coding length carry more information and get wider
+//! bit widths. Allocation is: compute L per layer, 1-D k-means with
+//! k = |bit list| clusters, sort cluster centers ascending, hand the
+//! sorted bit list to the sorted clusters. This replaces the combinatorial
+//! search HAQ-style methods solve — the paper's efficiency claim.
+
+pub mod kmeans;
+
+use crate::io::manifest::LayerInfo;
+use crate::linalg::{log2_det_spd, Mat};
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Coding length of one layer (Eq. 12), computed on the smaller Gram side
+/// (Sylvester: det(I + c·WWᵀ) = det(I + c·WᵀW)) so cost is
+/// O(min(n,m)²·max(n,m)).
+pub fn coding_length(w2d_rows_n: &Mat, eps2: f64) -> Result<f64> {
+    let n = w2d_rows_n.rows; // filter dimension
+    let m = w2d_rows_n.cols; // number of filters
+    if n == 0 || m == 0 {
+        return Err(Error::shape("empty weight matrix"));
+    }
+    let c = n as f64 / (m as f64 * eps2);
+    // Gram on the smaller side.
+    let mut a = if n <= m {
+        w2d_rows_n.gram() // n x n
+    } else {
+        // WᵀW: treat columns as rows by transposing via gram of the
+        // transpose — build the transpose explicitly (small matrices).
+        let mut t = Mat::zeros(m, n);
+        for i in 0..n {
+            for j in 0..m {
+                *t.at_mut(j, i) = w2d_rows_n.at(i, j);
+            }
+        }
+        t.gram() // m x m
+    };
+    a.scale(c);
+    a.add_scaled_identity(1.0);
+    Ok(0.5 * log2_det_spd(&a)?)
+}
+
+/// Reshape a conv/linear weight tensor into the paper's (n, m) coding
+/// view: m columns = output filters, each of dimension n.
+pub fn coding_view(w: &Tensor, coding_n: usize, coding_m: usize) -> Result<Mat> {
+    if coding_n * coding_m != w.len() {
+        return Err(Error::shape(format!(
+            "coding view {coding_n}x{coding_m} != {} weights",
+            w.len()
+        )));
+    }
+    // Weight layout is (..., out_ch) row-major: element (flat_i, o) with
+    // flat_i over the filter dims. That is exactly an n x m row-major
+    // matrix with rows = filter dim.
+    Mat::from_rows_f32(coding_n, coding_m, w.data())
+}
+
+/// Result of Algorithm 1 for one model.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// Per-layer bit width, same order as the manifest layers.
+    pub bits: Vec<u8>,
+    /// Per-layer coding lengths (diagnostics / Figure 3-5 data).
+    pub lengths: Vec<f64>,
+    /// Model size in bytes counting quantized conv/linear weights only
+    /// (the paper's Table 4 accounting).
+    pub size_bytes: f64,
+}
+
+/// Algorithm 1: assign a bit width to every layer.
+///
+/// `pinned` layers (first/last, §4.1) are forced to 8-bit and excluded
+/// from clustering, mirroring the paper's setup.
+pub fn allocate(
+    layers: &[LayerInfo],
+    weights: &[Tensor],
+    bit_list: &[u8],
+    eps2: f64,
+) -> Result<Allocation> {
+    if bit_list.is_empty() {
+        return Err(Error::config("empty bit list"));
+    }
+    let mut bits_sorted: Vec<u8> = bit_list.to_vec();
+    bits_sorted.sort_unstable();
+
+    // Step 1-5: coding lengths.
+    let mut lengths = Vec::with_capacity(layers.len());
+    for (l, w) in layers.iter().zip(weights) {
+        let mat = coding_view(w, l.coding_n, l.coding_m)?;
+        lengths.push(coding_length(&mat, eps2)?);
+    }
+
+    // Steps 6-8: cluster the non-pinned lengths, map sorted centers to
+    // sorted bit widths.
+    let free: Vec<usize> = (0..layers.len())
+        .filter(|&i| !layers[i].pinned_8bit)
+        .collect();
+    let free_lengths: Vec<f64> = free.iter().map(|&i| lengths[i]).collect();
+    let k = bits_sorted.len().min(free_lengths.len()).max(1);
+    let assignment = kmeans::cluster_1d(&free_lengths, k)?;
+
+    let mut bits = vec![8u8; layers.len()];
+    for (fi, &layer_idx) in free.iter().enumerate() {
+        // cluster ids come out ordered by center (0 = smallest center);
+        // when k < len(bit_list) (degenerate tiny models) use the top of
+        // the sorted list.
+        let cluster = assignment[fi];
+        let bit_idx = cluster + bits_sorted.len() - k;
+        bits[layer_idx] = bits_sorted[bit_idx];
+    }
+
+    let size_bytes = model_size_bytes(layers, &bits);
+    Ok(Allocation {
+        bits,
+        lengths,
+        size_bytes,
+    })
+}
+
+/// Single-precision allocation (the Table 4 baseline rows): every
+/// non-pinned layer gets `bits`.
+pub fn uniform_allocation(layers: &[LayerInfo], bits_val: u8) -> Allocation {
+    let bits: Vec<u8> = layers
+        .iter()
+        .map(|l| if l.pinned_8bit { 8 } else { bits_val })
+        .collect();
+    let size_bytes = model_size_bytes(layers, &bits);
+    Allocation {
+        bits,
+        lengths: vec![],
+        size_bytes,
+    }
+}
+
+/// Table 4's size metric: quantized conv/linear weights only.
+pub fn model_size_bytes(layers: &[LayerInfo], bits: &[u8]) -> f64 {
+    layers
+        .iter()
+        .zip(bits)
+        .map(|(l, &b)| l.params as f64 * b as f64 / 8.0)
+        .sum()
+}
+
+pub fn format_size_mb(bytes: f64) -> String {
+    format!("{:.2}M", bytes / 1_000_000.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(i: usize, params: usize, n: usize, m: usize, pinned: bool) -> LayerInfo {
+        LayerInfo {
+            index: i,
+            name: format!("l{i}"),
+            kind: "conv".into(),
+            act: "relu".into(),
+            wshape: vec![n, m],
+            params,
+            coding_n: n,
+            coding_m: m,
+            in_shape: vec![],
+            out_shape: vec![],
+            pinned_8bit: pinned,
+            downsample: false,
+            sig: "s".into(),
+            calib_step: String::new(),
+            adaround_step: String::new(),
+            layer_fwd: String::new(),
+            calib_scan: String::new(),
+            adaround_scan: String::new(),
+        }
+    }
+
+    fn gaussian_tensor(n: usize, m: usize, std: f32, seed: u64) -> Tensor {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut data = vec![0.0f32; n * m];
+        rng.fill_gaussian(&mut data, 0.0, std);
+        Tensor::new(vec![n, m], data).unwrap()
+    }
+
+    #[test]
+    fn coding_length_monotone_in_information() {
+        // Higher-variance weights carry more information -> longer code.
+        let small = coding_view(&gaussian_tensor(16, 32, 0.01, 1), 16, 32).unwrap();
+        let big = coding_view(&gaussian_tensor(16, 32, 0.5, 1), 16, 32).unwrap();
+        let l_small = coding_length(&small, 0.01).unwrap();
+        let l_big = coding_length(&big, 0.01).unwrap();
+        assert!(l_big > l_small, "{l_big} <= {l_small}");
+    }
+
+    #[test]
+    fn coding_length_sylvester_sides_agree() {
+        // n < m and transposed n > m must give the same value when the
+        // (n, m) roles are kept (c depends on n, m separately, so compare
+        // direct vs gram-side shortcut by brute force on the big side).
+        let w = gaussian_tensor(8, 24, 0.2, 3);
+        let mat = coding_view(&w, 8, 24).unwrap();
+        let l_fast = coding_length(&mat, 0.05).unwrap();
+        // brute force on the m x m side
+        let mut t = Mat::zeros(24, 8);
+        for i in 0..8 {
+            for j in 0..24 {
+                *t.at_mut(j, i) = mat.at(i, j);
+            }
+        }
+        let mut a = t.gram();
+        a.scale(8.0 / (24.0 * 0.05));
+        a.add_scaled_identity(1.0);
+        let l_slow = 0.5 * log2_det_spd(&a).unwrap();
+        assert!((l_fast - l_slow).abs() < 1e-6, "{l_fast} vs {l_slow}");
+    }
+
+    #[test]
+    fn allocate_pins_first_last_and_orders_bits() {
+        let layers = vec![
+            layer(0, 100, 10, 10, true),
+            layer(1, 100, 10, 10, false),
+            layer(2, 100, 10, 10, false),
+            layer(3, 100, 10, 10, false),
+            layer(4, 100, 10, 10, true),
+        ];
+        let weights = vec![
+            gaussian_tensor(10, 10, 0.1, 0),
+            gaussian_tensor(10, 10, 0.02, 1), // low info
+            gaussian_tensor(10, 10, 0.2, 2),  // mid
+            gaussian_tensor(10, 10, 1.5, 3),  // high info
+            gaussian_tensor(10, 10, 0.1, 4),
+        ];
+        let alloc = allocate(&layers, &weights, &[3, 4, 5], 0.01).unwrap();
+        assert_eq!(alloc.bits[0], 8);
+        assert_eq!(alloc.bits[4], 8);
+        // more information -> at least as many bits
+        assert!(alloc.bits[1] <= alloc.bits[2]);
+        assert!(alloc.bits[2] <= alloc.bits[3]);
+        assert_eq!(alloc.bits[1], 3);
+        assert_eq!(alloc.bits[3], 5);
+    }
+
+    #[test]
+    fn size_accounting() {
+        let layers = vec![layer(0, 1000, 10, 100, false)];
+        assert_eq!(model_size_bytes(&layers, &[4]), 500.0);
+        assert_eq!(model_size_bytes(&layers, &[8]), 1000.0);
+        let alloc = uniform_allocation(&layers, 4);
+        assert_eq!(alloc.size_bytes, 500.0);
+    }
+
+    #[test]
+    fn uniform_allocation_respects_pins() {
+        let layers = vec![layer(0, 10, 1, 10, true), layer(1, 10, 1, 10, false)];
+        let a = uniform_allocation(&layers, 3);
+        assert_eq!(a.bits, vec![8, 3]);
+    }
+}

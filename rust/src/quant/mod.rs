@@ -1,0 +1,190 @@
+//! Quantizer math (host side).
+//!
+//! Everything the paper's §1/§3 defines that doesn't need a gradient:
+//! uniform grids, MSE-optimal scale search (§4.1), the static rounding
+//! baselines (Nearest / Floor / Ceil / Stochastic), the Attention-Round
+//! probability model of Eq. (2), and activation observers for Table 2/3/5.
+
+pub mod observer;
+pub mod perchannel;
+pub mod rounding;
+pub mod scale;
+
+use crate::util::error::{Error, Result};
+
+/// A signed symmetric uniform quantization grid: values s·q for integer
+/// q ∈ [lo, hi]. The paper uses per-tensor symmetric weights with the
+/// first/last layers pinned to 8-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QGrid {
+    pub scale: f32,
+    pub lo: f32,
+    pub hi: f32,
+    pub bits: u8,
+}
+
+impl QGrid {
+    /// Signed grid for `bits`: q ∈ [−2^{b−1}, 2^{b−1}−1].
+    pub fn signed(bits: u8, scale: f32) -> Result<Self> {
+        if !(2..=16).contains(&bits) {
+            return Err(Error::config(format!("bits {bits} out of range 2..=16")));
+        }
+        if !(scale.is_finite() && scale > 0.0) {
+            return Err(Error::config(format!("scale {scale} must be positive")));
+        }
+        let half = 1i64 << (bits - 1);
+        Ok(QGrid {
+            scale,
+            lo: -(half as f32),
+            hi: (half - 1) as f32,
+            bits,
+        })
+    }
+
+    /// Unsigned grid (activations after ReLU): q ∈ [0, 2^b − 1].
+    pub fn unsigned(bits: u8, scale: f32) -> Result<Self> {
+        if !(2..=16).contains(&bits) {
+            return Err(Error::config(format!("bits {bits} out of range 2..=16")));
+        }
+        if !(scale.is_finite() && scale > 0.0) {
+            return Err(Error::config(format!("scale {scale} must be positive")));
+        }
+        Ok(QGrid {
+            scale,
+            lo: 0.0,
+            hi: ((1i64 << bits) - 1) as f32,
+            bits,
+        })
+    }
+
+    /// Number of representable values.
+    pub fn levels(&self) -> usize {
+        (self.hi - self.lo) as usize + 1
+    }
+
+    /// Quantize-dequantize one value with round-to-nearest-even (matching
+    /// jnp.round across the stack).
+    #[inline]
+    pub fn nearest(&self, w: f32) -> f32 {
+        self.scale * round_half_even(w / self.scale).clamp(self.lo, self.hi)
+    }
+
+    /// Is v exactly representable on this grid?
+    pub fn contains(&self, v: f32) -> bool {
+        let q = v / self.scale;
+        let r = round_half_even(q);
+        (q - r).abs() < 1e-4 && (self.lo..=self.hi).contains(&r)
+    }
+}
+
+/// Round half to even, matching `jnp.round` / IEEE roundTiesToEven so the
+/// host-side finalization agrees bit-for-bit with the device executables.
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbor
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+/// Attention-Round probability model (paper Eq. 2): the probability that
+/// weight w maps to grid point q_k under perturbation α ~ N(0, τ²), i.e.
+/// the Gaussian mass of the rounding cell around q_k.
+pub fn attention_probability(w: f32, qk: f32, step: f32, tau: f32) -> f64 {
+    if tau <= 0.0 {
+        // degenerate: nearest-round indicator
+        return if (w - qk).abs() <= step / 2.0 { 1.0 } else { 0.0 };
+    }
+    let lo = (qk - step / 2.0 - w) as f64 / (tau as f64 * std::f64::consts::SQRT_2);
+    let hi = (qk + step / 2.0 - w) as f64 / (tau as f64 * std::f64::consts::SQRT_2);
+    0.5 * (erf(hi) - erf(lo))
+}
+
+/// Abramowitz–Stegun 7.1.26 erf approximation (|err| < 1.5e-7) — plenty
+/// for the probability model and its tests.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_ranges() {
+        let g = QGrid::signed(4, 0.1).unwrap();
+        assert_eq!((g.lo, g.hi), (-8.0, 7.0));
+        assert_eq!(g.levels(), 16);
+        let u = QGrid::unsigned(4, 0.1).unwrap();
+        assert_eq!((u.lo, u.hi), (0.0, 15.0));
+        assert!(QGrid::signed(1, 0.1).is_err());
+        assert!(QGrid::signed(4, 0.0).is_err());
+        assert!(QGrid::signed(4, f32::NAN).is_err());
+    }
+
+    #[test]
+    fn nearest_clips() {
+        let g = QGrid::signed(4, 0.5).unwrap();
+        assert_eq!(g.nearest(0.74), 0.5); // 1.48 -> 1
+        assert_eq!(g.nearest(100.0), 3.5); // clipped to hi=7
+        assert_eq!(g.nearest(-100.0), -4.0); // clipped to lo=-8
+    }
+
+    #[test]
+    fn half_even_matches_jnp() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), -0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.4), 1.0);
+        assert_eq!(round_half_even(-1.6), -2.0);
+    }
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn attention_probability_sums_to_one() {
+        // probabilities over a wide grid should sum to ~1
+        let (w, step, tau) = (0.13f32, 0.1f32, 0.25f32);
+        let mut total = 0.0;
+        for k in -50..=50 {
+            total += attention_probability(w, k as f32 * step, step, tau);
+        }
+        assert!((total - 1.0).abs() < 1e-6, "total {total}");
+    }
+
+    #[test]
+    fn attention_probability_peaks_at_nearest() {
+        let (w, step, tau) = (0.13f32, 0.1f32, 0.05f32);
+        let p_near = attention_probability(w, 0.1, step, tau);
+        let p_far = attention_probability(w, 0.3, step, tau);
+        assert!(p_near > p_far);
+        // tau -> 0 degenerates to nearest-round
+        assert_eq!(attention_probability(w, 0.1, step, 0.0), 1.0);
+        assert_eq!(attention_probability(w, 0.2, step, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Activation observers — per-layer activation quantization parameters
+//! for Tables 2, 3 and 5.
+//!
+//! Activations flow through `forward_actq` with a per-layer (scale,
+//! zero-point) pair; the observer picks them from captured calibration
+//! activations. Post-ReLU tensors are one-sided so an unsigned affine
+//! grid with a zero shift is the natural fit; the stem input (zero-mean
+//! images) gets a negative zero-point from the same affine rule.
+
+use crate::tensor::ops;
+use crate::util::error::Result;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ActQuantParams {
+    pub scale: f32,
+    /// Value-domain shift: x is quantized as x' = x − zero, so `zero` is
+    /// the left edge of the representable range.
+    pub zero: f32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObserverKind {
+    /// min/max of the calibration sample.
+    MinMax,
+    /// percentile clipping (99.9%) — robust to activation outliers.
+    Percentile,
+    /// grid search over clip range minimizing quantization MSE (OMSE-like).
+    Mse,
+}
+
+/// Compute activation quant params for a given bit width from samples.
+pub fn observe(xs: &[f32], bits: u8, kind: ObserverKind) -> Result<ActQuantParams> {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let (lo, hi) = match kind {
+        ObserverKind::MinMax => ops::min_max(xs),
+        ObserverKind::Percentile => {
+            (ops::percentile(xs, 0.1), ops::percentile(xs, 99.9))
+        }
+        ObserverKind::Mse => return mse_observe(xs, bits),
+    };
+    let lo = lo.min(0.0); // keep 0 representable (ReLU outputs, padding)
+    let range = (hi - lo).max(1e-6);
+    Ok(ActQuantParams {
+        scale: range / levels,
+        zero: lo,
+    })
+}
+
+fn quant_err(xs: &[f32], lo: f32, hi: f32, levels: f32) -> f64 {
+    let scale = ((hi - lo) / levels).max(1e-9);
+    let mut acc = 0.0f64;
+    for &x in xs {
+        let q = ((x - lo) / scale).round().clamp(0.0, levels);
+        let d = (x - (q * scale + lo)) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+fn mse_observe(xs: &[f32], bits: u8) -> Result<ActQuantParams> {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let (mut lo, hi) = ops::min_max(xs);
+    lo = lo.min(0.0);
+    let mut best = (f64::INFINITY, lo, hi);
+    // shrink the max clip progressively (Banner/Choukroun-style)
+    for i in 0..=20 {
+        let frac = 1.0 - 0.035 * i as f32;
+        let h = lo + (hi - lo) * frac;
+        let e = quant_err(xs, lo, h, levels);
+        if e < best.0 {
+            best = (e, lo, h);
+        }
+    }
+    let range = (best.2 - best.1).max(1e-6);
+    Ok(ActQuantParams {
+        scale: range / levels,
+        zero: best.1,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn relu_acts(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| rng.gaussian_f32(0.0, 1.0).max(0.0))
+            .collect()
+    }
+
+    #[test]
+    fn minmax_covers_range() {
+        let xs = relu_acts(1000, 1);
+        let p = observe(&xs, 8, ObserverKind::MinMax).unwrap();
+        assert_eq!(p.zero, 0.0);
+        let max = crate::tensor::ops::abs_max(&xs);
+        assert!((p.scale * 255.0 - max).abs() < 1e-4);
+    }
+
+    #[test]
+    fn mse_clips_tighter_than_minmax() {
+        let mut xs = relu_acts(4000, 2);
+        xs.push(40.0); // inject an outlier
+        let mm = observe(&xs, 4, ObserverKind::MinMax).unwrap();
+        let ms = observe(&xs, 4, ObserverKind::Mse).unwrap();
+        assert!(
+            ms.scale < mm.scale,
+            "mse {0} should clip below minmax {1}",
+            ms.scale,
+            mm.scale
+        );
+    }
+
+    #[test]
+    fn mse_beats_minmax_on_error() {
+        let mut xs = relu_acts(4000, 3);
+        xs.push(25.0);
+        let levels = 15.0;
+        let mm = observe(&xs, 4, ObserverKind::MinMax).unwrap();
+        let ms = observe(&xs, 4, ObserverKind::Mse).unwrap();
+        let e_mm = quant_err(&xs, mm.zero, mm.zero + mm.scale * levels, levels);
+        let e_ms = quant_err(&xs, ms.zero, ms.zero + ms.scale * levels, levels);
+        assert!(e_ms <= e_mm, "mse {e_ms} > minmax {e_mm}");
+    }
+
+    #[test]
+    fn signed_input_gets_negative_zero() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<f32> = (0..1000).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+        let p = observe(&xs, 8, ObserverKind::MinMax).unwrap();
+        assert!(p.zero < 0.0);
+    }
+
+    #[test]
+    fn observer_handles_constant_input() {
+        let xs = vec![0.0f32; 128];
+        let p = observe(&xs, 4, ObserverKind::Mse).unwrap();
+        assert!(p.scale > 0.0 && p.scale.is_finite());
+    }
+}

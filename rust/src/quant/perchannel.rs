@@ -1,0 +1,124 @@
+//! Per-output-channel weight quantization — the standard extension of the
+//! paper's per-tensor grids (§4.1 uses per-tensor; this module powers the
+//! ablation bench comparing the two).
+//!
+//! Weights are laid out (..., out_ch) row-major everywhere in this repo,
+//! so channel c's elements are the strided slice data[c], data[c + C],
+//! data[c + 2C], ... — one pass computes all channel scales.
+
+use crate::quant::rounding;
+use crate::quant::scale::mse_optimal_scale;
+use crate::quant::QGrid;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Per-channel grids for a (..., out_ch) weight tensor.
+#[derive(Debug, Clone)]
+pub struct PerChannelGrids {
+    pub grids: Vec<QGrid>,
+    pub out_ch: usize,
+}
+
+/// Gather channel c's elements into a contiguous buffer.
+fn channel_elems(w: &Tensor, c: usize, out_ch: usize) -> Vec<f32> {
+    w.data()[c..].iter().step_by(out_ch).copied().collect()
+}
+
+/// MSE-optimal per-channel scales.
+pub fn per_channel_scales(w: &Tensor, bits: u8) -> Result<PerChannelGrids> {
+    let out_ch = *w
+        .shape()
+        .last()
+        .ok_or_else(|| Error::shape("scalar weight tensor"))?;
+    let mut grids = Vec::with_capacity(out_ch);
+    for c in 0..out_ch {
+        let elems = channel_elems(w, c, out_ch);
+        grids.push(QGrid::signed(bits, mse_optimal_scale(&elems, bits)?)?);
+    }
+    Ok(PerChannelGrids { grids, out_ch })
+}
+
+/// Nearest-round with per-channel grids.
+pub fn nearest_per_channel(w: &Tensor, g: &PerChannelGrids) -> Result<Tensor> {
+    if w.shape().last() != Some(&g.out_ch) {
+        return Err(Error::shape(format!(
+            "weight {:?} does not end in {} channels",
+            w.shape(),
+            g.out_ch
+        )));
+    }
+    let mut out = vec![0.0f32; w.len()];
+    for (i, &v) in w.data().iter().enumerate() {
+        out[i] = g.grids[i % g.out_ch].nearest(v);
+    }
+    Tensor::new(w.shape().to_vec(), out)
+}
+
+/// Quantization MSE of per-tensor vs per-channel nearest rounding —
+/// returns (per_tensor_mse, per_channel_mse). Per-channel can never be
+/// worse when scales are per-channel MSE-optimal.
+pub fn compare_mse(w: &Tensor, bits: u8) -> Result<(f64, f64)> {
+    let gt = QGrid::signed(bits, mse_optimal_scale(w.data(), bits)?)?;
+    let qt = rounding::nearest(w.data(), &gt);
+    let et = crate::tensor::ops::mse(w.data(), &qt);
+    let gc = per_channel_scales(w, bits)?;
+    let qc = nearest_per_channel(w, &gc)?;
+    let ec = crate::tensor::ops::mse(w.data(), qc.data());
+    Ok((et, ec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Weight tensor whose channels have very different magnitudes —
+    /// the case per-channel quantization exists for.
+    fn heterogeneous_weights(out_ch: usize, rows: usize) -> Tensor {
+        let mut rng = Rng::new(3);
+        let mut data = vec![0.0f32; rows * out_ch];
+        for r in 0..rows {
+            for c in 0..out_ch {
+                let std = 0.01 * (1.0 + 10.0 * c as f32);
+                data[r * out_ch + c] = rng.gaussian_f32(0.0, std);
+            }
+        }
+        Tensor::new(vec![rows, out_ch], data).unwrap()
+    }
+
+    #[test]
+    fn channel_gather_is_strided() {
+        let w = Tensor::new(vec![2, 3], vec![0., 1., 2., 10., 11., 12.]).unwrap();
+        assert_eq!(channel_elems(&w, 1, 3), vec![1.0, 11.0]);
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_heterogeneous_channels() {
+        let w = heterogeneous_weights(8, 64);
+        let (et, ec) = compare_mse(&w, 4).unwrap();
+        assert!(
+            ec < et * 0.5,
+            "per-channel {ec} should be well below per-tensor {et}"
+        );
+    }
+
+    #[test]
+    fn per_channel_outputs_on_their_grids() {
+        let w = heterogeneous_weights(4, 16);
+        let g = per_channel_scales(&w, 3).unwrap();
+        let q = nearest_per_channel(&w, &g).unwrap();
+        for (i, &v) in q.data().iter().enumerate() {
+            assert!(g.grids[i % 4].contains(v), "{v} off channel grid");
+        }
+    }
+
+    #[test]
+    fn homogeneous_channels_roughly_tie() {
+        let mut rng = Rng::new(5);
+        let mut data = vec![0.0f32; 512];
+        rng.fill_gaussian(&mut data, 0.0, 0.1);
+        let w = Tensor::new(vec![64, 8], data).unwrap();
+        let (et, ec) = compare_mse(&w, 4).unwrap();
+        assert!(ec <= et * 1.05, "per-channel {ec} vs per-tensor {et}");
+    }
+}

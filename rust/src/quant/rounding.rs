@@ -1,0 +1,200 @@
+//! The static rounding baselines of Table 5: Nearest, Floor, Ceil,
+//! Stochastic — plus finalization for the two trained rounders
+//! (Attention Round's α and AdaRound's h(V)).
+//!
+//! All functions quantize-dequantize: output values live on the grid but
+//! stay in f32, which is what the forward executables consume (fake
+//! quantization, standard for PTQ evaluation).
+
+use super::{round_half_even, QGrid};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    Nearest,
+    Floor,
+    Ceil,
+    Stochastic,
+    /// Attention Round (paper §3.3): ⌊w/s + α⌉ with trained α.
+    Attention,
+    /// AdaRound: ⌊w/s⌋ + (h(V) ≥ ½) with trained V.
+    AdaRound,
+}
+
+impl Rounding {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rounding::Nearest => "nearest",
+            Rounding::Floor => "floor",
+            Rounding::Ceil => "ceil",
+            Rounding::Stochastic => "stochastic",
+            Rounding::Attention => "attention",
+            Rounding::AdaRound => "adaround",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rounding> {
+        Some(match s {
+            "nearest" => Rounding::Nearest,
+            "floor" => Rounding::Floor,
+            "ceil" => Rounding::Ceil,
+            "stochastic" => Rounding::Stochastic,
+            "attention" | "ours" => Rounding::Attention,
+            "adaround" => Rounding::AdaRound,
+            _ => return None,
+        })
+    }
+}
+
+/// Nearest-round a tensor onto the grid (the paper's baseline quantizer).
+pub fn nearest(w: &[f32], g: &QGrid) -> Vec<f32> {
+    w.iter().map(|&v| g.nearest(v)).collect()
+}
+
+pub fn floor(w: &[f32], g: &QGrid) -> Vec<f32> {
+    w.iter()
+        .map(|&v| g.scale * (v / g.scale).floor().clamp(g.lo, g.hi))
+        .collect()
+}
+
+pub fn ceil(w: &[f32], g: &QGrid) -> Vec<f32> {
+    w.iter()
+        .map(|&v| g.scale * (v / g.scale).ceil().clamp(g.lo, g.hi))
+        .collect()
+}
+
+/// Stochastic round: up with probability frac(w/s), down otherwise
+/// (unbiased: E[ŵ] = w inside the clip range).
+pub fn stochastic(w: &[f32], g: &QGrid, rng: &mut Rng) -> Vec<f32> {
+    w.iter()
+        .map(|&v| {
+            let q = v / g.scale;
+            let f = q.floor();
+            let p_up = q - f;
+            let r = if (rng.next_f64() as f32) < p_up { f + 1.0 } else { f };
+            g.scale * r.clamp(g.lo, g.hi)
+        })
+        .collect()
+}
+
+/// Finalize Attention Round: ŵ = s·clip(⌊w/s + α⌉, lo, hi) with the
+/// calibrated α (matches kernels/attention_round.py bit-for-bit: same
+/// round-half-even).
+pub fn attention_finalize(w: &[f32], alpha: &[f32], g: &QGrid) -> Vec<f32> {
+    debug_assert_eq!(w.len(), alpha.len());
+    w.iter()
+        .zip(alpha)
+        .map(|(&v, &a)| g.scale * round_half_even(v / g.scale + a).clamp(g.lo, g.hi))
+        .collect()
+}
+
+/// AdaRound's rectified sigmoid h(V) = clip(sigmoid(V)·1.2 − 0.1, 0, 1).
+pub fn adaround_h(v: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-v).exp());
+    (s * 1.2 - 0.1).clamp(0.0, 1.0)
+}
+
+/// Finalize AdaRound: ŵ = s·clip(⌊w/s⌋ + (h(V) ≥ ½), lo, hi).
+pub fn adaround_finalize(w: &[f32], v: &[f32], g: &QGrid) -> Vec<f32> {
+    debug_assert_eq!(w.len(), v.len());
+    w.iter()
+        .zip(v)
+        .map(|(&wv, &vv)| {
+            let up = if adaround_h(vv) >= 0.5 { 1.0 } else { 0.0 };
+            g.scale * ((wv / g.scale).floor() + up).clamp(g.lo, g.hi)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> QGrid {
+        QGrid::signed(4, 0.5).unwrap()
+    }
+
+    #[test]
+    fn floor_le_nearest_le_ceil() {
+        let w: Vec<f32> = (-20..20).map(|i| i as f32 * 0.13).collect();
+        let g = grid();
+        let f = floor(&w, &g);
+        let n = nearest(&w, &g);
+        let c = ceil(&w, &g);
+        for i in 0..w.len() {
+            assert!(f[i] <= n[i] + 1e-6, "floor > nearest at {i}");
+            assert!(n[i] <= c[i] + 1e-6, "nearest > ceil at {i}");
+        }
+    }
+
+    #[test]
+    fn all_outputs_on_grid() {
+        let w: Vec<f32> = (-30..30).map(|i| i as f32 * 0.21).collect();
+        let g = grid();
+        let mut rng = Rng::new(0);
+        for out in [
+            nearest(&w, &g),
+            floor(&w, &g),
+            ceil(&w, &g),
+            stochastic(&w, &g, &mut rng),
+            attention_finalize(&w, &vec![0.2; w.len()], &g),
+            adaround_finalize(&w, &vec![-3.0; w.len()], &g),
+        ] {
+            for v in out {
+                assert!(g.contains(v), "{v} not on grid");
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_is_unbiased_inside_range() {
+        let g = QGrid::signed(8, 0.1).unwrap();
+        let w = [0.537f32];
+        let mut rng = Rng::new(9);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            sum += stochastic(&w, &g, &mut rng)[0] as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.537).abs() < 0.002, "mean {mean}");
+    }
+
+    #[test]
+    fn attention_zero_alpha_is_nearest() {
+        let w: Vec<f32> = (-10..10).map(|i| i as f32 * 0.37).collect();
+        let g = grid();
+        assert_eq!(attention_finalize(&w, &vec![0.0; w.len()], &g), nearest(&w, &g));
+    }
+
+    #[test]
+    fn attention_large_alpha_shifts_cell() {
+        let g = grid();
+        // w=0.2 -> w/s=0.4 -> nearest 0; alpha=1 pushes it to cell 1
+        assert_eq!(attention_finalize(&[0.2], &[1.0], &g)[0], 0.5);
+        assert_eq!(attention_finalize(&[0.2], &[-1.0], &g)[0], -0.5);
+    }
+
+    #[test]
+    fn adaround_h_rectified() {
+        assert_eq!(adaround_h(-10.0), 0.0);
+        assert_eq!(adaround_h(10.0), 1.0);
+        assert!((adaround_h(0.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_names() {
+        for r in [
+            Rounding::Nearest,
+            Rounding::Floor,
+            Rounding::Ceil,
+            Rounding::Stochastic,
+            Rounding::Attention,
+            Rounding::AdaRound,
+        ] {
+            assert_eq!(Rounding::parse(r.name()), Some(r));
+        }
+        assert_eq!(Rounding::parse("ours"), Some(Rounding::Attention));
+        assert_eq!(Rounding::parse("bogus"), None);
+    }
+}

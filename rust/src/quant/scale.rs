@@ -1,0 +1,105 @@
+//! MSE-optimal scale search (paper §4.1: "the optimal quantification
+//! interval s was determined by minimization of ‖W − Ŵ‖² under
+//! round-to-nearest").
+//!
+//! Golden-section-free grid refinement: sweep a coarse grid of candidate
+//! scales around max|w| / hi, then refine twice around the winner. The
+//! MSE(s) landscape is piecewise-smooth with many local minima, so a
+//! sweep beats gradient methods and is trivially robust.
+
+use super::QGrid;
+use crate::tensor::ops;
+use crate::util::error::Result;
+
+/// MSE between w and nearest-round(w) on a signed grid with scale s.
+fn quant_mse(w: &[f32], bits: u8, s: f32) -> f64 {
+    let g = QGrid::signed(bits, s).expect("valid grid");
+    let mut acc = 0.0f64;
+    for &v in w {
+        let d = (v - g.nearest(v)) as f64;
+        acc += d * d;
+    }
+    acc / w.len() as f64
+}
+
+/// Find the MSE-optimal per-tensor scale for `bits`-bit signed weights.
+pub fn mse_optimal_scale(w: &[f32], bits: u8) -> Result<f32> {
+    let amax = ops::abs_max(w).max(1e-8);
+    let half = (1i64 << (bits - 1)) as f32;
+    // candidate range: [amax/half * 0.3, amax/half * 1.2]
+    let base = amax / half;
+    let mut lo = base * 0.3;
+    let mut hi = base * 1.2;
+    let mut best_s = base;
+    let mut best_e = f64::INFINITY;
+    for _round in 0..3 {
+        let steps = 24;
+        for i in 0..=steps {
+            let s = lo + (hi - lo) * i as f32 / steps as f32;
+            if s <= 0.0 {
+                continue;
+            }
+            let e = quant_mse(w, bits, s);
+            if e < best_e {
+                best_e = e;
+                best_s = s;
+            }
+        }
+        let width = (hi - lo) / steps as f32;
+        lo = (best_s - width).max(base * 0.05);
+        hi = best_s + width;
+    }
+    Ok(best_s)
+}
+
+/// Simple max-abs scale (the fallback / ablation reference).
+pub fn absmax_scale(w: &[f32], bits: u8) -> f32 {
+    let half = (1i64 << (bits - 1)) as f32;
+    ops::abs_max(w).max(1e-8) / (half - 1.0).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian_weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.gaussian_f32(0.0, 0.05)).collect()
+    }
+
+    #[test]
+    fn mse_scale_beats_absmax() {
+        let w = gaussian_weights(4096, 1);
+        for bits in [3u8, 4, 8] {
+            let s_opt = mse_optimal_scale(&w, bits).unwrap();
+            let s_max = absmax_scale(&w, bits);
+            let e_opt = quant_mse(&w, bits, s_opt);
+            let e_max = quant_mse(&w, bits, s_max);
+            assert!(
+                e_opt <= e_max * 1.0001,
+                "bits={bits}: opt {e_opt} > absmax {e_max}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_positive_and_finite() {
+        let w = gaussian_weights(512, 2);
+        let s = mse_optimal_scale(&w, 4).unwrap();
+        assert!(s.is_finite() && s > 0.0);
+        // degenerate all-zero weights still give a usable scale
+        let z = vec![0.0f32; 64];
+        let s0 = mse_optimal_scale(&z, 4).unwrap();
+        assert!(s0.is_finite() && s0 > 0.0);
+    }
+
+    #[test]
+    fn more_bits_lower_error() {
+        let w = gaussian_weights(2048, 3);
+        let e3 = quant_mse(&w, 3, mse_optimal_scale(&w, 3).unwrap());
+        let e4 = quant_mse(&w, 4, mse_optimal_scale(&w, 4).unwrap());
+        let e8 = quant_mse(&w, 8, mse_optimal_scale(&w, 8).unwrap());
+        assert!(e3 > e4 && e4 > e8, "e3={e3} e4={e4} e8={e8}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Result rendering: markdown tables (the paper's Tables 1-5), ASCII bar
+//! charts (Figures 2-5), and CSV export for downstream plotting.
+
+pub mod svg;
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned markdown table builder.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}\n", self.title);
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                let _ = write!(line, " {:<w$} |", cells[i], w = widths[i]);
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<w$}|", "", w = w + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart — renders the per-layer bit allocations of
+/// Figures 3-5 and the τ-sweep of Figure 2 in the terminal.
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64], max_width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let vmax = values.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("### {title}\n\n");
+    for (l, &v) in labels.iter().zip(values) {
+        let w = ((v / vmax) * max_width as f64).round().max(0.0) as usize;
+        let _ = writeln!(out, "{l:<lw$} | {:<max_width$} {v:.3}", "#".repeat(w));
+    }
+    out
+}
+
+/// Format an accuracy fraction the way the paper prints it (percent, 2dp).
+pub fn pct(acc: f64) -> String {
+    format!("{:.2}", acc * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["Method", "Acc"]);
+        t.row(vec!["Ours".into(), "70.72".into()]);
+        t.row(vec!["AdaRound".into(), "68.71".into()]);
+        let s = t.render();
+        assert!(s.contains("### T"));
+        assert!(s.contains("| Ours     | 70.72 |"));
+        assert!(s.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        Table::new("", &["a", "b"]).row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn chart_scales_to_max() {
+        let s = bar_chart(
+            "c",
+            &["l1".into(), "l2".into()],
+            &[1.0, 2.0],
+            10,
+        );
+        assert!(s.contains("##########"));
+        assert!(s.contains("#####"));
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.7072), "70.72");
+        assert_eq!(pct(1.0), "100.00");
+    }
+}

@@ -1,0 +1,189 @@
+//! Minimal SVG chart emitter — renders Figure 2 (line series) and
+//! Figures 3-5 (per-layer bar charts) as standalone .svg files alongside
+//! the markdown/CSV reports.
+
+use std::fmt::Write as _;
+
+const W: f64 = 860.0;
+const H: f64 = 420.0;
+const ML: f64 = 70.0; // margins
+const MR: f64 = 20.0;
+const MT: f64 = 40.0;
+const MB: f64 = 110.0;
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+fn header(title: &str) -> String {
+    format!(
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}">
+<style>text{{font-family:monospace;font-size:12px}}.t{{font-size:15px;font-weight:bold}}</style>
+<rect width="{W}" height="{H}" fill="white"/>
+<text class="t" x="{}" y="24" text-anchor="middle">{}</text>
+"#,
+        W / 2.0,
+        esc(title)
+    )
+}
+
+/// Vertical bar chart (Figures 3-5: per-layer bit widths).
+pub fn bar_chart_svg(title: &str, labels: &[String], values: &[f64]) -> String {
+    assert_eq!(labels.len(), values.len());
+    let n = values.len().max(1);
+    let vmax = values.iter().cloned().fold(1e-12, f64::max);
+    let plot_w = W - ML - MR;
+    let plot_h = H - MT - MB;
+    let bw = (plot_w / n as f64) * 0.8;
+    let mut s = header(title);
+    // y axis grid
+    for i in 0..=4 {
+        let v = vmax * i as f64 / 4.0;
+        let y = MT + plot_h * (1.0 - i as f64 / 4.0);
+        let _ = writeln!(
+            s,
+            r##"<line x1="{ML}" y1="{y:.1}" x2="{:.1}" y2="{y:.1}" stroke="#ddd"/><text x="{:.1}" y="{:.1}" text-anchor="end">{v:.1}</text>"##,
+            W - MR,
+            ML - 6.0,
+            y + 4.0
+        );
+    }
+    for (i, (&v, label)) in values.iter().zip(labels).enumerate() {
+        let x = ML + plot_w * (i as f64 + 0.1) / n as f64;
+        let h = plot_h * v / vmax;
+        let y = MT + plot_h - h;
+        let _ = writeln!(
+            s,
+            r##"<rect x="{x:.1}" y="{y:.1}" width="{bw:.1}" height="{h:.1}" fill="#4878cf"/>"##
+        );
+        let lx = x + bw / 2.0;
+        let ly = MT + plot_h + 8.0;
+        let _ = writeln!(
+            s,
+            r#"<text x="{lx:.1}" y="{ly:.1}" transform="rotate(60 {lx:.1} {ly:.1})" text-anchor="start">{}</text>"#,
+            esc(label)
+        );
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+/// Multi-series line chart (Figure 2: τ sweeps).
+pub fn line_chart_svg(
+    title: &str,
+    xs: &[f64],
+    series: &[(String, Vec<f64>)],
+) -> String {
+    let plot_w = W - ML - MR;
+    let plot_h = H - MT - MB;
+    let xmin = xs.iter().cloned().fold(f64::MAX, f64::min);
+    let xmax = xs.iter().cloned().fold(f64::MIN, f64::max).max(xmin + 1e-9);
+    let ymin = series
+        .iter()
+        .flat_map(|(_, v)| v.iter().cloned())
+        .fold(f64::MAX, f64::min);
+    let ymax = series
+        .iter()
+        .flat_map(|(_, v)| v.iter().cloned())
+        .fold(f64::MIN, f64::max)
+        .max(ymin + 1e-9);
+    // pad the y range 10% so flat curves stay visible
+    let pad = (ymax - ymin) * 0.1 + 1e-9;
+    let (ymin, ymax) = (ymin - pad, ymax + pad);
+    let colors = ["#4878cf", "#d65f5f", "#59a14f", "#b07aa1", "#e49444"];
+
+    let px = |x: f64| ML + plot_w * (x - xmin) / (xmax - xmin);
+    let py = |y: f64| MT + plot_h * (1.0 - (y - ymin) / (ymax - ymin));
+
+    let mut s = header(title);
+    for i in 0..=4 {
+        let y = ymin + (ymax - ymin) * i as f64 / 4.0;
+        let _ = writeln!(
+            s,
+            r##"<line x1="{ML}" y1="{:.1}" x2="{:.1}" y2="{:.1}" stroke="#ddd"/><text x="{:.1}" y="{:.1}" text-anchor="end">{y:.1}</text>"##,
+            py(y),
+            W - MR,
+            py(y),
+            ML - 6.0,
+            py(y) + 4.0
+        );
+    }
+    for &x in xs {
+        let _ = writeln!(
+            s,
+            r#"<text x="{:.1}" y="{:.1}" text-anchor="middle">{x:.2}</text>"#,
+            px(x),
+            MT + plot_h + 18.0
+        );
+    }
+    for (si, (name, ys)) in series.iter().enumerate() {
+        let color = colors[si % colors.len()];
+        let pts: Vec<String> = xs
+            .iter()
+            .zip(ys)
+            .map(|(&x, &y)| format!("{:.1},{:.1}", px(x), py(y)))
+            .collect();
+        let _ = writeln!(
+            s,
+            r#"<polyline points="{}" fill="none" stroke="{color}" stroke-width="2"/>"#,
+            pts.join(" ")
+        );
+        for (&x, &y) in xs.iter().zip(ys) {
+            let _ = writeln!(
+                s,
+                r#"<circle cx="{:.1}" cy="{:.1}" r="3" fill="{color}"/>"#,
+                px(x),
+                py(y)
+            );
+        }
+        let ly = MT + plot_h + 40.0 + 16.0 * si as f64;
+        let _ = writeln!(
+            s,
+            r#"<rect x="{ML}" y="{:.1}" width="12" height="12" fill="{color}"/><text x="{:.1}" y="{:.1}">{}</text>"#,
+            ly - 10.0,
+            ML + 18.0,
+            ly,
+            esc(name)
+        );
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_chart_is_valid_svgish() {
+        let svg = bar_chart_svg(
+            "bits",
+            &["a".into(), "b<c".into()],
+            &[3.0, 8.0],
+        );
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert_eq!(svg.matches("<rect").count(), 3); // bg + 2 bars
+        assert!(svg.contains("b&lt;c")); // escaping
+    }
+
+    #[test]
+    fn line_chart_has_all_series() {
+        let svg = line_chart_svg(
+            "τ sweep",
+            &[0.0, 0.5, 1.0],
+            &[
+                ("W/32".into(), vec![90.0, 91.0, 90.5]),
+                ("W/A".into(), vec![88.0, 89.0, 88.5]),
+            ],
+        );
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        assert_eq!(svg.matches("<circle").count(), 6);
+    }
+
+    #[test]
+    fn flat_series_does_not_divide_by_zero() {
+        let svg = line_chart_svg("flat", &[0.0, 1.0], &[("s".into(), vec![5.0, 5.0])]);
+        assert!(!svg.contains("NaN"));
+    }
+}

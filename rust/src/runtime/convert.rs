@@ -1,0 +1,75 @@
+//! Literal ⇄ Tensor conversion.
+
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Convert an f32 (or s32 — converted) literal to a host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| Error::runtime(format!("literal shape: {e}")))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = match shape.ty() {
+        xla::ElementType::F32 => lit
+            .to_vec::<f32>()
+            .map_err(|e| Error::runtime(format!("literal to_vec: {e}")))?,
+        xla::ElementType::S32 => lit
+            .to_vec::<i32>()
+            .map_err(|e| Error::runtime(format!("literal to_vec: {e}")))?
+            .into_iter()
+            .map(|v| v as f32)
+            .collect(),
+        other => {
+            return Err(Error::runtime(format!(
+                "unsupported literal element type {other:?}"
+            )))
+        }
+    };
+    Tensor::new(dims, data)
+}
+
+pub fn literals_to_tensors(lits: &[xla::Literal]) -> Result<Vec<Tensor>> {
+    lits.iter().map(literal_to_tensor).collect()
+}
+
+/// Read a scalar f32 out of a literal (loss values etc.).
+pub fn literal_scalar(lit: &xla::Literal) -> Result<f32> {
+    let t = literal_to_tensor(lit)?;
+    if t.len() != 1 {
+        return Err(Error::shape(format!(
+            "expected scalar literal, got shape {:?}",
+            t.shape()
+        )));
+    }
+    Ok(t.data()[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let lit = xla::Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0])
+            .reshape(&[2, 3])
+            .unwrap();
+        let t = literal_to_tensor(&lit).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.data()[4], 5.0);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = xla::Literal::scalar(7.5f32);
+        assert_eq!(literal_scalar(&lit).unwrap(), 7.5);
+        let vec = xla::Literal::vec1(&[1.0f32, 2.0]);
+        assert!(literal_scalar(&vec).is_err());
+    }
+
+    #[test]
+    fn s32_converts() {
+        let lit = xla::Literal::vec1(&[1i32, -2, 3]);
+        let t = literal_to_tensor(&lit).unwrap();
+        assert_eq!(t.data(), &[1.0, -2.0, 3.0]);
+    }
+}

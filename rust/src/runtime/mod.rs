@@ -1,0 +1,196 @@
+//! PJRT runtime — loads AOT artifacts and executes them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** →
+//! `HloModuleProto::from_text_file` → `compile` → `execute_b`. Text is the
+//! interchange format because xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids.
+//!
+//! Performance notes (EXPERIMENTS.md §Perf quantifies these):
+//! * Executables are compiled once and cached by artifact path.
+//! * All execution goes through `execute_b` with device-resident
+//!   [`xla::PjRtBuffer`]s: constant operands (weights, cached activations)
+//!   are uploaded once per pipeline phase and reused across thousands of
+//!   steps, instead of re-marshalling literals per call.
+//! * Multi-output executables return a single tuple buffer on this PJRT
+//!   build; `run`/`run_b` decompose it on the host. The calibration loop
+//!   amortizes that hop with the K-step `calib_scan` executables (see
+//!   python/compile/quant.py).
+
+pub mod convert;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Mutex;
+
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::timer::Metrics;
+
+pub use convert::{literal_to_tensor, literals_to_tensors};
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute on device-resident buffers; decompose the output tuple
+    /// into literals (host).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| Error::runtime(format!("{}: {e}", self.name)))?;
+        let first = outs
+            .into_iter()
+            .next()
+            .and_then(|replica| replica.into_iter().next())
+            .ok_or_else(|| Error::runtime(format!("{}: no outputs", self.name)))?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("{}: {e}", self.name)))?;
+        decompose(lit, &self.name)
+    }
+
+    /// Execute but keep the raw output buffer on device (for chains where
+    /// the next executable consumes the whole tuple — not used by the
+    /// current pipeline, kept for single-output executables).
+    pub fn run_b_raw(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| Error::runtime(format!("{}: {e}", self.name)))?;
+        outs.into_iter()
+            .next()
+            .and_then(|replica| replica.into_iter().next())
+            .ok_or_else(|| Error::runtime(format!("{}: no outputs", self.name)))
+    }
+}
+
+fn decompose(lit: xla::Literal, name: &str) -> Result<Vec<xla::Literal>> {
+    // aot.py lowers everything with return_tuple=True, so the root is
+    // always a tuple — even single outputs arrive as a 1-tuple.
+    lit.to_tuple()
+        .map_err(|e| Error::runtime(format!("{name}: tuple decompose: {e}")))
+}
+
+/// The PJRT client plus the executable cache. One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    cache: Mutex<HashMap<String, Rc<Executable>>>,
+    pub metrics: Metrics,
+}
+
+impl Runtime {
+    pub fn new(artifacts_root: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(Runtime {
+            client,
+            root: artifacts_root.into(),
+            cache: Mutex::new(HashMap::new()),
+            metrics: Metrics::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest-relative path (cached).
+    pub fn load(&self, rel: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(rel) {
+            return Ok(Rc::clone(e));
+        }
+        let path = self.root.join(rel);
+        let exe = self.metrics.time("runtime.compile", || -> Result<_> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::config("non-utf8 artifact path"))?,
+            )
+            .map_err(|e| Error::runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client
+                .compile(&comp)
+                .map_err(|e| Error::runtime(format!("compile {}: {e}", path.display())))
+        })?;
+        self.metrics.incr("runtime.compiled_executables", 1);
+        let exe = Rc::new(Executable {
+            exe,
+            name: rel.to_string(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(rel.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    // ---- host -> device transfers ---------------------------------------
+
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.metrics.incr("runtime.uploads", 1);
+        self.client
+            .buffer_from_host_buffer(t.data(), t.shape(), None)
+            .map_err(|e| Error::runtime(format!("upload: {e}")))
+    }
+
+    pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .map_err(|e| Error::runtime(format!("upload scalar: {e}")))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| Error::runtime(format!("upload i32: {e}")))
+    }
+
+    /// Upload a whole weight set once; reuse across every execute_b call.
+    pub fn upload_all(&self, ts: &[Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
+        ts.iter().map(|t| self.upload(t)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Runtime tests that don't need artifacts (integration tests with
+    //! real artifacts live in rust/tests/).
+    use super::*;
+
+    #[test]
+    fn client_boots_and_uploads() {
+        let rt = Runtime::new("/nonexistent-artifacts").unwrap();
+        assert_eq!(rt.platform().to_lowercase().contains("cpu"), true);
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let buf = rt.upload(&t).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::new("/nonexistent-artifacts").unwrap();
+        assert!(rt.load("hlo/nope.hlo.txt").is_err());
+        assert_eq!(rt.cached_count(), 0);
+    }
+
+    #[test]
+    fn scalar_upload_roundtrip() {
+        let rt = Runtime::new(".").unwrap();
+        let buf = rt.upload_scalar(3.25).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        let t = literal_to_tensor(&lit).unwrap();
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.data(), &[3.25]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Dense f32 tensor substrate.
+//!
+//! Deliberately minimal: contiguous row-major storage, shape bookkeeping,
+//! the reductions and elementwise ops the quantizer and observers need.
+//! Heavy math goes through PJRT (Layer 2) or `linalg`; this type is the
+//! host-side currency between npy files, literals, and the quantizer.
+
+pub mod ops;
+
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![v; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Tensor {
+            shape: vec![data.len()],
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::shape(format!(
+                "cannot reshape {} elements to {:?}",
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Rows of a 2-D view (n_rows, row_len) without copying.
+    pub fn rows_2d(&self) -> Result<(usize, usize)> {
+        match self.shape.len() {
+            2 => Ok((self.shape[0], self.shape[1])),
+            _ => Err(Error::shape(format!("expected 2-D, got {:?}", self.shape))),
+        }
+    }
+
+    /// Slice of samples [start, start+count) along axis 0 (copying).
+    pub fn slice_axis0(&self, start: usize, count: usize) -> Result<Tensor> {
+        if self.shape.is_empty() {
+            return Err(Error::shape("cannot slice a scalar"));
+        }
+        let n0 = self.shape[0];
+        if start + count > n0 {
+            return Err(Error::shape(format!(
+                "slice [{start}, {}) out of axis-0 bound {n0}",
+                start + count
+            )));
+        }
+        let stride: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = count;
+        Ok(Tensor {
+            shape,
+            data: self.data[start * stride..(start + count) * stride].to_vec(),
+        })
+    }
+
+    /// Gather samples by index along axis 0 (copying) — batch assembly.
+    pub fn gather_axis0(&self, idx: &[usize]) -> Result<Tensor> {
+        if self.shape.is_empty() {
+            return Err(Error::shape("cannot gather a scalar"));
+        }
+        let n0 = self.shape[0];
+        let stride: usize = self.shape[1..].iter().product();
+        let mut data = Vec::with_capacity(idx.len() * stride);
+        for &i in idx {
+            if i >= n0 {
+                return Err(Error::shape(format!("index {i} out of bound {n0}")));
+            }
+            data.extend_from_slice(&self.data[i * stride..(i + 1) * stride]);
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = idx.len();
+        Ok(Tensor { shape, data })
+    }
+
+    /// Write a slice of samples into [start, ...) along axis 0.
+    pub fn write_axis0(&mut self, start: usize, src: &Tensor) -> Result<()> {
+        if self.shape[1..] != src.shape[1..] {
+            return Err(Error::shape(format!(
+                "axis-0 write shape mismatch: {:?} vs {:?}",
+                self.shape, src.shape
+            )));
+        }
+        let stride: usize = self.shape[1..].iter().product();
+        let count = src.shape[0];
+        if start + count > self.shape[0] {
+            return Err(Error::shape("axis-0 write out of bounds"));
+        }
+        self.data[start * stride..(start + count) * stride]
+            .copy_from_slice(&src.data);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_len() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn slice_and_gather() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let s = t.slice_axis0(1, 2).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
+        let g = t.gather_axis0(&[3, 0]).unwrap();
+        assert_eq!(g.data(), &[6.0, 7.0, 0.0, 1.0]);
+        assert!(t.gather_axis0(&[4]).is_err());
+    }
+
+    #[test]
+    fn write_axis0_roundtrip() {
+        let mut t = Tensor::zeros(vec![4, 3]);
+        let src = Tensor::new(vec![2, 3], vec![1.0; 6]).unwrap();
+        t.write_axis0(2, &src).unwrap();
+        assert_eq!(&t.data()[6..], &[1.0; 6]);
+        assert_eq!(&t.data()[..6], &[0.0; 6]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        let t = t.reshape(vec![2, 2]).unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert!(t.clone().reshape(vec![3, 2]).is_err());
+    }
+}

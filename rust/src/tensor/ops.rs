@@ -1,0 +1,115 @@
+//! Elementwise ops and reductions over [`Tensor`] / raw f32 slices.
+//!
+//! These run on the host in hot-ish paths (scale search iterates over the
+//! full weight tensor dozens of times), so the slice variants avoid
+//! allocation and are written to auto-vectorize.
+
+use super::Tensor;
+
+/// max |x|
+pub fn abs_max(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()))
+}
+
+pub fn min_max(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in xs {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    (lo, hi)
+}
+
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Mean squared error between two equal-length slices (f64 accumulator —
+/// the MSE scale search compares values that differ in the 6th digit).
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = (x - y) as f64;
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+/// Sum of squared values (f64 accumulator).
+pub fn sum_sq(xs: &[f32]) -> f64 {
+    xs.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-1 accuracy given flattened logits (n, classes) and labels.
+pub fn top1_accuracy(logits: &Tensor, labels: &[i32]) -> f64 {
+    let (n, c) = (logits.shape()[0], logits.shape()[1]);
+    assert_eq!(n, labels.len());
+    let mut correct = 0usize;
+    for i in 0..n {
+        if argmax(&logits.data()[i * c..(i + 1) * c]) as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Percentile (0..=100) by copy-and-select; used by observers.
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abs_max_and_minmax() {
+        let xs = [-3.0, 1.0, 2.5];
+        assert_eq!(abs_max(&xs), 3.0);
+        assert_eq!(min_max(&xs), (-3.0, 2.5));
+    }
+
+    #[test]
+    fn mse_basics() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((mse(&[0.0, 0.0], &[1.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn accuracy() {
+        let logits = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 1.0, 0.0, 0.0]).unwrap();
+        assert_eq!(top1_accuracy(&logits, &[1, 0]), 1.0);
+        assert_eq!(top1_accuracy(&logits, &[1, 2]), 0.5);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+}

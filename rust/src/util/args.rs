@@ -1,0 +1,184 @@
+//! CLI argument parser substrate (clap is not offline-available).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generated usage text — exactly what the `repro` binary
+//! and the bench harness need.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+pub struct Parser {
+    pub program: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Parser {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Parser {
+            program,
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>,
+               help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let d = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse argv (excluding the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        // seed defaults
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                out.options.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| Error::config(format!("unknown option --{name}\n\n{}", self.usage())))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(Error::config(format!("--{name} takes no value")));
+                    }
+                    out.flags.push(name);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::config(format!("--{name} needs a value")))?
+                        }
+                    };
+                    out.options.insert(name, value);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Result<&str> {
+        self.options
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::config(format!("missing --{name}")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)?
+            .parse()
+            .map_err(|_| Error::config(format!("--{name} must be an integer")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)?
+            .parse()
+            .map_err(|_| Error::config(format!("--{name} must be a number")))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> Parser {
+        Parser::new("test", "a test")
+            .opt("iters", Some("200"), "iterations")
+            .opt("model", None, "model name")
+            .flag("verbose", "chatty")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parser().parse(&argv(&["--model", "resnet18t"])).unwrap();
+        assert_eq!(a.get_usize("iters").unwrap(), 200);
+        assert_eq!(a.get("model").unwrap(), "resnet18t");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = parser()
+            .parse(&argv(&["--iters=500", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("iters").unwrap(), 500);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(parser().parse(&argv(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parser().parse(&argv(&["--model"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(parser().parse(&argv(&["--verbose=yes"])).is_err());
+    }
+}

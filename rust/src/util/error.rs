@@ -1,0 +1,89 @@
+//! Crate-wide error type.
+//!
+//! One enum covering every failure domain (I/O, parsing, runtime/PJRT,
+//! shape mismatches, config errors) so the coordinator's pipeline code can
+//! use `?` throughout and still report precise causes at the CLI boundary.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub enum Error {
+    Io(std::io::Error),
+    /// Malformed JSON, npy, or manifest content.
+    Parse(String),
+    /// PJRT / XLA failures (compile, execute, transfer).
+    Runtime(String),
+    /// Tensor shape or argument-arity mismatches.
+    Shape(String),
+    /// Bad user configuration or CLI usage.
+    Config(String),
+    /// An experiment-level invariant was violated.
+    Invariant(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Invariant(m) => write!(f, "invariant violated: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Shorthand constructors used across the crate.
+impl Error {
+    pub fn parse(m: impl Into<String>) -> Self {
+        Error::Parse(m.into())
+    }
+    pub fn runtime(m: impl Into<String>) -> Self {
+        Error::Runtime(m.into())
+    }
+    pub fn shape(m: impl Into<String>) -> Self {
+        Error::Shape(m.into())
+    }
+    pub fn config(m: impl Into<String>) -> Self {
+        Error::Config(m.into())
+    }
+    pub fn invariant(m: impl Into<String>) -> Self {
+        Error::Invariant(m.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_domain() {
+        assert!(Error::parse("x").to_string().contains("parse"));
+        assert!(Error::runtime("x").to_string().contains("runtime"));
+        assert!(Error::shape("x").to_string().contains("shape"));
+        assert!(Error::config("x").to_string().contains("config"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,16 @@
+//! General-purpose substrates.
+//!
+//! The offline crate registry only carries the `xla` crate's dependency
+//! closure, so the conveniences a production service would pull from
+//! crates.io — JSON, CLI parsing, RNG, structured logging, a thread pool,
+//! a property-test driver — are implemented here as small, fully-tested
+//! modules.
+
+pub mod args;
+pub mod error;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

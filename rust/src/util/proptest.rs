@@ -1,0 +1,120 @@
+//! Property-test driver substrate (the `proptest` crate is not
+//! offline-available).
+//!
+//! `check` runs a property over N randomly generated cases; on failure it
+//! performs greedy input shrinking via the caller-provided `shrink`
+//! closure and reports the minimal failing case with its seed, so a CI
+//! failure is reproducible by construction.
+
+use crate::util::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            seed: 0x5EED,
+            max_shrink_iters: 200,
+        }
+    }
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics with the minimal
+/// failing input (via `shrink` candidates) on property violation.
+pub fn check<T: std::fmt::Debug + Clone>(
+    cfg: Config,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut cur = input;
+            let mut cur_msg = msg;
+            let mut iters = 0;
+            'outer: while iters < cfg.max_shrink_iters {
+                for cand in shrink(&cur) {
+                    iters += 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                    if iters >= cfg.max_shrink_iters {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={:#x}, case {}): {}\nminimal input: {:?}",
+                cfg.seed, case, cur_msg, cur
+            );
+        }
+    }
+}
+
+/// Common shrinker: halve a vector (front half, back half, drop one elem).
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        out.push(v[1..].to_vec());
+        out.push(v[..v.len() - 1].to_vec());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            Config::default(),
+            |r| r.below(100) as i64,
+            |_| vec![],
+            |x| {
+                if *x >= 0 {
+                    Ok(())
+                } else {
+                    Err("negative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            Config { cases: 50, ..Default::default() },
+            |r| r.below(100) as i64,
+            |x| if *x > 0 { vec![x / 2] } else { vec![] },
+            |x| {
+                if *x < 90 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_vec_candidates() {
+        let cands = shrink_vec(&[1, 2, 3, 4]);
+        assert!(cands.contains(&vec![1, 2]));
+        assert!(cands.contains(&vec![2, 3, 4]));
+    }
+}

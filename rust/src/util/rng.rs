@@ -1,0 +1,174 @@
+//! Deterministic RNG substrate: xorshift64* with Box–Muller Gaussians.
+//!
+//! `rand`/`rand_distr` are not in the offline registry; this generator is
+//! small, fast, and — importantly — specified well enough to port (the
+//! Python dataset generator and this one are cross-checked by recorded
+//! moments in tests). Used for Stochastic-Round coin flips, batch
+//! sampling, and the α initialization (paper §3.3:
+//! α ~ N(0, (τ/s)²)).
+
+/// xorshift64* (Vigna 2016) — 64-bit state, period 2^64 − 1.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second Box–Muller deviate.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero state; splitmix the seed so small seeds
+        // don't produce correlated low bits.
+        let mut s = seed.wrapping_add(0x9E3779B97F4A7C15);
+        s ^= s >> 30;
+        s = s.wrapping_mul(0xBF58476D1CE4E5B9);
+        s ^= s >> 27;
+        s = s.wrapping_mul(0x94D049BB133111EB);
+        s ^= s >> 31;
+        Rng {
+            state: if s == 0 { 0xDEADBEEFCAFEF00D } else { s },
+            spare: None,
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high-quality bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Rejection-free for our n << 2^64 use (bias < 2^-40 for n < 2^24).
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    pub fn gaussian_f32(&mut self, mean: f32, std: f32) -> f32 {
+        (self.gaussian() as f32) * std + mean
+    }
+
+    /// Fill a slice with N(mean, std²) samples.
+    pub fn fill_gaussian(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for v in out.iter_mut() {
+            *v = self.gaussian_f32(mean, std);
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (k << n; Floyd's algorithm
+    /// would be fancier — simple retry is fine at our sizes).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k == n {
+            return (0..n).collect();
+        }
+        let mut picked = vec![false; n];
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let i = self.below(n);
+            if !picked[i] {
+                picked[i] = true;
+                out.push(i);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(7);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(13);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.gaussian();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(5);
+        let idx = r.sample_indices(100, 32);
+        assert_eq!(idx.len(), 32);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 32);
+    }
+}

@@ -1,0 +1,107 @@
+//! Scoped timing + a tiny metrics registry for the pipeline.
+//!
+//! The coordinator reports per-phase wall-clock (capture / scale-search /
+//! calibrate / evaluate) in EXPERIMENTS.md; this is the source of those
+//! numbers.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Accumulates named durations and counters across a run.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<MetricsInner>,
+}
+
+#[derive(Default)]
+struct MetricsInner {
+    durations_s: BTreeMap<String, f64>,
+    counters: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_duration(&self, name: &str, seconds: f64) {
+        let mut m = self.inner.lock().unwrap();
+        *m.durations_s.entry(name.to_string()).or_default() += seconds;
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut m = self.inner.lock().unwrap();
+        *m.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add_duration(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn snapshot(&self) -> (BTreeMap<String, f64>, BTreeMap<String, u64>) {
+        let m = self.inner.lock().unwrap();
+        (m.durations_s.clone(), m.counters.clone())
+    }
+
+    pub fn report(&self) -> String {
+        let (durs, counts) = self.snapshot();
+        let mut s = String::new();
+        for (k, v) in durs {
+            s.push_str(&format!("  {k:<32} {v:10.3}s\n"));
+        }
+        for (k, v) in counts {
+            s.push_str(&format!("  {k:<32} {v:>10}\n"));
+        }
+        s
+    }
+}
+
+/// RAII scope timer logging at debug level.
+pub struct Scope<'a> {
+    name: &'a str,
+    start: Instant,
+}
+
+impl<'a> Scope<'a> {
+    pub fn new(name: &'a str) -> Self {
+        Scope {
+            name,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for Scope<'_> {
+    fn drop(&mut self) {
+        log::debug!("{} took {:.3}s", self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_accumulate() {
+        let m = Metrics::new();
+        m.add_duration("phase", 1.0);
+        m.add_duration("phase", 0.5);
+        m.incr("steps", 10);
+        m.incr("steps", 5);
+        let (d, c) = m.snapshot();
+        assert!((d["phase"] - 1.5).abs() < 1e-12);
+        assert_eq!(c["steps"], 15);
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let m = Metrics::new();
+        let v = m.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(m.snapshot().0.contains_key("work"));
+    }
+}

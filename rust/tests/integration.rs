@@ -1,0 +1,258 @@
+//! Cross-module integration tests over real artifacts.
+//!
+//! These need `make artifacts` to have run; they self-skip (with a
+//! notice) otherwise, so `cargo test` stays green on a fresh checkout.
+//! Each test builds its own PJRT runtime (the client is not Sync).
+
+use attention_round::coordinator::calibrate::calibrate_attention;
+use attention_round::coordinator::capture::{capture, reference_outputs};
+use attention_round::coordinator::config::CalibConfig;
+use attention_round::coordinator::evaluate::{evaluate, evaluate_actq};
+use attention_round::coordinator::model::LoadedModel;
+use attention_round::coordinator::pipeline::{
+    quantize_and_eval, resolve_act_bits, resolve_uniform_bits, QuantSpec,
+};
+use attention_round::data::Split;
+use attention_round::io::manifest::Manifest;
+use attention_round::quant::observer::{observe, ObserverKind};
+use attention_round::quant::rounding::Rounding;
+use attention_round::runtime::Runtime;
+use attention_round::tensor::Tensor;
+use attention_round::util::rng::Rng;
+
+fn artifacts() -> Option<String> {
+    let dir = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP integration test: no artifacts at {dir} (run `make artifacts`)");
+        None
+    }
+}
+
+/// Tiny eval split (2 batches) to keep device tests fast.
+fn small_eval(manifest: &Manifest) -> Split {
+    let dir = manifest.path(&manifest.dataset.dir);
+    let full = Split::load(&dir, "eval").expect("eval split");
+    let n = manifest.dataset.eval_batch * 2;
+    Split {
+        images: full.images.slice_axis0(0, n).unwrap(),
+        labels: full.labels[..n].to_vec(),
+    }
+}
+
+#[test]
+fn manifest_and_weights_agree() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    assert!(manifest.scan_k >= 1);
+    for m in &manifest.models {
+        let model = LoadedModel::load(&manifest, &m.name).expect("load model");
+        assert_eq!(model.weights.len(), m.layers.len());
+        // coding views must tile the weight exactly
+        for (l, w) in m.layers.iter().zip(&model.weights) {
+            assert_eq!(l.coding_n * l.coding_m, w.len(), "{}/{}", m.name, l.name);
+        }
+        // first/last pinned (paper §4.1)
+        assert!(m.layers.first().unwrap().pinned_8bit);
+        assert!(m.layers.last().unwrap().pinned_8bit);
+    }
+}
+
+#[test]
+fn fp_eval_matches_buildtime_accuracy() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = Runtime::new(dir.as_str()).expect("runtime");
+    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let eval_dir = manifest.path(&manifest.dataset.dir);
+    let eval = Split::load(&eval_dir, "eval").expect("eval");
+    let acc = evaluate(&rt, &manifest, &model, &model.weights, &eval).expect("eval");
+    // Full-split PJRT evaluation must agree with the build-time JAX number.
+    assert!(
+        (acc - model.info.fp_acc).abs() < 0.005,
+        "PJRT {acc} vs build-time {}",
+        model.info.fp_acc
+    );
+}
+
+#[test]
+fn capture_reference_and_calibration_reduce_loss() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = Runtime::new(dir.as_str()).expect("runtime");
+    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let calib_dir = manifest.path(&manifest.dataset.dir);
+    let calib = Split::load(&calib_dir, "calib").expect("calib");
+
+    let mut cache = capture(&rt, &manifest, &model, &model.weights, &calib, 64)
+        .expect("capture");
+    assert_eq!(cache.len(), model.num_layers());
+
+    let li = 1; // first non-pinned conv
+    let layer = &model.info.layers[li];
+    let x = cache.take(li).expect("acts");
+    assert_eq!(x.shape()[0], 64);
+    assert_eq!(&x.shape()[1..], &layer.in_shape[1..]);
+    // double-take must fail loudly
+    assert!(cache.take(li).is_err());
+
+    let yref = reference_outputs(
+        &rt,
+        &layer.layer_fwd,
+        &x,
+        &model.weights[li],
+        manifest.dataset.calib_batch,
+    )
+    .expect("yref");
+    assert_eq!(&yref.shape()[1..], &layer.out_shape[1..]);
+
+    let mut cfg = CalibConfig::quick();
+    cfg.iters = 16;
+    let mut rng = Rng::new(7);
+    let cal = calibrate_attention(
+        &rt,
+        layer,
+        &model.weights[li],
+        &x,
+        &yref,
+        3, // 3-bit: aggressive enough that calibration has work to do
+        &cfg,
+        manifest.scan_k,
+        manifest.dataset.calib_batch,
+        &mut rng,
+    )
+    .expect("calibrate");
+    assert!(
+        cal.last_loss < cal.first_loss,
+        "loss should decrease: {} -> {}",
+        cal.first_loss,
+        cal.last_loss
+    );
+    // quantized weights live on the grid
+    for &v in cal.qweight.data() {
+        assert!(cal.grid.contains(v), "{v} off grid");
+    }
+}
+
+#[test]
+fn attention_beats_nearest_at_low_bits() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = Runtime::new(dir.as_str()).expect("runtime");
+    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let calib_dir = manifest.path(&manifest.dataset.dir);
+    let calib = Split::load(&calib_dir, "calib").expect("calib");
+    let eval = small_eval(&manifest);
+
+    let spec = QuantSpec {
+        model: "resnet18t".into(),
+        wbits: resolve_uniform_bits(&model, 3),
+        abits: None,
+    };
+    let mut cfg = CalibConfig::quick();
+    cfg.iters = 16;
+    cfg.calib_samples = 128;
+
+    cfg.method = Rounding::Nearest;
+    let near = quantize_and_eval(&rt, &manifest, &spec, &cfg, &calib, &eval)
+        .expect("nearest");
+    cfg.method = Rounding::Attention;
+    let ours = quantize_and_eval(&rt, &manifest, &spec, &cfg, &calib, &eval)
+        .expect("attention");
+    eprintln!(
+        "3-bit: nearest {:.4} vs attention {:.4} (fp {:.4})",
+        near.acc, ours.acc, ours.fp_acc
+    );
+    assert!(
+        ours.acc >= near.acc,
+        "attention ({}) must not lose to nearest ({}) at 3 bits",
+        ours.acc,
+        near.acc
+    );
+}
+
+#[test]
+fn actq_eval_runs_and_degrades_gracefully() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = Runtime::new(dir.as_str()).expect("runtime");
+    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let calib_dir = manifest.path(&manifest.dataset.dir);
+    let calib = Split::load(&calib_dir, "calib").expect("calib");
+    let eval = small_eval(&manifest);
+
+    // observers from a small capture
+    let mut cache = capture(&rt, &manifest, &model, &model.weights, &calib, 64)
+        .expect("capture");
+    let mut params = Vec::new();
+    for li in 0..model.num_layers() {
+        let x = cache.take(li).unwrap();
+        params.push(observe(x.data(), 8, ObserverKind::Mse).unwrap());
+    }
+    let bits8 = resolve_act_bits(&model, 8);
+    let acc8 = evaluate_actq(
+        &rt, &manifest, &model, &model.weights, &params, &bits8, &eval,
+    )
+    .expect("actq 8");
+    // 8-bit activations should track FP closely on this small split
+    let fp = evaluate(&rt, &manifest, &model, &model.weights, &eval).expect("fp");
+    assert!(
+        (acc8 - fp).abs() < 0.08,
+        "8-bit act quant drifted: {acc8} vs fp {fp}"
+    );
+}
+
+#[test]
+fn rust_synth_generator_transfers_to_the_model() {
+    // The Rust port of the dataset generator must produce samples the
+    // JAX-trained model classifies far above chance — the cross-language
+    // distribution contract.
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = Runtime::new(dir.as_str()).expect("runtime");
+    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let n = manifest.dataset.eval_batch * 2;
+    let (images, labels) = attention_round::data::synth::generate(n, 999);
+    let split = Split { images, labels };
+    let acc = evaluate(&rt, &manifest, &model, &model.weights, &split).expect("eval");
+    eprintln!("rust-synth transfer accuracy: {acc:.4}");
+    assert!(
+        acc > 0.5,
+        "model should transfer to rust-generated data (chance = 1/16), got {acc}"
+    );
+}
+
+#[test]
+fn quantized_weights_differ_from_fp_but_stay_close() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = Runtime::new(dir.as_str()).expect("runtime");
+    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let calib_dir = manifest.path(&manifest.dataset.dir);
+    let calib = Split::load(&calib_dir, "calib").expect("calib");
+    let eval = small_eval(&manifest);
+    let mut cfg = CalibConfig::quick();
+    cfg.iters = 16;
+    cfg.calib_samples = 128;
+    cfg.method = Rounding::Nearest; // static rounding: fast, same invariant
+    let spec = QuantSpec {
+        model: "resnet18t".into(),
+        wbits: resolve_uniform_bits(&model, 4),
+        abits: None,
+    };
+    let out = quantize_and_eval(&rt, &manifest, &spec, &cfg, &calib, &eval)
+        .expect("quantize");
+    for (q, w) in out.qweights.iter().zip(&model.weights) {
+        let d: f64 = crate_mse(q, w);
+        assert!(d > 0.0, "quantization must change weights");
+        let scale_sq = (out.per_layer[0].scale as f64).powi(2);
+        let _ = scale_sq;
+        // error bounded by one grid step RMS-wise (loose sanity bound)
+        assert!(d.sqrt() < 0.2, "unreasonable quantization error {d}");
+    }
+}
+
+fn crate_mse(a: &Tensor, b: &Tensor) -> f64 {
+    attention_round::tensor::ops::mse(a.data(), b.data())
+}

@@ -1,0 +1,213 @@
+//! Property-based tests (via the in-repo util::proptest driver) on the
+//! quantizer and allocator invariants. No artifacts needed — pure host
+//! math, so these run on any checkout.
+
+use attention_round::mixed::kmeans;
+use attention_round::quant::rounding;
+use attention_round::quant::scale::mse_optimal_scale;
+use attention_round::quant::{attention_probability, QGrid};
+use attention_round::tensor::ops;
+use attention_round::util::proptest::{check, shrink_vec, Config};
+use attention_round::util::rng::Rng;
+
+fn gen_weights(r: &mut Rng) -> Vec<f32> {
+    let n = 1 + r.below(512);
+    let std = 0.01 + r.next_f32() * 0.5;
+    let mut w = vec![0.0f32; n];
+    r.fill_gaussian(&mut w, 0.0, std);
+    w
+}
+
+#[test]
+fn prop_nearest_is_mse_optimal_rounding() {
+    // Among all grid points, nearest-round picks the per-element argmin:
+    // no other static rounding can have lower elementwise error.
+    check(
+        Config { cases: 64, ..Default::default() },
+        gen_weights,
+        |w| shrink_vec(w),
+        |w| {
+            let g = QGrid::signed(4, mse_optimal_scale(w, 4).unwrap()).unwrap();
+            let n = rounding::nearest(w, &g);
+            let f = rounding::floor(w, &g);
+            let c = rounding::ceil(w, &g);
+            let en = ops::mse(w, &n);
+            if en > ops::mse(w, &f) + 1e-12 {
+                return Err(format!("nearest {en} worse than floor"));
+            }
+            if en > ops::mse(w, &c) + 1e-12 {
+                return Err(format!("nearest {en} worse than ceil"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_roundings_stay_on_grid() {
+    check(
+        Config { cases: 48, ..Default::default() },
+        |r| (gen_weights(r), r.next_u64()),
+        |_| vec![],
+        |(w, seed)| {
+            let g = QGrid::signed(3, mse_optimal_scale(w, 3).unwrap()).unwrap();
+            let mut rng = Rng::new(*seed);
+            let alpha: Vec<f32> = w.iter().map(|_| rng.gaussian_f32(0.0, 0.5)).collect();
+            for (name, q) in [
+                ("nearest", rounding::nearest(w, &g)),
+                ("floor", rounding::floor(w, &g)),
+                ("ceil", rounding::ceil(w, &g)),
+                ("stochastic", rounding::stochastic(w, &g, &mut rng)),
+                ("attention", rounding::attention_finalize(w, &alpha, &g)),
+                ("adaround", rounding::adaround_finalize(w, &alpha, &g)),
+            ] {
+                for &v in &q {
+                    if !g.contains(v) {
+                        return Err(format!("{name} produced off-grid {v}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_error_bounded_by_grid_step() {
+    // For values inside the clip range, |w - nearest(w)| <= s/2.
+    check(
+        Config { cases: 64, ..Default::default() },
+        gen_weights,
+        |w| shrink_vec(w),
+        |w| {
+            let s = mse_optimal_scale(w, 8).unwrap();
+            let g = QGrid::signed(8, s).unwrap();
+            let q = rounding::nearest(w, &g);
+            for (&wv, &qv) in w.iter().zip(&q) {
+                let clipped = wv.clamp(g.lo * s, g.hi * s);
+                if (clipped - qv).abs() > s / 2.0 + 1e-5 {
+                    return Err(format!("error {} > s/2 {}", (clipped - qv).abs(), s / 2.0));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_attention_probabilities_form_distribution() {
+    check(
+        Config { cases: 64, ..Default::default() },
+        |r| {
+            (
+                r.gaussian_f32(0.0, 1.0),
+                0.01 + r.next_f32() * 0.5,
+                r.next_f32(),
+            )
+        },
+        |_| vec![],
+        |(w, step, tau)| {
+            // cover w ± 10τ so the Gaussian mass is fully inside the grid
+            let reach = ((w.abs() + 10.0 * tau) / step).ceil() as i64 + 2;
+            let mut total = 0.0;
+            let mut peak = (0.0f64, 0i64);
+            for k in -reach..=reach {
+                let p = attention_probability(*w, k as f32 * step, *step, *tau);
+                if !(0.0..=1.0 + 1e-9).contains(&p) {
+                    return Err(format!("p out of range: {p}"));
+                }
+                if p > peak.0 {
+                    peak = (p, k);
+                }
+                total += p;
+            }
+            if (total - 1.0).abs() > 1e-3 {
+                return Err(format!("probabilities sum to {total}"));
+            }
+            // the peak must be the nearest grid point
+            let nearest_k = (w / step).round() as i64;
+            if peak.1 != nearest_k {
+                return Err(format!("peak at {} but nearest is {nearest_k}", peak.1));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kmeans_ids_ordered_by_value() {
+    // Cluster ids are ordered: a value in a higher cluster is >= every
+    // value in a lower cluster.
+    check(
+        Config { cases: 64, ..Default::default() },
+        |r| {
+            let n = 2 + r.below(40);
+            (0..n).map(|_| r.next_f64() * 100.0).collect::<Vec<f64>>()
+        },
+        |v| shrink_vec(v),
+        |values| {
+            let k = 3.min(values.len());
+            let ids = kmeans::cluster_1d(values, k).map_err(|e| e.to_string())?;
+            for (i, &vi) in values.iter().enumerate() {
+                for (j, &vj) in values.iter().enumerate() {
+                    if ids[i] < ids[j] && vi > vj + 1e-12 {
+                        return Err(format!(
+                            "value {vi} in cluster {} above {vj} in cluster {}",
+                            ids[i], ids[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stochastic_round_unbiased() {
+    // Mean of repeated stochastic rounding converges to w in-range.
+    check(
+        Config { cases: 16, ..Default::default() },
+        |r| (r.gaussian_f32(0.0, 0.3), r.next_u64()),
+        |_| vec![],
+        |(w, seed)| {
+            let g = QGrid::signed(8, 0.05).unwrap();
+            let mut rng = Rng::new(*seed);
+            let trials = 4000;
+            let mut acc = 0.0f64;
+            for _ in 0..trials {
+                acc += rounding::stochastic(&[*w], &g, &mut rng)[0] as f64;
+            }
+            let mean = acc / trials as f64;
+            let clipped = (*w).clamp(g.lo * g.scale, g.hi * g.scale) as f64;
+            if (mean - clipped).abs() > 0.004 {
+                return Err(format!("biased: mean {mean} vs {clipped}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_more_bits_never_hurt_mse_scale() {
+    check(
+        Config { cases: 32, ..Default::default() },
+        gen_weights,
+        |w| shrink_vec(w),
+        |w| {
+            if w.iter().all(|&v| v == 0.0) {
+                return Ok(());
+            }
+            let mut prev = f64::INFINITY;
+            for bits in [2u8, 4, 6, 8] {
+                let g = QGrid::signed(bits, mse_optimal_scale(w, bits).unwrap()).unwrap();
+                let e = ops::mse(w, &rounding::nearest(w, &g));
+                if e > prev * 1.05 + 1e-12 {
+                    return Err(format!("{bits} bits worse than fewer: {e} > {prev}"));
+                }
+                prev = e;
+            }
+            Ok(())
+        },
+    );
+}
