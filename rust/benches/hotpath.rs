@@ -6,83 +6,168 @@
 //!   * eval throughput (imgs/s)
 //!   * executable compile latency
 //! Host-path benches:
-//!   * MSE scale search, rounding kernels, coding length + k-means,
-//!     JSON/npy parsing, RNG, batch gather.
+//!   * MSE scale search (fused kernel vs scalar reference), rounding
+//!     kernels (allocating vs `_into`), coding length (pooled vs scalar),
+//!     parallel bit allocation, percentile selection vs full sort,
+//!     k-means, JSON/npy parsing, RNG, batch gather.
+//!
+//! Flags (after `--`):
+//!   * `--quick`  — smoke profile (CI): short budget, host benches only
+//!   * `--json P` — write the collected host stats to P (the committed
+//!     `BENCH_host.json` baseline)
 
 mod common;
 
-use attention_round::bench_harness::{artifacts_dir, Bencher};
+use std::path::PathBuf;
+
+use attention_round::bench_harness::{artifacts_dir, write_json, Bencher, Stats};
 use attention_round::coordinator::capture::{capture, reference_outputs};
 use attention_round::coordinator::model::LoadedModel;
 use attention_round::data::{synth, Split};
+use attention_round::io::manifest::LayerInfo;
 use attention_round::io::npy;
 use attention_round::mixed::{self, kmeans};
 use attention_round::quant::rounding;
-use attention_round::quant::scale::mse_optimal_scale;
+use attention_round::quant::scale::{mse_optimal_scale, mse_optimal_scale_scalar};
 use attention_round::quant::QGrid;
-use attention_round::tensor::Tensor;
+use attention_round::tensor::{ops, Tensor};
 use attention_round::util::json;
 use attention_round::util::rng::Rng;
+use attention_round::util::threadpool;
 
-fn host_benches() {
-    let b = Bencher::default();
+struct Args {
+    quick: bool,
+    json_path: Option<PathBuf>,
+}
+
+fn parse_args() -> Args {
+    let mut quick = false;
+    let mut json_path = None;
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--json" => json_path = it.next().map(PathBuf::from),
+            _ => {}
+        }
+    }
+    Args { quick, json_path }
+}
+
+fn host_benches(b: &Bencher) -> Vec<Stats> {
+    let mut all = Vec::new();
     let mut rng = Rng::new(1);
+    let pool = threadpool::global();
+    println!("host pool: {} threads (AR_THREADS overrides)", pool.size());
 
     // RNG + gaussian fill
     let mut buf = vec![0.0f32; 1 << 16];
-    b.run("host/rng_gaussian_64k", || {
+    all.push(b.run("host/rng_gaussian_64k", || {
         rng.fill_gaussian(&mut buf, 0.0, 1.0);
-    });
+    }));
 
     // rounding kernels on a resnet-sized layer (3x3x128x128)
     let mut w = vec![0.0f32; 3 * 3 * 128 * 128];
     Rng::new(2).fill_gaussian(&mut w, 0.0, 0.05);
     let grid = QGrid::signed(4, 0.01).unwrap();
-    b.run("host/nearest_147k", || rounding::nearest(&w, &grid));
+    all.push(b.run("host/nearest_147k", || rounding::nearest(&w, &grid)));
     let alpha = vec![0.1f32; w.len()];
-    b.run("host/attention_finalize_147k", || {
+    all.push(b.run("host/attention_finalize_147k", || {
         rounding::attention_finalize(&w, &alpha, &grid)
-    });
+    }));
 
-    // MSE-optimal scale search (3 refinement rounds x 25 candidates)
-    b.run("host/mse_scale_search_147k", || {
+    // zero-alloc parallel kernel subsystem variants
+    let mut qout = vec![0.0f32; w.len()];
+    all.push(b.run("host/nearest_into_147k", || {
+        rounding::nearest_into(pool, &w, &grid, &mut qout)
+    }));
+    all.push(b.run("host/attention_finalize_into_147k", || {
+        rounding::attention_finalize_into(pool, &w, &alpha, &grid, &mut qout)
+    }));
+
+    // MSE-optimal scale search (3 refinement rounds x 25 candidates):
+    // fused one-pass kernel (the production entry point) vs the scalar
+    // 25-passes-per-round reference
+    all.push(b.run("host/mse_scale_search_147k", || {
         mse_optimal_scale(&w, 4).unwrap()
-    });
+    }));
+    all.push(b.run("host/mse_scale_search_147k_scalar", || {
+        mse_optimal_scale_scalar(&w, 4).unwrap()
+    }));
 
-    // coding length on the largest zoo layer view (1152 x 128)
+    // coding length on the largest zoo layer view (1152 x 128): pooled
+    // blocked Gram (no transpose copy) vs the scalar reference
     let wt = Tensor::new(vec![1152, 128], w.clone()).unwrap();
-    b.run("host/coding_length_1152x128", || {
+    all.push(b.run("host/coding_length_1152x128", || {
         let m = mixed::coding_view(&wt, 1152, 128).unwrap();
         mixed::coding_length(&m, 1e-3).unwrap()
-    });
+    }));
+    all.push(b.run("host/coding_length_1152x128_scalar", || {
+        let m = mixed::coding_view(&wt, 1152, 128).unwrap();
+        mixed::coding_length_scalar(&m, 1e-3).unwrap()
+    }));
+
+    // Algorithm 1 with the per-layer coding lengths fanned across the
+    // pool (8 synthetic resnet-top-sized layers)
+    let alloc_layers: Vec<LayerInfo> =
+        (0..8).map(|i| LayerInfo::synthetic(i, 1152, 128, false)).collect();
+    let alloc_weights: Vec<Tensor> = (0..8)
+        .map(|i| {
+            let mut data = vec![0.0f32; 1152 * 128];
+            Rng::new(40 + i).fill_gaussian(&mut data, 0.0, 0.03 + 0.01 * i as f32);
+            Tensor::new(vec![1152, 128], data).unwrap()
+        })
+        .collect();
+    all.push(b.run("host/allocate_parallel_8x1152x128", || {
+        mixed::allocate_with(pool, &alloc_layers, &alloc_weights, &[3, 4, 5, 6], 1e-3).unwrap()
+    }));
 
     // exact 1-D k-means over 24 layer lengths
     let lengths: Vec<f64> = (0..24).map(|i| (i as f64 * 7.3) % 97.0).collect();
-    b.run("host/kmeans_dp_24x4", || {
+    all.push(b.run("host/kmeans_dp_24x4", || {
         kmeans::cluster_1d(&lengths, 4).unwrap()
-    });
+    }));
+
+    // observer percentile: O(n) selection with scratch reuse vs the old
+    // full copy + sort
+    let mut scratch: Vec<f32> = Vec::new();
+    all.push(b.run("host/percentile_select_147k", || {
+        (
+            ops::percentile_with(&w, 0.1, &mut scratch),
+            ops::percentile_with(&w, 99.9, &mut scratch),
+        )
+    }));
+    all.push(b.run("host/percentile_sort_147k", || {
+        let mut v = w.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lo = v[((0.001) * (v.len() - 1) as f64).round() as usize];
+        let hi = v[((0.999) * (v.len() - 1) as f64).round() as usize];
+        (lo, hi)
+    }));
 
     // synthetic workload generation (bench workload path)
-    b.run("host/synth_generate_32", || synth::generate(32, 7));
+    all.push(b.run("host/synth_generate_32", || synth::generate(32, 7)));
 
     // JSON manifest parse (if present)
     let dir = artifacts_dir();
     if let Ok(text) = std::fs::read_to_string(dir.join("manifest.json")) {
-        b.run("host/json_parse_manifest", || json::parse(&text).unwrap());
+        all.push(b.run("host/json_parse_manifest", || json::parse(&text).unwrap()));
     }
 
     // npy read of a weight file (if present)
     if let Some(m) = json_first_weight(&dir) {
-        b.run("host/npy_read_weight", || npy::read_f32(&m).unwrap());
+        all.push(b.run("host/npy_read_weight", || npy::read_f32(&m).unwrap()));
     }
 
     // batch gather (the calibration sampling path)
     let cache = Tensor::zeros(vec![1024, 16, 16, 16]);
     let mut r2 = Rng::new(3);
-    b.run("host/gather_8x32_batches", || {
+    all.push(b.run("host/gather_8x32_batches", || {
         let idx: Vec<usize> = (0..256).map(|_| r2.below(1024)).collect();
         cache.gather_axis0(&idx).unwrap()
-    });
+    }));
+
+    all
 }
 
 fn json_first_weight(dir: &std::path::Path) -> Option<std::path::PathBuf> {
@@ -201,6 +286,18 @@ fn device_benches() {
 }
 
 fn main() {
-    host_benches();
-    device_benches();
+    let args = parse_args();
+    let b = if args.quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let stats = host_benches(&b);
+    if let Some(p) = &args.json_path {
+        write_json(p, &stats).expect("write bench json");
+        println!("wrote {} host bench entries to {}", stats.len(), p.display());
+    }
+    if !args.quick {
+        device_benches();
+    }
 }

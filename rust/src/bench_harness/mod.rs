@@ -130,6 +130,25 @@ fn append_csv(s: &Stats) {
     }
 }
 
+/// Write a set of bench stats as a machine-readable JSON baseline (the
+/// committed `BENCH_host.json` evidence file). Hand-rolled like
+/// `util::json` — serde is not offline-available.
+pub fn write_json(path: &std::path::Path, stats: &[Stats]) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{{")?;
+    for (i, s) in stats.iter().enumerate() {
+        let comma = if i + 1 == stats.len() { "" } else { "," };
+        writeln!(
+            f,
+            "  \"{}\": {{\"iters\": {}, \"mean_s\": {:e}, \"median_s\": {:e}, \"p95_s\": {:e}, \"stddev_s\": {:e}, \"min_s\": {:e}, \"max_s\": {:e}}}{}",
+            s.name, s.iters, s.mean_s, s.median_s, s.p95_s, s.stddev_s, s.min_s, s.max_s, comma
+        )?;
+    }
+    writeln!(f, "}}")?;
+    Ok(())
+}
+
 /// Locate the artifacts directory for bench binaries (env override first).
 pub fn artifacts_dir() -> std::path::PathBuf {
     std::env::var("REPRO_ARTIFACTS")
@@ -162,6 +181,26 @@ mod tests {
         let s = b.run("noop", || count += 1);
         assert!(s.iters >= 3);
         assert!(count >= 3);
+    }
+
+    #[test]
+    fn json_baseline_roundtrips_through_parser() {
+        let stats = vec![
+            compute_stats("host/a_bench", &[0.001, 0.002, 0.003]),
+            compute_stats("host/b_bench", &[1.5, 2.5]),
+        ];
+        let path = std::env::temp_dir().join(format!(
+            "bench_host_json_test_{}.json",
+            std::process::id()
+        ));
+        write_json(&path, &stats).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let j = crate::util::json::parse(&text).unwrap();
+        let a = j.get("host/a_bench").unwrap();
+        let mean = a.get("mean_s").unwrap().as_f64().unwrap();
+        assert!((mean - 0.002).abs() < 1e-12, "mean {mean}");
+        assert_eq!(a.get("iters").unwrap().as_f64().unwrap(), 3.0);
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::report::svg::{bar_chart_svg, line_chart_svg};
 use crate::report::{bar_chart, pct, Table};
 use crate::runtime::Runtime;
 use crate::util::error::Result;
+use crate::util::threadpool;
 
 /// Shared context for all experiments.
 pub struct Ctx {
@@ -260,7 +261,9 @@ pub fn table4(ctx: &Ctx, models: &[&str], eps2: f64) -> Result<Table> {
         let loaded = LoadedModel::load(&ctx.manifest, model)?;
         let fp = loaded.info.fp_acc;
         for bit_list in [vec![3u8, 4, 5, 6], vec![3, 4, 5]] {
-            let alloc = mixed::allocate(
+            // Algorithm 1 on the same shared pool the pipeline uses.
+            let alloc = mixed::allocate_with(
+                threadpool::global(),
                 &loaded.info.layers,
                 &loaded.weights,
                 &bit_list,
@@ -397,7 +400,8 @@ pub fn fig2(ctx: &Ctx, models: &[&str], taus: &[f32]) -> Result<Table> {
 /// Figures 3/4/5 — per-layer bit allocation under bits [3..8].
 pub fn fig_alloc(ctx: &Ctx, model: &str, eps2: f64) -> Result<Table> {
     let loaded = LoadedModel::load(&ctx.manifest, model)?;
-    let alloc = mixed::allocate(
+    let alloc = mixed::allocate_with(
+        threadpool::global(),
         &loaded.info.layers,
         &loaded.weights,
         &[3, 4, 5, 6, 7, 8],

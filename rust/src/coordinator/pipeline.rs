@@ -1,5 +1,11 @@
 //! The end-to-end PTQ pipeline (DESIGN.md §5): capture → scale → per-layer
 //! calibration → finalize → (activation observers) → evaluate.
+//!
+//! Host-side hot paths — MSE scale search, rounding kernels, observers,
+//! bit allocation (`mixed::allocate`) — all run on the one process-wide
+//! [`threadpool::global`] pool (`AR_THREADS` sizes it), threaded through
+//! explicitly here so calibration, allocation, and evaluation share
+//! workers instead of each creating their own.
 
 use std::time::Instant;
 
@@ -10,13 +16,14 @@ use crate::coordinator::evaluate::{evaluate, evaluate_actq};
 use crate::coordinator::model::LoadedModel;
 use crate::data::Split;
 use crate::io::manifest::Manifest;
-use crate::quant::observer::{observe, ActQuantParams};
+use crate::quant::observer::{observe_with, ActQuantParams};
 use crate::quant::rounding::{self, Rounding};
-use crate::quant::scale::mse_optimal_scale;
+use crate::quant::scale::mse_optimal_scale_with;
 use crate::quant::QGrid;
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
+use crate::util::threadpool;
 
 /// What to quantize and how wide.
 #[derive(Debug, Clone)]
@@ -87,6 +94,9 @@ pub fn quantize_and_eval(
     let mut rng = Rng::new(cfg.seed);
     let scan_k = manifest.scan_k.max(1);
     let cb = manifest.dataset.calib_batch;
+    // One shared pool + one observer scratch buffer for the whole run.
+    let pool = threadpool::global();
+    let mut obs_scratch: Vec<f32> = Vec::new();
 
     let needs_capture = spec.abits.is_some()
         || matches!(cfg.method, Rounding::Attention | Rounding::AdaRound);
@@ -136,7 +146,12 @@ pub fn quantize_and_eval(
 
         // Activation observer on this layer's captured inputs.
         if let (Some(bits_a), Some(x)) = (&act_bits, &xcache) {
-            act_params.push(observe(x.data(), bits_a[li], cfg.observer)?);
+            act_params.push(observe_with(
+                x.data(),
+                bits_a[li],
+                cfg.observer,
+                &mut obs_scratch,
+            )?);
         }
 
         let (qw, outcome) = match cfg.method {
@@ -174,14 +189,23 @@ pub fn quantize_and_eval(
                 )
             }
             method => {
-                let scale = mse_optimal_scale(w_fp.data(), bits)?;
+                let scale = mse_optimal_scale_with(pool, w_fp.data(), bits)?;
                 let grid = QGrid::signed(bits, scale)?;
-                let qdata = match method {
-                    Rounding::Nearest => rounding::nearest(w_fp.data(), &grid),
-                    Rounding::Floor => rounding::floor(w_fp.data(), &grid),
-                    Rounding::Ceil => rounding::ceil(w_fp.data(), &grid),
+                // The only allocation is the output buffer the Tensor
+                // keeps; the kernels write into it in parallel chunks.
+                let mut qdata = vec![0.0f32; w_fp.len()];
+                match method {
+                    Rounding::Nearest => {
+                        rounding::nearest_into(pool, w_fp.data(), &grid, &mut qdata)
+                    }
+                    Rounding::Floor => {
+                        rounding::floor_into(pool, w_fp.data(), &grid, &mut qdata)
+                    }
+                    Rounding::Ceil => {
+                        rounding::ceil_into(pool, w_fp.data(), &grid, &mut qdata)
+                    }
                     Rounding::Stochastic => {
-                        rounding::stochastic(w_fp.data(), &grid, &mut rng)
+                        rounding::stochastic_into(w_fp.data(), &grid, &mut rng, &mut qdata)
                     }
                     _ => unreachable!(),
                 };
@@ -226,26 +250,7 @@ mod tests {
     use crate::io::manifest::LayerInfo;
 
     fn layer(pinned: bool) -> LayerInfo {
-        LayerInfo {
-            index: 0,
-            name: "l".into(),
-            kind: "conv".into(),
-            act: "relu".into(),
-            wshape: vec![1],
-            params: 1,
-            coding_n: 1,
-            coding_m: 1,
-            in_shape: vec![],
-            out_shape: vec![],
-            pinned_8bit: pinned,
-            downsample: false,
-            sig: "s".into(),
-            calib_step: String::new(),
-            adaround_step: String::new(),
-            layer_fwd: String::new(),
-            calib_scan: String::new(),
-            adaround_scan: String::new(),
-        }
+        LayerInfo::synthetic(0, 1, 1, pinned)
     }
 
     #[test]

@@ -36,6 +36,33 @@ pub struct LayerInfo {
     pub adaround_scan: String,
 }
 
+impl LayerInfo {
+    /// Synthetic layer descriptor for tests and benches: an (n × m)
+    /// coding view with no device artifacts attached.
+    pub fn synthetic(index: usize, coding_n: usize, coding_m: usize, pinned: bool) -> Self {
+        LayerInfo {
+            index,
+            name: format!("l{index}"),
+            kind: "conv".into(),
+            act: "relu".into(),
+            wshape: vec![coding_n, coding_m],
+            params: coding_n * coding_m,
+            coding_n,
+            coding_m,
+            in_shape: vec![],
+            out_shape: vec![],
+            pinned_8bit: pinned,
+            downsample: false,
+            sig: "synthetic".into(),
+            calib_step: String::new(),
+            adaround_step: String::new(),
+            layer_fwd: String::new(),
+            calib_scan: String::new(),
+            adaround_scan: String::new(),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ModelInfo {
     pub name: String,

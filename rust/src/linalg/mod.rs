@@ -3,10 +3,19 @@
 //! The coding length (paper Eq. 12) needs `log2 det(I + c·W·Wᵀ)` per
 //! layer. The matrix is symmetric positive definite by construction, so
 //! log-det comes from a Cholesky factorization: log det(A) = 2·Σ log Lᵢᵢ.
-//! Sizes are small (the Gram side is min(n, m) ≤ a few hundred for the
-//! zoo), so straightforward cache-friendly loops are plenty.
+//!
+//! Gram products are the host-side hot spot (the 1152×128 zoo layer is
+//! ~9.5M f64 multiply-adds), so they are blocked for the kernel
+//! subsystem: dot products run 4-way unrolled (breaking the serial f64
+//! dependence chain so LLVM vectorizes), row blocks fan out across a
+//! scoped [`ThreadPool`], and `gram_tr_with` forms AᵀW·... AᵀA directly
+//! from the row-major storage via rank-1 row updates — no transposed
+//! copy. Partial results merge in deterministic block order; only f64
+//! association differs from the naive loops (the `gram_naive` reference
+//! stays for property tests and benches).
 
 use crate::util::error::{Error, Result};
+use crate::util::threadpool::{ThreadPool, MIN_PAR_CHUNK};
 
 /// Row-major dense matrix of f64 (the determinant accumulates across
 /// hundreds of multiplications — f32 would visibly drift).
@@ -15,6 +24,32 @@ pub struct Mat {
     pub rows: usize,
     pub cols: usize,
     pub data: Vec<f64>,
+}
+
+/// 4-way unrolled dot product: four independent partial sums break the
+/// floating-point dependence chain, letting the loop vectorize. The
+/// summation order is fixed (chunk order, then tail), so results are
+/// deterministic — just not the naive left-to-right association.
+#[inline]
+fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = [0.0f64; 4];
+    for (ca, cb) in a.chunks_exact(4).zip(b.chunks_exact(4)) {
+        s[0] += ca[0] * cb[0];
+        s[1] += ca[1] * cb[1];
+        s[2] += ca[2] * cb[2];
+        s[3] += ca[3] * cb[3];
+    }
+    let mut acc = (s[0] + s[1]) + (s[2] + s[3]);
+    for (x, y) in a
+        .chunks_exact(4)
+        .remainder()
+        .iter()
+        .zip(b.chunks_exact(4).remainder())
+    {
+        acc += x * y;
+    }
+    acc
 }
 
 impl Mat {
@@ -58,10 +93,87 @@ impl Mat {
         &mut self.data[r * self.cols + c]
     }
 
-    /// Gram matrix G = A·Aᵀ (rows as vectors). ikj loop order for cache
-    /// friendliness; G is symmetric so only the lower triangle is computed
-    /// then mirrored.
+    /// Gram matrix G = A·Aᵀ (rows as vectors), sequential. Same blocked
+    /// kernel as [`Mat::gram_with`] on one thread.
     pub fn gram(&self) -> Mat {
+        self.gram_with(&ThreadPool::seq())
+    }
+
+    /// Gram matrix G = A·Aᵀ across the pool: the lower triangle is
+    /// computed in parallel row blocks with unrolled dots, then mirrored.
+    /// Bit-identical to [`Mat::gram`] for any pool size (each entry is
+    /// one independent dot product). Row i of the triangle costs i+1
+    /// dots, so block boundaries follow a square-root schedule (work up
+    /// to row r is ∝ r²) instead of equal row counts — equal splits
+    /// would leave the last block with most of the triangle.
+    pub fn gram_with(&self, pool: &ThreadPool) -> Mat {
+        let n = self.rows;
+        let k = self.cols;
+        let mut g = Mat::zeros(n, n);
+        if n == 0 {
+            return g;
+        }
+        let data = &self.data;
+        // Work ≈ n²k/2 multiply-adds; below the chunk threshold a thread
+        // spawn costs more than the whole triangle, so stay inline.
+        let blocks = if n * n * k / 2 < MIN_PAR_CHUNK {
+            1
+        } else {
+            pool.size().min(n).max(1)
+        };
+        let fill_rows = |first_row: usize, block: &mut [f64]| {
+            for (bi, grow) in block.chunks_mut(n).enumerate() {
+                let i = first_row + bi;
+                let ri = &data[i * k..(i + 1) * k];
+                for (j, gv) in grow.iter_mut().enumerate().take(i + 1) {
+                    let rj = &data[j * k..(j + 1) * k];
+                    *gv = dot_unrolled(ri, rj);
+                }
+            }
+        };
+        if blocks <= 1 {
+            fill_rows(0, &mut g.data);
+        } else {
+            std::thread::scope(|s| {
+                let mut rest: &mut [f64] = &mut g.data;
+                let mut start = 0usize;
+                for b in 0..blocks {
+                    let end = if b + 1 == blocks {
+                        n
+                    } else {
+                        // cumulative work ∝ r², so split at n·√(frac);
+                        // max-then-min keeps the bounds ordered even when
+                        // the schedule saturates early (then the trailing
+                        // blocks are empty, which fill_rows handles)
+                        let frac = (b + 1) as f64 / blocks as f64;
+                        ((n as f64 * frac.sqrt()) as usize)
+                            .max(start + 1)
+                            .min(n)
+                    };
+                    if end == start {
+                        continue;
+                    }
+                    let tmp = std::mem::take(&mut rest);
+                    let (block, tail) = tmp.split_at_mut((end - start) * n);
+                    rest = tail;
+                    let f = &fill_rows;
+                    s.spawn(move || f(start, block));
+                    start = end;
+                }
+            });
+        }
+        for i in 0..n {
+            for j in 0..i {
+                g.data[j * n + i] = g.data[i * n + j];
+            }
+        }
+        g
+    }
+
+    /// The original naive Gram (serial dots, left-to-right association).
+    /// Reference implementation for property tests and the before/after
+    /// hotpath benches.
+    pub fn gram_naive(&self) -> Mat {
         let n = self.rows;
         let k = self.cols;
         let mut g = Mat::zeros(n, n);
@@ -80,8 +192,73 @@ impl Mat {
         g
     }
 
-    /// C = self · other.
+    /// Transposed Gram G = AᵀA (columns as vectors), computed directly
+    /// from the row-major storage by rank-1 row updates — no transposed
+    /// copy, and the upper-triangle update rows vectorize. Row strips
+    /// are a **fixed size** (≈[`MIN_PAR_CHUNK`] elements), accumulated
+    /// into per-strip partials merged in strip order, so the result
+    /// depends only on the input — not on the pool size or core count;
+    /// threads just drain the strip list. Association differs from a
+    /// serial evaluation by reassociation noise only.
+    pub fn gram_tr_with(&self, pool: &ThreadPool) -> Mat {
+        let n = self.rows;
+        let m = self.cols;
+        let mut out = Mat::zeros(m, m);
+        if n == 0 || m == 0 {
+            return out;
+        }
+        let rows_per = (MIN_PAR_CHUNK / m).clamp(1, n);
+        let strips = (n + rows_per - 1) / rows_per;
+        let strip_gram = |si: usize| {
+            let r0 = si * rows_per;
+            let r1 = ((si + 1) * rows_per).min(n);
+            let mut g = vec![0.0f64; m * m];
+            for i in r0..r1 {
+                let row = &self.data[i * m..(i + 1) * m];
+                for j1 in 0..m {
+                    let a = row[j1];
+                    let grow = &mut g[j1 * m + j1..(j1 + 1) * m];
+                    for (gv, &x) in grow.iter_mut().zip(&row[j1..]) {
+                        *gv += a * x;
+                    }
+                }
+            }
+            g
+        };
+        // Strips are processed in pool-sized waves so at most pool.size()
+        // m×m partials are live at once, but every += into `out` happens
+        // in ascending strip order — the accumulated value is identical
+        // for every pool size.
+        let wave = pool.size().max(1);
+        let mut si0 = 0usize;
+        while si0 < strips {
+            let batch = (strips - si0).min(wave);
+            let partials: Vec<Vec<f64>> = pool.scope_map(batch, |bi| strip_gram(si0 + bi));
+            for p in &partials {
+                for (o, &v) in out.data.iter_mut().zip(p) {
+                    *o += v;
+                }
+            }
+            si0 += batch;
+        }
+        for j1 in 0..m {
+            for j2 in 0..j1 {
+                out.data[j1 * m + j2] = out.data[j2 * m + j1];
+            }
+        }
+        out
+    }
+
+    /// C = self · other (sequential; same kernel as [`Mat::matmul_with`]
+    /// on one thread).
     pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        self.matmul_with(&ThreadPool::seq(), other)
+    }
+
+    /// C = self · other with C's rows computed in parallel blocks. The
+    /// per-row ikj loop accumulates in ascending-k order regardless of
+    /// blocking, so this is bit-identical to the sequential form.
+    pub fn matmul_with(&self, pool: &ThreadPool, other: &Mat) -> Result<Mat> {
         if self.cols != other.rows {
             return Err(Error::shape(format!(
                 "matmul {}x{} @ {}x{}",
@@ -90,18 +267,32 @@ impl Mat {
         }
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut c = Mat::zeros(m, n);
-        for i in 0..m {
-            for t in 0..k {
-                let a = self.at(i, t);
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[t * n..(t + 1) * n];
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    crow[j] += a * brow[j];
+        if m == 0 || n == 0 {
+            return Ok(c);
+        }
+        let a = &self.data;
+        let b = &other.data;
+        let fill = |first_row: usize, block: &mut [f64]| {
+            for (bi, crow) in block.chunks_mut(n).enumerate() {
+                let i = first_row + bi;
+                for t in 0..k {
+                    let av = a[i * k + t];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[t * n..(t + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
                 }
             }
+        };
+        // ~m·k·n multiply-adds: below the chunk threshold thread spawns
+        // dominate, so stay inline.
+        if m * k * n < MIN_PAR_CHUNK {
+            fill(0, &mut c.data);
+        } else {
+            pool.par_row_blocks(&mut c.data, n, fill);
         }
         Ok(c)
     }
@@ -164,6 +355,7 @@ pub fn log2_det_spd(a: &Mat) -> Result<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn gram_matches_manual() {
@@ -220,5 +412,75 @@ mod tests {
         let mut a = w.gram();
         a.add_scaled_identity(1.0);
         assert!(log2_det_spd(&a).unwrap() > 0.0);
+    }
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0.0f32; rows * cols];
+        rng.fill_gaussian(&mut data, 0.0, 1.0);
+        Mat::from_rows_f32(rows, cols, &data).unwrap()
+    }
+
+    #[test]
+    fn parallel_gram_bit_identical_to_sequential() {
+        let a = random_mat(37, 53, 1);
+        let seq = a.gram();
+        let par = a.gram_with(&ThreadPool::new(4));
+        assert_eq!(seq.data, par.data);
+    }
+
+    #[test]
+    fn blocked_gram_close_to_naive() {
+        let a = random_mat(23, 101, 2);
+        let blocked = a.gram();
+        let naive = a.gram_naive();
+        // mixed tolerance: near-zero entries (cancellation) get an
+        // absolute floor far above the reassociation error bound
+        for (x, y) in blocked.data.iter().zip(&naive.data) {
+            assert!((x - y).abs() < 1e-9 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gram_tr_matches_explicit_transpose() {
+        let a = random_mat(41, 17, 3);
+        // explicit transpose reference
+        let mut t = Mat::zeros(17, 41);
+        for i in 0..41 {
+            for j in 0..17 {
+                *t.at_mut(j, i) = a.at(i, j);
+            }
+        }
+        let want = t.gram_naive();
+        for pool in [ThreadPool::seq(), ThreadPool::new(3)] {
+            let got = a.gram_tr_with(&pool);
+            assert_eq!((got.rows, got.cols), (17, 17));
+            for (x, y) in got.data.iter().zip(&want.data) {
+                assert!((x - y).abs() < 1e-9 * (1.0 + y.abs()), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_bit_identical() {
+        let a = random_mat(19, 31, 4);
+        let b = random_mat(31, 11, 5);
+        let seq = a.matmul(&b).unwrap();
+        let par = a.matmul_with(&ThreadPool::new(4), &b).unwrap();
+        assert_eq!(seq.data, par.data);
+    }
+
+    #[test]
+    fn degenerate_shapes_are_safe() {
+        let empty = Mat::zeros(0, 5);
+        assert_eq!(empty.gram().rows, 0);
+        assert_eq!(empty.gram_tr_with(&ThreadPool::seq()).rows, 5);
+        let a = Mat::zeros(3, 0);
+        assert_eq!(a.gram_tr_with(&ThreadPool::seq()).rows, 0);
+        let b = Mat::zeros(0, 4);
+        let c = Mat::zeros(4, 0);
+        assert_eq!(b.matmul(&Mat::zeros(5, 2)).is_err(), true);
+        let prod = Mat::zeros(2, 4).matmul(&c).unwrap();
+        assert_eq!((prod.rows, prod.cols), (2, 0));
     }
 }

@@ -17,11 +17,19 @@ use crate::io::manifest::LayerInfo;
 use crate::linalg::{log2_det_spd, Mat};
 use crate::tensor::Tensor;
 use crate::util::error::{Error, Result};
+use crate::util::threadpool::{self, ThreadPool};
+
+/// Coding length of one layer (Eq. 12) on the shared host pool.
+pub fn coding_length(w2d_rows_n: &Mat, eps2: f64) -> Result<f64> {
+    coding_length_with(threadpool::global(), w2d_rows_n, eps2)
+}
 
 /// Coding length of one layer (Eq. 12), computed on the smaller Gram side
 /// (Sylvester: det(I + c·WWᵀ) = det(I + c·WᵀW)) so cost is
-/// O(min(n,m)²·max(n,m)).
-pub fn coding_length(w2d_rows_n: &Mat, eps2: f64) -> Result<f64> {
+/// O(min(n,m)²·max(n,m)). The Gram product runs blocked across `pool`;
+/// the n > m side uses `gram_tr_with`, which reads the row-major storage
+/// directly instead of materializing the transpose.
+pub fn coding_length_with(pool: &ThreadPool, w2d_rows_n: &Mat, eps2: f64) -> Result<f64> {
     let n = w2d_rows_n.rows; // filter dimension
     let m = w2d_rows_n.cols; // number of filters
     if n == 0 || m == 0 {
@@ -30,17 +38,35 @@ pub fn coding_length(w2d_rows_n: &Mat, eps2: f64) -> Result<f64> {
     let c = n as f64 / (m as f64 * eps2);
     // Gram on the smaller side.
     let mut a = if n <= m {
-        w2d_rows_n.gram() // n x n
+        w2d_rows_n.gram_with(pool) // n x n
     } else {
-        // WᵀW: treat columns as rows by transposing via gram of the
-        // transpose — build the transpose explicitly (small matrices).
+        w2d_rows_n.gram_tr_with(pool) // m x m, no transposed copy
+    };
+    a.scale(c);
+    a.add_scaled_identity(1.0);
+    Ok(0.5 * log2_det_spd(&a)?)
+}
+
+/// The original single-threaded implementation (naive Gram + explicit
+/// transpose on the n > m side). Reference baseline for property tests
+/// and the before/after hotpath benches.
+pub fn coding_length_scalar(w2d_rows_n: &Mat, eps2: f64) -> Result<f64> {
+    let n = w2d_rows_n.rows;
+    let m = w2d_rows_n.cols;
+    if n == 0 || m == 0 {
+        return Err(Error::shape("empty weight matrix"));
+    }
+    let c = n as f64 / (m as f64 * eps2);
+    let mut a = if n <= m {
+        w2d_rows_n.gram_naive()
+    } else {
         let mut t = Mat::zeros(m, n);
         for i in 0..n {
             for j in 0..m {
                 *t.at_mut(j, i) = w2d_rows_n.at(i, j);
             }
         }
-        t.gram() // m x m
+        t.gram_naive()
     };
     a.scale(c);
     a.add_scaled_identity(1.0);
@@ -74,11 +100,26 @@ pub struct Allocation {
     pub size_bytes: f64,
 }
 
+/// Algorithm 1 on the shared host pool.
+pub fn allocate(
+    layers: &[LayerInfo],
+    weights: &[Tensor],
+    bit_list: &[u8],
+    eps2: f64,
+) -> Result<Allocation> {
+    allocate_with(threadpool::global(), layers, weights, bit_list, eps2)
+}
+
 /// Algorithm 1: assign a bit width to every layer.
 ///
 /// `pinned` layers (first/last, §4.1) are forced to 8-bit and excluded
-/// from clustering, mirroring the paper's setup.
-pub fn allocate(
+/// from clustering, mirroring the paper's setup. Per-layer coding
+/// lengths are independent, so they fan out across `pool` with dynamic
+/// load balancing (layer sizes vary by orders of magnitude); each
+/// worker computes its layer's Gram sequentially to avoid nested
+/// oversubscription.
+pub fn allocate_with(
+    pool: &ThreadPool,
     layers: &[LayerInfo],
     weights: &[Tensor],
     bit_list: &[u8],
@@ -87,15 +128,26 @@ pub fn allocate(
     if bit_list.is_empty() {
         return Err(Error::config("empty bit list"));
     }
+    if layers.len() != weights.len() {
+        return Err(Error::shape(format!(
+            "allocate: {} layers but {} weight tensors",
+            layers.len(),
+            weights.len()
+        )));
+    }
     let mut bits_sorted: Vec<u8> = bit_list.to_vec();
     bits_sorted.sort_unstable();
 
-    // Step 1-5: coding lengths.
-    let mut lengths = Vec::with_capacity(layers.len());
-    for (l, w) in layers.iter().zip(weights) {
-        let mat = coding_view(w, l.coding_n, l.coding_m)?;
-        lengths.push(coding_length(&mat, eps2)?);
-    }
+    // Step 1-5: coding lengths, one layer per pool task.
+    let k_layers = layers.len();
+    let seq = ThreadPool::seq();
+    let lengths: Vec<f64> = pool
+        .scope_map(k_layers, |i| -> Result<f64> {
+            let mat = coding_view(&weights[i], layers[i].coding_n, layers[i].coding_m)?;
+            coding_length_with(&seq, &mat, eps2)
+        })
+        .into_iter()
+        .collect::<Result<Vec<f64>>>()?;
 
     // Steps 6-8: cluster the non-pinned lengths, map sorted centers to
     // sorted bit widths.
@@ -157,26 +209,8 @@ mod tests {
     use super::*;
 
     fn layer(i: usize, params: usize, n: usize, m: usize, pinned: bool) -> LayerInfo {
-        LayerInfo {
-            index: i,
-            name: format!("l{i}"),
-            kind: "conv".into(),
-            act: "relu".into(),
-            wshape: vec![n, m],
-            params,
-            coding_n: n,
-            coding_m: m,
-            in_shape: vec![],
-            out_shape: vec![],
-            pinned_8bit: pinned,
-            downsample: false,
-            sig: "s".into(),
-            calib_step: String::new(),
-            adaround_step: String::new(),
-            layer_fwd: String::new(),
-            calib_scan: String::new(),
-            adaround_scan: String::new(),
-        }
+        debug_assert_eq!(params, n * m);
+        LayerInfo::synthetic(i, n, m, pinned)
     }
 
     fn gaussian_tensor(n: usize, m: usize, std: f32, seed: u64) -> Tensor {

@@ -1,0 +1,238 @@
+//! Fused, zero-allocation, multithreaded host kernels.
+//!
+//! The scalar quantizer entry points (`rounding::nearest`, `QGrid::
+//! nearest`, `scale::quant_mse`) are the semantic reference; everything
+//! here is a performance re-expression with **identical outputs**:
+//!
+//! * [`round_half_even_fast`] / [`floor_fast`] / [`ceil_fast`] replace
+//!   the branchy scalar rounding with straight-line float arithmetic
+//!   (the classic `(x + 1.5·2²³) − 1.5·2²³` trick, which rounds at
+//!   integer precision with ties-to-even because that is exactly what
+//!   f32 addition does at that magnitude). Branch-free means LLVM
+//!   auto-vectorizes the kernels, which is where most of the
+//!   single-thread win comes from. Composed with the grid clamp these
+//!   are bit-identical to the scalar forms for every input (the trick
+//!   is exact for |x| ≤ 2²², and any quotient beyond that clamps to the
+//!   same grid edge either way; the lone difference is that an exact
+//!   `-0.0` comes back as `+0.0`, numerically equal).
+//! * [`quant_sse_multi`] fuses the MSE scale search: one pass over the
+//!   tensor evaluates every candidate scale (≤ [`MAX_SCALES`]), so a
+//!   25-candidate refinement round reads the 147k-element tensor once
+//!   instead of 25 times, chunked across the pool with per-thread f64
+//!   accumulators merged in deterministic chunk order.
+//!
+//! On precomputed reciprocals: multiplying by `1/s` instead of dividing
+//! by `s` changes the quotient by an ulp, which flips rounding decisions
+//! for weights sitting on a rounding-cell boundary — the outputs would
+//! no longer be bit-identical to the scalar reference or to the device
+//! executables (which also divide). We deliberately keep IEEE division;
+//! the fusion + vectorization + chunking above deliver the speedup
+//! without giving up exactness, and `vdivps` pipelines well enough that
+//! division is not the bottleneck in the vectorized loop.
+
+use crate::util::threadpool::{ThreadPool, MIN_PAR_CHUNK};
+
+/// Upper bound on the candidate-scale count a fused sweep can evaluate
+/// (the search uses 25 per refinement round).
+pub const MAX_SCALES: usize = 32;
+
+/// 1.5 · 2²³ — adding then subtracting this constant rounds an f32 to
+/// integer precision with IEEE ties-to-even.
+const MAGIC: f32 = 12_582_912.0;
+
+/// Branch-free round-half-to-even. Exact for |x| ≤ 2²²; beyond that the
+/// result may differ from true rounding by the local ulp, which the grid
+/// clamp (|edge| ≤ 2¹⁵) absorbs — see the module docs.
+#[inline(always)]
+pub fn round_half_even_fast(x: f32) -> f32 {
+    (x + MAGIC) - MAGIC
+}
+
+/// Branch-free floor with the same exactness domain as
+/// [`round_half_even_fast`]: round to nearest, then step down when the
+/// rounded value overshot.
+#[inline(always)]
+pub fn floor_fast(x: f32) -> f32 {
+    let r = round_half_even_fast(x);
+    if r > x {
+        r - 1.0
+    } else {
+        r
+    }
+}
+
+/// Branch-free ceil, mirror of [`floor_fast`].
+#[inline(always)]
+pub fn ceil_fast(x: f32) -> f32 {
+    let r = round_half_even_fast(x);
+    if r < x {
+        r + 1.0
+    } else {
+        r
+    }
+}
+
+/// Fused multi-scale quantization error: for every candidate scale
+/// `scales[j]`, accumulate Σᵢ (wᵢ − nearest(wᵢ; sⱼ))² into `out_sse[j]`
+/// in a single pass over `w`, chunked across `pool`.
+///
+/// Per-candidate math is the scalar `QGrid::nearest` expression verbatim
+/// (division included), so with a single chunk the accumulated sums are
+/// bit-identical to `scale::quant_mse · len`. Chunk boundaries are a
+/// **fixed size** ([`MIN_PAR_CHUNK`]) and partials merge in chunk order,
+/// so the result depends only on `w` — not on the pool size or core
+/// count; threads just drain the chunk list. A tensor that fits one
+/// chunk therefore reproduces the scalar sum exactly on every machine.
+pub fn quant_sse_multi(
+    pool: &ThreadPool,
+    w: &[f32],
+    bits: u8,
+    scales: &[f32],
+    out_sse: &mut [f64],
+) {
+    assert!(scales.len() <= MAX_SCALES, "too many candidate scales");
+    assert_eq!(scales.len(), out_sse.len());
+    let half = 1i64 << (bits - 1);
+    let lo = -(half as f32);
+    let hi = (half - 1) as f32;
+    let n_chunks = (w.len() / MIN_PAR_CHUNK).max(1);
+    let chunk = (w.len() + n_chunks - 1) / n_chunks.max(1);
+    let sse_chunk = |chunk_w: &[f32]| {
+        let mut acc = [0.0f64; MAX_SCALES];
+        for &v in chunk_w {
+            for (j, &s) in scales.iter().enumerate() {
+                let q = s * round_half_even_fast(v / s).clamp(lo, hi);
+                let d = (v - q) as f64;
+                acc[j] += d * d;
+            }
+        }
+        acc
+    };
+    let partials: Vec<[f64; MAX_SCALES]> = if n_chunks <= 1 {
+        vec![sse_chunk(w)]
+    } else {
+        pool.scope_map(n_chunks, |ci| {
+            let start = ci * chunk;
+            let end = (start + chunk).min(w.len());
+            sse_chunk(&w[start..end])
+        })
+    };
+    for o in out_sse.iter_mut() {
+        *o = 0.0;
+    }
+    for acc in &partials {
+        for (j, o) in out_sse.iter_mut().enumerate() {
+            *o += acc[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{round_half_even, QGrid};
+    use crate::util::rng::Rng;
+    use crate::util::threadpool::ThreadPool;
+
+    #[test]
+    fn fast_round_matches_reference_on_half_grid() {
+        // every half-integer in [-500, 500] — all the tie cases — plus
+        // the quarter-offsets around them
+        for i in -2000..=2000i32 {
+            let x = i as f32 * 0.25;
+            assert_eq!(
+                round_half_even_fast(x),
+                round_half_even(x),
+                "rhe mismatch at {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn fast_round_matches_reference_on_random_values() {
+        let mut rng = Rng::new(0xFA57);
+        for _ in 0..20_000 {
+            let x = rng.gaussian_f32(0.0, 300.0);
+            assert_eq!(round_half_even_fast(x), round_half_even(x), "at {x}");
+        }
+    }
+
+    #[test]
+    fn fast_floor_ceil_match_std() {
+        let mut rng = Rng::new(0xF100);
+        for i in -2000..=2000i32 {
+            let x = i as f32 * 0.25;
+            assert_eq!(floor_fast(x), x.floor(), "floor at {x}");
+            assert_eq!(ceil_fast(x), x.ceil(), "ceil at {x}");
+        }
+        for _ in 0..20_000 {
+            let x = rng.gaussian_f32(0.0, 500.0);
+            assert_eq!(floor_fast(x), x.floor(), "floor at {x}");
+            assert_eq!(ceil_fast(x), x.ceil(), "ceil at {x}");
+        }
+    }
+
+    #[test]
+    fn clamped_composition_handles_extremes() {
+        // Values far outside the exactness domain of the magic constant
+        // must still agree once the grid clamp is applied.
+        let g = QGrid::signed(8, 0.37).unwrap();
+        for v in [
+            1.0e9f32,
+            -1.0e9,
+            4.2e6,
+            -4.2e6,
+            5.0e6,
+            3.3e7,
+            f32::MAX,
+            f32::MIN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            0.0,
+            -0.0,
+        ] {
+            let fast = g.scale * round_half_even_fast(v / g.scale).clamp(g.lo, g.hi);
+            assert_eq!(fast, g.nearest(v), "nearest mismatch at {v}");
+            let ffast = g.scale * floor_fast(v / g.scale).clamp(g.lo, g.hi);
+            let fref = g.scale * (v / g.scale).floor().clamp(g.lo, g.hi);
+            assert_eq!(ffast, fref, "floor mismatch at {v}");
+        }
+    }
+
+    #[test]
+    fn sse_multi_matches_single_scale_reference() {
+        let mut rng = Rng::new(7);
+        let mut w = vec![0.0f32; 4096];
+        rng.fill_gaussian(&mut w, 0.0, 0.05);
+        let scales = [0.004f32, 0.007, 0.011, 0.02];
+        let mut sse = [0.0f64; 4];
+        let pool = ThreadPool::seq();
+        quant_sse_multi(&pool, &w, 4, &scales, &mut sse);
+        for (j, &s) in scales.iter().enumerate() {
+            let g = QGrid::signed(4, s).unwrap();
+            let mut acc = 0.0f64;
+            for &v in &w {
+                let d = (v - g.nearest(v)) as f64;
+                acc += d * d;
+            }
+            assert_eq!(sse[j], acc, "sse mismatch for scale {s}");
+        }
+    }
+
+    #[test]
+    fn sse_multi_independent_of_pool_size() {
+        // Chunk boundaries are fixed-size, so the f64 merge order — and
+        // therefore the result bits — must not depend on the pool.
+        let mut rng = Rng::new(8);
+        let mut w = vec![0.0f32; 80_000];
+        rng.fill_gaussian(&mut w, 0.0, 0.05);
+        let scales = [0.004f32, 0.011];
+        let mut seq = [0.0f64; 2];
+        let mut par = [0.0f64; 2];
+        quant_sse_multi(&ThreadPool::seq(), &w, 4, &scales, &mut seq);
+        for threads in [2usize, 4, 7] {
+            quant_sse_multi(&ThreadPool::new(threads), &w, 4, &scales, &mut par);
+            assert_eq!(seq, par, "pool size {threads} changed the sums");
+        }
+    }
+}

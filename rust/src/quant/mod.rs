@@ -5,6 +5,7 @@
 //! baselines (Nearest / Floor / Ceil / Stochastic), the Attention-Round
 //! probability model of Eq. (2), and activation observers for Table 2/3/5.
 
+pub mod kernel;
 pub mod observer;
 pub mod perchannel;
 pub mod rounding;

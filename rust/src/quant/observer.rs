@@ -30,12 +30,27 @@ pub enum ObserverKind {
 
 /// Compute activation quant params for a given bit width from samples.
 pub fn observe(xs: &[f32], bits: u8, kind: ObserverKind) -> Result<ActQuantParams> {
+    let mut scratch = Vec::new();
+    observe_with(xs, bits, kind, &mut scratch)
+}
+
+/// [`observe`] with a caller-provided scratch buffer: the percentile
+/// observer selects into `scratch` instead of allocating, so a pipeline
+/// observing dozens of layers reuses one buffer (see
+/// `coordinator::pipeline`).
+pub fn observe_with(
+    xs: &[f32],
+    bits: u8,
+    kind: ObserverKind,
+    scratch: &mut Vec<f32>,
+) -> Result<ActQuantParams> {
     let levels = ((1u32 << bits) - 1) as f32;
     let (lo, hi) = match kind {
         ObserverKind::MinMax => ops::min_max(xs),
-        ObserverKind::Percentile => {
-            (ops::percentile(xs, 0.1), ops::percentile(xs, 99.9))
-        }
+        ObserverKind::Percentile => (
+            ops::percentile_with(xs, 0.1, scratch),
+            ops::percentile_with(xs, 99.9, scratch),
+        ),
         ObserverKind::Mse => return mse_observe(xs, bits),
     };
     let lo = lo.min(0.0); // keep 0 representable (ReLU outputs, padding)
@@ -138,5 +153,20 @@ mod tests {
         let xs = vec![0.0f32; 128];
         let p = observe(&xs, 4, ObserverKind::Mse).unwrap();
         assert!(p.scale > 0.0 && p.scale.is_finite());
+    }
+
+    #[test]
+    fn percentile_observer_scratch_reuse_is_equivalent() {
+        let xs = relu_acts(4000, 6);
+        let fresh = observe(&xs, 8, ObserverKind::Percentile).unwrap();
+        let mut scratch = Vec::new();
+        for _ in 0..3 {
+            let p = observe_with(&xs, 8, ObserverKind::Percentile, &mut scratch).unwrap();
+            assert_eq!(p.scale, fresh.scale);
+            assert_eq!(p.zero, fresh.zero);
+        }
+        // percentile clipping must sit at or inside the min/max range
+        let mm = observe(&xs, 8, ObserverKind::MinMax).unwrap();
+        assert!(fresh.scale <= mm.scale * 1.0001);
     }
 }

@@ -6,8 +6,10 @@
 //! stay in f32, which is what the forward executables consume (fake
 //! quantization, standard for PTQ evaluation).
 
+use super::kernel::{ceil_fast, floor_fast, round_half_even_fast};
 use super::{round_half_even, QGrid};
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Rounding {
@@ -86,6 +88,96 @@ pub fn attention_finalize(w: &[f32], alpha: &[f32], g: &QGrid) -> Vec<f32> {
         .zip(alpha)
         .map(|(&v, &a)| g.scale * round_half_even(v / g.scale + a).clamp(g.lo, g.hi))
         .collect()
+}
+
+// ---- in-place parallel kernels (quant::kernel subsystem) ----------------
+//
+// Zero-allocation `_into` variants of every rounding kernel above: the
+// caller owns the output buffer, chunks run across the scoped pool, and
+// the per-element math uses the branch-free (auto-vectorizing) rounding
+// primitives from `quant::kernel` — bit-identical to the scalar forms
+// (see kernel.rs for the exactness argument; verified by
+// tests/kernel_properties.rs).
+
+/// In-place parallel [`nearest`].
+pub fn nearest_into(pool: &ThreadPool, w: &[f32], g: &QGrid, out: &mut [f32]) {
+    let (s, lo, hi) = (g.scale, g.lo, g.hi);
+    pool.par_chunks(w, out, |_, ic, oc| {
+        for (o, &v) in oc.iter_mut().zip(ic) {
+            *o = s * round_half_even_fast(v / s).clamp(lo, hi);
+        }
+    });
+}
+
+/// In-place parallel [`floor`].
+pub fn floor_into(pool: &ThreadPool, w: &[f32], g: &QGrid, out: &mut [f32]) {
+    let (s, lo, hi) = (g.scale, g.lo, g.hi);
+    pool.par_chunks(w, out, |_, ic, oc| {
+        for (o, &v) in oc.iter_mut().zip(ic) {
+            *o = s * floor_fast(v / s).clamp(lo, hi);
+        }
+    });
+}
+
+/// In-place parallel [`ceil`].
+pub fn ceil_into(pool: &ThreadPool, w: &[f32], g: &QGrid, out: &mut [f32]) {
+    let (s, lo, hi) = (g.scale, g.lo, g.hi);
+    pool.par_chunks(w, out, |_, ic, oc| {
+        for (o, &v) in oc.iter_mut().zip(ic) {
+            *o = s * ceil_fast(v / s).clamp(lo, hi);
+        }
+    });
+}
+
+/// In-place [`stochastic`]. Sequential by design: the RNG stream must be
+/// consumed in element order to stay bit-identical (and reproducible)
+/// with the allocating form — the win here is allocation-free reuse.
+pub fn stochastic_into(w: &[f32], g: &QGrid, rng: &mut Rng, out: &mut [f32]) {
+    assert_eq!(w.len(), out.len(), "stochastic_into arity");
+    for (o, &v) in out.iter_mut().zip(w) {
+        let q = v / g.scale;
+        let f = q.floor();
+        let p_up = q - f;
+        let r = if (rng.next_f64() as f32) < p_up { f + 1.0 } else { f };
+        *o = g.scale * r.clamp(g.lo, g.hi);
+    }
+}
+
+/// In-place parallel [`attention_finalize`].
+pub fn attention_finalize_into(
+    pool: &ThreadPool,
+    w: &[f32],
+    alpha: &[f32],
+    g: &QGrid,
+    out: &mut [f32],
+) {
+    assert_eq!(w.len(), alpha.len(), "attention_finalize_into arity");
+    let (s, lo, hi) = (g.scale, g.lo, g.hi);
+    pool.par_chunks(w, out, |off, ic, oc| {
+        let ac = &alpha[off..off + ic.len()];
+        for ((o, &v), &a) in oc.iter_mut().zip(ic).zip(ac) {
+            *o = s * round_half_even_fast(v / s + a).clamp(lo, hi);
+        }
+    });
+}
+
+/// In-place parallel [`adaround_finalize`].
+pub fn adaround_finalize_into(
+    pool: &ThreadPool,
+    w: &[f32],
+    v: &[f32],
+    g: &QGrid,
+    out: &mut [f32],
+) {
+    assert_eq!(w.len(), v.len(), "adaround_finalize_into arity");
+    let (s, lo, hi) = (g.scale, g.lo, g.hi);
+    pool.par_chunks(w, out, |off, ic, oc| {
+        let vc = &v[off..off + ic.len()];
+        for ((o, &wv), &vv) in oc.iter_mut().zip(ic).zip(vc) {
+            let up = if adaround_h(vv) >= 0.5 { 1.0 } else { 0.0 };
+            *o = s * (floor_fast(wv / s) + up).clamp(lo, hi);
+        }
+    });
 }
 
 /// AdaRound's rectified sigmoid h(V) = clip(sigmoid(V)·1.2 − 0.1, 0, 1).
@@ -180,6 +272,36 @@ mod tests {
         assert_eq!(adaround_h(-10.0), 0.0);
         assert_eq!(adaround_h(10.0), 1.0);
         assert!((adaround_h(0.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn into_kernels_match_scalar_kernels() {
+        // big enough to split into real parallel chunks (> MIN_PAR_CHUNK)
+        let mut rng = Rng::new(0x1217);
+        let mut w = vec![0.0f32; 40_000];
+        rng.fill_gaussian(&mut w, 0.0, 0.3);
+        let mut alpha = vec![0.0f32; w.len()];
+        rng.fill_gaussian(&mut alpha, 0.0, 0.5);
+        let g = QGrid::signed(4, 0.07).unwrap();
+        let pool = ThreadPool::new(3);
+        let mut out = vec![0.0f32; w.len()];
+
+        nearest_into(&pool, &w, &g, &mut out);
+        assert_eq!(out, nearest(&w, &g));
+        floor_into(&pool, &w, &g, &mut out);
+        assert_eq!(out, floor(&w, &g));
+        ceil_into(&pool, &w, &g, &mut out);
+        assert_eq!(out, ceil(&w, &g));
+        attention_finalize_into(&pool, &w, &alpha, &g, &mut out);
+        assert_eq!(out, attention_finalize(&w, &alpha, &g));
+        adaround_finalize_into(&pool, &w, &alpha, &g, &mut out);
+        assert_eq!(out, adaround_finalize(&w, &alpha, &g));
+
+        // stochastic: same seed -> same stream -> same output
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        stochastic_into(&w, &g, &mut r1, &mut out);
+        assert_eq!(out, stochastic(&w, &g, &mut r2));
     }
 
     #[test]

@@ -6,13 +6,23 @@
 //! scales around max|w| / hi, then refine twice around the winner. The
 //! MSE(s) landscape is piecewise-smooth with many local minima, so a
 //! sweep beats gradient methods and is trivially robust.
+//!
+//! The sweep is executed by the fused `quant::kernel::quant_sse_multi`
+//! kernel: every refinement round reads the tensor **once** and evaluates
+//! all 25 candidates per element (the scalar form reads it 25 times),
+//! chunked across the thread pool. Candidate enumeration, tie-breaking,
+//! and refinement updates are kept verbatim from the scalar reference
+//! ([`mse_optimal_scale_scalar`]), so both searches walk the same
+//! candidate sequence; with a sequential pool the selected scale is
+//! bit-identical (see tests/kernel_properties.rs).
 
-use super::QGrid;
+use super::{kernel, QGrid};
 use crate::tensor::ops;
 use crate::util::error::Result;
+use crate::util::threadpool::{self, ThreadPool};
 
 /// MSE between w and nearest-round(w) on a signed grid with scale s.
-fn quant_mse(w: &[f32], bits: u8, s: f32) -> f64 {
+pub fn quant_mse(w: &[f32], bits: u8, s: f32) -> f64 {
     let g = QGrid::signed(bits, s).expect("valid grid");
     let mut acc = 0.0f64;
     for &v in w {
@@ -22,11 +32,57 @@ fn quant_mse(w: &[f32], bits: u8, s: f32) -> f64 {
     acc / w.len() as f64
 }
 
-/// Find the MSE-optimal per-tensor scale for `bits`-bit signed weights.
+/// Find the MSE-optimal per-tensor scale for `bits`-bit signed weights
+/// on the shared host pool.
 pub fn mse_optimal_scale(w: &[f32], bits: u8) -> Result<f32> {
+    mse_optimal_scale_with(threadpool::global(), w, bits)
+}
+
+/// Pool-explicit fused search: 3 refinement rounds, one tensor pass per
+/// round evaluating all 25 candidate scales at once.
+pub fn mse_optimal_scale_with(pool: &ThreadPool, w: &[f32], bits: u8) -> Result<f32> {
     let amax = ops::abs_max(w).max(1e-8);
     let half = (1i64 << (bits - 1)) as f32;
     // candidate range: [amax/half * 0.3, amax/half * 1.2]
+    let base = amax / half;
+    let mut lo = base * 0.3;
+    let mut hi = base * 1.2;
+    let mut best_s = base;
+    let mut best_e = f64::INFINITY;
+    let mut cands = [0.0f32; kernel::MAX_SCALES];
+    let mut sse = [0.0f64; kernel::MAX_SCALES];
+    for _round in 0..3 {
+        let steps = 24;
+        let mut nc = 0usize;
+        for i in 0..=steps {
+            let s = lo + (hi - lo) * i as f32 / steps as f32;
+            if s <= 0.0 {
+                continue;
+            }
+            cands[nc] = s;
+            nc += 1;
+        }
+        kernel::quant_sse_multi(pool, w, bits, &cands[..nc], &mut sse[..nc]);
+        for j in 0..nc {
+            let e = sse[j] / w.len() as f64;
+            if e < best_e {
+                best_e = e;
+                best_s = cands[j];
+            }
+        }
+        let width = (hi - lo) / steps as f32;
+        lo = (best_s - width).max(base * 0.05);
+        hi = best_s + width;
+    }
+    Ok(best_s)
+}
+
+/// The scalar reference search: one full tensor sweep per candidate.
+/// Kept as the semantic baseline for the fused kernel's property tests
+/// and the before/after hotpath benches.
+pub fn mse_optimal_scale_scalar(w: &[f32], bits: u8) -> Result<f32> {
+    let amax = ops::abs_max(w).max(1e-8);
+    let half = (1i64 << (bits - 1)) as f32;
     let base = amax / half;
     let mut lo = base * 0.3;
     let mut hi = base * 1.2;
@@ -101,5 +157,38 @@ mod tests {
         let e4 = quant_mse(&w, 4, mse_optimal_scale(&w, 4).unwrap());
         let e8 = quant_mse(&w, 8, mse_optimal_scale(&w, 8).unwrap());
         assert!(e3 > e4 && e4 > e8, "e3={e3} e4={e4} e8={e8}");
+    }
+
+    #[test]
+    fn fused_search_matches_scalar_search_sequentially() {
+        // With one chunk the fused kernel accumulates in the scalar
+        // element order: the selected scale is bit-identical.
+        let pool = crate::util::threadpool::ThreadPool::seq();
+        for seed in [5u64, 6, 7] {
+            let w = gaussian_weights(3000, seed);
+            for bits in [3u8, 4, 8] {
+                let fused = mse_optimal_scale_with(&pool, &w, bits).unwrap();
+                let scalar = mse_optimal_scale_scalar(&w, bits).unwrap();
+                assert_eq!(fused, scalar, "seed={seed} bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_search_parallel_quality_matches_scalar() {
+        // Across chunks the f64 merge order differs; the selected scale
+        // must be quality-equivalent to reassociation noise.
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let w = gaussian_weights(100_000, 9);
+        for bits in [3u8, 4] {
+            let fused = mse_optimal_scale_with(&pool, &w, bits).unwrap();
+            let scalar = mse_optimal_scale_scalar(&w, bits).unwrap();
+            let e_f = quant_mse(&w, bits, fused);
+            let e_s = quant_mse(&w, bits, scalar);
+            assert!(
+                e_f <= e_s * (1.0 + 1e-9) && e_s <= e_f * (1.0 + 1e-9),
+                "bits={bits}: fused mse {e_f} vs scalar {e_s}"
+            );
+        }
     }
 }

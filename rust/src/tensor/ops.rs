@@ -45,11 +45,20 @@ pub fn sum_sq(xs: &[f32]) -> f64 {
     xs.iter().map(|&v| (v as f64) * (v as f64)).sum()
 }
 
+/// Index of the first maximum, ignoring NaNs.
+///
+/// A plain `v > best` scan is NaN-poisoned: with a NaN at index 0 every
+/// comparison is false and the NaN's index comes back silently. NaN
+/// entries are skipped instead; an all-NaN (or empty) slice returns 0.
 pub fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    let mut found = false;
     for (i, &v) in xs.iter().enumerate() {
-        if v > xs[best] {
+        if !v.is_nan() && (!found || v > best_v) {
             best = i;
+            best_v = v;
+            found = true;
         }
     }
     best
@@ -68,13 +77,28 @@ pub fn top1_accuracy(logits: &Tensor, labels: &[i32]) -> f64 {
     correct as f64 / n as f64
 }
 
-/// Percentile (0..=100) by copy-and-select; used by observers.
+/// Percentile (0..=100) by copy-and-select; used by observers. See
+/// [`percentile_with`] for the allocation-free form.
 pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    let mut scratch = Vec::new();
+    percentile_with(xs, p, &mut scratch)
+}
+
+/// Percentile (0..=100) via `select_nth_unstable_by` — O(n) instead of
+/// the O(n log n) full sort — into a caller-provided scratch buffer, so
+/// repeated observer calls (one per layer per percentile) reuse one
+/// allocation. NaN inputs no longer panic (the old sort did): under
+/// IEEE `total_cmp` positive NaNs order above +∞ and negative NaNs
+/// below −∞, so extreme percentiles of NaN-polluted data can return
+/// NaN — observers assume finite activations either way.
+pub fn percentile_with(xs: &[f32], p: f64, scratch: &mut Vec<f32>) -> f32 {
     assert!(!xs.is_empty());
-    let mut v: Vec<f32> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-    v[idx.min(v.len() - 1)]
+    scratch.clear();
+    scratch.extend_from_slice(xs);
+    let idx = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+    let idx = idx.min(xs.len() - 1);
+    let (_, v, _) = scratch.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
+    *v
 }
 
 #[cfg(test)]
@@ -111,5 +135,30 @@ mod tests {
         let xs = [1.0, 2.0, 3.0, 4.0];
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_select_matches_full_sort() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut xs = vec![0.0f32; 5000];
+        rng.fill_gaussian(&mut xs, 0.0, 2.0);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut scratch = Vec::new();
+        for p in [0.0, 0.1, 25.0, 50.0, 99.9, 100.0] {
+            let idx = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+            let want = sorted[idx.min(xs.len() - 1)];
+            assert_eq!(percentile_with(&xs, p, &mut scratch), want, "p={p}");
+            assert_eq!(percentile(&xs, p), want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn argmax_ignores_nan() {
+        assert_eq!(argmax(&[f32::NAN, 1.0, 3.0, 2.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0); // all-NaN falls back to 0
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
     }
 }

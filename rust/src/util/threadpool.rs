@@ -1,15 +1,33 @@
-//! Fixed-size worker pool (tokio/rayon are not offline-available).
+//! Host-side worker pool (tokio/rayon are not offline-available).
 //!
-//! The coordinator uses it for host-side parallel work that doesn't touch
-//! the (single) PJRT device stream: npy decoding, per-layer coding-length
-//! computation, observer statistics. Scoped API: `scope` blocks until all
-//! spawned closures finish, so borrows of the enclosing stack frame are
-//! sound to move in via `'static` workarounds are unnecessary — we only
-//! accept `'static` jobs and let callers move owned shards in, which keeps
-//! the implementation small and the unsafe count at zero.
+//! Two execution styles, both bounded by the pool's `size`:
+//!
+//! * **Scoped fork-join** — [`ThreadPool::par_chunks`],
+//!   [`ThreadPool::par_chunk_map`], [`ThreadPool::scope_map`] and the raw
+//!   [`ThreadPool::scope`] escape hatch. Built on [`std::thread::scope`],
+//!   so closures may borrow slices from the caller's stack frame — no
+//!   `'static` boxing, no `Arc` shuffling, zero `unsafe`. Threads are
+//!   spawned per call and joined before return; a panicking worker
+//!   propagates the panic to the caller after every sibling has joined,
+//!   and the pool stays usable afterwards. Spawn cost is tens of
+//!   microseconds per worker, noise for the ≥100µs-per-chunk workloads
+//!   these methods are used for (rounding kernels, fused MSE scale
+//!   search, Gram blocks, per-layer coding lengths).
+//! * **Persistent queue** — [`ThreadPool::spawn`] / [`ThreadPool::map`]
+//!   for `'static` jobs (npy decoding, background CSV writes). Workers
+//!   are created lazily on first use, so pools that only ever run scoped
+//!   work never park idle threads.
+//!
+//! The coordinator pipeline shares one process-wide pool via [`global`],
+//! sized by the `AR_THREADS` env var (default: all cores). Hot paths in
+//! `quant::kernel`, `quant::scale`, `linalg`, and `mixed` take a
+//! `&ThreadPool` so callers control sharing; [`ThreadPool::seq`] gives a
+//! free sequential pool for contexts that are already parallel (e.g.
+//! per-layer coding lengths inside `mixed::allocate`).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -19,15 +37,13 @@ enum Msg {
     Shutdown,
 }
 
-pub struct ThreadPool {
+struct Inner {
     tx: Sender<Msg>,
     handles: Vec<JoinHandle<()>>,
-    size: usize,
 }
 
-impl ThreadPool {
-    pub fn new(size: usize) -> Self {
-        let size = size.max(1);
+impl Inner {
+    fn start(size: usize) -> Inner {
         let (tx, rx) = channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let handles = (0..size)
@@ -39,23 +55,200 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx, handles, size }
+        Inner { tx, handles }
+    }
+}
+
+pub struct ThreadPool {
+    size: usize,
+    /// Persistent workers for the `'static` queue API; `None` until the
+    /// first `spawn`/`map` call so scoped-only pools stay threadless.
+    inner: Mutex<Option<Inner>>,
+}
+
+/// Smallest per-chunk element count worth forking a scoped worker for.
+/// Below this, chunked methods run inline on the caller's thread.
+pub const MIN_PAR_CHUNK: usize = 16 * 1024;
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        ThreadPool {
+            size: size.max(1),
+            inner: Mutex::new(None),
+        }
     }
 
-    /// Pool sized to the machine (cores, min 1).
+    /// A sequential pool (size 1): every scoped method runs inline with
+    /// zero thread traffic. Useful inside already-parallel regions.
+    pub fn seq() -> Self {
+        Self::new(1)
+    }
+
+    /// Pool sized to the machine: `AR_THREADS` env override first, then
+    /// `available_parallelism`, min 1.
     pub fn default_for_host() -> Self {
-        let n = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        Self::new(n)
+        Self::new(host_threads())
     }
 
     pub fn size(&self) -> usize {
         self.size
     }
 
+    // ---- scoped fork-join API -------------------------------------------
+
+    /// Raw scoped escape hatch: exactly [`std::thread::scope`]. Present so
+    /// pool users don't also reach for `std::thread` directly; note the
+    /// spawned-thread count is the caller's responsibility here.
+    pub fn scope<'env, F, T>(&self, f: F) -> T
+    where
+        F: for<'scope> FnOnce(&'scope std::thread::Scope<'scope, 'env>) -> T,
+    {
+        std::thread::scope(f)
+    }
+
+    /// How many chunks to split `n` elements into: at most `size`, at
+    /// least one, and never chunks smaller than [`MIN_PAR_CHUNK`].
+    fn chunk_count(&self, n: usize) -> usize {
+        if n == 0 {
+            return 1;
+        }
+        self.size.min((n / MIN_PAR_CHUNK).max(1))
+    }
+
+    /// Elementwise kernel driver: split `input`/`output` into aligned
+    /// chunks and run `f(first_index, in_chunk, out_chunk)` on scoped
+    /// workers. Chunk boundaries depend only on lengths and pool size, so
+    /// results are deterministic; elementwise kernels are bit-identical
+    /// to their sequential form by construction.
+    pub fn par_chunks<I, O, F>(&self, input: &[I], output: &mut [O], f: F)
+    where
+        I: Sync,
+        O: Send,
+        F: Fn(usize, &[I], &mut [O]) + Sync,
+    {
+        assert_eq!(input.len(), output.len(), "par_chunks length mismatch");
+        let n = output.len();
+        let chunks = self.chunk_count(n);
+        if chunks <= 1 {
+            f(0, input, output);
+            return;
+        }
+        let chunk = (n + chunks - 1) / chunks;
+        std::thread::scope(|s| {
+            for (ci, (ic, oc)) in input
+                .chunks(chunk)
+                .zip(output.chunks_mut(chunk))
+                .enumerate()
+            {
+                let f = &f;
+                s.spawn(move || f(ci * chunk, ic, oc));
+            }
+        });
+    }
+
+    /// Reduction driver: run `f(first_index, chunk)` over parallel chunks
+    /// of `input`, returning the per-chunk results in chunk order (merge
+    /// order is therefore deterministic for a given pool size).
+    pub fn par_chunk_map<I, R, F>(&self, input: &[I], f: F) -> Vec<R>
+    where
+        I: Sync,
+        R: Send,
+        F: Fn(usize, &[I]) -> R + Sync,
+    {
+        let n = input.len();
+        let chunks = self.chunk_count(n);
+        if chunks <= 1 {
+            return vec![f(0, input)];
+        }
+        let chunk = (n + chunks - 1) / chunks;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = input
+                .chunks(chunk)
+                .enumerate()
+                .map(|(ci, c)| {
+                    let f = &f;
+                    s.spawn(move || f(ci * chunk, c))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("par_chunk_map worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Task-list driver with dynamic load balancing: run `f(i)` for every
+    /// `i in 0..n`, stealing indices from a shared counter (per-item cost
+    /// may vary wildly, e.g. per-layer coding lengths). Results come back
+    /// in index order.
+    pub fn scope_map<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let threads = self.size.min(n);
+        if threads <= 1 {
+            return (0..n).map(|i| f(i)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let next = &next;
+                let slots = &slots;
+                let f = &f;
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("scope_map slot lock")
+                    .expect("scope_map slot filled")
+            })
+            .collect()
+    }
+
+    /// Split a row-major buffer into contiguous row blocks (at most
+    /// `size`) and run `f(first_row, block)` on scoped workers. No
+    /// minimum-work gate: callers decide when the rows are worth the
+    /// spawns (see `Mat::matmul_with`).
+    pub fn par_row_blocks<T, F>(&self, out: &mut [T], row_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(row_len > 0, "par_row_blocks needs row_len > 0");
+        debug_assert_eq!(out.len() % row_len, 0);
+        let rows = out.len() / row_len;
+        let blocks = self.size.min(rows).max(1);
+        if blocks <= 1 {
+            f(0, out);
+            return;
+        }
+        let rows_per = (rows + blocks - 1) / blocks;
+        std::thread::scope(|s| {
+            for (bi, block) in out.chunks_mut(rows_per * row_len).enumerate() {
+                let f = &f;
+                s.spawn(move || f(bi * rows_per, block));
+            }
+        });
+    }
+
+    // ---- persistent 'static queue API -----------------------------------
+
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx.send(Msg::Run(Box::new(job))).expect("pool alive");
+        let mut guard = self.inner.lock().unwrap();
+        let inner = guard.get_or_insert_with(|| Inner::start(self.size));
+        inner.tx.send(Msg::Run(Box::new(job))).expect("pool alive");
     }
 
     /// Run `jobs` to completion, returning results in submission order.
@@ -97,13 +290,38 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.handles {
-            let _ = self.tx.send(Msg::Shutdown);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        let inner = self.inner.get_mut().ok().and_then(|o| o.take());
+        if let Some(inner) = inner {
+            for _ in &inner.handles {
+                let _ = inner.tx.send(Msg::Shutdown);
+            }
+            for h in inner.handles {
+                let _ = h.join();
+            }
         }
     }
+}
+
+/// Host thread budget: `AR_THREADS` override, else all cores, min 1.
+pub fn host_threads() -> usize {
+    if let Ok(v) = std::env::var("AR_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-wide shared pool used by the coordinator pipeline and by
+/// the pool-less convenience entry points (`mse_optimal_scale`,
+/// `coding_length`, `mixed::allocate`). Sized by `AR_THREADS` at first
+/// use.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(ThreadPool::default_for_host)
 }
 
 #[cfg(test)]
@@ -138,5 +356,111 @@ mod tests {
     #[test]
     fn zero_size_clamped() {
         assert_eq!(ThreadPool::new(0).size(), 1);
+        assert_eq!(ThreadPool::seq().size(), 1);
+    }
+
+    #[test]
+    fn par_chunks_matches_serial() {
+        let pool = ThreadPool::new(3);
+        let input: Vec<f32> = (0..100_000).map(|i| i as f32 * 0.5).collect();
+        let mut par = vec![0.0f32; input.len()];
+        pool.par_chunks(&input, &mut par, |_, ic, oc| {
+            for (o, &v) in oc.iter_mut().zip(ic) {
+                *o = v * 2.0 + 1.0;
+            }
+        });
+        let serial: Vec<f32> = input.iter().map(|&v| v * 2.0 + 1.0).collect();
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn par_chunks_small_input_runs_inline() {
+        // Below MIN_PAR_CHUNK everything runs on the caller thread.
+        let pool = ThreadPool::new(8);
+        let input = vec![1.0f32; 100];
+        let mut out = vec![0.0f32; 100];
+        let calls = AtomicUsize::new(0);
+        pool.par_chunks(&input, &mut out, |off, ic, oc| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            assert_eq!(off, 0);
+            oc.copy_from_slice(ic);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn par_chunk_map_offsets_cover_input() {
+        let pool = ThreadPool::new(4);
+        let input: Vec<f64> = (0..80_000).map(|i| i as f64).collect();
+        let partials = pool.par_chunk_map(&input, |off, chunk| {
+            // each worker proves it got the right window
+            assert_eq!(chunk[0], off as f64);
+            chunk.iter().sum::<f64>()
+        });
+        let total: f64 = partials.iter().sum();
+        assert_eq!(total, input.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn scope_map_returns_in_index_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.scope_map(37, |i| i * 3);
+        assert_eq!(out, (0..37).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_row_blocks_cover_all_rows() {
+        let pool = ThreadPool::new(3);
+        let (rows, cols) = (10, 7);
+        let mut buf = vec![0.0f64; rows * cols];
+        pool.par_row_blocks(&mut buf, cols, |first_row, block| {
+            for (r, row) in block.chunks_mut(cols).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (first_row + r) as f64;
+                }
+            }
+        });
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(buf[r * cols + c], r as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let input: Vec<f32> = vec![1.0; 4 * MIN_PAR_CHUNK];
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.par_chunk_map(&input, |off, _chunk| {
+                if off >= MIN_PAR_CHUNK {
+                    panic!("worker bang");
+                }
+                0usize
+            })
+        }));
+        assert!(caught.is_err(), "worker panic must propagate to the caller");
+        // The pool is scoped, so a poisoned worker cannot wedge it.
+        let ok = pool.par_chunk_map(&input, |_, chunk| chunk.len());
+        assert_eq!(ok.iter().sum::<usize>(), input.len());
+    }
+
+    #[test]
+    fn scope_spawns_borrowing_threads() {
+        let pool = ThreadPool::new(2);
+        let data = vec![1u64, 2, 3, 4];
+        let sum = pool.scope(|s| {
+            let h1 = s.spawn(|| data[..2].iter().sum::<u64>());
+            let h2 = s.spawn(|| data[2..].iter().sum::<u64>());
+            h1.join().unwrap() + h2.join().unwrap()
+        });
+        assert_eq!(sum, 10);
+    }
+
+    #[test]
+    fn host_threads_positive() {
+        assert!(host_threads() >= 1);
+        assert!(global().size() >= 1);
     }
 }

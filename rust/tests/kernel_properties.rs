@@ -1,0 +1,273 @@
+//! Property tests for the `quant::kernel` subsystem (via the in-repo
+//! util::proptest driver): every fused / in-place / parallel kernel must
+//! reproduce its scalar reference —
+//!
+//! * `_into` rounding kernels and the sequential fused scale search:
+//!   **bit-identical** (value-equal per element / per result);
+//! * cross-chunk parallel reductions (multi-chunk scale search, pooled
+//!   coding length): equal up to f64 reassociation, checked against
+//!   tolerances far above the reassociation bound;
+//! * parallel allocation: exactly the same bits and lengths as the
+//!   sequential pool (per-layer math is scheduled, not changed).
+//!
+//! Pure host math, no artifacts needed.
+
+use attention_round::io::manifest::LayerInfo;
+use attention_round::linalg::Mat;
+use attention_round::mixed;
+use attention_round::quant::rounding;
+use attention_round::quant::scale::{
+    mse_optimal_scale_scalar, mse_optimal_scale_with, quant_mse,
+};
+use attention_round::quant::QGrid;
+use attention_round::tensor::ops;
+use attention_round::tensor::Tensor;
+use attention_round::util::proptest::{check, shrink_vec, Config};
+use attention_round::util::rng::Rng;
+use attention_round::util::threadpool::ThreadPool;
+
+fn gen_weights_sized(r: &mut Rng, max_n: usize) -> Vec<f32> {
+    let n = 1 + r.below(max_n);
+    let std = 0.01 + r.next_f32() * 0.5;
+    let mut w = vec![0.0f32; n];
+    r.fill_gaussian(&mut w, 0.0, std);
+    w
+}
+
+#[test]
+fn prop_into_kernels_bit_identical_to_scalar() {
+    // sizes cross MIN_PAR_CHUNK so real multi-chunk splits are exercised
+    check(
+        Config { cases: 24, ..Default::default() },
+        |r| (gen_weights_sized(r, 50_000), r.next_u64()),
+        |(w, seed)| shrink_vec(w).into_iter().map(|v| (v, *seed)).collect(),
+        |(w, seed)| {
+            let bits = 2 + (seed % 7) as u8; // 2..=8
+            let s = 0.002 + (*seed % 1000) as f32 * 1e-4;
+            let g = QGrid::signed(bits, s).map_err(|e| e.to_string())?;
+            let mut arng = Rng::new(seed ^ 0xA1FA);
+            let mut alpha = vec![0.0f32; w.len()];
+            arng.fill_gaussian(&mut alpha, 0.0, 0.5);
+            let mut out = vec![0.0f32; w.len()];
+            for pool in [ThreadPool::seq(), ThreadPool::new(3)] {
+                rounding::nearest_into(&pool, w, &g, &mut out);
+                if out != rounding::nearest(w, &g) {
+                    return Err(format!("nearest_into diverged (pool {})", pool.size()));
+                }
+                rounding::floor_into(&pool, w, &g, &mut out);
+                if out != rounding::floor(w, &g) {
+                    return Err(format!("floor_into diverged (pool {})", pool.size()));
+                }
+                rounding::ceil_into(&pool, w, &g, &mut out);
+                if out != rounding::ceil(w, &g) {
+                    return Err(format!("ceil_into diverged (pool {})", pool.size()));
+                }
+                rounding::attention_finalize_into(&pool, w, &alpha, &g, &mut out);
+                if out != rounding::attention_finalize(w, &alpha, &g) {
+                    return Err(format!(
+                        "attention_finalize_into diverged (pool {})",
+                        pool.size()
+                    ));
+                }
+                rounding::adaround_finalize_into(&pool, w, &alpha, &g, &mut out);
+                if out != rounding::adaround_finalize(w, &alpha, &g) {
+                    return Err(format!(
+                        "adaround_finalize_into diverged (pool {})",
+                        pool.size()
+                    ));
+                }
+            }
+            // stochastic: identical RNG stream -> identical output
+            let mut r1 = Rng::new(seed ^ 0x57CC);
+            let mut r2 = Rng::new(seed ^ 0x57CC);
+            rounding::stochastic_into(w, &g, &mut r1, &mut out);
+            if out != rounding::stochastic(w, &g, &mut r2) {
+                return Err("stochastic_into diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_scale_search_bit_identical_sequentially() {
+    // One chunk -> the fused kernel accumulates in scalar element order
+    // -> the selected scale must be bit-identical.
+    check(
+        Config { cases: 24, ..Default::default() },
+        |r| gen_weights_sized(r, 6_000),
+        |w| shrink_vec(w),
+        |w| {
+            let pool = ThreadPool::seq();
+            for bits in [3u8, 4, 8] {
+                let fused = mse_optimal_scale_with(&pool, w, bits).map_err(|e| e.to_string())?;
+                let scalar = mse_optimal_scale_scalar(w, bits).map_err(|e| e.to_string())?;
+                if fused != scalar {
+                    return Err(format!("bits {bits}: fused {fused} != scalar {scalar}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_scale_search_parallel_quality_equal() {
+    // Across chunks the f64 merge order differs; the selected scale must
+    // quantize exactly as well as the scalar search's choice.
+    check(
+        Config { cases: 6, ..Default::default() },
+        |r| {
+            let std = 0.02 + r.next_f32() * 0.2;
+            let mut w = vec![0.0f32; 60_000];
+            r.fill_gaussian(&mut w, 0.0, std);
+            w
+        },
+        |w| shrink_vec(w),
+        |w| {
+            let pool = ThreadPool::new(4);
+            for bits in [3u8, 4] {
+                let fused = mse_optimal_scale_with(&pool, w, bits).map_err(|e| e.to_string())?;
+                let scalar = mse_optimal_scale_scalar(w, bits).map_err(|e| e.to_string())?;
+                let ef = quant_mse(w, bits, fused);
+                let es = quant_mse(w, bits, scalar);
+                if !(ef <= es * (1.0 + 1e-9) && es <= ef * (1.0 + 1e-9)) {
+                    return Err(format!("bits {bits}: fused mse {ef} vs scalar {es}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pooled_coding_length_matches_scalar() {
+    check(
+        Config { cases: 24, ..Default::default() },
+        |r| {
+            let n = 1 + r.below(40);
+            let m = 1 + r.below(40);
+            let mut data = vec![0.0f32; n * m];
+            r.fill_gaussian(&mut data, 0.0, 0.3);
+            (n, m, data)
+        },
+        |_| vec![],
+        |(n, m, data)| {
+            let mat = Mat::from_rows_f32(*n, *m, data).map_err(|e| e.to_string())?;
+            let want = mixed::coding_length_scalar(&mat, 0.01).map_err(|e| e.to_string())?;
+            for pool in [ThreadPool::seq(), ThreadPool::new(3)] {
+                let got =
+                    mixed::coding_length_with(&pool, &mat, 0.01).map_err(|e| e.to_string())?;
+                let tol = 1e-8 * (1.0 + want.abs());
+                if (got - want).abs() > tol {
+                    return Err(format!("pool {}: {got} vs {want}", pool.size()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_gram_and_matmul_bit_identical() {
+    check(
+        Config { cases: 24, ..Default::default() },
+        |r| {
+            let rows = 1 + r.below(30);
+            let cols = 1 + r.below(30);
+            let mut data = vec![0.0f32; rows * cols];
+            r.fill_gaussian(&mut data, 0.0, 1.0);
+            (rows, cols, data)
+        },
+        |_| vec![],
+        |(rows, cols, data)| {
+            let a = Mat::from_rows_f32(*rows, *cols, data).map_err(|e| e.to_string())?;
+            let pool = ThreadPool::new(3);
+            if a.gram().data != a.gram_with(&pool).data {
+                return Err("parallel gram diverged".into());
+            }
+            let b = Mat::eye(*cols);
+            let seq = a.matmul(&b).map_err(|e| e.to_string())?;
+            let par = a.matmul_with(&pool, &b).map_err(|e| e.to_string())?;
+            if seq.data != par.data {
+                return Err("parallel matmul diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_allocate_matches_sequential() {
+    check(
+        Config { cases: 16, ..Default::default() },
+        |r| {
+            let k = 3 + r.below(6); // 3..=8 layers
+            let dims: Vec<(usize, usize)> = (0..k)
+                .map(|_| (1 + r.below(24), 1 + r.below(24)))
+                .collect();
+            let seeds: Vec<u64> = (0..k).map(|_| r.next_u64()).collect();
+            (dims, seeds)
+        },
+        |_| vec![],
+        |(dims, seeds)| {
+            let k = dims.len();
+            let layers: Vec<LayerInfo> = dims
+                .iter()
+                .enumerate()
+                .map(|(i, &(n, m))| LayerInfo::synthetic(i, n, m, i == 0 || i == k - 1))
+                .collect();
+            let weights: Vec<Tensor> = dims
+                .iter()
+                .zip(seeds)
+                .map(|(&(n, m), &seed)| {
+                    let mut rng = Rng::new(seed);
+                    let mut data = vec![0.0f32; n * m];
+                    rng.fill_gaussian(&mut data, 0.0, 0.2);
+                    Tensor::new(vec![n, m], data).unwrap()
+                })
+                .collect();
+            let seq =
+                mixed::allocate_with(&ThreadPool::seq(), &layers, &weights, &[3, 4, 5], 0.01)
+                    .map_err(|e| e.to_string())?;
+            let par =
+                mixed::allocate_with(&ThreadPool::new(3), &layers, &weights, &[3, 4, 5], 0.01)
+                    .map_err(|e| e.to_string())?;
+            if seq.bits != par.bits {
+                return Err(format!("bits diverged: {:?} vs {:?}", seq.bits, par.bits));
+            }
+            if seq.lengths != par.lengths {
+                return Err("coding lengths diverged".into());
+            }
+            if seq.size_bytes != par.size_bytes {
+                return Err("size accounting diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_percentile_select_matches_sort_reference() {
+    check(
+        Config { cases: 48, ..Default::default() },
+        |r| {
+            let xs = gen_weights_sized(r, 3_000);
+            let p = r.next_f64() * 100.0;
+            (xs, p)
+        },
+        |(xs, p)| shrink_vec(xs).into_iter().map(|v| (v, *p)).collect(),
+        |(xs, p)| {
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let idx = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+            let want = sorted[idx.min(xs.len() - 1)];
+            let mut scratch = Vec::new();
+            let got = ops::percentile_with(xs, *p, &mut scratch);
+            if got != want {
+                return Err(format!("p={p}: select {got} != sort {want}"));
+            }
+            Ok(())
+        },
+    );
+}
