@@ -1,12 +1,15 @@
 //! END-TO-END DRIVER (the repo's required full-system validation).
 //!
 //! Exercises every layer of the stack on a real workload, proving they
-//! compose:
+//! compose — on **either execution backend**:
 //!
-//!   L1 Pallas fake-quant/erf kernels ──lowered into──► L2 JAX calib
-//!   graphs ──AOT──► HLO text ──PJRT──► L3 Rust pipeline:
+//! * with built artifacts: L1 Pallas kernels → L2 JAX calib graphs →
+//!   AOT HLO → PJRT → L3 Rust pipeline;
+//! * without artifacts (any bare checkout, CI): the pure-host backend
+//!   runs the same pipeline natively against the in-memory synthetic
+//!   model — zero files needed.
 //!
-//! 1. FP32 baseline evaluation (2,048 held-out images).
+//! 1. FP32 baseline evaluation.
 //! 2. Weight-only 4-bit PTQ with Attention Round (1,024-image
 //!    calibration, per-module Adam — the paper's headline configuration)
 //!    vs the Nearest baseline.
@@ -15,44 +18,47 @@
 //! 5. Throughput + phase timing report (feeds EXPERIMENTS.md).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example end_to_end
+//! cargo run --release --example end_to_end          # host backend
+//! make artifacts && cargo run --release --example end_to_end  # PJRT
 //! ```
 
 use std::time::Instant;
 
 use attention_round::coordinator::config::CalibConfig;
 use attention_round::coordinator::evaluate::evaluate;
-use attention_round::coordinator::model::LoadedModel;
+use attention_round::coordinator::experiments::Ctx;
 use attention_round::coordinator::pipeline::{
     quantize_and_eval, resolve_uniform_bits, QuantSpec,
 };
-use attention_round::data::Split;
-use attention_round::io::manifest::Manifest;
 use attention_round::mixed;
 use attention_round::quant::rounding::Rounding;
 use attention_round::report::Table;
-use attention_round::runtime::Runtime;
 use attention_round::util::logging;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     logging::init();
     let t_start = Instant::now();
     let artifacts = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let model_name =
-        std::env::var("REPRO_MODEL").unwrap_or_else(|_| "resnet18t".into());
+    let have_artifacts =
+        std::path::Path::new(&artifacts).join("manifest.json").exists();
 
-    let manifest = Manifest::load(&artifacts)?;
-    let rt = Runtime::new(artifacts.as_str())?;
-    let model = LoadedModel::load(&manifest, &model_name)?;
-    let data_dir = manifest.path(&manifest.dataset.dir);
-    let calib = Split::load(&data_dir, "calib")?;
-    let eval = Split::load(&data_dir, "eval")?;
+    let mut cfg = CalibConfig::quick();
+    if !have_artifacts {
+        // host-backend toy model: a smaller Adam budget already converges
+        // and keeps the CI job brisk
+        cfg.iters = 64;
+    }
+    let ctx = Ctx::auto(&artifacts, cfg.clone(), "results")?;
+    let model_name =
+        ctx.primary_model(std::env::var("REPRO_MODEL").ok().as_deref())?;
+    let model = ctx.backend.load_model(&ctx.manifest, &model_name)?;
     println!(
-        "== end-to-end: {} ({} layers, {} params) on {} ==",
+        "== end-to-end: {} ({} layers, {} params) on {} [{} backend] ==",
         model_name,
         model.num_layers(),
         model.total_params(),
-        rt.platform()
+        ctx.backend.platform(),
+        ctx.backend.name(),
     );
 
     let mut table = Table::new(
@@ -60,10 +66,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         &["Stage", "Bits(W/A)", "Top-1 %", "Wall s"],
     );
 
-    // 1. FP32 baseline (re-measured through the PJRT path, not trusted
+    // 1. FP32 baseline (re-measured through the backend, not trusted
     //    from the manifest).
     let t0 = Instant::now();
-    let fp_acc = evaluate(&rt, &manifest, &model, &model.weights, &eval)?;
+    let fp_acc = evaluate(
+        ctx.backend.as_ref(), &ctx.manifest, &model, &model.weights, &ctx.eval,
+    )?;
     table.row(vec![
         "FP32 eval".into(),
         "32/32".into(),
@@ -73,11 +81,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let drift = (fp_acc - model.info.fp_acc).abs();
     assert!(
         drift < 0.01,
-        "PJRT eval drifted {drift} from the build-time accuracy — artifact mismatch?"
+        "backend eval drifted {drift} from the recorded accuracy — artifact mismatch?"
     );
 
     // 2. 4-bit weights: Nearest baseline vs Attention Round.
-    let cfg = CalibConfig::quick();
     for (label, method) in [
         ("Nearest PTQ", Rounding::Nearest),
         ("Attention Round PTQ", Rounding::Attention),
@@ -85,16 +92,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let mut c = cfg.clone();
         c.method = method;
         let out = quantize_and_eval(
-            &rt,
-            &manifest,
+            ctx.backend.as_ref(),
+            &ctx.manifest,
             &QuantSpec {
                 model: model_name.clone(),
                 wbits: resolve_uniform_bits(&model, 4),
                 abits: None,
             },
             &c,
-            &calib,
-            &eval,
+            &ctx.calib,
+            &ctx.eval,
         )?;
         table.row(vec![
             label.into(),
@@ -106,16 +113,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // 3. Weights + activations.
     let out44 = quantize_and_eval(
-        &rt,
-        &manifest,
+        ctx.backend.as_ref(),
+        &ctx.manifest,
         &QuantSpec {
             model: model_name.clone(),
             wbits: resolve_uniform_bits(&model, 4),
             abits: Some(4),
         },
         &cfg,
-        &calib,
-        &eval,
+        &ctx.calib,
+        &ctx.eval,
     )?;
     table.row(vec![
         "Attention Round PTQ".into(),
@@ -127,16 +134,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 4. Mixed precision via Algorithm 1.
     let alloc = mixed::allocate(&model.info.layers, &model.weights, &[3, 4, 5, 6], 1e-3)?;
     let out_mixed = quantize_and_eval(
-        &rt,
-        &manifest,
+        ctx.backend.as_ref(),
+        &ctx.manifest,
         &QuantSpec {
             model: model_name.clone(),
             wbits: alloc.bits.clone(),
             abits: None,
         },
         &cfg,
-        &calib,
-        &eval,
+        &ctx.calib,
+        &ctx.eval,
     )?;
     table.row(vec![
         format!("Mixed [3,4,5,6] ({})", mixed::format_size_mb(alloc.size_bytes)),
@@ -146,7 +153,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     ]);
 
     println!("{}", table.render());
-    println!("--- pipeline metrics ---\n{}", rt.metrics.report());
+    println!("--- pipeline metrics ---\n{}", ctx.backend.metrics().report());
     println!("total wall: {:.1}s", t_start.elapsed().as_secs_f64());
 
     // Invariants this driver asserts (the "does it compose" signal):

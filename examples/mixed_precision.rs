@@ -3,35 +3,32 @@
 //! calibrate + evaluate the mixed model against single-precision at the
 //! same size budget.
 //!
+//! Runs on any checkout (PJRT with artifacts, host backend without).
+//!
 //! ```bash
 //! cargo run --release --example mixed_precision
 //! ```
 
 use attention_round::coordinator::config::CalibConfig;
-use attention_round::coordinator::model::LoadedModel;
+use attention_round::coordinator::experiments::Ctx;
 use attention_round::coordinator::pipeline::{
     quantize_and_eval, resolve_uniform_bits, QuantSpec,
 };
-use attention_round::data::Split;
-use attention_round::io::manifest::Manifest;
 use attention_round::mixed;
-use attention_round::runtime::Runtime;
 use attention_round::util::logging;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     logging::init();
     let artifacts = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let manifest = Manifest::load(&artifacts)?;
-    let rt = Runtime::new(artifacts.as_str())?;
-    let model = LoadedModel::load(&manifest, "resnet18t")?;
-    let data_dir = manifest.path(&manifest.dataset.dir);
-    let calib = Split::load(&data_dir, "calib")?;
-    let eval = Split::load(&data_dir, "eval")?;
+    let ctx = Ctx::auto(&artifacts, CalibConfig::quick(), "results")?;
+    let model_name =
+        ctx.primary_model(std::env::var("REPRO_MODEL").ok().as_deref())?;
+    let model = ctx.backend.load_model(&ctx.manifest, &model_name)?;
 
     // Algorithm 1: coding length per layer -> 1-D k-means -> bit list.
     let bit_list = [3u8, 4, 5, 6];
     let alloc = mixed::allocate(&model.info.layers, &model.weights, &bit_list, 1e-3)?;
-    println!("Algorithm 1 allocation (ε²=1e-3):");
+    println!("Algorithm 1 allocation (ε²=1e-3) [{}]:", ctx.backend.name());
     for (l, (&bits, &len)) in model
         .info
         .layers
@@ -52,33 +49,33 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     println!("mixed model size: {}", mixed::format_size_mb(alloc.size_bytes));
 
-    let cfg = CalibConfig::quick();
+    let cfg = ctx.cfg.clone();
     let mixed_out = quantize_and_eval(
-        &rt,
-        &manifest,
+        ctx.backend.as_ref(),
+        &ctx.manifest,
         &QuantSpec {
-            model: model.info.name.clone(),
+            model: model_name.clone(),
             wbits: alloc.bits.clone(),
             abits: None,
         },
         &cfg,
-        &calib,
-        &eval,
+        &ctx.calib,
+        &ctx.eval,
     )?;
 
     // single-precision 4-bit reference at a similar size
     let single = mixed::uniform_allocation(&model.info.layers, 4);
     let single_out = quantize_and_eval(
-        &rt,
-        &manifest,
+        ctx.backend.as_ref(),
+        &ctx.manifest,
         &QuantSpec {
-            model: model.info.name.clone(),
+            model: model_name.clone(),
             wbits: resolve_uniform_bits(&model, 4),
             abits: None,
         },
         &cfg,
-        &calib,
-        &eval,
+        &ctx.calib,
+        &ctx.eval,
     )?;
 
     println!(

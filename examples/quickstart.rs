@@ -1,47 +1,48 @@
 //! Quickstart: quantize one model to 4-bit weights with Attention Round
 //! and report top-1 before/after.
 //!
+//! Runs on any checkout: with built artifacts it uses the PJRT backend,
+//! otherwise the pure-host backend + synthetic model.
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use attention_round::coordinator::config::CalibConfig;
-use attention_round::coordinator::model::LoadedModel;
+use attention_round::coordinator::experiments::Ctx;
 use attention_round::coordinator::pipeline::{
     quantize_and_eval, resolve_uniform_bits, QuantSpec,
 };
-use attention_round::data::Split;
-use attention_round::io::manifest::Manifest;
-use attention_round::runtime::Runtime;
 use attention_round::util::logging;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     logging::init();
     let artifacts = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
 
-    // 1. Load the artifact manifest and the PJRT runtime.
-    let manifest = Manifest::load(&artifacts)?;
-    let rt = Runtime::new(artifacts.as_str())?;
-    println!("PJRT platform: {}", rt.platform());
+    // 1. Build an experiment context: backend + manifest + data splits.
+    //    `auto` picks PJRT when artifacts exist, the host backend else.
+    let cfg = CalibConfig::quick(); // 200 Adam iters/module; `paper` = 2k
+    let ctx = Ctx::auto(&artifacts, cfg.clone(), "results")?;
+    println!("backend: {} ({})", ctx.backend.name(), ctx.backend.platform());
 
-    // 2. Pick a model and the calibration data (1,024 images, as in §4.1).
-    let model = LoadedModel::load(&manifest, "resnet18t")?;
-    let data_dir = manifest.path(&manifest.dataset.dir);
-    let calib = Split::load(&data_dir, "calib")?;
-    let eval = Split::load(&data_dir, "eval")?;
+    // 2. Pick a model; calibration uses 1,024 images as in §4.1.
+    let model_name =
+        ctx.primary_model(std::env::var("REPRO_MODEL").ok().as_deref())?;
+    let model = ctx.backend.load_model(&ctx.manifest, &model_name)?;
 
     // 3. Quantize: 4-bit weights everywhere except the 8-bit-pinned
     //    first/last layers, activations left in FP32.
     let spec = QuantSpec {
-        model: "resnet18t".into(),
+        model: model_name.clone(),
         wbits: resolve_uniform_bits(&model, 4),
         abits: None,
     };
-    let cfg = CalibConfig::quick(); // 200 Adam iters/module; `paper` = 2k
-    let out = quantize_and_eval(&rt, &manifest, &spec, &cfg, &calib, &eval)?;
+    let out = quantize_and_eval(
+        ctx.backend.as_ref(), &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
+    )?;
 
     println!(
-        "resnet18t 4/32 Attention Round: top-1 {:.2}% (FP32 {:.2}%) in {:.1}s",
+        "{model_name} 4/32 Attention Round: top-1 {:.2}% (FP32 {:.2}%) in {:.1}s",
         out.acc * 100.0,
         out.fp_acc * 100.0,
         out.wall_s

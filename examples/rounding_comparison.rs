@@ -2,34 +2,31 @@
 //! the same model/bits, demonstrating the ordering
 //! Ours > AdaRound > Nearest > Stochastic ≫ Floor/Ceil.
 //!
+//! Runs on any checkout (PJRT with artifacts, host backend without).
+//!
 //! ```bash
 //! cargo run --release --example rounding_comparison
 //! ```
 
 use attention_round::coordinator::config::CalibConfig;
-use attention_round::coordinator::model::LoadedModel;
+use attention_round::coordinator::experiments::Ctx;
 use attention_round::coordinator::pipeline::{
     quantize_and_eval, resolve_uniform_bits, QuantSpec,
 };
-use attention_round::data::Split;
-use attention_round::io::manifest::Manifest;
 use attention_round::quant::rounding::Rounding;
 use attention_round::report::Table;
-use attention_round::runtime::Runtime;
 use attention_round::util::logging;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     logging::init();
     let artifacts = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let manifest = Manifest::load(&artifacts)?;
-    let rt = Runtime::new(artifacts.as_str())?;
-    let model = LoadedModel::load(&manifest, "resnet18t")?;
-    let data_dir = manifest.path(&manifest.dataset.dir);
-    let calib = Split::load(&data_dir, "calib")?;
-    let eval = Split::load(&data_dir, "eval")?;
+    let ctx = Ctx::auto(&artifacts, CalibConfig::quick(), "results")?;
+    let model_name =
+        ctx.primary_model(std::env::var("REPRO_MODEL").ok().as_deref())?;
+    let model = ctx.backend.load_model(&ctx.manifest, &model_name)?;
 
     let mut table = Table::new(
-        "Rounding functions, resnet18t 4/32",
+        format!("Rounding functions, {model_name} 4/32 [{}]", ctx.backend.name()),
         &["Rounding", "Top-1 %", "Wall s"],
     );
     for method in [
@@ -40,19 +37,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         Rounding::AdaRound,
         Rounding::Attention,
     ] {
-        let mut cfg = CalibConfig::quick();
+        let mut cfg = ctx.cfg.clone();
         cfg.method = method;
         let out = quantize_and_eval(
-            &rt,
-            &manifest,
+            ctx.backend.as_ref(),
+            &ctx.manifest,
             &QuantSpec {
-                model: model.info.name.clone(),
+                model: model_name.clone(),
                 wbits: resolve_uniform_bits(&model, 4),
                 abits: None,
             },
             &cfg,
-            &calib,
-            &eval,
+            &ctx.calib,
+            &ctx.eval,
         )?;
         table.row(vec![
             method.name().to_string(),

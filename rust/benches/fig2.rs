@@ -9,11 +9,10 @@ fn main() {
     let Some(ctx) = common::bench_ctx(16) else { return };
     // bench-scale: two τ points weights-only (full sweep incl. W+A via
     // `repro reproduce fig2`)
-    use attention_round::coordinator::model::LoadedModel;
     use attention_round::coordinator::pipeline::{
         quantize_and_eval, resolve_uniform_bits, QuantSpec,
     };
-    let loaded = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    let loaded = ctx.backend.load_model(&ctx.manifest, "resnet18t").expect("model");
     for tau in [0.0f32, 0.5] {
         let mut cfg = ctx.cfg.clone();
         cfg.tau = tau;
@@ -23,7 +22,7 @@ fn main() {
             abits: None,
         };
         let out = quantize_and_eval(
-            &ctx.rt, &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
+            ctx.backend.as_ref(), &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
         )
         .expect("run");
         println!("fig2 bench point: τ={tau} -> {:.2}%", out.acc * 100.0);

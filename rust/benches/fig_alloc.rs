@@ -5,7 +5,6 @@
 mod common;
 
 use attention_round::coordinator::experiments;
-use attention_round::coordinator::model::LoadedModel;
 use attention_round::mixed;
 
 fn main() {
@@ -16,7 +15,7 @@ fn main() {
     }
 
     // §4.5.3: downsample layers receive narrow bits.
-    let model = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    let model = ctx.backend.load_model(&ctx.manifest, "resnet18t").expect("model");
     let alloc =
         mixed::allocate(&model.info.layers, &model.weights, &[3, 4, 5, 6, 7, 8], 1e-3)
             .expect("alloc");

@@ -22,7 +22,6 @@ use std::path::PathBuf;
 
 use attention_round::bench_harness::{artifacts_dir, write_json, Bencher, Stats};
 use attention_round::coordinator::capture::{capture, reference_outputs};
-use attention_round::coordinator::model::LoadedModel;
 use attention_round::data::{synth, Split};
 use attention_round::io::manifest::LayerInfo;
 use attention_round::io::npy;
@@ -83,6 +82,15 @@ fn host_benches(b: &Bencher) -> Vec<Stats> {
     }));
     all.push(b.run("host/attention_finalize_into_147k", || {
         rounding::attention_finalize_into(pool, &w, &alpha, &grid, &mut qout)
+    }));
+    // stochastic: sequential single-stream reference vs the seeded
+    // per-chunk parallel kernel
+    all.push(b.run("host/stochastic_147k", || {
+        let mut r = Rng::new(11);
+        rounding::stochastic(&w, &grid, &mut r)
+    }));
+    all.push(b.run("host/stochastic_into_147k", || {
+        rounding::stochastic_into(pool, &w, &grid, 11, &mut qout)
     }));
 
     // MSE-optimal scale search (3 refinement rounds x 25 candidates):
@@ -182,8 +190,12 @@ fn device_benches() {
     let Some(ctx) = common::bench_ctx(16) else { return };
     let b = Bencher::quick();
 
-    // executable compile latency
-    let model = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    // executable compile latency (raw Runtime: the one device-specific
+    // surface the backend trait deliberately doesn't abstract)
+    let model = ctx
+        .backend
+        .load_model(&ctx.manifest, "resnet18t")
+        .expect("model");
     let layer = &model.info.layers[1];
     b.run("device/compile_calib_scan", || {
         // fresh runtime so the cache doesn't absorb the cost
@@ -202,7 +214,10 @@ fn device_benches() {
             images: ctx.eval.images.slice_axis0(0, eval_batch).unwrap(),
             labels: ctx.eval.labels[..eval_batch].to_vec(),
         };
-        evaluate(&ctx.rt, &ctx.manifest, &model, &model.weights, &small).unwrap()
+        evaluate(
+            ctx.backend.as_ref(), &ctx.manifest, &model, &model.weights, &small,
+        )
+        .unwrap()
     });
     println!(
         "  -> eval throughput ~{:.0} imgs/s",
@@ -211,13 +226,13 @@ fn device_benches() {
 
     // calibration scan throughput: K fused steps per dispatch
     let cache = capture(
-        &ctx.rt, &ctx.manifest, &model, &model.weights, &ctx.calib, 256,
+        ctx.backend.as_ref(), &ctx.manifest, &model, &model.weights, &ctx.calib, 256,
     )
     .expect("capture");
     let x = cache.peek(1).expect("layer1 acts").clone();
     let yref = reference_outputs(
-        &ctx.rt,
-        &layer.layer_fwd,
+        ctx.backend.as_ref(),
+        layer,
         &x,
         &model.weights[1],
         ctx.manifest.dataset.calib_batch,
@@ -229,7 +244,7 @@ fn device_benches() {
     let mut rng = Rng::new(5);
     let stats = b.run("device/calib_scan_K_steps", || {
         attention_round::coordinator::calibrate::calibrate_attention(
-            &ctx.rt,
+            ctx.backend.as_ref(),
             layer,
             &model.weights[1],
             &x,
@@ -248,29 +263,34 @@ fn device_benches() {
     );
 
     // single-step loop for the same K steps (the naive baseline the scan
-    // replaces — quantifies the §Perf fusion win)
-    let exe = ctx.rt.load(&layer.calib_step).expect("calib_step");
+    // replaces — quantifies the §Perf fusion win). Raw-buffer runtime
+    // path on purpose: this measures dispatch overhead below the trait.
+    let rt = attention_round::runtime::Runtime::new(
+        artifacts_dir().to_str().unwrap(),
+    )
+    .unwrap();
+    let exe = rt.load(&layer.calib_step).expect("calib_step");
     let w = &model.weights[1];
     let stats1 = b.run("device/calib_single_K_steps", || {
         use attention_round::runtime::literal_to_tensor;
-        let wbuf = ctx.rt.upload(w).unwrap();
+        let wbuf = rt.upload(w).unwrap();
         let mut alpha = Tensor::zeros(w.shape().to_vec());
         let mut m = Tensor::zeros(w.shape().to_vec());
         let mut v = Tensor::zeros(w.shape().to_vec());
-        let lr = ctx.rt.upload_scalar(1e-3).unwrap();
-        let tau = ctx.rt.upload_scalar(0.5).unwrap();
-        let s = ctx.rt.upload_scalar(0.01).unwrap();
-        let lo = ctx.rt.upload_scalar(-8.0).unwrap();
-        let hi = ctx.rt.upload_scalar(7.0).unwrap();
+        let lr = rt.upload_scalar(1e-3).unwrap();
+        let tau = rt.upload_scalar(0.5).unwrap();
+        let s = rt.upload_scalar(0.01).unwrap();
+        let lo = rt.upload_scalar(-8.0).unwrap();
+        let hi = rt.upload_scalar(7.0).unwrap();
         let cb = ctx.manifest.dataset.calib_batch;
         for t in 0..scan_k {
             let idx: Vec<usize> = (0..cb).map(|_| rng.below(x.shape()[0])).collect();
-            let xb = ctx.rt.upload(&x.gather_axis0(&idx).unwrap()).unwrap();
-            let yb = ctx.rt.upload(&yref.gather_axis0(&idx).unwrap()).unwrap();
-            let ab = ctx.rt.upload(&alpha).unwrap();
-            let mb = ctx.rt.upload(&m).unwrap();
-            let vb = ctx.rt.upload(&v).unwrap();
-            let tb = ctx.rt.upload_scalar(t as f32).unwrap();
+            let xb = rt.upload(&x.gather_axis0(&idx).unwrap()).unwrap();
+            let yb = rt.upload(&yref.gather_axis0(&idx).unwrap()).unwrap();
+            let ab = rt.upload(&alpha).unwrap();
+            let mb = rt.upload(&m).unwrap();
+            let vb = rt.upload(&v).unwrap();
+            let tb = rt.upload_scalar(t as f32).unwrap();
             let outs = exe
                 .run_b(&[&wbuf, &xb, &yb, &ab, &mb, &vb, &tb, &lr, &tau, &s, &lo, &hi])
                 .unwrap();

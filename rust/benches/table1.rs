@@ -24,16 +24,15 @@ fn main() {
 }
 
 fn experiments_run_once(ctx: &experiments::Ctx) {
-    use attention_round::coordinator::model::LoadedModel;
     use attention_round::coordinator::pipeline::{
         quantize_and_eval, resolve_uniform_bits, QuantSpec,
     };
-    let loaded = LoadedModel::load(&ctx.manifest, "resnet18t").unwrap();
+    let loaded = ctx.backend.load_model(&ctx.manifest, "resnet18t").unwrap();
     let spec = QuantSpec {
         model: "resnet18t".into(),
         wbits: resolve_uniform_bits(&loaded, 4),
         abits: None,
     };
-    quantize_and_eval(&ctx.rt, &ctx.manifest, &spec, &ctx.cfg, &ctx.calib, &ctx.eval)
+    quantize_and_eval(ctx.backend.as_ref(), &ctx.manifest, &spec, &ctx.cfg, &ctx.calib, &ctx.eval)
         .unwrap();
 }

@@ -8,18 +8,17 @@ use attention_round::coordinator::experiments;
 fn main() {
     let Some(ctx) = common::bench_ctx(16) else { return };
     // bench-scale: one W+A row end-to-end (full table via `repro reproduce table2`)
-    use attention_round::coordinator::model::LoadedModel;
     use attention_round::coordinator::pipeline::{
         quantize_and_eval, resolve_uniform_bits, QuantSpec,
     };
-    let loaded = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    let loaded = ctx.backend.load_model(&ctx.manifest, "resnet18t").expect("model");
     let spec = QuantSpec {
         model: "resnet18t".into(),
         wbits: resolve_uniform_bits(&loaded, 4),
         abits: Some(4),
     };
     let out = quantize_and_eval(
-        &ctx.rt, &ctx.manifest, &spec, &ctx.cfg, &ctx.calib, &ctx.eval,
+        ctx.backend.as_ref(), &ctx.manifest, &spec, &ctx.cfg, &ctx.calib, &ctx.eval,
     )
     .expect("4/4 run");
     println!(

@@ -15,7 +15,7 @@ fn main() {
     let dir = ctx.manifest.path(&ctx.manifest.dataset.dir);
     let train = Split::load(&dir, "train").expect("train split");
     let out = run_qat(
-        &ctx.rt, &ctx.manifest, "resnet18t", 4, 4, 20, 1e-3, &train, &ctx.eval, 7,
+        ctx.backend.as_ref(), &ctx.manifest, "resnet18t", 4, 4, 20, 1e-3, &train, &ctx.eval, 7,
     )
     .expect("qat");
     println!(

@@ -7,7 +7,6 @@ mod common;
 
 use attention_round::bench_harness::Bencher;
 use attention_round::coordinator::experiments;
-use attention_round::coordinator::model::LoadedModel;
 use attention_round::mixed;
 
 fn main() {
@@ -16,7 +15,7 @@ fn main() {
     // Algorithm 1 timing across the zoo (pure Rust, no device).
     let b = Bencher::default();
     for name in ["resnet18t", "resnet50t", "mobilenetv2t"] {
-        let model = LoadedModel::load(&ctx.manifest, name).expect("model");
+        let model = ctx.backend.load_model(&ctx.manifest, name).expect("model");
         let stats = b.run(&format!("table4/allocate/{name}"), || {
             mixed::allocate(&model.info.layers, &model.weights, &[3, 4, 5, 6], 1e-3)
                 .unwrap()
@@ -31,11 +30,11 @@ fn main() {
     // one mixed-precision quantize+eval end to end (full table via
     // `repro reproduce table4`)
     use attention_round::coordinator::pipeline::{quantize_and_eval, QuantSpec};
-    let model = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    let model = ctx.backend.load_model(&ctx.manifest, "resnet18t").expect("model");
     let alloc = mixed::allocate(&model.info.layers, &model.weights, &[3, 4, 5, 6], 1e-3)
         .expect("alloc");
     let out = quantize_and_eval(
-        &ctx.rt,
+        ctx.backend.as_ref(),
         &ctx.manifest,
         &QuantSpec {
             model: "resnet18t".into(),

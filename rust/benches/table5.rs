@@ -9,12 +9,11 @@ fn main() {
     let Some(ctx) = common::bench_ctx(16) else { return };
     // bench-scale: static roundings + ours, weights-only (full 6-method
     // W+A table via `repro reproduce table5`)
-    use attention_round::coordinator::model::LoadedModel;
     use attention_round::coordinator::pipeline::{
         quantize_and_eval, resolve_uniform_bits, QuantSpec,
     };
     use attention_round::quant::rounding::Rounding;
-    let loaded = LoadedModel::load(&ctx.manifest, "resnet18t").expect("model");
+    let loaded = ctx.backend.load_model(&ctx.manifest, "resnet18t").expect("model");
     let spec = QuantSpec {
         model: "resnet18t".into(),
         wbits: resolve_uniform_bits(&loaded, 4),
@@ -31,7 +30,7 @@ fn main() {
         let mut cfg = ctx.cfg.clone();
         cfg.method = m;
         let out = quantize_and_eval(
-            &ctx.rt, &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
+            ctx.backend.as_ref(), &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
         )
         .expect("run");
         println!("table5 bench row: {:<10} 4/32 -> {:.2}%", m.name(), out.acc * 100.0);

@@ -1,0 +1,981 @@
+//! Pure-host execution backend: runs the manifest's layer graph natively
+//! on the process-wide thread pool — no PJRT, no AOT artifacts.
+//!
+//! ## Graph convention
+//!
+//! The host executor interprets [`LayerInfo`] chains with 2-D weights
+//! (the conv-as-matmul view the coding length already uses):
+//!
+//! * kind `"conv"` — a 1×1 convolution over NHWC input: every spatial
+//!   position is a row of an `[B·H·W, Cin] @ [Cin, Cout]` matmul.
+//! * kind `"linear"` / `"fc"` — a dense layer; 4-D input is first
+//!   global-average-pooled to `[B, C]`.
+//! * act `"relu"` — rectification after the bias add; anything else is
+//!   identity. The last layer's output is the logits.
+//!
+//! The captured "layer input" (capture phase, activation observers,
+//! `forward_actq`) is the **matmul input**: post-pool for linear layers,
+//! the NHWC tensor for convs — so calibration reconstructs exactly the
+//! map the layer applies, and activation fake-quant hits the same tensor
+//! the observers saw.
+//!
+//! ## Calibration and QAT
+//!
+//! Trained rounding runs the same fused-K-step Adam loop the PJRT scan
+//! executables implement, mirroring the device kernels
+//! (python/compile/kernels/attention_round.py): Attention Round's
+//! forward is the paper's Eq. (3) — ŵ = s·clip(⌊w/s + α⌉, lo, hi),
+//! rounded exactly as at finalization — and the backward routes the
+//! cotangent through the Gaussian-attention decay rule of Eq. (6),
+//! dL/dα = g·(0.5 ± 0.5·erf(α/(√2·τ))) with g = s·dL/dŵ, using the same
+//! erf polynomial as the Pallas kernel ([`crate::quant::erf`]). AdaRound
+//! trains V through the standard soft rectified sigmoid with the
+//! β-annealed regularizer. The reported per-call loss is the
+//! reconstruction term only, so first→last comparisons are not
+//! confounded by β annealing. STE-QAT is a full native forward/backward
+//! (softmax-CE, SGD momentum) with max-abs fake-quant on weights and
+//! post-ReLU activations.
+//!
+//! ## Synthetic models
+//!
+//! A manifest model with **no weight files** is a host-native synthetic
+//! model ([`Manifest::synthetic`]): feature layers get deterministic
+//! He-scaled Gaussian weights ([`synth::synthetic_weights`]) and the
+//! head is closed-form calibrated as a nearest-class-mean readout over
+//! generator samples — so the toy network classifies far above chance
+//! with zero training and zero artifacts, giving quantization quality
+//! something real to degrade. Construction is cached per model name.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::backend::{
+    Backend, CalibScan, PreparedLayer, PreparedModel, QatState, ScanKind, ScanSetup,
+    ScanState,
+};
+use crate::coordinator::model::LoadedModel;
+use crate::data::synth;
+use crate::io::manifest::{LayerInfo, Manifest, ModelInfo};
+use crate::linalg::Mat;
+use crate::quant::observer::ActQuantParams;
+use crate::quant::rounding::nearest;
+use crate::quant::round_half_even;
+use crate::quant::scale::absmax_scale;
+use crate::quant::QGrid;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::threadpool::{self, ThreadPool};
+use crate::util::timer::Metrics;
+
+/// Seed for the synthetic feature weights (fixed: the model IS its seed).
+const SYNTH_WEIGHT_SEED: u64 = 0xBEEF;
+/// Seed + sample count for the closed-form head calibration.
+const PROTO_SEED: u64 = 0xFEED;
+const PROTO_SAMPLES: usize = 384;
+
+pub struct HostBackend {
+    pool: &'static ThreadPool,
+    metrics: Metrics,
+    /// Synthetic models are deterministic but not free to build (the
+    /// head calibration runs a few hundred forward passes) — cache the
+    /// weights/biases. `ModelInfo` is always taken fresh from the
+    /// manifest so metadata updates (e.g. a measured `fp_acc`) are seen.
+    synth_cache: Mutex<HashMap<String, (Vec<Tensor>, Vec<Tensor>)>>,
+}
+
+impl Default for HostBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HostBackend {
+    pub fn new() -> Self {
+        HostBackend {
+            pool: threadpool::global(),
+            metrics: Metrics::new(),
+            synth_cache: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+// ---- graph primitives ----------------------------------------------------
+
+fn is_linear(kind: &str) -> bool {
+    matches!(kind, "linear" | "fc" | "dense")
+}
+
+/// Global average pool NHWC -> NC.
+fn avg_pool(x: &Tensor) -> Result<Tensor> {
+    let sh = x.shape();
+    if sh.len() != 4 {
+        return Err(Error::shape(format!("avg_pool wants 4-D, got {sh:?}")));
+    }
+    let (b, hw, c) = (sh[0], sh[1] * sh[2], sh[3]);
+    let mut out = vec![0.0f32; b * c];
+    let inv = 1.0 / hw as f32;
+    for bi in 0..b {
+        let img = &x.data()[bi * hw * c..(bi + 1) * hw * c];
+        let dst = &mut out[bi * c..(bi + 1) * c];
+        for row in img.chunks_exact(c) {
+            for (d, &v) in dst.iter_mut().zip(row) {
+                *d += v;
+            }
+        }
+        for d in dst.iter_mut() {
+            *d *= inv;
+        }
+    }
+    Tensor::new(vec![b, c], out)
+}
+
+/// Per-tensor affine fake-quant on the activation grid the observers
+/// picked: x' = clip(⌊(x − z)/s⌉, 0, 2^b − 1)·s + z.
+fn fake_quant_act(x: &Tensor, p: &ActQuantParams, bits: u8) -> Tensor {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let s = p.scale.max(1e-12);
+    let mut out = vec![0.0f32; x.len()];
+    for (o, &v) in out.iter_mut().zip(x.data()) {
+        let q = round_half_even((v - p.zero) / s).clamp(0.0, levels);
+        *o = q * s + p.zero;
+    }
+    Tensor::new(x.shape().to_vec(), out).expect("shape preserved")
+}
+
+/// The 2-D matmul view of a layer's weight; errors on non-2-D weights
+/// (real conv checkpoints need the PJRT backend).
+fn weight_dims(layer: &LayerInfo, w: &Tensor) -> Result<(usize, usize)> {
+    match w.shape() {
+        [n, m] => Ok((*n, *m)),
+        other => Err(Error::shape(format!(
+            "{}: host backend executes 2-D (conv-as-matmul) weights, got {other:?} — \
+             use the PJRT backend for real checkpoints",
+            layer.name
+        ))),
+    }
+}
+
+/// Matmul-input rows for `x` feeding a layer with `n` input features.
+fn rows_for(layer: &LayerInfo, x: &Tensor, n: usize) -> Result<usize> {
+    if x.len() % n != 0 {
+        return Err(Error::shape(format!(
+            "{}: input {:?} not divisible by in-features {n}",
+            layer.name,
+            x.shape()
+        )));
+    }
+    Ok(x.len() / n)
+}
+
+/// Aᵀ as a [`Mat`] from row-major f32 storage (rows × cols).
+fn mat_transposed_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+    debug_assert_eq!(rows * cols, data.len());
+    let mut t = Mat::zeros(cols, rows);
+    for r in 0..rows {
+        for (c, &v) in data[r * cols..(r + 1) * cols].iter().enumerate() {
+            t.data[c * rows + r] = v as f64;
+        }
+    }
+    t
+}
+
+/// Run the layer chain; optionally record each layer's matmul input and
+/// optionally fake-quant it first (the forward_actq path). Returns the
+/// logits.
+fn run_graph(
+    pool: &ThreadPool,
+    layers: &[LayerInfo],
+    weights: &[Tensor],
+    biases: &[Tensor],
+    x: &Tensor,
+    mut record: Option<&mut Vec<Tensor>>,
+    actq: Option<(&[ActQuantParams], &[u8])>,
+) -> Result<Tensor> {
+    let mut cur = x.clone();
+    for (li, layer) in layers.iter().enumerate() {
+        let w = &weights[li];
+        let (n, m) = weight_dims(layer, w)?;
+        if is_linear(&layer.kind) && cur.shape().len() == 4 {
+            cur = avg_pool(&cur)?;
+        } else if !is_linear(&layer.kind) && layer.kind != "conv" {
+            return Err(Error::config(format!(
+                "{}: host backend supports conv(1x1)/linear layers, got {:?}",
+                layer.name, layer.kind
+            )));
+        }
+        if let Some((params, bits)) = actq {
+            cur = fake_quant_act(&cur, &params[li], bits[li]);
+        }
+        if let Some(rec) = record.as_mut() {
+            rec.push(cur.clone());
+        }
+        let rows = rows_for(layer, &cur, n)?;
+        let xm = Mat::from_rows_f32(rows, n, cur.data())?;
+        let wm = Mat::from_rows_f32(n, m, w.data())?;
+        let ym = xm.matmul_with(pool, &wm)?;
+        let bias = biases.get(li).map(|b| b.data()).unwrap_or(&[]);
+        let relu = layer.act == "relu";
+        let mut out = vec![0.0f32; rows * m];
+        for (orow, yrow) in out.chunks_mut(m).zip(ym.data.chunks(m)) {
+            for j in 0..m {
+                let mut v = yrow[j] as f32;
+                if let Some(&b) = bias.get(j) {
+                    v += b;
+                }
+                orow[j] = if relu { v.max(0.0) } else { v };
+            }
+        }
+        let shape = if cur.shape().len() == 4 {
+            vec![cur.shape()[0], cur.shape()[1], cur.shape()[2], m]
+        } else {
+            vec![rows, m]
+        };
+        cur = Tensor::new(shape, out)?;
+    }
+    Ok(cur)
+}
+
+/// Pre-activation, bias-free layer map (the reconstruction target
+/// `layer_fwd` computes on the PJRT side).
+fn layer_forward(
+    pool: &ThreadPool,
+    layer: &LayerInfo,
+    x: &Tensor,
+    w: &Tensor,
+) -> Result<Tensor> {
+    let (n, m) = weight_dims(layer, w)?;
+    let x = if is_linear(&layer.kind) && x.shape().len() == 4 {
+        avg_pool(x)?
+    } else {
+        x.clone()
+    };
+    let rows = rows_for(layer, &x, n)?;
+    let xm = Mat::from_rows_f32(rows, n, x.data())?;
+    let wm = Mat::from_rows_f32(n, m, w.data())?;
+    let ym = xm.matmul_with(pool, &wm)?;
+    let out: Vec<f32> = ym.data.iter().map(|&v| v as f32).collect();
+    let shape = if x.shape().len() == 4 {
+        vec![x.shape()[0], x.shape()[1], x.shape()[2], m]
+    } else {
+        vec![rows, m]
+    };
+    Tensor::new(shape, out)
+}
+
+// ---- synthetic model construction ----------------------------------------
+
+fn build_synthetic(pool: &ThreadPool, info: ModelInfo) -> Result<LoadedModel> {
+    let k = info.layers.len();
+    if k == 0 {
+        return Err(Error::config(format!("{}: synthetic model with no layers", info.name)));
+    }
+    let (mut weights, mut biases) = synth::synthetic_weights(&info, SYNTH_WEIGHT_SEED)?;
+    // Closed-form nearest-class-mean head: feature prototypes over a
+    // fixed generator draw, W[:,c] = μ_c, b_c = −‖μ_c‖²/2 — so
+    // argmax_c(f·μ_c + b_c) is the min-distance class.
+    let (imgs, labels) = synth::generate(PROTO_SAMPLES, PROTO_SEED);
+    let mut feats = run_graph(
+        pool,
+        &info.layers[..k - 1],
+        &weights[..k - 1],
+        &biases[..k - 1],
+        &imgs,
+        None,
+        None,
+    )?;
+    if feats.shape().len() == 4 {
+        feats = avg_pool(&feats)?;
+    }
+    let f = feats.shape()[1];
+    let head = &info.layers[k - 1];
+    let (hn, hm) = (head.wshape[0], head.wshape[1]);
+    if hn != f {
+        return Err(Error::shape(format!(
+            "{}: head expects {hn} features, feature stack produces {f}",
+            info.name
+        )));
+    }
+    let mut sums = vec![0.0f64; f * hm];
+    let mut counts = vec![0usize; hm];
+    for (bi, &lab) in labels.iter().enumerate() {
+        let c = lab as usize % hm;
+        counts[c] += 1;
+        for (j, &v) in feats.data()[bi * f..(bi + 1) * f].iter().enumerate() {
+            sums[j * hm + c] += v as f64;
+        }
+    }
+    let mut wh = vec![0.0f32; f * hm];
+    let mut bh = vec![0.0f32; hm];
+    for c in 0..hm {
+        if counts[c] == 0 {
+            continue;
+        }
+        let inv = 1.0 / counts[c] as f64;
+        let mut norm2 = 0.0f64;
+        for j in 0..f {
+            let mu = sums[j * hm + c] * inv;
+            wh[j * hm + c] = mu as f32;
+            norm2 += mu * mu;
+        }
+        bh[c] = (-0.5 * norm2) as f32;
+    }
+    weights[k - 1] = Tensor::new(vec![f, hm], wh)?;
+    biases[k - 1] = Tensor::from_vec(bh);
+    Ok(LoadedModel {
+        info,
+        weights,
+        biases,
+    })
+}
+
+// ---- backend-neutral handle impls ----------------------------------------
+
+struct HostPrepared<'a> {
+    be: &'a HostBackend,
+    model: &'a LoadedModel,
+    weights: &'a [Tensor],
+}
+
+impl PreparedModel for HostPrepared<'_> {
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        run_graph(
+            self.be.pool,
+            &self.model.info.layers,
+            self.weights,
+            &self.model.biases,
+            x,
+            None,
+            None,
+        )
+    }
+
+    fn forward_actq(
+        &self,
+        x: &Tensor,
+        act_params: &[ActQuantParams],
+        act_bits: &[u8],
+    ) -> Result<Tensor> {
+        let k = self.model.num_layers();
+        if act_params.len() != k || act_bits.len() != k {
+            return Err(Error::shape(format!(
+                "expected {k} activation params/bits, got {}/{}",
+                act_params.len(),
+                act_bits.len()
+            )));
+        }
+        run_graph(
+            self.be.pool,
+            &self.model.info.layers,
+            self.weights,
+            &self.model.biases,
+            x,
+            None,
+            Some((act_params, act_bits)),
+        )
+    }
+
+    fn collect(&self, x: &Tensor) -> Result<(Vec<Tensor>, Tensor)> {
+        let mut rec = Vec::with_capacity(self.model.num_layers());
+        let logits = run_graph(
+            self.be.pool,
+            &self.model.info.layers,
+            self.weights,
+            &self.model.biases,
+            x,
+            Some(&mut rec),
+            None,
+        )?;
+        Ok((rec, logits))
+    }
+}
+
+struct HostLayer<'a> {
+    be: &'a HostBackend,
+    layer: &'a LayerInfo,
+    w: &'a Tensor,
+}
+
+impl PreparedLayer for HostLayer<'_> {
+    fn fwd(&self, x: &Tensor) -> Result<Tensor> {
+        layer_forward(self.be.pool, self.layer, x, self.w)
+    }
+}
+
+struct HostScan<'a> {
+    be: &'a HostBackend,
+    setup: ScanSetup<'a>,
+    state: ScanState,
+}
+
+impl CalibScan for HostScan<'_> {
+    fn scan(&mut self, xs: &Tensor, ys: &Tensor, beta: f32) -> Result<f32> {
+        let k = xs.shape().first().copied().unwrap_or(0);
+        if k == 0 || ys.shape().first() != Some(&k) {
+            return Err(Error::shape(format!(
+                "scan stacks disagree: {:?} vs {:?}",
+                xs.shape(),
+                ys.shape()
+            )));
+        }
+        let w = self.setup.w_fp.data();
+        let (n, m) = weight_dims(self.setup.layer, self.setup.w_fp)?;
+        let per_x = xs.len() / k;
+        let per_y = ys.len() / k;
+        if per_x % n != 0 || per_y != (per_x / n) * m {
+            return Err(Error::shape(format!(
+                "scan stack geometry: {per_x} x-elems, {per_y} y-elems, w {n}x{m}"
+            )));
+        }
+        let rows = per_x / n;
+        let g = self.setup.grid;
+        let (s, lo, hi) = (g.scale, g.lo, g.hi);
+        let lr = self.setup.lr;
+        let is_attention = matches!(self.setup.kind, ScanKind::Attention { .. });
+        let denom = (rows * m) as f64;
+        let mut wq = vec![0.0f64; n * m];
+        // Per-element gradient factor, meaning depends on the kind:
+        // Attention — erf(α/(√2·τ)) for the Eq.-6 decay rule;
+        // AdaRound — dŵ/dV (0 where the clip or rectifier saturates).
+        let mut factor = vec![0.0f32; n * m];
+        // AdaRound regularizer gradient dReg/dV (zero for Attention).
+        let mut reg = vec![0.0f32; n * m];
+        let mut loss_sum = 0.0f64;
+        for step in 0..k {
+            let var = self.state.var.data();
+            match self.setup.kind {
+                ScanKind::Attention { tau } => {
+                    // Forward Eq. (3): rounded, exactly as the device
+                    // fakequant kernel and attention_finalize.
+                    let inv_sqrt2_tau =
+                        1.0 / (std::f64::consts::SQRT_2 * tau.max(1e-8) as f64);
+                    for i in 0..n * m {
+                        let q = round_half_even(w[i] / s + var[i]);
+                        wq[i] = (s * q.clamp(lo, hi)) as f64;
+                        factor[i] =
+                            crate::quant::erf(var[i] as f64 * inv_sqrt2_tau) as f32;
+                    }
+                }
+                ScanKind::AdaRound { lambda } => {
+                    for i in 0..n * m {
+                        let sig = 1.0 / (1.0 + (-var[i]).exp());
+                        let h = (1.2 * sig - 0.1).clamp(0.0, 1.0);
+                        let u = (w[i] / s).floor() + h;
+                        wq[i] = (s * u.clamp(lo, hi)) as f64;
+                        let hp = if h > 0.0 && h < 1.0 {
+                            1.2 * sig * (1.0 - sig)
+                        } else {
+                            0.0
+                        };
+                        factor[i] = if u > lo && u < hi { s * hp } else { 0.0 };
+                        let d = 2.0 * h - 1.0;
+                        // d/dV of λ(1 − |2h−1|^β)
+                        reg[i] = -lambda * beta * d.abs().powf(beta - 1.0)
+                            * 2.0 * d.signum() * hp;
+                    }
+                }
+            }
+            let xd = &xs.data()[step * per_x..(step + 1) * per_x];
+            let yd = &ys.data()[step * per_y..(step + 1) * per_y];
+            let xm = Mat::from_rows_f32(rows, n, xd)?;
+            let wqm = Mat {
+                rows: n,
+                cols: m,
+                data: std::mem::take(&mut wq),
+            };
+            let ym = xm.matmul_with(self.be.pool, &wqm)?;
+            wq = wqm.data; // reclaim the buffer for the next step
+            let mut d = ym;
+            let mut acc = 0.0f64;
+            for (dv, &yv) in d.data.iter_mut().zip(yd) {
+                *dv -= yv as f64;
+                acc += *dv * *dv;
+            }
+            loss_sum += acc / denom;
+            // G = Xᵀ·D -> dL/dŵ = 2G/denom
+            let xt = mat_transposed_f32(rows, n, xd);
+            let gm = xt.matmul_with(self.be.pool, &d)?;
+            // Adam on var
+            self.state.t += 1.0;
+            let t = self.state.t;
+            let c1 = 1.0 - 0.9f32.powf(t);
+            let c2 = 1.0 - 0.999f32.powf(t);
+            let var = self.state.var.data_mut();
+            let mm = self.state.m.data_mut();
+            let vv = self.state.v.data_mut();
+            for i in 0..n * m {
+                let gup = (2.0 * gm.data[i] / denom) as f32;
+                let grad = if is_attention {
+                    // Eq. (6): dL/dα = g·(0.5 ± 0.5·erf(α/(√2·τ))) with
+                    // g = s·dL/dŵ (mirrors _aq_bwd in the Pallas wrapper).
+                    let gz = gup * s;
+                    let dz = if gz > 0.0 {
+                        0.5 + 0.5 * factor[i]
+                    } else {
+                        0.5 - 0.5 * factor[i]
+                    };
+                    gz * dz
+                } else {
+                    gup * factor[i] + reg[i]
+                };
+                mm[i] = 0.9 * mm[i] + 0.1 * grad;
+                vv[i] = 0.999 * vv[i] + 0.001 * grad * grad;
+                let mh = mm[i] / c1;
+                let vh = vv[i] / c2;
+                var[i] -= lr * mh / (vh.sqrt() + 1e-8);
+            }
+        }
+        self.be
+            .metrics
+            .incr("pipeline.calib_steps", k as u64);
+        Ok((loss_sum / k as f64) as f32)
+    }
+
+    fn state(&self) -> &ScanState {
+        &self.state
+    }
+}
+
+// ---- STE-QAT -------------------------------------------------------------
+
+struct QatLayerCtx {
+    /// Matmul input (post pool / act-fq), row-major rows × n.
+    a: Vec<f32>,
+    rows: usize,
+    n: usize,
+    m: usize,
+    /// Fake-quantized weight actually multiplied.
+    wq: Vec<f32>,
+    /// Pre-activation output (rows × m) for the ReLU mask.
+    z: Vec<f64>,
+    /// Some((batch, hw)) when this layer pooled its 4-D input.
+    pooled: Option<(usize, usize)>,
+    relu: bool,
+}
+
+/// Max-abs weight fake-quant on the same grid the deploy-time
+/// quantization in `coordinator::qat` finalizes with (absmax_scale +
+/// QGrid + nearest), so training and deployment never drift apart.
+fn fake_quant_weight(w: &[f32], wbits: u8) -> Result<Vec<f32>> {
+    let s = absmax_scale(w, wbits);
+    if !(s.is_finite() && s > 0.0) {
+        return Ok(w.to_vec()); // all-zero tensor: nothing to quantize
+    }
+    let grid = QGrid::signed(wbits, s)?;
+    Ok(nearest(w, &grid))
+}
+
+fn fake_quant_relu_acts(a: &mut [f32], abits: u8) {
+    let hi = ((1u32 << abits) - 1) as f32;
+    let amax = a.iter().fold(0.0f32, |acc, &v| acc.max(v));
+    if amax <= 0.0 {
+        return;
+    }
+    let s = amax / hi;
+    for v in a.iter_mut() {
+        *v = s * round_half_even(*v / s).clamp(0.0, hi);
+    }
+}
+
+fn host_qat_step(
+    pool: &ThreadPool,
+    model: &LoadedModel,
+    state: &mut QatState,
+    x: &Tensor,
+    y: &[i32],
+    lr: f32,
+    wbits: u8,
+    abits: u8,
+) -> Result<f32> {
+    let layers = &model.info.layers;
+    let k = layers.len();
+    let batch = x.shape()[0];
+    if y.len() != batch {
+        return Err(Error::shape("qat labels/batch mismatch"));
+    }
+    // The CE loss below reads the head's pre-activation as the logits
+    // and the backward applies no final-layer activation mask, so a
+    // rectified head would silently train a different function than
+    // evaluate() scores. Reject it instead.
+    if layers[k - 1].act == "relu" {
+        return Err(Error::config(format!(
+            "{}: host QAT expects an identity (logit) head, got relu",
+            model.info.name
+        )));
+    }
+    // ---- forward, recording per-layer context ----
+    let mut ctxs: Vec<QatLayerCtx> = Vec::with_capacity(k);
+    let mut cur = x.clone();
+    for (li, layer) in layers.iter().enumerate() {
+        let (n, m) = weight_dims(layer, &state.ws[li])?;
+        let mut pooled = None;
+        if is_linear(&layer.kind) && cur.shape().len() == 4 {
+            let sh = cur.shape();
+            pooled = Some((sh[0], sh[1] * sh[2]));
+            cur = avg_pool(&cur)?;
+        }
+        let mut a = cur.data().to_vec();
+        if li > 0 {
+            // post-ReLU activations carry the fake-quant grid; the raw
+            // image input stays FP (matches the device qat_step graphs).
+            fake_quant_relu_acts(&mut a, abits);
+        }
+        let rows = rows_for(layer, &cur, n)?;
+        let wq = fake_quant_weight(state.ws[li].data(), wbits)?;
+        let xm = Mat::from_rows_f32(rows, n, &a)?;
+        let wm = Mat::from_rows_f32(n, m, &wq)?;
+        let mut zm = xm.matmul_with(pool, &wm)?;
+        let bias = state.bs[li].data();
+        for zrow in zm.data.chunks_mut(m) {
+            for (zv, &b) in zrow.iter_mut().zip(bias) {
+                *zv += b as f64;
+            }
+        }
+        let relu = layer.act == "relu";
+        let mut out = vec![0.0f32; rows * m];
+        for (o, &zv) in out.iter_mut().zip(&zm.data) {
+            let v = zv as f32;
+            *o = if relu { v.max(0.0) } else { v };
+        }
+        let shape = if cur.shape().len() == 4 {
+            vec![cur.shape()[0], cur.shape()[1], cur.shape()[2], m]
+        } else {
+            vec![rows, m]
+        };
+        ctxs.push(QatLayerCtx {
+            a,
+            rows,
+            n,
+            m,
+            wq,
+            z: zm.data,
+            pooled,
+            relu,
+        });
+        cur = Tensor::new(shape, out)?;
+    }
+    // ---- softmax cross-entropy ----
+    let classes = ctxs[k - 1].m;
+    let logits = &ctxs[k - 1].z;
+    let mut dz = Mat::zeros(batch, classes);
+    let mut loss = 0.0f64;
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut denom = 0.0f64;
+        for &v in row {
+            denom += (v - mx).exp();
+        }
+        let lab = y[bi] as usize % classes;
+        loss -= (row[lab] - mx) - denom.ln();
+        for c in 0..classes {
+            let p = (row[c] - mx).exp() / denom;
+            dz.data[bi * classes + c] =
+                (p - if c == lab { 1.0 } else { 0.0 }) / batch as f64;
+        }
+    }
+    loss /= batch as f64;
+    // ---- backward + SGD momentum (STE through both fake-quants) ----
+    let mut dz = dz; // gradient w.r.t. the current layer's pre-activation
+    for li in (0..k).rev() {
+        let c = &ctxs[li];
+        // dW = aᵀ·dz, db = colsum(dz)
+        let at = mat_transposed_f32(c.rows, c.n, &c.a);
+        let dw = at.matmul_with(pool, &dz)?;
+        let mut db = vec![0.0f64; c.m];
+        for row in dz.data.chunks(c.m) {
+            for (d, &v) in db.iter_mut().zip(row) {
+                *d += v;
+            }
+        }
+        if li > 0 {
+            // da = dz·wqᵀ (rows × n)
+            let wqt = mat_transposed_f32(c.n, c.m, &c.wq);
+            let mut da = dz.matmul_with(pool, &wqt)?;
+            if let Some((b, hw)) = c.pooled {
+                // undo the average pool: broadcast /hw to every position
+                let mut full = Mat::zeros(b * hw, c.n);
+                let inv = 1.0 / hw as f64;
+                for bi in 0..b {
+                    let src = &da.data[bi * c.n..(bi + 1) * c.n];
+                    for p in 0..hw {
+                        let dst =
+                            &mut full.data[(bi * hw + p) * c.n..(bi * hw + p + 1) * c.n];
+                        for (dv, &sv) in dst.iter_mut().zip(src) {
+                            *dv = sv * inv;
+                        }
+                    }
+                }
+                da = full;
+            }
+            // ReLU mask of the previous layer's pre-activation; act
+            // fake-quant is a straight-through pass.
+            let prev = &ctxs[li - 1];
+            debug_assert_eq!(da.data.len(), prev.z.len());
+            for (dv, &zv) in da.data.iter_mut().zip(&prev.z) {
+                if prev.relu && zv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            dz = da;
+        }
+        // SGD momentum on the FP master weights (STE).
+        let w = state.ws[li].data_mut();
+        let mw = state.mws[li].data_mut();
+        for i in 0..w.len() {
+            mw[i] = 0.9 * mw[i] + dw.data[i] as f32;
+            w[i] -= lr * mw[i];
+        }
+        let b = state.bs[li].data_mut();
+        let mb = state.mbs[li].data_mut();
+        for i in 0..b.len() {
+            mb[i] = 0.9 * mb[i] + db[i] as f32;
+            b[i] -= lr * mb[i];
+        }
+    }
+    Ok(loss as f32)
+}
+
+// ---- Backend impl --------------------------------------------------------
+
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn platform(&self) -> String {
+        format!("host cpu ({} threads)", self.pool.size())
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn load_model(&self, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
+        let info = manifest.model(name)?;
+        if !info.w_files.is_empty() {
+            return LoadedModel::load(manifest, name);
+        }
+        if let Some((w, b)) = self.synth_cache.lock().unwrap().get(name) {
+            return Ok(LoadedModel {
+                info: info.clone(),
+                weights: w.clone(),
+                biases: b.clone(),
+            });
+        }
+        let built = self.metrics.time("host.build_synthetic", || {
+            build_synthetic(self.pool, info.clone())
+        })?;
+        self.synth_cache.lock().unwrap().insert(
+            name.to_string(),
+            (built.weights.clone(), built.biases.clone()),
+        );
+        Ok(built)
+    }
+
+    fn prepare<'a>(
+        &'a self,
+        model: &'a LoadedModel,
+        weights: &'a [Tensor],
+    ) -> Result<Box<dyn PreparedModel + 'a>> {
+        if weights.len() != model.num_layers() {
+            return Err(Error::shape(format!(
+                "{}: {} weight tensors for {} layers",
+                model.info.name,
+                weights.len(),
+                model.num_layers()
+            )));
+        }
+        Ok(Box::new(HostPrepared {
+            be: self,
+            model,
+            weights,
+        }))
+    }
+
+    fn prepare_layer<'a>(
+        &'a self,
+        layer: &'a LayerInfo,
+        w: &'a Tensor,
+    ) -> Result<Box<dyn PreparedLayer + 'a>> {
+        weight_dims(layer, w)?;
+        Ok(Box::new(HostLayer { be: self, layer, w }))
+    }
+
+    fn begin_scan<'a>(
+        &'a self,
+        setup: ScanSetup<'a>,
+        init: ScanState,
+    ) -> Result<Box<dyn CalibScan + 'a>> {
+        if init.var.shape() != setup.w_fp.shape() {
+            return Err(Error::shape(format!(
+                "scan var {:?} vs weight {:?}",
+                init.var.shape(),
+                setup.w_fp.shape()
+            )));
+        }
+        Ok(Box::new(HostScan {
+            be: self,
+            setup,
+            state: init,
+        }))
+    }
+
+    fn qat_step(
+        &self,
+        model: &LoadedModel,
+        state: &mut QatState,
+        x: &Tensor,
+        y: &[i32],
+        lr: f32,
+        wbits: u8,
+        abits: u8,
+    ) -> Result<f32> {
+        let loss = host_qat_step(self.pool, model, state, x, y, lr, wbits, abits)?;
+        self.metrics.incr("qat.steps", 1);
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QGrid;
+    use crate::util::rng::Rng;
+
+    fn conv_layer(i: usize, n: usize, m: usize) -> LayerInfo {
+        LayerInfo::host(i, &format!("c{i}"), "conv", "relu", [n, m], false)
+    }
+
+    fn lin_layer(i: usize, n: usize, m: usize) -> LayerInfo {
+        LayerInfo::host(i, &format!("l{i}"), "linear", "identity", [n, m], true)
+    }
+
+    fn w(shape: [usize; 2], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut d = vec![0.0f32; shape[0] * shape[1]];
+        rng.fill_gaussian(&mut d, 0.0, 0.5);
+        Tensor::new(shape.to_vec(), d).unwrap()
+    }
+
+    #[test]
+    fn avg_pool_means() {
+        let x = Tensor::new(
+            vec![1, 2, 2, 2],
+            vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0],
+        )
+        .unwrap();
+        let p = avg_pool(&x).unwrap();
+        assert_eq!(p.shape(), &[1, 2]);
+        assert_eq!(p.data(), &[2.5, 25.0]);
+    }
+
+    #[test]
+    fn graph_shapes_conv_then_linear() {
+        let layers = vec![conv_layer(0, 3, 4), lin_layer(1, 4, 5)];
+        let weights = vec![w([3, 4], 1), w([4, 5], 2)];
+        let biases = vec![Tensor::zeros(vec![4]), Tensor::zeros(vec![5])];
+        let x = Tensor::zeros(vec![2, 4, 4, 3]);
+        let pool = ThreadPool::seq();
+        let mut rec = Vec::new();
+        let logits =
+            run_graph(&pool, &layers, &weights, &biases, &x, Some(&mut rec), None)
+                .unwrap();
+        assert_eq!(logits.shape(), &[2, 5]);
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec[0].shape(), &[2, 4, 4, 3]); // conv input = NHWC
+        assert_eq!(rec[1].shape(), &[2, 4]); // linear input = pooled
+    }
+
+    #[test]
+    fn layer_forward_is_bias_free_preactivation() {
+        let layer = conv_layer(0, 2, 2);
+        let wt = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, -1.0]).unwrap();
+        let x = Tensor::new(vec![1, 1, 1, 2], vec![3.0, 2.0]).unwrap();
+        let pool = ThreadPool::seq();
+        let y = layer_forward(&pool, &layer, &x, &wt).unwrap();
+        // no relu even though act = relu; no bias
+        assert_eq!(y.data(), &[3.0, -2.0]);
+    }
+
+    #[test]
+    fn fake_quant_act_roundtrips_grid_points() {
+        let p = ActQuantParams { scale: 0.5, zero: -1.0 };
+        let x = Tensor::from_vec(vec![-1.0, -0.76, 0.0, 100.0]);
+        let q = fake_quant_act(&x, &p, 2); // levels 0..3 -> values -1..0.5
+        assert_eq!(q.data(), &[-1.0, -1.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn host_scan_reduces_reconstruction_loss() {
+        let be = HostBackend::new();
+        // 8×8: with α ~ N(0, 0.5) a meaningful fraction of the 64 cells
+        // start flipped away from nearest, so the rounded-forward loss
+        // has real headroom to recover.
+        let layer = conv_layer(0, 8, 8);
+        let w_fp = w([8, 8], 3);
+        let grid = QGrid::signed(3, 0.11).unwrap();
+        // batch of random inputs; reference = exact FP map
+        let mut rng = Rng::new(9);
+        let mut xd = vec![0.0f32; 8 * 64 * 8];
+        rng.fill_gaussian(&mut xd, 0.0, 1.0);
+        let xs = Tensor::new(vec![8, 64, 8], xd).unwrap();
+        let xm = Mat::from_rows_f32(8 * 64, 8, xs.data()).unwrap();
+        let wm = Mat::from_rows_f32(8, 8, w_fp.data()).unwrap();
+        let ym = xm.matmul(&wm).unwrap();
+        let ys = Tensor::new(
+            vec![8, 64, 8],
+            ym.data.iter().map(|&v| v as f32).collect(),
+        )
+        .unwrap();
+        let mut alpha = Tensor::zeros(vec![8, 8]);
+        Rng::new(4).fill_gaussian(alpha.data_mut(), 0.0, 0.5);
+        let setup = ScanSetup {
+            layer: &layer,
+            w_fp: &w_fp,
+            grid,
+            lr: 0.02,
+            kind: ScanKind::Attention { tau: 0.5 },
+        };
+        let mut scan = be.begin_scan(setup, ScanState::new(alpha)).unwrap();
+        let first = scan.scan(&xs, &ys, 0.0).unwrap();
+        let mut last = first;
+        for _ in 0..6 {
+            last = scan.scan(&xs, &ys, 0.0).unwrap();
+        }
+        assert!(last.is_finite() && first.is_finite());
+        assert!(
+            last < first,
+            "Adam should reduce the reconstruction loss: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn qat_step_updates_weights_and_loss_is_finite() {
+        let be = HostBackend::new();
+        let manifest = Manifest::synthetic();
+        let model = be.load_model(&manifest, "synthnet").unwrap();
+        let mut state = QatState::from_model(&model);
+        let (x, y) = synth::generate(8, 77);
+        let w0 = state.ws[1].clone();
+        let loss = be
+            .qat_step(&model, &mut state, &x, &y, 1e-3, 4, 4)
+            .unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        assert_ne!(state.ws[1], w0, "gradient step must move the weights");
+    }
+
+    #[test]
+    fn synthetic_model_beats_chance() {
+        let be = HostBackend::new();
+        let manifest = Manifest::synthetic();
+        let model = be.load_model(&manifest, "synthnet").unwrap();
+        let (x, y) = synth::generate(128, 4242);
+        let prep = be.prepare(&model, &model.weights).unwrap();
+        let logits = prep.forward(&x).unwrap();
+        let acc = crate::tensor::ops::top1_accuracy(&logits, &y);
+        assert!(
+            acc > 2.0 / 16.0,
+            "nearest-class-mean head should beat chance, got {acc}"
+        );
+    }
+}

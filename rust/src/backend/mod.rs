@@ -1,0 +1,234 @@
+//! Pluggable execution backends.
+//!
+//! The coordinator (capture → calibrate → evaluate → QAT) used to be
+//! hard-welded to the PJRT [`crate::runtime::Runtime`]: every phase held
+//! `xla::PjRtBuffer`s and drove AOT executables directly, so without a
+//! compiled `artifacts/` directory no end-to-end path could run at all.
+//! This module extracts the execution surface behind the [`Backend`]
+//! trait so the same coordinator code drives either:
+//!
+//! * [`pjrt::PjrtBackend`] — the original device path: AOT HLO artifacts
+//!   executed through the PJRT C API, weights resident on device.
+//! * [`host::HostBackend`] — a pure-host executor that runs the
+//!   manifest's layer graph natively (conv-as-matmul + linear via
+//!   [`crate::linalg`], relu/identity activations, per-layer fake-quant
+//!   for the activation-quantized path) on the process-wide
+//!   [`crate::util::threadpool::global`] pool. Combined with the
+//!   synthetic-model constructor ([`Manifest::synthetic`]) it runs the
+//!   full PTQ pipeline with **zero artifacts** — every paper experiment
+//!   is reproducible on a bare CPU checkout.
+//!
+//! Device-resident state (uploaded weight sets, per-layer calibration
+//! sessions) is expressed through backend-neutral handles —
+//! [`PreparedModel`], [`PreparedLayer`], [`CalibScan`] — so the PJRT
+//! implementation keeps its upload-once-per-phase buffer reuse while the
+//! host implementation simply borrows tensors.
+//!
+//! The trait requires `Send + Sync` so the experiment harness can fan
+//! table cells out across the thread pool (see
+//! `coordinator::experiments::Ctx::run_many`).
+
+pub mod host;
+pub mod pjrt;
+
+use crate::coordinator::model::LoadedModel;
+use crate::io::manifest::{LayerInfo, Manifest};
+use crate::quant::observer::ActQuantParams;
+use crate::quant::QGrid;
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+use crate::util::timer::Metrics;
+
+pub use host::HostBackend;
+pub use pjrt::PjrtBackend;
+
+/// Which trained-rounding objective a calibration session optimizes.
+#[derive(Debug, Clone, Copy)]
+pub enum ScanKind {
+    /// Attention Round (paper §3.3): α on the integer grid,
+    /// ŵ = s·clip(w/s + α, lo, hi) relaxed during training.
+    Attention { tau: f32 },
+    /// AdaRound (Nagel et al. 2020): rectified-sigmoid h(V) with the
+    /// β-annealed regularizer, weight λ.
+    AdaRound { lambda: f32 },
+}
+
+/// Per-layer calibration setup shared by both backends. The fused step
+/// count and per-step batch are carried by the stacked batches
+/// themselves (the leading dimensions of [`CalibScan::scan`]'s inputs).
+pub struct ScanSetup<'a> {
+    pub layer: &'a LayerInfo,
+    pub w_fp: &'a Tensor,
+    pub grid: QGrid,
+    /// Adam learning rate.
+    pub lr: f32,
+    pub kind: ScanKind,
+}
+
+/// Optimizer state for one layer's rounding variable (α or V) — plain
+/// host tensors; backends upload/download as needed.
+#[derive(Debug, Clone)]
+pub struct ScanState {
+    /// The trained rounding variable: α (Attention) or V (AdaRound).
+    pub var: Tensor,
+    /// Adam first moment.
+    pub m: Tensor,
+    /// Adam second moment.
+    pub v: Tensor,
+    /// Adam step count.
+    pub t: f32,
+}
+
+impl ScanState {
+    pub fn new(var: Tensor) -> Self {
+        let shape = var.shape().to_vec();
+        ScanState {
+            var,
+            m: Tensor::zeros(shape.clone()),
+            v: Tensor::zeros(shape),
+            t: 0.0,
+        }
+    }
+}
+
+/// STE-QAT training state: weights, biases and their SGD momenta.
+#[derive(Debug, Clone)]
+pub struct QatState {
+    pub ws: Vec<Tensor>,
+    pub bs: Vec<Tensor>,
+    pub mws: Vec<Tensor>,
+    pub mbs: Vec<Tensor>,
+}
+
+impl QatState {
+    pub fn from_model(model: &LoadedModel) -> Self {
+        QatState {
+            ws: model.weights.clone(),
+            bs: model.biases.clone(),
+            mws: model
+                .weights
+                .iter()
+                .map(|w| Tensor::zeros(w.shape().to_vec()))
+                .collect(),
+            mbs: model
+                .biases
+                .iter()
+                .map(|b| Tensor::zeros(b.shape().to_vec()))
+                .collect(),
+        }
+    }
+}
+
+/// A weight set staged for repeated model-level execution (device
+/// buffers for PJRT, borrowed host tensors for the host backend).
+pub trait PreparedModel {
+    /// Logits for one image batch.
+    fn forward(&self, x: &Tensor) -> Result<Tensor>;
+
+    /// Logits with per-layer activation fake-quant (Tables 2/3/5).
+    fn forward_actq(
+        &self,
+        x: &Tensor,
+        act_params: &[ActQuantParams],
+        act_bits: &[u8],
+    ) -> Result<Tensor>;
+
+    /// Every quantizable layer's input tensor plus the logits for one
+    /// batch — the capture phase's unit of work.
+    fn collect(&self, x: &Tensor) -> Result<(Vec<Tensor>, Tensor)>;
+}
+
+/// One layer's pre-activation map `y = layer(x, w)` staged for repeated
+/// calls (reference outputs for the reconstruction loss).
+pub trait PreparedLayer {
+    fn fwd(&self, x: &Tensor) -> Result<Tensor>;
+}
+
+/// A per-layer calibration session: repeated fused-Adam scan calls over
+/// stacked sample batches, with the optimizer state retrievable for
+/// host-side finalization.
+pub trait CalibScan {
+    /// Run one fused-Adam call over stacked batches `xs`/`ys` (leading
+    /// dim = number of steps). `beta` is the AdaRound annealing knob
+    /// (ignored by Attention). Returns the call's reconstruction loss.
+    fn scan(&mut self, xs: &Tensor, ys: &Tensor, beta: f32) -> Result<f32>;
+
+    /// Current optimizer state (read after the last scan to finalize).
+    fn state(&self) -> &ScanState;
+}
+
+/// An execution backend: everything the coordinator needs to run the
+/// capture → calibrate → evaluate pipeline and the QAT comparator.
+pub trait Backend: Send + Sync {
+    /// Short identifier: "host" or "pjrt".
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform string for banners.
+    fn platform(&self) -> String;
+
+    /// Phase timing + counters for this backend's executions.
+    fn metrics(&self) -> &Metrics;
+
+    /// Materialize a model's weights/biases. The PJRT backend reads the
+    /// manifest's npy checkpoints; the host backend additionally
+    /// constructs synthetic models (empty `w_files`) in memory.
+    fn load_model(&self, manifest: &Manifest, name: &str) -> Result<LoadedModel>;
+
+    /// Stage a weight set for forward / forward_actq / collect calls.
+    fn prepare<'a>(
+        &'a self,
+        model: &'a LoadedModel,
+        weights: &'a [Tensor],
+    ) -> Result<Box<dyn PreparedModel + 'a>>;
+
+    /// Stage one layer's forward map for reference-output batching.
+    fn prepare_layer<'a>(
+        &'a self,
+        layer: &'a LayerInfo,
+        w: &'a Tensor,
+    ) -> Result<Box<dyn PreparedLayer + 'a>>;
+
+    /// Open a calibration session for one layer.
+    fn begin_scan<'a>(
+        &'a self,
+        setup: ScanSetup<'a>,
+        init: ScanState,
+    ) -> Result<Box<dyn CalibScan + 'a>>;
+
+    /// One STE-QAT step (fwd + bwd + SGD-momentum update) at the given
+    /// fake-quant widths; returns the batch loss.
+    fn qat_step(
+        &self,
+        model: &LoadedModel,
+        state: &mut QatState,
+        x: &Tensor,
+        y: &[i32],
+        lr: f32,
+        wbits: u8,
+        abits: u8,
+    ) -> Result<f32>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn backends_are_send_sync() {
+        // `Backend: Send + Sync` is what lets experiments fan table rows
+        // out across the pool; check the concrete types, not just the
+        // trait bound.
+        assert_send_sync::<HostBackend>();
+        assert_send_sync::<PjrtBackend>();
+    }
+
+    #[test]
+    fn scan_state_shapes() {
+        let s = ScanState::new(Tensor::zeros(vec![2, 3]));
+        assert_eq!(s.m.shape(), &[2, 3]);
+        assert_eq!(s.v.shape(), &[2, 3]);
+        assert_eq!(s.t, 0.0);
+    }
+}

@@ -1,24 +1,26 @@
 //! Per-layer calibration — the paper's §3.3 (Attention Round) and the
-//! AdaRound baseline, driven over the AOT step/scan executables.
+//! AdaRound baseline, driven over backend calibration sessions
+//! ([`crate::backend::CalibScan`]: the AOT step/scan executables on
+//! PJRT, a native fused-Adam loop on the host backend).
 //!
 //! The reconstruction objective is ‖ŵx − wx‖²_F per module (paper §3.1,
-//! Taylor-expansion argument); Adam runs *inside* the executable, and the
-//! K-step `calib_scan` variant keeps α/m/v on device for K iterations per
-//! host round trip.
+//! Taylor-expansion argument); Adam runs *inside* the session, and the
+//! K-step scan variant keeps α/m/v backend-resident for K iterations per
+//! coordinator round trip.
 //!
-//! τ convention: the executables receive τ in integer-grid units (α lives
+//! τ convention: the sessions receive τ in integer-grid units (α lives
 //! on the grid: ŵ = s·clip(⌊w/s + α⌉, l, h)). The paper's Figure-2 sweep
 //! over τ ∈ [0, 1] with optimum ≈ 0.5 only makes dimensional sense on the
 //! grid (half a quantization cell); DESIGN.md §2 records this reading.
 
+use crate::backend::{Backend, ScanKind, ScanSetup, ScanState};
 use crate::coordinator::config::CalibConfig;
 use crate::io::manifest::LayerInfo;
 use crate::quant::rounding::{adaround_h, adaround_finalize, attention_finalize};
 use crate::quant::scale::mse_optimal_scale;
 use crate::quant::QGrid;
-use crate::runtime::{convert::literal_scalar, literal_to_tensor, Runtime};
 use crate::tensor::Tensor;
-use crate::util::error::{Error, Result};
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// Outcome of calibrating one layer.
@@ -56,7 +58,7 @@ fn sample_stack(
 /// Calibrate one layer with Attention Round (paper §3.3).
 #[allow(clippy::too_many_arguments)]
 pub fn calibrate_attention(
-    rt: &Runtime,
+    backend: &dyn Backend,
     layer: &LayerInfo,
     w_fp: &Tensor,
     xcache: &Tensor,
@@ -75,54 +77,33 @@ pub fn calibrate_attention(
     if cfg.tau > 0.0 {
         rng.fill_gaussian(alpha.data_mut(), 0.0, cfg.tau);
     }
-    let mut m = Tensor::zeros(w_fp.shape().to_vec());
-    let mut v = Tensor::zeros(w_fp.shape().to_vec());
-
-    let exe = rt.load(&layer.calib_scan)?;
-    let wbuf = rt.upload(w_fp)?;
-    let lr = rt.upload_scalar(cfg.lr)?;
-    let tau = rt.upload_scalar(cfg.tau)?;
-    let s = rt.upload_scalar(grid.scale)?;
-    let lo = rt.upload_scalar(grid.lo)?;
-    let hi = rt.upload_scalar(grid.hi)?;
+    let mut scan = backend.begin_scan(
+        ScanSetup {
+            layer,
+            w_fp,
+            grid,
+            lr: cfg.lr,
+            kind: ScanKind::Attention { tau: cfg.tau },
+        },
+        ScanState::new(alpha),
+    )?;
 
     let calls = cfg.iters.div_ceil(scan_k).max(1);
     let mut first_loss = f32::NAN;
     let mut last_loss = f32::NAN;
-    let mut t = 0f32;
-    rt.metrics.time("pipeline.calibrate", || -> Result<()> {
+    backend.metrics().time("pipeline.calibrate", || -> Result<()> {
         for call in 0..calls {
             let (xs, ys) = sample_stack(xcache, yref, rng, scan_k, calib_batch)?;
-            let xbuf = rt.upload(&xs)?;
-            let ybuf = rt.upload(&ys)?;
-            let abuf = rt.upload(&alpha)?;
-            let mbuf = rt.upload(&m)?;
-            let vbuf = rt.upload(&v)?;
-            let tbuf = rt.upload_scalar(t)?;
-            let outs = exe.run_b(&[
-                &wbuf, &xbuf, &ybuf, &abuf, &mbuf, &vbuf, &tbuf, &lr, &tau, &s,
-                &lo, &hi,
-            ])?;
-            if outs.len() != 4 {
-                return Err(Error::runtime(format!(
-                    "calib_scan returned {} outputs",
-                    outs.len()
-                )));
-            }
-            alpha = literal_to_tensor(&outs[0])?;
-            m = literal_to_tensor(&outs[1])?;
-            v = literal_to_tensor(&outs[2])?;
-            let loss = literal_scalar(&outs[3])?;
+            let loss = scan.scan(&xs, &ys, 0.0)?;
             if call == 0 {
                 first_loss = loss;
             }
             last_loss = loss;
-            t += scan_k as f32;
-            rt.metrics.incr("pipeline.calib_steps", scan_k as u64);
         }
         Ok(())
     })?;
 
+    let alpha = scan.state().var.clone();
     let qdata = attention_finalize(w_fp.data(), alpha.data(), &grid);
     Ok(CalibratedLayer {
         qweight: Tensor::new(w_fp.shape().to_vec(), qdata)?,
@@ -137,7 +118,7 @@ pub fn calibrate_attention(
 /// strongest baseline in Tables 1/2/5).
 #[allow(clippy::too_many_arguments)]
 pub fn calibrate_adaround(
-    rt: &Runtime,
+    backend: &dyn Backend,
     layer: &LayerInfo,
     w_fp: &Tensor,
     xcache: &Tensor,
@@ -161,51 +142,35 @@ pub fn calibrate_adaround(
         *vv = (sig / (1.0 - sig)).ln();
         debug_assert!((adaround_h(*vv) - frac).abs() < 1e-2);
     }
-    let mut m = Tensor::zeros(w_fp.shape().to_vec());
-    let mut v = Tensor::zeros(w_fp.shape().to_vec());
-
-    let exe = rt.load(&layer.adaround_scan)?;
-    let wbuf = rt.upload(w_fp)?;
-    let lr = rt.upload_scalar(cfg.lr)?;
-    let lam = rt.upload_scalar(cfg.ada_lambda)?;
-    let s = rt.upload_scalar(grid.scale)?;
-    let lo = rt.upload_scalar(grid.lo)?;
-    let hi = rt.upload_scalar(grid.hi)?;
+    let mut scan = backend.begin_scan(
+        ScanSetup {
+            layer,
+            w_fp,
+            grid,
+            lr: cfg.lr,
+            kind: ScanKind::AdaRound { lambda: cfg.ada_lambda },
+        },
+        ScanState::new(vvar),
+    )?;
 
     let calls = cfg.iters.div_ceil(scan_k).max(1);
     let mut first_loss = f32::NAN;
     let mut last_loss = f32::NAN;
-    let mut t = 0f32;
-    rt.metrics.time("pipeline.calibrate", || -> Result<()> {
+    backend.metrics().time("pipeline.calibrate", || -> Result<()> {
         for call in 0..calls {
             let progress = call as f32 / calls.max(1) as f32;
             let beta = cfg.ada_beta_hi + (cfg.ada_beta_lo - cfg.ada_beta_hi) * progress;
             let (xs, ys) = sample_stack(xcache, yref, rng, scan_k, calib_batch)?;
-            let xbuf = rt.upload(&xs)?;
-            let ybuf = rt.upload(&ys)?;
-            let vvbuf = rt.upload(&vvar)?;
-            let mbuf = rt.upload(&m)?;
-            let vbuf = rt.upload(&v)?;
-            let tbuf = rt.upload_scalar(t)?;
-            let bbuf = rt.upload_scalar(beta)?;
-            let outs = exe.run_b(&[
-                &wbuf, &xbuf, &ybuf, &vvbuf, &mbuf, &vbuf, &tbuf, &lr, &bbuf,
-                &lam, &s, &lo, &hi,
-            ])?;
-            vvar = literal_to_tensor(&outs[0])?;
-            m = literal_to_tensor(&outs[1])?;
-            v = literal_to_tensor(&outs[2])?;
-            let loss = literal_scalar(&outs[3])?;
+            let loss = scan.scan(&xs, &ys, beta)?;
             if call == 0 {
                 first_loss = loss;
             }
             last_loss = loss;
-            t += scan_k as f32;
-            rt.metrics.incr("pipeline.calib_steps", scan_k as u64);
         }
         Ok(())
     })?;
 
+    let vvar = scan.state().var.clone();
     let qdata = adaround_finalize(w_fp.data(), vvar.data(), &grid);
     Ok(CalibratedLayer {
         qweight: Tensor::new(w_fp.shape().to_vec(), qdata)?,

@@ -1,19 +1,21 @@
 //! Activation capture — phase 1 of the pipeline.
 //!
-//! Runs the model's `collect` executable over the calibration split in
-//! CALIB_BATCH chunks and materializes every quantizable layer's input
-//! tensor for all N calibration samples. Weights are supplied per call,
-//! so the same executable serves FP capture (paper default) and
-//! quantized-prefix re-capture (`recapture_every` config).
+//! Runs the model's collect path (one [`crate::backend::PreparedModel`]
+//! per weight set, so device backends upload weights once per pass) over
+//! the calibration split in CALIB_BATCH chunks and materializes every
+//! quantizable layer's input tensor for all N calibration samples.
+//! Weights are supplied per capture, so the same path serves FP capture
+//! (paper default) and quantized-prefix re-capture (`recapture_every`
+//! config).
 //!
 //! Memory: per-layer caches are taken (moved out) by the calibration loop
 //! as it walks the layers, so peak usage is one full capture plus one
 //! layer's reference outputs.
 
+use crate::backend::Backend;
 use crate::coordinator::model::LoadedModel;
 use crate::data::Split;
-use crate::io::manifest::Manifest;
-use crate::runtime::{literal_to_tensor, Runtime};
+use crate::io::manifest::{LayerInfo, Manifest};
 use crate::tensor::Tensor;
 use crate::util::error::{Error, Result};
 
@@ -51,7 +53,7 @@ impl ActCache {
 
 /// Capture all layer inputs with the given weights (usually FP).
 pub fn capture(
-    rt: &Runtime,
+    backend: &dyn Backend,
     manifest: &Manifest,
     model: &LoadedModel,
     weights: &[Tensor],
@@ -65,32 +67,21 @@ pub fn capture(
             "need at least {cb} calibration samples"
         )));
     }
-    let exe = rt.load(&model.info.collect)?;
     let k = model.num_layers();
-
-    // Upload weights + biases once for the whole pass.
-    let wbufs = rt.upload_all(weights)?;
-    let bbufs = rt.upload_all(&model.biases)?;
+    let prepared = backend.prepare(model, weights)?;
 
     let mut slots: Vec<Option<Tensor>> = vec![None; k];
-    rt.metrics.time("pipeline.capture", || -> Result<()> {
+    backend.metrics().time("pipeline.capture", || -> Result<()> {
         for start in (0..samples).step_by(cb) {
             let (x, _) = calib.batch(start, cb)?;
-            let xbuf = rt.upload(&x)?;
-            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + 2 * k);
-            args.push(&xbuf);
-            args.extend(wbufs.iter());
-            args.extend(bbufs.iter());
-            let outs = exe.run_b(&args)?;
-            if outs.len() != k + 1 {
+            let (ins, _logits) = prepared.collect(&x)?;
+            if ins.len() != k {
                 return Err(Error::runtime(format!(
-                    "collect returned {} outputs, expected {} layers + logits",
-                    outs.len(),
-                    k
+                    "collect returned {} layer inputs, expected {k}",
+                    ins.len()
                 )));
             }
-            for li in 0..k {
-                let t = literal_to_tensor(&outs[li])?;
+            for (li, t) in ins.into_iter().enumerate() {
                 let slot = &mut slots[li];
                 if slot.is_none() {
                     let mut shape = t.shape().to_vec();
@@ -103,30 +94,24 @@ pub fn capture(
         Ok(())
     })?;
 
-    Ok(ActCache {
-        slots,
-        samples,
-    })
+    Ok(ActCache { slots, samples })
 }
 
 /// Reference outputs y_ref = layer_fwd(x, w_fp) for a whole cache, in
 /// calib-batch chunks (phase 2 input for the reconstruction loss).
 pub fn reference_outputs(
-    rt: &Runtime,
-    layer_fwd_path: &str,
+    backend: &dyn Backend,
+    layer: &LayerInfo,
     xcache: &Tensor,
     w_fp: &Tensor,
     batch: usize,
 ) -> Result<Tensor> {
-    let exe = rt.load(layer_fwd_path)?;
-    let wbuf = rt.upload(w_fp)?;
+    let staged = backend.prepare_layer(layer, w_fp)?;
     let samples = xcache.shape()[0];
     let mut out: Option<Tensor> = None;
     for start in (0..samples).step_by(batch) {
-        let x = xcache.slice_axis0(start, batch)?;
-        let xbuf = rt.upload(&x)?;
-        let outs = exe.run_b(&[&xbuf, &wbuf])?;
-        let y = literal_to_tensor(&outs[0])?;
+        let x = xcache.slice_axis0(start, batch.min(samples - start))?;
+        let y = staged.fwd(&x)?;
         if out.is_none() {
             let mut shape = y.shape().to_vec();
             shape[0] = samples;

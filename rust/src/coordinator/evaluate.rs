@@ -1,39 +1,32 @@
-//! Batched top-1 evaluation through the model forward executables.
+//! Batched top-1 evaluation through a backend's model forward path.
 
+use crate::backend::{Backend, PreparedModel};
 use crate::coordinator::model::LoadedModel;
 use crate::data::Split;
 use crate::io::manifest::Manifest;
 use crate::quant::observer::ActQuantParams;
-use crate::runtime::{literal_to_tensor, Runtime};
 use crate::tensor::{ops, Tensor};
 use crate::util::error::{Error, Result};
 
 /// Evaluate top-1 accuracy with the given weights (FP or fake-quantized),
 /// activations in FP32.
 pub fn evaluate(
-    rt: &Runtime,
+    backend: &dyn Backend,
     manifest: &Manifest,
     model: &LoadedModel,
     weights: &[Tensor],
     eval: &Split,
 ) -> Result<f64> {
-    let exe = rt.load(&model.info.forward)?;
+    let prepared = backend.prepare(model, weights)?;
     let batch = manifest.dataset.eval_batch;
-    let wbufs = rt.upload_all(weights)?;
-    let bbufs = rt.upload_all(&model.biases)?;
-    run_eval(rt, &model.info.name, eval, batch, |xbuf| {
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + wbufs.len() * 2);
-        args.push(xbuf);
-        args.extend(wbufs.iter());
-        args.extend(bbufs.iter());
-        let outs = exe.run_b(&args)?;
-        literal_to_tensor(&outs[0])
+    run_eval(backend, &model.info.name, eval, batch, |x| {
+        prepared.forward(x)
     })
 }
 
 /// Evaluate with per-layer activation fake-quant (Tables 2/3/5).
 pub fn evaluate_actq(
-    rt: &Runtime,
+    backend: &dyn Backend,
     manifest: &Manifest,
     model: &LoadedModel,
     weights: &[Tensor],
@@ -49,40 +42,19 @@ pub fn evaluate_actq(
             act_bits.len()
         )));
     }
-    let exe = rt.load(&model.info.forward_actq)?;
+    let prepared = backend.prepare(model, weights)?;
     let batch = manifest.dataset.eval_batch;
-    let wbufs = rt.upload_all(weights)?;
-    let bbufs = rt.upload_all(&model.biases)?;
-    let scales = Tensor::from_vec(act_params.iter().map(|p| p.scale).collect());
-    let zeros = Tensor::from_vec(act_params.iter().map(|p| p.zero).collect());
-    let his = Tensor::from_vec(
-        act_bits
-            .iter()
-            .map(|&b| ((1u32 << b) - 1) as f32)
-            .collect(),
-    );
-    let sbuf = rt.upload(&scales)?;
-    let zbuf = rt.upload(&zeros)?;
-    let hbuf = rt.upload(&his)?;
-    run_eval(rt, &model.info.name, eval, batch, |xbuf| {
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 + wbufs.len() * 2);
-        args.push(xbuf);
-        args.extend(wbufs.iter());
-        args.extend(bbufs.iter());
-        args.push(&sbuf);
-        args.push(&zbuf);
-        args.push(&hbuf);
-        let outs = exe.run_b(&args)?;
-        literal_to_tensor(&outs[0])
+    run_eval(backend, &model.info.name, eval, batch, |x| {
+        prepared.forward_actq(x, act_params, act_bits)
     })
 }
 
 fn run_eval(
-    rt: &Runtime,
+    backend: &dyn Backend,
     name: &str,
     eval: &Split,
     batch: usize,
-    mut fwd: impl FnMut(&xla::PjRtBuffer) -> Result<Tensor>,
+    mut fwd: impl FnMut(&Tensor) -> Result<Tensor>,
 ) -> Result<f64> {
     let nb = eval.num_batches(batch);
     if nb == 0 {
@@ -92,14 +64,13 @@ fn run_eval(
     }
     let mut correct = 0.0f64;
     let mut total = 0usize;
-    rt.metrics.time("pipeline.evaluate", || -> Result<()> {
+    backend.metrics().time("pipeline.evaluate", || -> Result<()> {
         for bi in 0..nb {
             let (x, y) = eval.batch(bi * batch, batch)?;
-            let xbuf = rt.upload(&x)?;
-            let logits = fwd(&xbuf)?;
+            let logits = fwd(&x)?;
             correct += ops::top1_accuracy(&logits, y) * y.len() as f64;
             total += y.len();
-            rt.metrics.incr("pipeline.eval_images", y.len() as u64);
+            backend.metrics().incr("pipeline.eval_images", y.len() as u64);
         }
         Ok(())
     })?;

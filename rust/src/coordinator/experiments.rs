@@ -7,28 +7,41 @@
 //! model subsets are parameters — EXPERIMENTS.md records which settings
 //! produced the committed numbers (absolute ImageNet accuracies are not
 //! reproducible on a synthetic testbed; orderings and gaps are the claim).
+//!
+//! Execution is backend-neutral: [`Ctx::new`] drives PJRT artifacts,
+//! [`Ctx::synthetic`] drives the pure-host backend against the in-memory
+//! toy model, and [`Ctx::auto`] picks whichever is available. Because
+//! [`crate::backend::Backend`] is `Send + Sync`, independent table cells
+//! fan out across the global thread pool ([`Ctx::run_many`]) instead of
+//! running strictly serially.
 
 use std::path::PathBuf;
 
+use crate::backend::{Backend, HostBackend, PjrtBackend};
 use crate::coordinator::config::CalibConfig;
-use crate::coordinator::model::LoadedModel;
+use crate::coordinator::evaluate::evaluate;
 use crate::coordinator::pipeline::{
     quantize_and_eval, resolve_uniform_bits, QuantSpec,
 };
 use crate::coordinator::qat::run_qat;
-use crate::data::Split;
+use crate::data::{synth, Split};
 use crate::io::manifest::Manifest;
 use crate::mixed;
 use crate::quant::rounding::Rounding;
 use crate::report::svg::{bar_chart_svg, line_chart_svg};
 use crate::report::{bar_chart, pct, Table};
-use crate::runtime::Runtime;
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 use crate::util::threadpool;
+
+/// Synthetic split sizes (host path): the paper's 1,024-image calibration
+/// budget, 512 eval images (8 batches), 2,048 train images for QAT.
+const SYNTH_CALIB_N: usize = 1024;
+const SYNTH_EVAL_N: usize = 512;
+const SYNTH_TRAIN_N: usize = 2048;
 
 /// Shared context for all experiments.
 pub struct Ctx {
-    pub rt: Runtime,
+    pub backend: Box<dyn Backend>,
     pub manifest: Manifest,
     pub calib: Split,
     pub eval: Split,
@@ -37,15 +50,16 @@ pub struct Ctx {
 }
 
 impl Ctx {
+    /// PJRT context over a built `artifacts/` directory.
     pub fn new(artifacts: &str, cfg: CalibConfig, out_dir: &str) -> Result<Self> {
-        let rt = Runtime::new(artifacts)?;
+        let backend: Box<dyn Backend> = Box::new(PjrtBackend::new(artifacts)?);
         let manifest = Manifest::load(artifacts)?;
         let data_dir = manifest.path(&manifest.dataset.dir);
         let calib = Split::load(&data_dir, "calib")?;
         let eval = Split::load(&data_dir, "eval")?;
         std::fs::create_dir_all(out_dir)?;
         Ok(Ctx {
-            rt,
+            backend,
             manifest,
             calib,
             eval,
@@ -54,10 +68,125 @@ impl Ctx {
         })
     }
 
+    /// Host-backend context with zero artifacts: the synthetic manifest,
+    /// generator-backed splits, and a measured (not assumed) FP accuracy
+    /// patched into the manifest.
+    pub fn synthetic(cfg: CalibConfig, out_dir: &str) -> Result<Self> {
+        let backend: Box<dyn Backend> = Box::new(HostBackend::new());
+        let mut manifest = Manifest::synthetic();
+        let calib = synth::split(SYNTH_CALIB_N, synth::CALIB_SEED);
+        let eval = synth::split(SYNTH_EVAL_N, synth::EVAL_SEED);
+        std::fs::create_dir_all(out_dir)?;
+        let mut fp_accs = Vec::with_capacity(manifest.models.len());
+        for m in &manifest.models {
+            let model = backend.load_model(&manifest, &m.name)?;
+            fp_accs.push(evaluate(
+                backend.as_ref(),
+                &manifest,
+                &model,
+                &model.weights,
+                &eval,
+            )?);
+        }
+        for (m, acc) in manifest.models.iter_mut().zip(fp_accs) {
+            m.fp_acc = acc;
+        }
+        Ok(Ctx {
+            backend,
+            manifest,
+            calib,
+            eval,
+            cfg,
+            out_dir: PathBuf::from(out_dir),
+        })
+    }
+
+    /// PJRT when artifacts exist, otherwise the host backend — every
+    /// checkout gets a runnable end-to-end path.
+    pub fn auto(artifacts: &str, cfg: CalibConfig, out_dir: &str) -> Result<Self> {
+        if std::path::Path::new(artifacts).join("manifest.json").exists() {
+            Self::new(artifacts, cfg, out_dir)
+        } else {
+            log::info!(
+                "no artifacts at {artifacts}: running on the host backend \
+                 against the synthetic model"
+            );
+            Self::synthetic(cfg, out_dir)
+        }
+    }
+
+    /// The model subset experiments default to on this context.
+    pub fn default_models(&self) -> Vec<String> {
+        if self.manifest.is_synthetic() {
+            self.manifest.models.iter().map(|m| m.name.clone()).collect()
+        } else {
+            ALL_MODELS
+                .iter()
+                .filter(|m| self.manifest.model(m).is_ok())
+                .map(|m| m.to_string())
+                .collect()
+        }
+    }
+
+    /// The model a single-model run should default to: the caller's
+    /// explicit request (`--model`, `REPRO_MODEL`) if any, else the
+    /// first default model of this context.
+    pub fn primary_model(&self, requested: Option<&str>) -> Result<String> {
+        if let Some(m) = requested {
+            return Ok(m.to_string());
+        }
+        self.default_models()
+            .first()
+            .cloned()
+            .ok_or_else(|| Error::config("no models in manifest; pass a model name"))
+    }
+
+    /// The train split (QAT): generator-backed on the synthetic context.
+    pub fn train_split(&self) -> Result<Split> {
+        if self.manifest.is_synthetic() {
+            Ok(synth::split(SYNTH_TRAIN_N, synth::TRAIN_SEED))
+        } else {
+            Split::load(&self.manifest.path(&self.manifest.dataset.dir), "train")
+        }
+    }
+
     pub fn save(&self, name: &str, t: &Table) -> Result<()> {
         std::fs::write(self.out_dir.join(format!("{name}.md")), t.render())?;
         std::fs::write(self.out_dir.join(format!("{name}.csv")), t.to_csv())?;
         Ok(())
+    }
+
+    fn run_cfg(
+        &self,
+        model: &str,
+        wbits: u8,
+        abits: Option<u8>,
+        cfg: &CalibConfig,
+    ) -> Result<f64> {
+        let loaded = self.backend.load_model(&self.manifest, model)?;
+        let spec = QuantSpec {
+            model: model.to_string(),
+            wbits: resolve_uniform_bits(&loaded, wbits),
+            abits,
+        };
+        let out = quantize_and_eval(
+            self.backend.as_ref(),
+            &self.manifest,
+            &spec,
+            cfg,
+            &self.calib,
+            &self.eval,
+        )?;
+        log::info!(
+            "{model} {}/{} {:?}: top-1 {:.2}% (fp {:.2}%) in {:.1}s",
+            wbits,
+            abits.map(|b| b.to_string()).unwrap_or_else(|| "32".into()),
+            cfg.method,
+            out.acc * 100.0,
+            out.fp_acc * 100.0,
+            out.wall_s
+        );
+        Ok(out.acc)
     }
 
     fn run(
@@ -67,27 +196,29 @@ impl Ctx {
         abits: Option<u8>,
         method: Rounding,
     ) -> Result<f64> {
-        let loaded = LoadedModel::load(&self.manifest, model)?;
-        let spec = QuantSpec {
-            model: model.to_string(),
-            wbits: resolve_uniform_bits(&loaded, wbits),
-            abits,
-        };
         let mut cfg = self.cfg.clone();
         cfg.method = method;
-        let out = quantize_and_eval(
-            &self.rt, &self.manifest, &spec, &cfg, &self.calib, &self.eval,
-        )?;
-        log::info!(
-            "{model} {}/{} {:?}: top-1 {:.2}% (fp {:.2}%) in {:.1}s",
-            wbits,
-            abits.map(|b| b.to_string()).unwrap_or_else(|| "32".into()),
-            method,
-            out.acc * 100.0,
-            out.fp_acc * 100.0,
-            out.wall_s
-        );
-        Ok(out.acc)
+        self.run_cfg(model, wbits, abits, &cfg)
+    }
+
+    /// Run independent quantize+eval cells across the global pool.
+    /// Each cell is a full pipeline run with its own RNG stream seeded
+    /// from the config, so results are identical to the serial order.
+    /// Note on metrics: concurrent cells accumulate into the backend's
+    /// one [`crate::util::timer::Metrics`], so per-phase durations in
+    /// the final report are aggregate CPU-seconds across cells, not
+    /// wall-clock, whenever cells overlap.
+    pub fn run_many(
+        &self,
+        specs: &[(&str, u8, Option<u8>, Rounding)],
+    ) -> Result<Vec<f64>> {
+        threadpool::global()
+            .scope_map(specs.len(), |i| {
+                let (model, wbits, abits, method) = specs[i];
+                self.run(model, wbits, abits, method)
+            })
+            .into_iter()
+            .collect()
     }
 
     fn fp_row(&self, models: &[&str]) -> Result<Vec<String>> {
@@ -125,23 +256,37 @@ pub fn table1(ctx: &Ctx, models: &[&str]) -> Result<Table> {
     );
     t.row(ctx.fp_row(models)?);
     for bits in [6u8, 5] {
+        let specs: Vec<_> = models
+            .iter()
+            .map(|m| (*m, bits, None, Rounding::Attention))
+            .collect();
+        let accs = ctx.run_many(&specs)?;
         let mut row = vec!["Ours".into(), format!("{bits}/32")];
-        for m in models {
-            row.push(pct(ctx.run(m, bits, None, Rounding::Attention)?));
-        }
+        row.extend(accs.iter().map(|&a| pct(a)));
         t.row(row);
     }
+    const METHODS: [(&str, Rounding); 4] = [
+        ("Nearest (OMSE)", Rounding::Nearest),
+        ("Stochastic", Rounding::Stochastic),
+        ("AdaRound", Rounding::AdaRound),
+        ("Ours", Rounding::Attention),
+    ];
     for bits in [4u8, 3] {
-        for (name, method) in [
-            ("Nearest (OMSE)", Rounding::Nearest),
-            ("Stochastic", Rounding::Stochastic),
-            ("AdaRound", Rounding::AdaRound),
-            ("Ours", Rounding::Attention),
-        ] {
-            let mut row = vec![name.into(), format!("{bits}/32")];
+        // one parallel wave per bit width: methods × models cells
+        let mut specs = Vec::new();
+        for (_, method) in METHODS {
             for m in models {
-                row.push(pct(ctx.run(m, bits, None, method)?));
+                specs.push((*m, bits, None, method));
             }
+        }
+        let accs = ctx.run_many(&specs)?;
+        for (mi, (name, _)) in METHODS.iter().enumerate() {
+            let mut row = vec![name.to_string(), format!("{bits}/32")];
+            row.extend(
+                accs[mi * models.len()..(mi + 1) * models.len()]
+                    .iter()
+                    .map(|&a| pct(a)),
+            );
             t.row(row);
         }
     }
@@ -160,10 +305,13 @@ pub fn table2(ctx: &Ctx, models: &[&str]) -> Result<Table> {
     );
     t.row(ctx.fp_row(models)?);
     for (w, a) in [(6u8, 6u8), (5, 5)] {
+        let specs: Vec<_> = models
+            .iter()
+            .map(|m| (*m, w, Some(a), Rounding::Attention))
+            .collect();
+        let accs = ctx.run_many(&specs)?;
         let mut row = vec!["Ours".into(), format!("{w}/{a}")];
-        for m in models {
-            row.push(pct(ctx.run(m, w, Some(a), Rounding::Attention)?));
-        }
+        row.extend(accs.iter().map(|&acc| pct(acc)));
         t.row(row);
     }
     for (name, method) in [
@@ -171,17 +319,23 @@ pub fn table2(ctx: &Ctx, models: &[&str]) -> Result<Table> {
         ("AdaRound", Rounding::AdaRound),
         ("Ours", Rounding::Attention),
     ] {
-        let mut row = vec![name.into(), "4/4".into()];
-        for m in models {
-            row.push(pct(ctx.run(m, 4, Some(4), method)?));
-        }
+        let specs: Vec<_> = models
+            .iter()
+            .map(|m| (*m, 4u8, Some(4u8), method))
+            .collect();
+        let accs = ctx.run_many(&specs)?;
+        let mut row = vec![name.to_string(), "4/4".into()];
+        row.extend(accs.iter().map(|&acc| pct(acc)));
         t.row(row);
     }
     {
+        let specs: Vec<_> = models
+            .iter()
+            .map(|m| (*m, 3u8, Some(4u8), Rounding::Attention))
+            .collect();
+        let accs = ctx.run_many(&specs)?;
         let mut row = vec!["Ours".into(), "3/4".into()];
-        for m in models {
-            row.push(pct(ctx.run(m, 3, Some(4), Rounding::Attention)?));
-        }
+        row.extend(accs.iter().map(|&acc| pct(acc)));
         t.row(row);
     }
     println!("{}", t.render());
@@ -189,18 +343,24 @@ pub fn table2(ctx: &Ctx, models: &[&str]) -> Result<Table> {
     Ok(t)
 }
 
-/// Table 3 — PTQ vs (budgeted) QAT on resnet18t + mobilenetv2t.
+/// Table 3 — PTQ vs (budgeted) QAT. Zoo contexts compare on
+/// resnet18t + mobilenetv2t; the synthetic context uses its own model.
 pub fn table3(ctx: &Ctx, qat_steps: usize) -> Result<Table> {
     let mut t = Table::new(
         "Table 3 — comparison with quantization-aware training",
         &["Model", "Method", "Bits(W/A)", "Train data", "Wall(s)", "Top-1 %"],
     );
-    for model in ["resnet18t", "mobilenetv2t"] {
+    let models: Vec<String> = if ctx.manifest.is_synthetic() {
+        ctx.default_models()
+    } else {
+        vec!["resnet18t".into(), "mobilenetv2t".into()]
+    };
+    for model in models.iter().map(String::as_str) {
         let fp = ctx.manifest.model(model)?.fp_acc;
         // data-free nearest (the ZeroQ-like zero-cost row)
         let mut cfg0 = ctx.cfg.clone();
         cfg0.method = Rounding::Nearest;
-        let loaded = LoadedModel::load(&ctx.manifest, model)?;
+        let loaded = ctx.backend.load_model(&ctx.manifest, model)?;
         let t0 = std::time::Instant::now();
         let spec = QuantSpec {
             model: model.into(),
@@ -208,7 +368,7 @@ pub fn table3(ctx: &Ctx, qat_steps: usize) -> Result<Table> {
             abits: Some(4),
         };
         let out = quantize_and_eval(
-            &ctx.rt, &ctx.manifest, &spec, &cfg0, &ctx.calib, &ctx.eval,
+            ctx.backend.as_ref(), &ctx.manifest, &spec, &cfg0, &ctx.calib, &ctx.eval,
         )?;
         t.row(vec![
             format!("{model} (FP {:.2})", fp * 100.0),
@@ -219,10 +379,10 @@ pub fn table3(ctx: &Ctx, qat_steps: usize) -> Result<Table> {
             pct(out.acc),
         ]);
         // budgeted STE-QAT
-        let train = Split::load(&ctx.manifest.path(&ctx.manifest.dataset.dir), "train")?;
+        let train = ctx.train_split()?;
         let qat = run_qat(
-            &ctx.rt, &ctx.manifest, model, 4, 4, qat_steps, 1e-3, &train,
-            &ctx.eval, ctx.cfg.seed,
+            ctx.backend.as_ref(), &ctx.manifest, model, 4, 4, qat_steps, 1e-3,
+            &train, &ctx.eval, ctx.cfg.seed,
         )?;
         t.row(vec![
             format!("{model} (FP {:.2})", fp * 100.0),
@@ -258,8 +418,8 @@ pub fn table4(ctx: &Ctx, models: &[&str], eps2: f64) -> Result<Table> {
         &["Model", "Single/Mixed", "Bits", "Model size", "Top-1 %"],
     );
     for model in models {
-        let loaded = LoadedModel::load(&ctx.manifest, model)?;
-        let fp = loaded.info.fp_acc;
+        let loaded = ctx.backend.load_model(&ctx.manifest, model)?;
+        let fp = ctx.manifest.model(model)?.fp_acc;
         for bit_list in [vec![3u8, 4, 5, 6], vec![3, 4, 5]] {
             // Algorithm 1 on the same shared pool the pipeline uses.
             let alloc = mixed::allocate_with(
@@ -275,7 +435,8 @@ pub fn table4(ctx: &Ctx, models: &[&str], eps2: f64) -> Result<Table> {
                 abits: None,
             };
             let out = quantize_and_eval(
-                &ctx.rt, &ctx.manifest, &spec, &ctx.cfg, &ctx.calib, &ctx.eval,
+                ctx.backend.as_ref(), &ctx.manifest, &spec, &ctx.cfg, &ctx.calib,
+                &ctx.eval,
             )?;
             t.row(vec![
                 format!("{model} (FP {:.2})", fp * 100.0),
@@ -285,9 +446,13 @@ pub fn table4(ctx: &Ctx, models: &[&str], eps2: f64) -> Result<Table> {
                 pct(out.acc),
             ]);
         }
-        for bits in [3u8, 4, 5, 6] {
+        let specs: Vec<_> = [3u8, 4, 5, 6]
+            .iter()
+            .map(|&b| (*model, b, None, Rounding::Attention))
+            .collect();
+        let accs = ctx.run_many(&specs)?;
+        for (&bits, &acc) in [3u8, 4, 5, 6].iter().zip(&accs) {
             let alloc = mixed::uniform_allocation(&loaded.info.layers, bits);
-            let acc = ctx.run(model, bits, None, Rounding::Attention)?;
             t.row(vec![
                 format!("{model} (FP {:.2})", fp * 100.0),
                 "Single".into(),
@@ -302,7 +467,7 @@ pub fn table4(ctx: &Ctx, models: &[&str], eps2: f64) -> Result<Table> {
     Ok(t)
 }
 
-/// Table 5 — the rounding-function ablation on resnet18t (4/32 and 4/4).
+/// Table 5 — the rounding-function ablation (4/32 and 4/4).
 pub fn table5(ctx: &Ctx) -> Result<Table> {
     let methods = [
         Rounding::Nearest,
@@ -312,21 +477,27 @@ pub fn table5(ctx: &Ctx) -> Result<Table> {
         Rounding::AdaRound,
         Rounding::Attention,
     ];
+    let model_owned = ctx
+        .default_models()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "resnet18t".into());
+    let model = model_owned.as_str();
     let mut hdr = vec!["Bits(W/A)".to_string()];
     hdr.extend(methods.iter().map(|m| m.name().to_string()));
     let hdr_refs: Vec<&str> = hdr.iter().map(String::as_str).collect();
     let mut t = Table::new(
-        "Table 5 — rounding functions, resnet18t (top-1 %)",
+        format!("Table 5 — rounding functions, {model} (top-1 %)"),
         &hdr_refs,
     );
     for abits in [None, Some(4u8)] {
+        let specs: Vec<_> = methods.iter().map(|&m| (model, 4u8, abits, m)).collect();
+        let accs = ctx.run_many(&specs)?;
         let mut row = vec![format!(
             "4/{}",
             abits.map(|b| b.to_string()).unwrap_or_else(|| "32".into())
         )];
-        for method in methods {
-            row.push(pct(ctx.run("resnet18t", 4, abits, method)?));
-        }
+        row.extend(accs.iter().map(|&a| pct(a)));
         t.row(row);
     }
     println!("{}", t.render());
@@ -343,45 +514,32 @@ pub fn fig2(ctx: &Ctx, models: &[&str], taus: &[f32]) -> Result<Table> {
     let mut svg_series: Vec<(String, Vec<f64>)> = Vec::new();
     for model in models {
         for abits in [None, Some(4u8)] {
-            let mut row = vec![
-                model.to_string(),
-                format!(
-                    "4/{}",
-                    abits.map(|b| b.to_string()).unwrap_or_else(|| "32".into())
-                ),
-            ];
-            let mut accs = Vec::new();
-            for &tau in taus {
-                let mut cfg = ctx.cfg.clone();
-                cfg.tau = tau;
-                let loaded = LoadedModel::load(&ctx.manifest, model)?;
-                let spec = QuantSpec {
-                    model: model.to_string(),
-                    wbits: resolve_uniform_bits(&loaded, 4),
-                    abits,
-                };
-                let out = quantize_and_eval(
-                    &ctx.rt, &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
-                )?;
-                accs.push(out.acc);
-                row.push(pct(out.acc));
-            }
+            // the τ points are independent runs: fan them out
+            let accs: Vec<f64> = threadpool::global()
+                .scope_map(taus.len(), |i| {
+                    let mut cfg = ctx.cfg.clone();
+                    cfg.tau = taus[i];
+                    cfg.method = Rounding::Attention;
+                    ctx.run_cfg(model, 4, abits, &cfg)
+                })
+                .into_iter()
+                .collect::<Result<_>>()?;
+            let wa = abits.map(|b| b.to_string()).unwrap_or_else(|| "32".into());
+            let mut row = vec![model.to_string(), format!("4/{wa}")];
+            row.extend(accs.iter().map(|&a| pct(a)));
             // terminal chart per series
             let labels: Vec<String> = taus.iter().map(|t| format!("τ={t}")).collect();
             println!(
                 "{}",
                 bar_chart(
-                    &format!("Fig 2 — {model} 4/{}", abits.map(|b| b.to_string()).unwrap_or_else(|| "32".into())),
+                    &format!("Fig 2 — {model} 4/{wa}"),
                     &labels,
                     &accs.iter().map(|&a| a * 100.0).collect::<Vec<_>>(),
                     48,
                 )
             );
             svg_series.push((
-                format!(
-                    "{model} 4/{}",
-                    abits.map(|b| b.to_string()).unwrap_or_else(|| "32".into())
-                ),
+                format!("{model} 4/{wa}"),
                 accs.iter().map(|&a| a * 100.0).collect(),
             ));
             t.row(row);
@@ -399,7 +557,7 @@ pub fn fig2(ctx: &Ctx, models: &[&str], taus: &[f32]) -> Result<Table> {
 
 /// Figures 3/4/5 — per-layer bit allocation under bits [3..8].
 pub fn fig_alloc(ctx: &Ctx, model: &str, eps2: f64) -> Result<Table> {
-    let loaded = LoadedModel::load(&ctx.manifest, model)?;
+    let loaded = ctx.backend.load_model(&ctx.manifest, model)?;
     let alloc = mixed::allocate_with(
         threadpool::global(),
         &loaded.info.layers,

@@ -10,12 +10,16 @@
 //!    └────► activation observers ─────────────────────────► evaluate
 //! ```
 //!
+//! All device-shaped work goes through [`crate::backend::Backend`], so
+//! every sub-module here is execution-backend-neutral: the same code
+//! drives PJRT artifacts and the pure-host executor.
+//!
 //! Sub-modules:
 //! * [`config`]    — run configuration (quick/paper profiles, overrides).
 //! * [`model`]     — loading FP checkpoints from the manifest.
 //! * [`capture`]   — activation capture over the calibration set.
-//! * [`calibrate`] — the per-layer Adam loops driving the AOT step/scan
-//!   executables (Attention Round + AdaRound).
+//! * [`calibrate`] — the per-layer Adam loops driving backend
+//!   calibration sessions (Attention Round + AdaRound).
 //! * [`evaluate`]  — batched top-1 evaluation (FP / weight-only / W+A).
 //! * [`pipeline`]  — the end-to-end `quantize` entry point.
 //! * [`qat`]       — the budgeted STE-QAT comparator (Table 3).

@@ -1,14 +1,17 @@
 //! The end-to-end PTQ pipeline (DESIGN.md §5): capture → scale → per-layer
 //! calibration → finalize → (activation observers) → evaluate.
 //!
-//! Host-side hot paths — MSE scale search, rounding kernels, observers,
-//! bit allocation (`mixed::allocate`) — all run on the one process-wide
-//! [`threadpool::global`] pool (`AR_THREADS` sizes it), threaded through
-//! explicitly here so calibration, allocation, and evaluation share
-//! workers instead of each creating their own.
+//! Execution is backend-neutral: everything device-shaped goes through
+//! [`crate::backend::Backend`] (PJRT artifacts or the pure-host
+//! executor). Host-side hot paths — MSE scale search, rounding kernels,
+//! observers, bit allocation (`mixed::allocate`) — all run on the one
+//! process-wide [`threadpool::global`] pool (`AR_THREADS` sizes it),
+//! threaded through explicitly here so calibration, allocation, and
+//! evaluation share workers instead of each creating their own.
 
 use std::time::Instant;
 
+use crate::backend::Backend;
 use crate::coordinator::calibrate::{calibrate_adaround, calibrate_attention};
 use crate::coordinator::capture::{capture, reference_outputs, ActCache};
 use crate::coordinator::config::CalibConfig;
@@ -80,7 +83,7 @@ pub struct Outcome {
 
 /// Quantize a model per `spec`/`cfg` and evaluate top-1 on `eval`.
 pub fn quantize_and_eval(
-    rt: &crate::runtime::Runtime,
+    backend: &dyn Backend,
     manifest: &Manifest,
     spec: &QuantSpec,
     cfg: &CalibConfig,
@@ -88,7 +91,7 @@ pub fn quantize_and_eval(
     eval: &Split,
 ) -> Result<Outcome> {
     let t0 = Instant::now();
-    let model = LoadedModel::load(manifest, &spec.model)?;
+    let model = backend.load_model(manifest, &spec.model)?;
     let k = model.num_layers();
     assert_eq!(spec.wbits.len(), k, "wbits arity");
     let mut rng = Rng::new(cfg.seed);
@@ -102,7 +105,7 @@ pub fn quantize_and_eval(
         || matches!(cfg.method, Rounding::Attention | Rounding::AdaRound);
     let mut cache: Option<ActCache> = if needs_capture {
         Some(capture(
-            rt,
+            backend,
             manifest,
             &model,
             &model.weights,
@@ -129,7 +132,7 @@ pub fn quantize_and_eval(
                 let mut mixed: Vec<Tensor> = qweights.clone();
                 mixed.extend_from_slice(&model.weights[li..]);
                 cache = Some(capture(
-                    rt,
+                    backend,
                     manifest,
                     &model,
                     &mixed,
@@ -157,16 +160,16 @@ pub fn quantize_and_eval(
         let (qw, outcome) = match cfg.method {
             Rounding::Attention | Rounding::AdaRound => {
                 let x = xcache.expect("capture ran for trained methods");
-                let yref = rt.metrics.time("pipeline.reference_outputs", || {
-                    reference_outputs(rt, &layer.layer_fwd, &x, w_fp, cb)
+                let yref = backend.metrics().time("pipeline.reference_outputs", || {
+                    reference_outputs(backend, layer, &x, w_fp, cb)
                 })?;
                 let cal = if cfg.method == Rounding::Attention {
                     calibrate_attention(
-                        rt, layer, w_fp, &x, &yref, bits, cfg, scan_k, cb, &mut rng,
+                        backend, layer, w_fp, &x, &yref, bits, cfg, scan_k, cb, &mut rng,
                     )?
                 } else {
                     calibrate_adaround(
-                        rt, layer, w_fp, &x, &yref, bits, cfg, scan_k, cb, &mut rng,
+                        backend, layer, w_fp, &x, &yref, bits, cfg, scan_k, cb, &mut rng,
                     )?
                 };
                 log::debug!(
@@ -204,9 +207,13 @@ pub fn quantize_and_eval(
                     Rounding::Ceil => {
                         rounding::ceil_into(pool, w_fp.data(), &grid, &mut qdata)
                     }
-                    Rounding::Stochastic => {
-                        rounding::stochastic_into(w_fp.data(), &grid, &mut rng, &mut qdata)
-                    }
+                    Rounding::Stochastic => rounding::stochastic_into(
+                        pool,
+                        w_fp.data(),
+                        &grid,
+                        rng.next_u64(),
+                        &mut qdata,
+                    ),
                     _ => unreachable!(),
                 };
                 (
@@ -227,9 +234,9 @@ pub fn quantize_and_eval(
 
     let acc = match (&act_bits, spec.abits) {
         (Some(bits_a), Some(_)) => evaluate_actq(
-            rt, manifest, &model, &qweights, &act_params, bits_a, eval,
+            backend, manifest, &model, &qweights, &act_params, bits_a, eval,
         )?,
-        _ => evaluate(rt, manifest, &model, &qweights, eval)?,
+        _ => evaluate(backend, manifest, &model, &qweights, eval)?,
     };
 
     Ok(Outcome {

@@ -6,9 +6,13 @@
 //! on weights and activations, SGD-momentum) trained on the full synthetic
 //! train split for a bounded step budget — the cost/accuracy trade-off the
 //! table demonstrates survives the substitution (DESIGN.md §2).
+//!
+//! The step itself is a [`crate::backend::Backend::qat_step`]: the AOT
+//! fwd+bwd executable on PJRT, a native backprop on the host backend.
 
 use std::time::Instant;
 
+use crate::backend::{Backend, QatState};
 use crate::coordinator::evaluate::evaluate;
 use crate::coordinator::model::LoadedModel;
 use crate::data::Split;
@@ -16,9 +20,8 @@ use crate::io::manifest::Manifest;
 use crate::quant::rounding::nearest;
 use crate::quant::scale::absmax_scale;
 use crate::quant::QGrid;
-use crate::runtime::{convert::literal_scalar, literal_to_tensor, Runtime};
 use crate::tensor::Tensor;
-use crate::util::error::{Error, Result};
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 #[derive(Debug)]
@@ -35,7 +38,7 @@ pub struct QatOutcome {
 /// quantize the trained weights and evaluate.
 #[allow(clippy::too_many_arguments)]
 pub fn run_qat(
-    rt: &Runtime,
+    backend: &dyn Backend,
     manifest: &Manifest,
     model_name: &str,
     wbits: u8,
@@ -47,60 +50,20 @@ pub fn run_qat(
     seed: u64,
 ) -> Result<QatOutcome> {
     let t0 = Instant::now();
-    let model = LoadedModel::load(manifest, model_name)?;
-    let qat_path = model.info.qat_step.clone().ok_or_else(|| {
-        Error::config(format!("{model_name} has no qat_step artifact"))
-    })?;
-    let exe = rt.load(&qat_path)?;
+    let model = backend.load_model(manifest, model_name)?;
     let k = model.num_layers();
     let batch = manifest.dataset.qat_batch;
     let mut rng = Rng::new(seed);
-
-    let mut ws = model.weights.clone();
-    let mut bs = model.biases.clone();
-    let mut mws: Vec<Tensor> = ws.iter().map(|w| Tensor::zeros(w.shape().to_vec())).collect();
-    let mut mbs: Vec<Tensor> = bs.iter().map(|b| Tensor::zeros(b.shape().to_vec())).collect();
-
-    let whi = rt.upload_scalar(((1i64 << (wbits - 1)) - 1) as f32)?;
-    let ahi = rt.upload_scalar(((1i64 << abits) - 1) as f32)?;
+    let mut state = QatState::from_model(&model);
     let mut final_loss = f32::NAN;
 
-    rt.metrics.time("qat.train", || -> Result<()> {
+    backend.metrics().time("qat.train", || -> Result<()> {
         for step in 0..steps {
             // cosine LR decay
             let lr_t =
                 lr * 0.5 * (1.0 + (std::f32::consts::PI * step as f32 / steps as f32).cos());
             let (x, y) = train.sample(&mut rng, batch)?;
-            let xbuf = rt.upload(&x)?;
-            let ybuf = rt.upload_i32(&y, &[batch])?;
-            let lrbuf = rt.upload_scalar(lr_t)?;
-            let mut bufs = Vec::with_capacity(4 * k);
-            for t in ws.iter().chain(bs.iter()).chain(mws.iter()).chain(mbs.iter()) {
-                bufs.push(rt.upload(t)?);
-            }
-            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 * k + 5);
-            args.push(&xbuf);
-            args.push(&ybuf);
-            args.extend(bufs.iter());
-            args.push(&lrbuf);
-            args.push(&whi);
-            args.push(&ahi);
-            let outs = exe.run_b(&args)?;
-            if outs.len() != 4 * k + 1 {
-                return Err(Error::runtime(format!(
-                    "qat_step returned {} outputs, expected {}",
-                    outs.len(),
-                    4 * k + 1
-                )));
-            }
-            for i in 0..k {
-                ws[i] = literal_to_tensor(&outs[i])?;
-                bs[i] = literal_to_tensor(&outs[k + i])?;
-                mws[i] = literal_to_tensor(&outs[2 * k + i])?;
-                mbs[i] = literal_to_tensor(&outs[3 * k + i])?;
-            }
-            final_loss = literal_scalar(&outs[4 * k])?;
-            rt.metrics.incr("qat.steps", 1);
+            final_loss = backend.qat_step(&model, &mut state, &x, &y, lr_t, wbits, abits)?;
             if step % 50 == 0 {
                 log::debug!("qat {model_name} step {step} loss {final_loss:.4}");
             }
@@ -111,7 +74,7 @@ pub fn run_qat(
     // Deploy-time quantization of the QAT weights: nearest on the dynamic
     // max-abs grid the STE trained against (first/last pinned to 8-bit).
     let mut qws = Vec::with_capacity(k);
-    for (i, w) in ws.iter().enumerate() {
+    for (i, w) in state.ws.iter().enumerate() {
         let b = if i == 0 || i == k - 1 { 8 } else { wbits };
         let grid = QGrid::signed(b, absmax_scale(w.data(), b))?;
         qws.push(Tensor::new(w.shape().to_vec(), nearest(w.data(), &grid))?);
@@ -119,9 +82,9 @@ pub fn run_qat(
     let eval_model = LoadedModel {
         info: model.info.clone(),
         weights: qws.clone(),
-        biases: bs,
+        biases: state.bs,
     };
-    let acc = evaluate(rt, manifest, &eval_model, &qws, eval)?;
+    let acc = evaluate(backend, manifest, &eval_model, &qws, eval)?;
 
     Ok(QatOutcome {
         acc,

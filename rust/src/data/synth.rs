@@ -8,12 +8,54 @@
 //! classifier transfers across both (the integration test feeds Rust
 //! samples through the FP model and checks accuracy stays in-band).
 
+use crate::data::Split;
+use crate::io::manifest::ModelInfo;
 use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
 pub const NUM_CLASSES: usize = 16;
 pub const IMG: usize = 32;
 pub const CHANNELS: usize = 3;
+
+/// Canonical split seeds for the artifact-free host pipeline. Disjoint
+/// from each other and from the model-construction seeds in
+/// `backend::host`, so calibration, evaluation, training and the head
+/// prototypes never share samples.
+pub const CALIB_SEED: u64 = 2001;
+pub const EVAL_SEED: u64 = 2002;
+pub const TRAIN_SEED: u64 = 2003;
+
+/// An in-memory [`Split`] straight from the generator — the host
+/// backend's replacement for the npy split files.
+pub fn split(n: usize, seed: u64) -> Split {
+    let (images, labels) = generate(n, seed);
+    Split { images, labels }
+}
+
+/// Deterministic He-scaled Gaussian weights + zero biases for a
+/// host-native (2-D weight) model. The head's weights are placeholders:
+/// `backend::HostBackend` replaces them with the closed-form
+/// nearest-class-mean readout at load time.
+pub fn synthetic_weights(info: &ModelInfo, seed: u64) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    let mut weights = Vec::with_capacity(info.layers.len());
+    let mut biases = Vec::with_capacity(info.layers.len());
+    for layer in &info.layers {
+        let [n, m] = layer.wshape.as_slice() else {
+            return Err(Error::shape(format!(
+                "{}/{}: synthetic layers need 2-D wshape, got {:?}",
+                info.name, layer.name, layer.wshape
+            )));
+        };
+        let (n, m) = (*n, *m);
+        let mut rng = Rng::new(seed ^ (layer.index as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut data = vec![0.0f32; n * m];
+        rng.fill_gaussian(&mut data, 0.0, (2.0 / n as f32).sqrt());
+        weights.push(Tensor::new(vec![n, m], data)?);
+        biases.push(Tensor::zeros(vec![m]));
+    }
+    Ok((weights, biases))
+}
 
 /// Class-conditional texture parameters — must mirror data.py exactly.
 #[derive(Debug, Clone, Copy)]
@@ -129,6 +171,31 @@ mod tests {
         assert!((p.theta_deg - ((3.0 * 137.508) % 180.0)).abs() < 1e-9);
         let p8 = class_params(8);
         assert!((p8.second_freq - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_wraps_generator() {
+        let s = split(12, 5);
+        assert_eq!(s.len(), 12);
+        assert_eq!(s.images.shape(), &[12, 32, 32, 3]);
+        let (x, _) = generate(12, 5);
+        assert_eq!(s.images, x);
+    }
+
+    #[test]
+    fn synthetic_weights_deterministic_and_scaled() {
+        let info = crate::io::manifest::Manifest::synthetic().models[0].clone();
+        let (w1, b1) = synthetic_weights(&info, 7).unwrap();
+        let (w2, _) = synthetic_weights(&info, 7).unwrap();
+        assert_eq!(w1.len(), 3);
+        assert_eq!(w1[0].shape(), &[3, 16]);
+        assert_eq!(w1[1], w2[1], "same seed, same weights");
+        let (w3, _) = synthetic_weights(&info, 8).unwrap();
+        assert_ne!(w1[1], w3[1], "different seed, different weights");
+        assert!(b1.iter().all(|b| b.data().iter().all(|&v| v == 0.0)));
+        // He scaling: std ≈ sqrt(2/n) for the 16-in block layer
+        let var = ops::sum_sq(w1[1].data()) / w1[1].len() as f64;
+        assert!((var - 2.0 / 16.0).abs() < 0.05, "var {var}");
     }
 
     #[test]

@@ -37,6 +37,41 @@ pub struct LayerInfo {
 }
 
 impl LayerInfo {
+    /// Host-executable layer descriptor: a 2-D (conv-as-matmul / linear)
+    /// weight with no device artifacts. `kind` is `"conv"` (1×1 conv
+    /// over NHWC) or `"linear"` (dense, 4-D input average-pooled first);
+    /// `act` is `"relu"` or `"identity"` — see `backend::host` for the
+    /// execution convention.
+    pub fn host(
+        index: usize,
+        name: &str,
+        kind: &str,
+        act: &str,
+        wshape: [usize; 2],
+        pinned: bool,
+    ) -> Self {
+        LayerInfo {
+            index,
+            name: name.to_string(),
+            kind: kind.to_string(),
+            act: act.to_string(),
+            wshape: wshape.to_vec(),
+            params: wshape[0] * wshape[1],
+            coding_n: wshape[0],
+            coding_m: wshape[1],
+            in_shape: vec![],
+            out_shape: vec![],
+            pinned_8bit: pinned,
+            downsample: false,
+            sig: "host".into(),
+            calib_step: String::new(),
+            adaround_step: String::new(),
+            layer_fwd: String::new(),
+            calib_scan: String::new(),
+            adaround_scan: String::new(),
+        }
+    }
+
     /// Synthetic layer descriptor for tests and benches: an (n × m)
     /// coding view with no device artifacts attached.
     pub fn synthetic(index: usize, coding_n: usize, coding_m: usize, pinned: bool) -> Self {
@@ -96,7 +131,60 @@ pub struct Manifest {
     pub scan_k: usize,
 }
 
+/// Marker value for [`Manifest::synthetic`]'s dataset directory: data
+/// comes from the in-process generator, never from disk.
+pub const SYNTHETIC_DIR: &str = "<synthetic>";
+
+/// The synthetic manifest's model name.
+pub const SYNTHETIC_MODEL: &str = "synthnet";
+
 impl Manifest {
+    /// An artifact-free manifest for the host backend: the synthetic
+    /// dataset geometry (matching `data::synth`) plus a 3-layer
+    /// ResNet-style toy model — stem conv → block conv → pooled linear
+    /// head, first/last pinned to 8-bit like the zoo models. Models with
+    /// empty `w_files` are built in memory by `backend::HostBackend`
+    /// (deterministic feature weights + closed-form head), so the whole
+    /// pipeline runs with zero files on disk. `fp_acc` starts at 0.0 and
+    /// is measured by `experiments::Ctx::synthetic`.
+    pub fn synthetic() -> Manifest {
+        let layers = vec![
+            LayerInfo::host(0, "stem", "conv", "relu", [3, 16], true),
+            LayerInfo::host(1, "block", "conv", "relu", [16, 16], false),
+            LayerInfo::host(2, "head", "linear", "identity", [16, 16], true),
+        ];
+        let model = ModelInfo {
+            name: SYNTHETIC_MODEL.to_string(),
+            fp_acc: 0.0,
+            layers,
+            w_files: vec![],
+            b_files: vec![],
+            forward: String::new(),
+            forward_actq: String::new(),
+            collect: String::new(),
+            qat_step: None,
+        };
+        Manifest {
+            root: PathBuf::from(SYNTHETIC_DIR),
+            dataset: DatasetInfo {
+                dir: SYNTHETIC_DIR.to_string(),
+                num_classes: 16,
+                image_hw: 32,
+                channels: 3,
+                calib_batch: 16,
+                eval_batch: 64,
+                qat_batch: 32,
+            },
+            models: vec![model],
+            scan_k: 4,
+        }
+    }
+
+    /// Is this the in-memory synthetic manifest (no files behind it)?
+    pub fn is_synthetic(&self) -> bool {
+        self.dataset.dir == SYNTHETIC_DIR
+    }
+
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let root = artifacts_dir.as_ref().to_path_buf();
         let path = root.join("manifest.json");
@@ -240,6 +328,22 @@ mod tests {
         }
       }
     }"#;
+
+    #[test]
+    fn synthetic_manifest_is_host_native() {
+        let m = Manifest::synthetic();
+        assert!(m.is_synthetic());
+        let model = m.model(SYNTHETIC_MODEL).unwrap();
+        assert_eq!(model.layers.len(), 3);
+        assert!(model.w_files.is_empty(), "synthetic = no files");
+        assert!(model.layers.first().unwrap().pinned_8bit);
+        assert!(model.layers.last().unwrap().pinned_8bit);
+        assert!(!model.layers[1].pinned_8bit);
+        // feature widths chain: 3 -> 16 -> 16 -> 16 classes
+        assert_eq!(model.layers[0].wshape, vec![3, 16]);
+        assert_eq!(model.layers[2].wshape, vec![16, 16]);
+        assert!(m.scan_k >= 1);
+    }
 
     #[test]
     fn parses_fixture() {

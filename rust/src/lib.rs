@@ -24,10 +24,14 @@
 //! * [`mixed`] — rate-distortion coding length + 1-D k-means allocator
 //!   (paper §3.4, Algorithm 1).
 //! * [`runtime`] — PJRT executable loading and device-resident execution.
+//! * [`backend`] — pluggable execution backends: the PJRT device path
+//!   and a pure-host executor that runs the whole pipeline with zero
+//!   artifacts.
 //! * [`coordinator`] — the calibration pipeline and experiment drivers.
 //! * [`report`] — tables, ASCII charts, CSV.
 //! * [`bench_harness`] — the in-repo criterion replacement.
 
+pub mod backend;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod data;

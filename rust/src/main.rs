@@ -10,22 +10,21 @@
 //! ```
 //!
 //! Every subcommand takes `--artifacts DIR` (default `artifacts`),
-//! `--profile quick|paper`, and repeatable `--set key=value` overrides
-//! (see coordinator::config).
+//! `--backend auto|pjrt|host`, `--profile quick|paper`, and repeatable
+//! `--set key=value` overrides (see coordinator::config). With
+//! `--backend auto` (the default) a checkout without artifacts runs the
+//! whole pipeline on the host backend against the synthetic model.
 
 use attention_round::coordinator::config::CalibConfig;
-use attention_round::coordinator::experiments::{self, Ctx, ALL_MODELS};
-use attention_round::coordinator::model::LoadedModel;
+use attention_round::coordinator::experiments::{self, Ctx};
 use attention_round::coordinator::pipeline::{
     quantize_and_eval, resolve_uniform_bits, QuantSpec,
 };
 use attention_round::coordinator::{evaluate, qat};
-use attention_round::data::Split;
 use attention_round::io::manifest::Manifest;
 use attention_round::mixed;
 use attention_round::quant::rounding::Rounding;
 use attention_round::report::pct;
-use attention_round::runtime::Runtime;
 use attention_round::util::args::Parser;
 use attention_round::util::{error::Error, error::Result, logging};
 
@@ -41,6 +40,7 @@ fn main() {
 fn parser() -> Parser {
     Parser::new("repro", "Attention Round PTQ — paper reproduction CLI")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("backend", Some("auto"), "execution backend: auto|pjrt|host")
         .opt("out", Some("results"), "output directory for reports")
         .opt("profile", Some("quick"), "calibration profile: quick|paper")
         .opt("set", None, "config override key=value (comma-separated)")
@@ -82,7 +82,7 @@ fn run(argv: &[String]) -> Result<()> {
     let artifacts = a.get("artifacts")?.to_string();
 
     match cmd {
-        "info" => info(&artifacts),
+        "info" => info(&artifacts, &a),
         "evaluate" => cmd_evaluate(&artifacts, &a),
         "quantize" => cmd_quantize(&artifacts, &a),
         "allocate" => cmd_allocate(&artifacts, &a),
@@ -92,8 +92,20 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-fn info(artifacts: &str) -> Result<()> {
-    let m = Manifest::load(artifacts)?;
+fn info(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
+    let have = std::path::Path::new(artifacts).join("manifest.json").exists();
+    // honor --backend exactly like load_ctx: host describes the synthetic
+    // manifest, pjrt requires real artifacts (a bad path must error, not
+    // silently fall back), auto picks by availability
+    let m = match a.get("backend")? {
+        "host" => Manifest::synthetic(),
+        "pjrt" => Manifest::load(artifacts)?,
+        _ if have => Manifest::load(artifacts)?,
+        _ => {
+            println!("no artifacts at {artifacts}: showing the synthetic host-backend manifest");
+            Manifest::synthetic()
+        }
+    };
     println!(
         "artifacts: {} (scan_k={}, calib_batch={}, eval_batch={})",
         m.root.display(),
@@ -113,25 +125,41 @@ fn info(artifacts: &str) -> Result<()> {
             model.fp_acc * 100.0,
             model.layers.len(),
             params,
-            model.qat_step.is_some()
+            model.qat_step.is_some() || model.w_files.is_empty()
         );
     }
     Ok(())
 }
 
 fn load_ctx(artifacts: &str, a: &attention_round::util::args::Args) -> Result<Ctx> {
-    Ctx::new(artifacts, build_cfg(a)?, a.get("out")?)
+    let cfg = build_cfg(a)?;
+    let out = a.get("out")?;
+    match a.get("backend")? {
+        "pjrt" => Ctx::new(artifacts, cfg, out),
+        "host" => Ctx::synthetic(cfg, out),
+        "auto" => Ctx::auto(artifacts, cfg, out),
+        other => Err(Error::config(format!(
+            "unknown backend {other:?} (expected auto|pjrt|host)"
+        ))),
+    }
+}
+
+/// `--model` if given, else the context's first default model.
+fn pick_model(ctx: &Ctx, a: &attention_round::util::args::Args) -> Result<String> {
+    ctx.primary_model(a.get("model").ok())
 }
 
 fn cmd_evaluate(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
-    let rt = Runtime::new(artifacts)?;
-    let manifest = Manifest::load(artifacts)?;
-    let model = LoadedModel::load(&manifest, a.get("model")?)?;
-    let eval = Split::load(&manifest.path(&manifest.dataset.dir), "eval")?;
-    let acc = evaluate::evaluate(&rt, &manifest, &model, &model.weights, &eval)?;
+    let ctx = load_ctx(artifacts, a)?;
+    let model_name = pick_model(&ctx, a)?;
+    let model = ctx.backend.load_model(&ctx.manifest, &model_name)?;
+    let acc = evaluate::evaluate(
+        ctx.backend.as_ref(), &ctx.manifest, &model, &model.weights, &ctx.eval,
+    )?;
     println!(
-        "{}: FP32 top-1 {} (manifest said {})",
+        "{} [{}]: FP32 top-1 {} (manifest said {})",
         model.info.name,
+        ctx.backend.name(),
         pct(acc),
         pct(model.info.fp_acc)
     );
@@ -143,8 +171,8 @@ fn cmd_quantize(artifacts: &str, a: &attention_round::util::args::Args) -> Resul
     let mut cfg = ctx.cfg.clone();
     cfg.method = Rounding::parse(a.get("method")?)
         .ok_or_else(|| Error::config("bad --method"))?;
-    let model_name = a.get("model")?;
-    let loaded = LoadedModel::load(&ctx.manifest, model_name)?;
+    let model_name = pick_model(&ctx, a)?;
+    let loaded = ctx.backend.load_model(&ctx.manifest, &model_name)?;
     let wbits: u8 = a.get_usize("wbits")? as u8;
     let abits = a.get("abits").ok().map(|s| s.parse::<u8>()).transpose()
         .map_err(|_| Error::config("bad --abits"))?;
@@ -153,13 +181,16 @@ fn cmd_quantize(artifacts: &str, a: &attention_round::util::args::Args) -> Resul
         wbits: resolve_uniform_bits(&loaded, wbits),
         abits,
     };
-    let out = quantize_and_eval(&ctx.rt, &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval)?;
+    let out = quantize_and_eval(
+        ctx.backend.as_ref(), &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
+    )?;
     println!(
-        "{} {}/{} via {:?}: top-1 {}% (FP {}%), {:.1}s",
+        "{} {}/{} via {:?} on {}: top-1 {}% (FP {}%), {:.1}s",
         model_name,
         wbits,
         abits.map(|b| b.to_string()).unwrap_or_else(|| "32".into()),
         cfg.method,
+        ctx.backend.platform(),
         pct(out.acc),
         pct(out.fp_acc),
         out.wall_s
@@ -178,18 +209,19 @@ fn cmd_quantize(artifacts: &str, a: &attention_round::util::args::Args) -> Resul
             abits.map(|b| b.to_string()).unwrap_or_else(|| "fp".into())
         );
         let dir = attention_round::coordinator::state::default_dir(
-            &ctx.out_dir, model_name, &tag,
+            &ctx.out_dir, &model_name, &tag,
         );
         attention_round::coordinator::state::save(&out, &dir)?;
         println!("saved quantized model to {}", dir.display());
     }
-    println!("--- pipeline metrics ---\n{}", ctx.rt.metrics.report());
+    println!("--- pipeline metrics ---\n{}", ctx.backend.metrics().report());
     Ok(())
 }
 
 fn cmd_allocate(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
-    let manifest = Manifest::load(artifacts)?;
-    let model = LoadedModel::load(&manifest, a.get("model")?)?;
+    let ctx = load_ctx(artifacts, a)?;
+    let model_name = pick_model(&ctx, a)?;
+    let model = ctx.backend.load_model(&ctx.manifest, &model_name)?;
     let bits: Vec<u8> = a
         .get("bits")?
         .split(',')
@@ -223,26 +255,25 @@ fn cmd_allocate(artifacts: &str, a: &attention_round::util::args::Args) -> Resul
 }
 
 fn cmd_qat(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
-    let rt = Runtime::new(artifacts)?;
-    let manifest = Manifest::load(artifacts)?;
-    let dir = manifest.path(&manifest.dataset.dir);
-    let train = Split::load(&dir, "train")?;
-    let eval = Split::load(&dir, "eval")?;
+    let ctx = load_ctx(artifacts, a)?;
+    let model_name = pick_model(&ctx, a)?;
+    let train = ctx.train_split()?;
     let out = qat::run_qat(
-        &rt,
-        &manifest,
-        a.get("model")?,
+        ctx.backend.as_ref(),
+        &ctx.manifest,
+        &model_name,
         a.get_usize("wbits")? as u8,
         a.get("abits").ok().and_then(|s| s.parse().ok()).unwrap_or(4),
         a.get_usize("steps")?,
         1e-3,
         &train,
-        &eval,
+        &ctx.eval,
         7,
     )?;
     println!(
-        "QAT {}: top-1 {}% (FP {}%), {} steps / {} samples, {:.1}s",
-        a.get("model")?,
+        "QAT {} [{}]: top-1 {}% (FP {}%), {} steps / {} samples, {:.1}s",
+        model_name,
+        ctx.backend.name(),
         pct(out.acc),
         pct(out.fp_acc),
         out.steps,
@@ -261,15 +292,16 @@ fn cmd_reproduce(artifacts: &str, a: &attention_round::util::args::Args) -> Resu
     let ctx = load_ctx(artifacts, a)?;
     let models_owned: Vec<String> = match a.get("models") {
         Ok(s) => s.split(',').map(|m| m.trim().to_string()).collect(),
-        Err(_) => ALL_MODELS
-            .iter()
-            .map(|m| m.to_string())
-            // tolerate zoo subsets: artifacts may be built for fewer
-            // models on constrained machines (see Makefile knobs)
-            .filter(|m| ctx.manifest.model(m).is_ok())
-            .collect(),
+        // tolerate zoo subsets: artifacts may be built for fewer models
+        // on constrained machines (see Makefile knobs); the synthetic
+        // context substitutes its own model list
+        Err(_) => ctx.default_models(),
     };
     let models: Vec<&str> = models_owned.iter().map(String::as_str).collect();
+    let primary = models
+        .first()
+        .copied()
+        .ok_or_else(|| Error::config("no models available for reproduce"))?;
     let eps2 = a.get_f64("eps2")?;
     let taus: Vec<f32> = a
         .get("taus")?
@@ -285,10 +317,20 @@ fn cmd_reproduce(artifacts: &str, a: &attention_round::util::args::Args) -> Resu
             "table3" => experiments::table3(&ctx, qat_steps).map(|_| ()),
             "table4" => experiments::table4(&ctx, &models, eps2).map(|_| ()),
             "table5" => experiments::table5(&ctx).map(|_| ()),
-            "fig2" => experiments::fig2(&ctx, &["resnet18t"], &taus).map(|_| ()),
-            "fig3" => experiments::fig_alloc(&ctx, "resnet18t", eps2).map(|_| ()),
-            "fig4" => experiments::fig_alloc(&ctx, "resnet50t", eps2).map(|_| ()),
-            "fig5" => experiments::fig_alloc(&ctx, "mobilenetv2t", eps2).map(|_| ()),
+            "fig2" => experiments::fig2(&ctx, &[primary], &taus).map(|_| ()),
+            "fig3" => experiments::fig_alloc(&ctx, primary, eps2).map(|_| ()),
+            "fig4" => experiments::fig_alloc(
+                &ctx,
+                models.get(1).copied().unwrap_or(primary),
+                eps2,
+            )
+            .map(|_| ()),
+            "fig5" => experiments::fig_alloc(
+                &ctx,
+                models.get(2).copied().unwrap_or(primary),
+                eps2,
+            )
+            .map(|_| ()),
             other => Err(Error::config(format!("unknown target {other:?}"))),
         }
     };
@@ -302,6 +344,6 @@ fn cmd_reproduce(artifacts: &str, a: &attention_round::util::args::Args) -> Resu
     } else {
         run_one(&target)?;
     }
-    println!("--- pipeline metrics ---\n{}", ctx.rt.metrics.report());
+    println!("--- pipeline metrics ---\n{}", ctx.backend.metrics().report());
     Ok(())
 }

@@ -9,7 +9,7 @@
 use super::kernel::{ceil_fast, floor_fast, round_half_even_fast};
 use super::{round_half_even, QGrid};
 use crate::util::rng::Rng;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{ThreadPool, MIN_PAR_CHUNK};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Rounding {
@@ -129,17 +129,60 @@ pub fn ceil_into(pool: &ThreadPool, w: &[f32], g: &QGrid, out: &mut [f32]) {
     });
 }
 
-/// In-place [`stochastic`]. Sequential by design: the RNG stream must be
-/// consumed in element order to stay bit-identical (and reproducible)
-/// with the allocating form — the win here is allocation-free reuse.
-pub fn stochastic_into(w: &[f32], g: &QGrid, rng: &mut Rng, out: &mut [f32]) {
+/// In-place **parallel** [`stochastic`] with deterministic per-chunk RNG
+/// streams. Elements are split into fixed-size logical chunks of
+/// [`MIN_PAR_CHUNK`]; chunk `i` draws from an independent stream seeded
+/// `seed ⊕ mix(i)`. Chunk boundaries depend only on the input length —
+/// never on the pool size — so the output is a pure function of
+/// `(w, grid, seed)` and is **bit-identical for every thread count**
+/// (property-tested in tests/kernel_properties.rs). The pool bounds
+/// concurrency: chunks are dispatched in pool-sized waves of scoped
+/// workers.
+pub fn stochastic_into(pool: &ThreadPool, w: &[f32], g: &QGrid, seed: u64, out: &mut [f32]) {
     assert_eq!(w.len(), out.len(), "stochastic_into arity");
-    for (o, &v) in out.iter_mut().zip(w) {
-        let q = v / g.scale;
-        let f = q.floor();
-        let p_up = q - f;
-        let r = if (rng.next_f64() as f32) < p_up { f + 1.0 } else { f };
-        *o = g.scale * r.clamp(g.lo, g.hi);
+    let (s, lo, hi) = (g.scale, g.lo, g.hi);
+    let kernel = |ci: usize, wc: &[f32], oc: &mut [f32]| {
+        let mut rng = Rng::new(
+            seed ^ (ci as u64)
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(0xD1B54A32D192ED03),
+        );
+        for (o, &v) in oc.iter_mut().zip(wc) {
+            let q = v / s;
+            let f = q.floor();
+            let p_up = q - f;
+            let r = if (rng.next_f64() as f32) < p_up { f + 1.0 } else { f };
+            *o = s * r.clamp(lo, hi);
+        }
+    };
+    if w.len() <= MIN_PAR_CHUNK || pool.size() <= 1 {
+        // single chunk or sequential pool: still chunked logically so the
+        // result matches the parallel path bit for bit
+        for (ci, (wc, oc)) in w
+            .chunks(MIN_PAR_CHUNK)
+            .zip(out.chunks_mut(MIN_PAR_CHUNK))
+            .enumerate()
+        {
+            kernel(ci, wc, oc);
+        }
+        return;
+    }
+    let mut jobs: Vec<(usize, &[f32], &mut [f32])> = w
+        .chunks(MIN_PAR_CHUNK)
+        .zip(out.chunks_mut(MIN_PAR_CHUNK))
+        .enumerate()
+        .map(|(ci, (wc, oc))| (ci, wc, oc))
+        .collect();
+    // pool-sized waves of scoped workers (same pattern as gram_tr_with)
+    let wave = pool.size();
+    while !jobs.is_empty() {
+        let batch: Vec<_> = jobs.drain(..wave.min(jobs.len())).collect();
+        std::thread::scope(|sc| {
+            for (ci, wc, oc) in batch {
+                let k = &kernel;
+                sc.spawn(move || k(ci, wc, oc));
+            }
+        });
     }
 }
 
@@ -297,11 +340,30 @@ mod tests {
         adaround_finalize_into(&pool, &w, &alpha, &g, &mut out);
         assert_eq!(out, adaround_finalize(&w, &alpha, &g));
 
-        // stochastic: same seed -> same stream -> same output
-        let mut r1 = Rng::new(99);
-        let mut r2 = Rng::new(99);
-        stochastic_into(&w, &g, &mut r1, &mut out);
-        assert_eq!(out, stochastic(&w, &g, &mut r2));
+        // stochastic: fixed seed -> identical output for every pool size,
+        // and every value lands on the grid
+        let mut o1 = vec![0.0f32; w.len()];
+        let mut o3 = vec![0.0f32; w.len()];
+        stochastic_into(&ThreadPool::seq(), &w, &g, 99, &mut o1);
+        stochastic_into(&pool, &w, &g, 99, &mut o3);
+        assert_eq!(o1, o3, "stochastic must not depend on thread count");
+        assert!(o1.iter().all(|&v| g.contains(v)));
+        // different seed -> different coin flips somewhere
+        let mut o2 = vec![0.0f32; w.len()];
+        stochastic_into(&pool, &w, &g, 100, &mut o2);
+        assert_ne!(o1, o2);
+    }
+
+    #[test]
+    fn stochastic_into_is_unbiased() {
+        let g = QGrid::signed(8, 0.1).unwrap();
+        let n = 40_000; // > MIN_PAR_CHUNK: crosses a chunk boundary
+        let w = vec![0.537f32; n];
+        let mut out = vec![0.0f32; n];
+        let pool = ThreadPool::new(3);
+        stochastic_into(&pool, &w, &g, 1234, &mut out);
+        let mean = out.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.537).abs() < 0.002, "mean {mean}");
     }
 
     #[test]

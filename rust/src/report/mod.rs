@@ -27,6 +27,11 @@ impl Table {
         self
     }
 
+    /// Number of data rows (tests assert on harness output shape).
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
     pub fn render(&self) -> String {
         let ncols = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();

@@ -20,8 +20,7 @@ pub mod convert;
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::tensor::Tensor;
 use crate::util::error::{Error, Result};
@@ -53,20 +52,6 @@ impl Executable {
             .map_err(|e| Error::runtime(format!("{}: {e}", self.name)))?;
         decompose(lit, &self.name)
     }
-
-    /// Execute but keep the raw output buffer on device (for chains where
-    /// the next executable consumes the whole tuple — not used by the
-    /// current pipeline, kept for single-output executables).
-    pub fn run_b_raw(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
-        let outs = self
-            .exe
-            .execute_b(args)
-            .map_err(|e| Error::runtime(format!("{}: {e}", self.name)))?;
-        outs.into_iter()
-            .next()
-            .and_then(|replica| replica.into_iter().next())
-            .ok_or_else(|| Error::runtime(format!("{}: no outputs", self.name)))
-    }
 }
 
 fn decompose(lit: xla::Literal, name: &str) -> Result<Vec<xla::Literal>> {
@@ -77,10 +62,16 @@ fn decompose(lit: xla::Literal, name: &str) -> Result<Vec<xla::Literal>> {
 }
 
 /// The PJRT client plus the executable cache. One per process.
+///
+/// `Send + Sync`: executables are shared as [`Arc`]s and the cache sits
+/// behind a `Mutex`, so the experiment harness can fan table rows out
+/// across the thread pool against one runtime. (This holds for the
+/// vendored host stub; a real `xla_extension` client would need its own
+/// thread-safety audit before lifting the bound.)
 pub struct Runtime {
     client: xla::PjRtClient,
     root: PathBuf,
-    cache: Mutex<HashMap<String, Rc<Executable>>>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
     pub metrics: Metrics,
 }
 
@@ -101,9 +92,9 @@ impl Runtime {
     }
 
     /// Load + compile an artifact by manifest-relative path (cached).
-    pub fn load(&self, rel: &str) -> Result<Rc<Executable>> {
+    pub fn load(&self, rel: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(rel) {
-            return Ok(Rc::clone(e));
+            return Ok(Arc::clone(e));
         }
         let path = self.root.join(rel);
         let exe = self.metrics.time("runtime.compile", || -> Result<_> {
@@ -118,14 +109,14 @@ impl Runtime {
                 .map_err(|e| Error::runtime(format!("compile {}: {e}", path.display())))
         })?;
         self.metrics.incr("runtime.compiled_executables", 1);
-        let exe = Rc::new(Executable {
+        let exe = Arc::new(Executable {
             exe,
             name: rel.to_string(),
         });
         self.cache
             .lock()
             .unwrap()
-            .insert(rel.to_string(), Rc::clone(&exe));
+            .insert(rel.to_string(), Arc::clone(&exe));
         Ok(exe)
     }
 
@@ -182,6 +173,16 @@ mod tests {
         let rt = Runtime::new("/nonexistent-artifacts").unwrap();
         assert!(rt.load("hlo/nope.hlo.txt").is_err());
         assert_eq!(rt.cached_count(), 0);
+    }
+
+    #[test]
+    fn runtime_is_send_sync() {
+        // Compile-time check: the experiment harness shares one Runtime
+        // across pool workers, so these bounds must never regress.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Runtime>();
+        assert_send_sync::<Arc<Executable>>();
+        assert_send_sync::<Executable>();
     }
 
     #[test]

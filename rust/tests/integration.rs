@@ -1,9 +1,11 @@
-//! Cross-module integration tests over real artifacts.
+//! Cross-module integration tests over real artifacts (PJRT backend).
 //!
 //! These need `make artifacts` to have run; they self-skip (with a
 //! notice) otherwise, so `cargo test` stays green on a fresh checkout.
-//! Each test builds its own PJRT runtime (the client is not Sync).
+//! The artifact-free end-to-end path is covered by tests/host_backend.rs,
+//! which never skips. Each test builds its own PJRT backend.
 
+use attention_round::backend::{Backend, PjrtBackend};
 use attention_round::coordinator::calibrate::calibrate_attention;
 use attention_round::coordinator::capture::{capture, reference_outputs};
 use attention_round::coordinator::config::CalibConfig;
@@ -16,7 +18,6 @@ use attention_round::data::Split;
 use attention_round::io::manifest::Manifest;
 use attention_round::quant::observer::{observe, ObserverKind};
 use attention_round::quant::rounding::Rounding;
-use attention_round::runtime::Runtime;
 use attention_round::tensor::Tensor;
 use attention_round::util::rng::Rng;
 
@@ -63,11 +64,11 @@ fn manifest_and_weights_agree() {
 fn fp_eval_matches_buildtime_accuracy() {
     let Some(dir) = artifacts() else { return };
     let manifest = Manifest::load(&dir).expect("manifest");
-    let rt = Runtime::new(dir.as_str()).expect("runtime");
-    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let be = PjrtBackend::new(dir.as_str()).expect("backend");
+    let model = be.load_model(&manifest, "resnet18t").expect("model");
     let eval_dir = manifest.path(&manifest.dataset.dir);
     let eval = Split::load(&eval_dir, "eval").expect("eval");
-    let acc = evaluate(&rt, &manifest, &model, &model.weights, &eval).expect("eval");
+    let acc = evaluate(&be, &manifest, &model, &model.weights, &eval).expect("eval");
     // Full-split PJRT evaluation must agree with the build-time JAX number.
     assert!(
         (acc - model.info.fp_acc).abs() < 0.005,
@@ -80,12 +81,12 @@ fn fp_eval_matches_buildtime_accuracy() {
 fn capture_reference_and_calibration_reduce_loss() {
     let Some(dir) = artifacts() else { return };
     let manifest = Manifest::load(&dir).expect("manifest");
-    let rt = Runtime::new(dir.as_str()).expect("runtime");
-    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let be = PjrtBackend::new(dir.as_str()).expect("backend");
+    let model = be.load_model(&manifest, "resnet18t").expect("model");
     let calib_dir = manifest.path(&manifest.dataset.dir);
     let calib = Split::load(&calib_dir, "calib").expect("calib");
 
-    let mut cache = capture(&rt, &manifest, &model, &model.weights, &calib, 64)
+    let mut cache = capture(&be, &manifest, &model, &model.weights, &calib, 64)
         .expect("capture");
     assert_eq!(cache.len(), model.num_layers());
 
@@ -98,8 +99,8 @@ fn capture_reference_and_calibration_reduce_loss() {
     assert!(cache.take(li).is_err());
 
     let yref = reference_outputs(
-        &rt,
-        &layer.layer_fwd,
+        &be,
+        layer,
         &x,
         &model.weights[li],
         manifest.dataset.calib_batch,
@@ -111,7 +112,7 @@ fn capture_reference_and_calibration_reduce_loss() {
     cfg.iters = 16;
     let mut rng = Rng::new(7);
     let cal = calibrate_attention(
-        &rt,
+        &be,
         layer,
         &model.weights[li],
         &x,
@@ -139,8 +140,8 @@ fn capture_reference_and_calibration_reduce_loss() {
 fn attention_beats_nearest_at_low_bits() {
     let Some(dir) = artifacts() else { return };
     let manifest = Manifest::load(&dir).expect("manifest");
-    let rt = Runtime::new(dir.as_str()).expect("runtime");
-    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let be = PjrtBackend::new(dir.as_str()).expect("backend");
+    let model = be.load_model(&manifest, "resnet18t").expect("model");
     let calib_dir = manifest.path(&manifest.dataset.dir);
     let calib = Split::load(&calib_dir, "calib").expect("calib");
     let eval = small_eval(&manifest);
@@ -155,10 +156,10 @@ fn attention_beats_nearest_at_low_bits() {
     cfg.calib_samples = 128;
 
     cfg.method = Rounding::Nearest;
-    let near = quantize_and_eval(&rt, &manifest, &spec, &cfg, &calib, &eval)
+    let near = quantize_and_eval(&be, &manifest, &spec, &cfg, &calib, &eval)
         .expect("nearest");
     cfg.method = Rounding::Attention;
-    let ours = quantize_and_eval(&rt, &manifest, &spec, &cfg, &calib, &eval)
+    let ours = quantize_and_eval(&be, &manifest, &spec, &cfg, &calib, &eval)
         .expect("attention");
     eprintln!(
         "3-bit: nearest {:.4} vs attention {:.4} (fp {:.4})",
@@ -176,14 +177,14 @@ fn attention_beats_nearest_at_low_bits() {
 fn actq_eval_runs_and_degrades_gracefully() {
     let Some(dir) = artifacts() else { return };
     let manifest = Manifest::load(&dir).expect("manifest");
-    let rt = Runtime::new(dir.as_str()).expect("runtime");
-    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let be = PjrtBackend::new(dir.as_str()).expect("backend");
+    let model = be.load_model(&manifest, "resnet18t").expect("model");
     let calib_dir = manifest.path(&manifest.dataset.dir);
     let calib = Split::load(&calib_dir, "calib").expect("calib");
     let eval = small_eval(&manifest);
 
     // observers from a small capture
-    let mut cache = capture(&rt, &manifest, &model, &model.weights, &calib, 64)
+    let mut cache = capture(&be, &manifest, &model, &model.weights, &calib, 64)
         .expect("capture");
     let mut params = Vec::new();
     for li in 0..model.num_layers() {
@@ -192,11 +193,11 @@ fn actq_eval_runs_and_degrades_gracefully() {
     }
     let bits8 = resolve_act_bits(&model, 8);
     let acc8 = evaluate_actq(
-        &rt, &manifest, &model, &model.weights, &params, &bits8, &eval,
+        &be, &manifest, &model, &model.weights, &params, &bits8, &eval,
     )
     .expect("actq 8");
     // 8-bit activations should track FP closely on this small split
-    let fp = evaluate(&rt, &manifest, &model, &model.weights, &eval).expect("fp");
+    let fp = evaluate(&be, &manifest, &model, &model.weights, &eval).expect("fp");
     assert!(
         (acc8 - fp).abs() < 0.08,
         "8-bit act quant drifted: {acc8} vs fp {fp}"
@@ -210,12 +211,12 @@ fn rust_synth_generator_transfers_to_the_model() {
     // distribution contract.
     let Some(dir) = artifacts() else { return };
     let manifest = Manifest::load(&dir).expect("manifest");
-    let rt = Runtime::new(dir.as_str()).expect("runtime");
-    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let be = PjrtBackend::new(dir.as_str()).expect("backend");
+    let model = be.load_model(&manifest, "resnet18t").expect("model");
     let n = manifest.dataset.eval_batch * 2;
     let (images, labels) = attention_round::data::synth::generate(n, 999);
     let split = Split { images, labels };
-    let acc = evaluate(&rt, &manifest, &model, &model.weights, &split).expect("eval");
+    let acc = evaluate(&be, &manifest, &model, &model.weights, &split).expect("eval");
     eprintln!("rust-synth transfer accuracy: {acc:.4}");
     assert!(
         acc > 0.5,
@@ -227,8 +228,8 @@ fn rust_synth_generator_transfers_to_the_model() {
 fn quantized_weights_differ_from_fp_but_stay_close() {
     let Some(dir) = artifacts() else { return };
     let manifest = Manifest::load(&dir).expect("manifest");
-    let rt = Runtime::new(dir.as_str()).expect("runtime");
-    let model = LoadedModel::load(&manifest, "resnet18t").expect("model");
+    let be = PjrtBackend::new(dir.as_str()).expect("backend");
+    let model = be.load_model(&manifest, "resnet18t").expect("model");
     let calib_dir = manifest.path(&manifest.dataset.dir);
     let calib = Split::load(&calib_dir, "calib").expect("calib");
     let eval = small_eval(&manifest);
@@ -241,7 +242,7 @@ fn quantized_weights_differ_from_fp_but_stay_close() {
         wbits: resolve_uniform_bits(&model, 4),
         abits: None,
     };
-    let out = quantize_and_eval(&rt, &manifest, &spec, &cfg, &calib, &eval)
+    let out = quantize_and_eval(&be, &manifest, &spec, &cfg, &calib, &eval)
         .expect("quantize");
     for (q, w) in out.qweights.iter().zip(&model.weights) {
         let d: f64 = crate_mse(q, w);

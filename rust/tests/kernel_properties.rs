@@ -77,12 +77,47 @@ fn prop_into_kernels_bit_identical_to_scalar() {
                     ));
                 }
             }
-            // stochastic: identical RNG stream -> identical output
-            let mut r1 = Rng::new(seed ^ 0x57CC);
-            let mut r2 = Rng::new(seed ^ 0x57CC);
-            rounding::stochastic_into(w, &g, &mut r1, &mut out);
-            if out != rounding::stochastic(w, &g, &mut r2) {
-                return Err("stochastic_into diverged".into());
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stochastic_into_bit_identical_across_thread_counts() {
+    // The satellite contract of the parallel stochastic kernel: for a
+    // fixed seed the output is a pure function of (w, grid, seed) —
+    // chunk boundaries are fixed-size, per-chunk RNG streams are seeded
+    // seed ⊕ mix(chunk), so pool size must never change a single bit.
+    check(
+        Config { cases: 16, ..Default::default() },
+        |r| (gen_weights_sized(r, 60_000), r.next_u64()),
+        |(w, seed)| shrink_vec(w).into_iter().map(|v| (v, *seed)).collect(),
+        |(w, seed)| {
+            let bits = 2 + (seed % 7) as u8;
+            let s = 0.002 + (*seed % 1000) as f32 * 1e-4;
+            let g = QGrid::signed(bits, s).map_err(|e| e.to_string())?;
+            let mut reference = vec![0.0f32; w.len()];
+            rounding::stochastic_into(&ThreadPool::seq(), w, &g, *seed, &mut reference);
+            for threads in [2usize, 3, 8] {
+                let mut out = vec![0.0f32; w.len()];
+                rounding::stochastic_into(&ThreadPool::new(threads), w, &g, *seed, &mut out);
+                if out != reference {
+                    return Err(format!(
+                        "stochastic_into diverged at {threads} threads (n={})",
+                        w.len()
+                    ));
+                }
+            }
+            // determinism: repeat with the same seed
+            let mut again = vec![0.0f32; w.len()];
+            rounding::stochastic_into(&ThreadPool::new(3), w, &g, *seed, &mut again);
+            if again != reference {
+                return Err("stochastic_into not deterministic for fixed seed".into());
+            }
+            for &v in &reference {
+                if !g.contains(v) {
+                    return Err(format!("{v} off grid"));
+                }
             }
             Ok(())
         },
