@@ -20,10 +20,12 @@ mod common;
 
 use std::path::PathBuf;
 
+use attention_round::backend::HostBackend;
 use attention_round::bench_harness::{artifacts_dir, write_json, Bencher, Stats};
 use attention_round::coordinator::capture::{capture, reference_outputs};
 use attention_round::data::{synth, Split};
-use attention_round::io::manifest::LayerInfo;
+use attention_round::io::manifest::{LayerInfo, Manifest};
+use attention_round::serve::{self, ServeConfig};
 use attention_round::io::npy;
 use attention_round::mixed::{self, kmeans};
 use attention_round::quant::rounding;
@@ -174,6 +176,38 @@ fn host_benches(b: &Bencher) -> Vec<Stats> {
         let idx: Vec<usize> = (0..256).map(|_| r2.below(1024)).collect();
         cache.gather_axis0(&idx).unwrap()
     }));
+
+    // batched serving: full load-generator runs (queue + micro-batcher +
+    // hot prepared model) on the synthetic model — the serve path is
+    // tracked in the baseline from day one. Verification off here: the
+    // per-sample direct forwards would dominate the measurement (the
+    // no-skip tests in rust/tests/serve.rs own bit-identity).
+    let be = HostBackend::new();
+    let manifest = Manifest::synthetic();
+    let serve_cfg = ServeConfig {
+        max_batch: 16,
+        queue_depth: 64,
+        verify: false,
+        ..ServeConfig::default()
+    };
+    let mut last_report = None;
+    all.push(b.run("host/serve_e2e_256req_b16", || {
+        let r = serve::run_load_generator(&be, &manifest, "synthnet", &serve_cfg, 256, 4)
+            .unwrap();
+        assert_eq!(r.completed, 256);
+        last_report = Some(r);
+    }));
+    if let Some(r) = last_report {
+        // per-request latency distribution of the final run, as its own
+        // baseline row next to the end-to-end wall time
+        let lat = r.latency_stats("host/serve_request_latency_256req_b16");
+        lat.print();
+        println!(
+            "  -> serve throughput ~{:.0} req/s (batch mean {:.1}, {} padded rows)",
+            r.throughput_rps, r.batch_mean, r.padded_rows
+        );
+        all.push(lat);
+    }
 
     all
 }

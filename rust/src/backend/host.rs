@@ -129,17 +129,15 @@ fn avg_pool(x: &Tensor) -> Result<Tensor> {
     Tensor::new(vec![b, c], out)
 }
 
-/// Per-tensor affine fake-quant on the activation grid the observers
-/// picked: x' = clip(⌊(x − z)/s⌉, 0, 2^b − 1)·s + z.
-fn fake_quant_act(x: &Tensor, p: &ActQuantParams, bits: u8) -> Tensor {
+/// Per-tensor affine fake-quant (in place) on the activation grid the
+/// observers picked: x' = clip(⌊(x − z)/s⌉, 0, 2^b − 1)·s + z.
+fn fake_quant_act(xs: &mut [f32], p: &ActQuantParams, bits: u8) {
     let levels = ((1u32 << bits) - 1) as f32;
     let s = p.scale.max(1e-12);
-    let mut out = vec![0.0f32; x.len()];
-    for (o, &v) in out.iter_mut().zip(x.data()) {
-        let q = round_half_even((v - p.zero) / s).clamp(0.0, levels);
-        *o = q * s + p.zero;
+    for v in xs.iter_mut() {
+        let q = round_half_even((*v - p.zero) / s).clamp(0.0, levels);
+        *v = q * s + p.zero;
     }
-    Tensor::new(x.shape().to_vec(), out).expect("shape preserved")
 }
 
 /// The 2-D matmul view of a layer's weight; errors on non-2-D weights
@@ -155,18 +153,6 @@ fn weight_dims(layer: &LayerInfo, w: &Tensor) -> Result<(usize, usize)> {
     }
 }
 
-/// Matmul-input rows for `x` feeding a layer with `n` input features.
-fn rows_for(layer: &LayerInfo, x: &Tensor, n: usize) -> Result<usize> {
-    if x.len() % n != 0 {
-        return Err(Error::shape(format!(
-            "{}: input {:?} not divisible by in-features {n}",
-            layer.name,
-            x.shape()
-        )));
-    }
-    Ok(x.len() / n)
-}
-
 /// Aᵀ as a [`Mat`] from row-major f32 storage (rows × cols).
 fn mat_transposed_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
     debug_assert_eq!(rows * cols, data.len());
@@ -177,6 +163,105 @@ fn mat_transposed_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
         }
     }
     t
+}
+
+/// Everything one layer application produces under the host execution
+/// convention. Eval (`run_graph`), the QAT forward, and (through
+/// `run_graph`) the serve worker all consume the same pass, so the
+/// convention — pool 4-D input for linear layers, matmul, bias add in
+/// f64, relu/identity — has exactly one home.
+struct LayerPass {
+    /// Matmul input (post pool / input transform), row-major rows × n.
+    a: Vec<f32>,
+    /// Shape of the matmul-input view (NHWC for conv, [rows, n] linear).
+    in_shape: Vec<usize>,
+    rows: usize,
+    n: usize,
+    m: usize,
+    /// Some((batch, hw)) when the layer pooled its 4-D input.
+    pooled: Option<(usize, usize)>,
+    /// Pre-activation with bias, rows × m (f64 — the QAT backward masks
+    /// ReLU against it).
+    z: Vec<f64>,
+    /// Activated output; only built when `want_out` was set (the
+    /// bias-free reference path reads `z` instead).
+    out: Option<Tensor>,
+}
+
+/// Apply one layer: validate the kind, pool 4-D input for linear layers,
+/// run the caller's input transform (activation fake-quant) in place,
+/// matmul `a @ w`, add `bias` (f64 accumulate), and activate.
+fn layer_pass(
+    pool: &ThreadPool,
+    layer: &LayerInfo,
+    w_data: &[f32],
+    (n, m): (usize, usize),
+    bias: &[f32],
+    x: &Tensor,
+    transform: Option<&dyn Fn(&mut [f32])>,
+    want_out: bool,
+) -> Result<LayerPass> {
+    let (mut a, in_shape);
+    let mut pooled = None;
+    if is_linear(&layer.kind) && x.shape().len() == 4 {
+        let sh = x.shape();
+        pooled = Some((sh[0], sh[1] * sh[2]));
+        let p = avg_pool(x)?;
+        in_shape = p.shape().to_vec();
+        a = p.into_data();
+    } else if !is_linear(&layer.kind) && layer.kind != "conv" {
+        return Err(Error::config(format!(
+            "{}: host backend supports conv(1x1)/linear layers, got {:?}",
+            layer.name, layer.kind
+        )));
+    } else {
+        in_shape = x.shape().to_vec();
+        a = x.data().to_vec();
+    }
+    if let Some(f) = transform {
+        f(&mut a);
+    }
+    if a.len() % n != 0 {
+        return Err(Error::shape(format!(
+            "{}: input {in_shape:?} not divisible by in-features {n}",
+            layer.name
+        )));
+    }
+    let rows = a.len() / n;
+    let xm = Mat::from_rows_f32(rows, n, &a)?;
+    let wm = Mat::from_rows_f32(n, m, w_data)?;
+    let mut zm = xm.matmul_with(pool, &wm)?;
+    for zrow in zm.data.chunks_mut(m) {
+        for (zv, &b) in zrow.iter_mut().zip(bias) {
+            *zv += b as f64;
+        }
+    }
+    let relu = layer.act == "relu";
+    let out = if want_out {
+        let mut outd = vec![0.0f32; rows * m];
+        for (o, &zv) in outd.iter_mut().zip(&zm.data) {
+            let v = zv as f32;
+            *o = if relu { v.max(0.0) } else { v };
+        }
+        let shape = if in_shape.len() == 4 {
+            vec![in_shape[0], in_shape[1], in_shape[2], m]
+        } else {
+            vec![rows, m]
+        };
+        Some(Tensor::new(shape, outd)?)
+    } else {
+        None
+    };
+    Ok(LayerPass {
+        a,
+        in_shape,
+        rows,
+        n,
+        m,
+        pooled,
+        z: zm.data,
+        out,
+    })
 }
 
 /// Run the layer chain; optionally record each layer's matmul input and
@@ -194,43 +279,19 @@ fn run_graph(
     let mut cur = x.clone();
     for (li, layer) in layers.iter().enumerate() {
         let w = &weights[li];
-        let (n, m) = weight_dims(layer, w)?;
-        if is_linear(&layer.kind) && cur.shape().len() == 4 {
-            cur = avg_pool(&cur)?;
-        } else if !is_linear(&layer.kind) && layer.kind != "conv" {
-            return Err(Error::config(format!(
-                "{}: host backend supports conv(1x1)/linear layers, got {:?}",
-                layer.name, layer.kind
-            )));
-        }
-        if let Some((params, bits)) = actq {
-            cur = fake_quant_act(&cur, &params[li], bits[li]);
-        }
-        if let Some(rec) = record.as_mut() {
-            rec.push(cur.clone());
-        }
-        let rows = rows_for(layer, &cur, n)?;
-        let xm = Mat::from_rows_f32(rows, n, cur.data())?;
-        let wm = Mat::from_rows_f32(n, m, w.data())?;
-        let ym = xm.matmul_with(pool, &wm)?;
+        let nm = weight_dims(layer, w)?;
         let bias = biases.get(li).map(|b| b.data()).unwrap_or(&[]);
-        let relu = layer.act == "relu";
-        let mut out = vec![0.0f32; rows * m];
-        for (orow, yrow) in out.chunks_mut(m).zip(ym.data.chunks(m)) {
-            for j in 0..m {
-                let mut v = yrow[j] as f32;
-                if let Some(&b) = bias.get(j) {
-                    v += b;
-                }
-                orow[j] = if relu { v.max(0.0) } else { v };
-            }
+        let tf: Option<Box<dyn Fn(&mut [f32])>> = actq.map(|(params, bits)| {
+            let (p, b) = (params[li], bits[li]);
+            Box::new(move |a: &mut [f32]| fake_quant_act(a, &p, b))
+                as Box<dyn Fn(&mut [f32])>
+        });
+        let pass =
+            layer_pass(pool, layer, w.data(), nm, bias, &cur, tf.as_deref(), true)?;
+        if let Some(rec) = record.as_mut() {
+            rec.push(Tensor::new(pass.in_shape.clone(), pass.a.clone())?);
         }
-        let shape = if cur.shape().len() == 4 {
-            vec![cur.shape()[0], cur.shape()[1], cur.shape()[2], m]
-        } else {
-            vec![rows, m]
-        };
-        cur = Tensor::new(shape, out)?;
+        cur = pass.out.expect("want_out set");
     }
     Ok(cur)
 }
@@ -243,21 +304,13 @@ fn layer_forward(
     x: &Tensor,
     w: &Tensor,
 ) -> Result<Tensor> {
-    let (n, m) = weight_dims(layer, w)?;
-    let x = if is_linear(&layer.kind) && x.shape().len() == 4 {
-        avg_pool(x)?
+    let nm = weight_dims(layer, w)?;
+    let pass = layer_pass(pool, layer, w.data(), nm, &[], x, None, false)?;
+    let out: Vec<f32> = pass.z.iter().map(|&v| v as f32).collect();
+    let shape = if pass.in_shape.len() == 4 {
+        vec![pass.in_shape[0], pass.in_shape[1], pass.in_shape[2], pass.m]
     } else {
-        x.clone()
-    };
-    let rows = rows_for(layer, &x, n)?;
-    let xm = Mat::from_rows_f32(rows, n, x.data())?;
-    let wm = Mat::from_rows_f32(n, m, w.data())?;
-    let ym = xm.matmul_with(pool, &wm)?;
-    let out: Vec<f32> = ym.data.iter().map(|&v| v as f32).collect();
-    let shape = if x.shape().len() == 4 {
-        vec![x.shape()[0], x.shape()[1], x.shape()[2], m]
-    } else {
-        vec![rows, m]
+        vec![pass.rows, pass.m]
     };
     Tensor::new(shape, out)
 }
@@ -602,56 +655,38 @@ fn host_qat_step(
             model.info.name
         )));
     }
-    // ---- forward, recording per-layer context ----
+    // ---- forward, recording per-layer context (shared layer_pass) ----
     let mut ctxs: Vec<QatLayerCtx> = Vec::with_capacity(k);
     let mut cur = x.clone();
     for (li, layer) in layers.iter().enumerate() {
-        let (n, m) = weight_dims(layer, &state.ws[li])?;
-        let mut pooled = None;
-        if is_linear(&layer.kind) && cur.shape().len() == 4 {
-            let sh = cur.shape();
-            pooled = Some((sh[0], sh[1] * sh[2]));
-            cur = avg_pool(&cur)?;
-        }
-        let mut a = cur.data().to_vec();
-        if li > 0 {
-            // post-ReLU activations carry the fake-quant grid; the raw
-            // image input stays FP (matches the device qat_step graphs).
-            fake_quant_relu_acts(&mut a, abits);
-        }
-        let rows = rows_for(layer, &cur, n)?;
+        let nm = weight_dims(layer, &state.ws[li])?;
         let wq = fake_quant_weight(state.ws[li].data(), wbits)?;
-        let xm = Mat::from_rows_f32(rows, n, &a)?;
-        let wm = Mat::from_rows_f32(n, m, &wq)?;
-        let mut zm = xm.matmul_with(pool, &wm)?;
-        let bias = state.bs[li].data();
-        for zrow in zm.data.chunks_mut(m) {
-            for (zv, &b) in zrow.iter_mut().zip(bias) {
-                *zv += b as f64;
-            }
-        }
-        let relu = layer.act == "relu";
-        let mut out = vec![0.0f32; rows * m];
-        for (o, &zv) in out.iter_mut().zip(&zm.data) {
-            let v = zv as f32;
-            *o = if relu { v.max(0.0) } else { v };
-        }
-        let shape = if cur.shape().len() == 4 {
-            vec![cur.shape()[0], cur.shape()[1], cur.shape()[2], m]
-        } else {
-            vec![rows, m]
-        };
+        // post-ReLU activations carry the fake-quant grid; the raw
+        // image input stays FP (matches the device qat_step graphs).
+        let tf = |a: &mut [f32]| fake_quant_relu_acts(a, abits);
+        let tfopt: Option<&dyn Fn(&mut [f32])> =
+            if li > 0 { Some(&tf) } else { None };
+        let pass = layer_pass(
+            pool,
+            layer,
+            &wq,
+            nm,
+            state.bs[li].data(),
+            &cur,
+            tfopt,
+            true,
+        )?;
         ctxs.push(QatLayerCtx {
-            a,
-            rows,
-            n,
-            m,
+            a: pass.a,
+            rows: pass.rows,
+            n: pass.n,
+            m: pass.m,
             wq,
-            z: zm.data,
-            pooled,
-            relu,
+            z: pass.z,
+            pooled: pass.pooled,
+            relu: layer.act == "relu",
         });
-        cur = Tensor::new(shape, out)?;
+        cur = pass.out.expect("want_out set");
     }
     // ---- softmax cross-entropy ----
     let classes = ctxs[k - 1].m;
@@ -792,6 +827,16 @@ impl Backend for HostBackend {
         }))
     }
 
+    fn prepare_serving<'a>(
+        &'a self,
+        model: &'a LoadedModel,
+        weights: &'a [Tensor],
+    ) -> Result<Box<dyn PreparedModel + 'a>> {
+        // Host tensors are already resident; the plain prepared handle
+        // IS the serving handle (Send + Sync, zero per-call staging).
+        self.prepare(model, weights)
+    }
+
     fn prepare_layer<'a>(
         &'a self,
         layer: &'a LayerInfo,
@@ -900,9 +945,9 @@ mod tests {
     #[test]
     fn fake_quant_act_roundtrips_grid_points() {
         let p = ActQuantParams { scale: 0.5, zero: -1.0 };
-        let x = Tensor::from_vec(vec![-1.0, -0.76, 0.0, 100.0]);
-        let q = fake_quant_act(&x, &p, 2); // levels 0..3 -> values -1..0.5
-        assert_eq!(q.data(), &[-1.0, -1.0, 0.0, 0.5]);
+        let mut x = vec![-1.0, -0.76, 0.0, 100.0];
+        fake_quant_act(&mut x, &p, 2); // levels 0..3 -> values -1..0.5
+        assert_eq!(x, vec![-1.0, -1.0, 0.0, 0.5]);
     }
 
     #[test]
@@ -962,6 +1007,29 @@ mod tests {
             .unwrap();
         assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
         assert_ne!(state.ws[1], w0, "gradient step must move the weights");
+    }
+
+    #[test]
+    fn forward_rows_independent_of_batch_composition() {
+        // The serve micro-batcher stacks requests into one batch and
+        // slices rows back out; that is only sound because every row of
+        // the host forward is computed independently (per-row matmul
+        // accumulation, per-sample pooling, elementwise activations).
+        let be = HostBackend::new();
+        let manifest = Manifest::synthetic();
+        let model = be.load_model(&manifest, "synthnet").unwrap();
+        let prep = be.prepare(&model, &model.weights).unwrap();
+        let (x, _) = synth::generate(6, 99);
+        let batch = prep.forward(&x).unwrap();
+        for i in 0..6 {
+            let xi = x.slice_axis0(i, 1).unwrap();
+            let yi = prep.forward(&xi).unwrap();
+            assert_eq!(
+                yi.data(),
+                &batch.data()[i * yi.len()..(i + 1) * yi.len()],
+                "row {i} must be bit-identical to its single-sample forward"
+            );
+        }
     }
 
     #[test]

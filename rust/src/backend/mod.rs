@@ -121,7 +121,11 @@ impl QatState {
 
 /// A weight set staged for repeated model-level execution (device
 /// buffers for PJRT, borrowed host tensors for the host backend).
-pub trait PreparedModel {
+///
+/// `Send + Sync` so a serve worker thread can drive the handle while
+/// producers live on other threads (both implementations are plain data
+/// behind `&`-refs and mutexes; see `serve::worker`).
+pub trait PreparedModel: Send + Sync {
     /// Logits for one image batch.
     fn forward(&self, x: &Tensor) -> Result<Tensor>;
 
@@ -176,6 +180,19 @@ pub trait Backend: Send + Sync {
 
     /// Stage a weight set for forward / forward_actq / collect calls.
     fn prepare<'a>(
+        &'a self,
+        model: &'a LoadedModel,
+        weights: &'a [Tensor],
+    ) -> Result<Box<dyn PreparedModel + 'a>>;
+
+    /// Stage a weight set for the serving hot path: identical handle
+    /// contract to [`Backend::prepare`], but the backend additionally
+    /// pre-resolves everything a repeated `forward` needs — the PJRT
+    /// implementation loads the forward executable here, once, instead
+    /// of taking the runtime-cache lock per batch — so the serve
+    /// worker's steady state is execution only, no per-call
+    /// re-preparation.
+    fn prepare_serving<'a>(
         &'a self,
         model: &'a LoadedModel,
         weights: &'a [Tensor],

@@ -40,6 +40,30 @@ impl PjrtBackend {
     pub fn runtime(&self) -> &Runtime {
         &self.rt
     }
+
+    /// Upload a weight set once — the shared body of `prepare` and
+    /// `prepare_serving`.
+    fn stage<'a>(
+        &'a self,
+        model: &'a LoadedModel,
+        weights: &'a [Tensor],
+    ) -> Result<PjrtPrepared<'a>> {
+        if weights.len() != model.num_layers() {
+            return Err(Error::shape(format!(
+                "{}: {} weight tensors for {} layers",
+                model.info.name,
+                weights.len(),
+                model.num_layers()
+            )));
+        }
+        Ok(PjrtPrepared {
+            rt: &self.rt,
+            model,
+            wbufs: self.rt.upload_all(weights)?,
+            bbufs: self.rt.upload_all(&model.biases)?,
+            actq: std::sync::Mutex::new(None),
+        })
+    }
 }
 
 /// Uploaded activation-quant parameter vectors, keyed by their host
@@ -142,6 +166,36 @@ impl PreparedModel for PjrtPrepared<'_> {
     }
 }
 
+/// The serving handle: a [`PjrtPrepared`] plus the forward executable
+/// resolved **once** at staging time, so the worker's per-batch path is
+/// upload → execute with no runtime-cache lock (`Runtime::load` takes a
+/// mutex + hash lookup per call; a hot serve loop would pay it per
+/// batch).
+struct PjrtServing<'a> {
+    inner: PjrtPrepared<'a>,
+    fwd: Arc<Executable>,
+}
+
+impl PreparedModel for PjrtServing<'_> {
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let outs = self.inner.run_model(&self.fwd, x, &[])?;
+        literal_to_tensor(&outs[0])
+    }
+
+    fn forward_actq(
+        &self,
+        x: &Tensor,
+        act_params: &[ActQuantParams],
+        act_bits: &[u8],
+    ) -> Result<Tensor> {
+        self.inner.forward_actq(x, act_params, act_bits)
+    }
+
+    fn collect(&self, x: &Tensor) -> Result<(Vec<Tensor>, Tensor)> {
+        self.inner.collect(x)
+    }
+}
+
 struct PjrtLayer<'a> {
     rt: &'a Runtime,
     exe: Arc<Executable>,
@@ -233,21 +287,17 @@ impl Backend for PjrtBackend {
         model: &'a LoadedModel,
         weights: &'a [Tensor],
     ) -> Result<Box<dyn PreparedModel + 'a>> {
-        if weights.len() != model.num_layers() {
-            return Err(Error::shape(format!(
-                "{}: {} weight tensors for {} layers",
-                model.info.name,
-                weights.len(),
-                model.num_layers()
-            )));
-        }
-        Ok(Box::new(PjrtPrepared {
-            rt: &self.rt,
-            model,
-            wbufs: self.rt.upload_all(weights)?,
-            bbufs: self.rt.upload_all(&model.biases)?,
-            actq: std::sync::Mutex::new(None),
-        }))
+        Ok(Box::new(self.stage(model, weights)?))
+    }
+
+    fn prepare_serving<'a>(
+        &'a self,
+        model: &'a LoadedModel,
+        weights: &'a [Tensor],
+    ) -> Result<Box<dyn PreparedModel + 'a>> {
+        let inner = self.stage(model, weights)?;
+        let fwd = self.rt.load(&model.info.forward)?;
+        Ok(Box::new(PjrtServing { inner, fwd }))
     }
 
     fn prepare_layer<'a>(

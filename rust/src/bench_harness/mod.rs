@@ -97,7 +97,26 @@ impl Bencher {
     }
 }
 
+/// Robust statistics over raw duration samples (seconds). Public so
+/// other subsystems with their own sample streams — the serve latency
+/// histogram — can land in the same JSON baseline as the benches.
+pub fn stats_from_samples(name: &str, samples: &[f64]) -> Stats {
+    compute_stats(name, samples)
+}
+
 fn compute_stats(name: &str, samples: &[f64]) -> Stats {
+    if samples.is_empty() {
+        return Stats {
+            name: name.to_string(),
+            iters: 0,
+            mean_s: 0.0,
+            median_s: 0.0,
+            p95_s: 0.0,
+            stddev_s: 0.0,
+            min_s: 0.0,
+            max_s: 0.0,
+        };
+    }
     let mut sorted = samples.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = sorted.len();

@@ -204,6 +204,16 @@ impl Ctx {
     /// Run independent quantize+eval cells across the global pool.
     /// Each cell is a full pipeline run with its own RNG stream seeded
     /// from the config, so results are identical to the serial order.
+    ///
+    /// Nested parallelism is **bounded**: each cell runs under
+    /// [`threadpool::with_width_cap`] with the pool width divided among
+    /// the concurrently-running cells, so a cell's inner matmuls/kernels
+    /// cannot each spawn a full pool's worth of scoped workers
+    /// (transient oversubscription ≈ cells × pool size before the cap).
+    /// The serve worker exposes the same mechanism
+    /// (`WorkerConfig::width` / `--worker-width`) so co-scheduled
+    /// serving can be bounded to its share of the pool too.
+    ///
     /// Note on metrics: concurrent cells accumulate into the backend's
     /// one [`crate::util::timer::Metrics`], so per-phase durations in
     /// the final report are aggregate CPU-seconds across cells, not
@@ -212,10 +222,13 @@ impl Ctx {
         &self,
         specs: &[(&str, u8, Option<u8>, Rounding)],
     ) -> Result<Vec<f64>> {
+        let inner = inner_width(specs.len());
         threadpool::global()
             .scope_map(specs.len(), |i| {
-                let (model, wbits, abits, method) = specs[i];
-                self.run(model, wbits, abits, method)
+                threadpool::with_width_cap(inner, || {
+                    let (model, wbits, abits, method) = specs[i];
+                    self.run(model, wbits, abits, method)
+                })
             })
             .into_iter()
             .collect()
@@ -228,6 +241,19 @@ impl Ctx {
         }
         Ok(row)
     }
+}
+
+/// Per-cell inner width when `cells` tasks share the global pool: the
+/// **caller's** effective width — `width()`, not `size()`, so an
+/// already-capped caller's budget is subdivided rather than silently
+/// re-widened (scope_map's fresh threads don't inherit the caller's
+/// thread-local cap; passing a width derived from it restores the
+/// narrowing-only nesting contract) — split evenly among the cells that
+/// can actually run at once.
+fn inner_width(cells: usize) -> usize {
+    let width = threadpool::global().width();
+    let concurrent = width.min(cells).max(1);
+    (width / concurrent).max(1)
 }
 
 pub const ALL_MODELS: [&str; 5] = [
@@ -514,13 +540,17 @@ pub fn fig2(ctx: &Ctx, models: &[&str], taus: &[f32]) -> Result<Table> {
     let mut svg_series: Vec<(String, Vec<f64>)> = Vec::new();
     for model in models {
         for abits in [None, Some(4u8)] {
-            // the τ points are independent runs: fan them out
+            // the τ points are independent runs: fan them out, each
+            // under the same width cap run_many hands its cells
+            let inner = inner_width(taus.len());
             let accs: Vec<f64> = threadpool::global()
                 .scope_map(taus.len(), |i| {
-                    let mut cfg = ctx.cfg.clone();
-                    cfg.tau = taus[i];
-                    cfg.method = Rounding::Attention;
-                    ctx.run_cfg(model, 4, abits, &cfg)
+                    threadpool::with_width_cap(inner, || {
+                        let mut cfg = ctx.cfg.clone();
+                        cfg.tau = taus[i];
+                        cfg.method = Rounding::Attention;
+                        ctx.run_cfg(model, 4, abits, &cfg)
+                    })
                 })
                 .into_iter()
                 .collect::<Result<_>>()?;

@@ -8,6 +8,13 @@
 //! process-wide [`threadpool::global`] pool (`AR_THREADS` sizes it),
 //! threaded through explicitly here so calibration, allocation, and
 //! evaluation share workers instead of each creating their own.
+//!
+//! When several pipeline runs execute concurrently (experiment table
+//! cells via `Ctx::run_many`, the serve worker next to live traffic),
+//! the caller wraps each run in
+//! [`crate::util::threadpool::with_width_cap`]; every pool fan-out in
+//! here respects that thread-local cap, so N concurrent runs split one
+//! pool's width instead of each claiming all of it.
 
 use std::time::Instant;
 

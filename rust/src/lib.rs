@@ -28,6 +28,9 @@
 //!   and a pure-host executor that runs the whole pipeline with zero
 //!   artifacts.
 //! * [`coordinator`] — the calibration pipeline and experiment drivers.
+//! * [`serve`] — batched serving: hot prepared model, bounded request
+//!   queue with admission control, micro-batching worker, latency /
+//!   throughput metrics.
 //! * [`report`] — tables, ASCII charts, CSV.
 //! * [`bench_harness`] — the in-repo criterion replacement.
 
@@ -41,6 +44,7 @@ pub mod mixed;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

@@ -119,7 +119,7 @@ impl Mat {
         let blocks = if n * n * k / 2 < MIN_PAR_CHUNK {
             1
         } else {
-            pool.size().min(n).max(1)
+            pool.width().min(n).max(1)
         };
         let fill_rows = |first_row: usize, block: &mut [f64]| {
             for (bi, grow) in block.chunks_mut(n).enumerate() {
@@ -225,11 +225,11 @@ impl Mat {
             }
             g
         };
-        // Strips are processed in pool-sized waves so at most pool.size()
-        // m×m partials are live at once, but every += into `out` happens
-        // in ascending strip order — the accumulated value is identical
-        // for every pool size.
-        let wave = pool.size().max(1);
+        // Strips are processed in width-sized waves so at most
+        // pool.width() m×m partials are live at once, but every += into
+        // `out` happens in ascending strip order — the accumulated value
+        // is identical for every pool size and width cap.
+        let wave = pool.width().max(1);
         let mut si0 = 0usize;
         while si0 < strips {
             let batch = (strips - si0).min(wave);

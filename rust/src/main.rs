@@ -6,6 +6,7 @@
 //! repro quantize  --model M --wbits B [--abits B] [--method ...]
 //! repro allocate  --model M --bits 3,4,5,6      Algorithm-1 bit allocation
 //! repro qat       --model M --steps N           budgeted STE-QAT
+//! repro serve     --requests N [--batch B --max-wait-us U --queue-depth D]
 //! repro reproduce <table1..5|fig2|fig3|fig4|fig5|all>
 //! ```
 //!
@@ -25,6 +26,7 @@ use attention_round::io::manifest::Manifest;
 use attention_round::mixed;
 use attention_round::quant::rounding::Rounding;
 use attention_round::report::pct;
+use attention_round::serve;
 use attention_round::util::args::Parser;
 use attention_round::util::{error::Error, error::Result, logging};
 
@@ -53,6 +55,13 @@ fn parser() -> Parser {
         .opt("eps2", Some("0.001"), "coding-length error tolerance ε²")
         .opt("steps", Some("300"), "QAT training steps")
         .opt("taus", Some("0,0.25,0.5,0.75,1"), "τ values for fig2")
+        .opt("requests", Some("1024"), "serve: load-generator request count")
+        .opt("batch", Some("16"), "serve: micro-batch size (pad target)")
+        .opt("max-wait-us", Some("200"), "serve: micro-batch coalesce window (µs)")
+        .opt("queue-depth", Some("64"), "serve: admission bound (reject beyond)")
+        .opt("producers", Some("4"), "serve: load-generator producer threads")
+        .opt("worker-width", Some("0"), "serve: worker inner-parallelism cap (0 = full pool)")
+        .flag("no-verify", "serve: skip the bit-identity check against direct forward")
         .flag("save", "persist the quantized model under <out>/qmodels/")
         .flag("help", "print usage")
 }
@@ -75,7 +84,7 @@ fn run(argv: &[String]) -> Result<()> {
     let a = p.parse(argv)?;
     if a.has_flag("help") || a.positional.is_empty() {
         println!("{}", p.usage());
-        println!("subcommands: info | evaluate | quantize | allocate | qat | reproduce <target>");
+        println!("subcommands: info | evaluate | quantize | allocate | qat | serve | reproduce <target>");
         return Ok(());
     }
     let cmd = a.positional[0].as_str();
@@ -87,6 +96,7 @@ fn run(argv: &[String]) -> Result<()> {
         "quantize" => cmd_quantize(&artifacts, &a),
         "allocate" => cmd_allocate(&artifacts, &a),
         "qat" => cmd_qat(&artifacts, &a),
+        "serve" => cmd_serve(&artifacts, &a),
         "reproduce" => cmd_reproduce(&artifacts, &a),
         other => Err(Error::config(format!("unknown subcommand {other:?}"))),
     }
@@ -280,6 +290,55 @@ fn cmd_qat(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()>
         out.train_samples_seen,
         out.wall_s
     );
+    Ok(())
+}
+
+/// `repro serve` — the batched-serving load generator: keeps a prepared
+/// model hot behind the bounded request queue, drives `--requests`
+/// synthetic requests through the micro-batching worker, and reports
+/// p50/p95/p99 latency + sustained throughput as a table and as JSON
+/// (stdout and `<out>/serve.json`, which the CI smoke job asserts on).
+fn cmd_serve(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
+    let ctx = load_ctx(artifacts, a)?;
+    let model_name = pick_model(&ctx, a)?;
+    let cfg = serve::ServeConfig {
+        max_batch: a.get_usize("batch")?.max(1),
+        max_wait: std::time::Duration::from_micros(a.get_usize("max-wait-us")? as u64),
+        queue_depth: a.get_usize("queue-depth")?.max(1),
+        worker_width: a.get_usize("worker-width")?,
+        verify: !a.has_flag("no-verify"),
+        actq: None,
+    };
+    let requests = a.get_usize("requests")?;
+    let producers = a.get_usize("producers")?.max(1);
+    println!(
+        "serving {requests} requests ({} producers) on {} [{}], batch ≤{} / wait {}µs / queue {}",
+        producers,
+        model_name,
+        ctx.backend.platform(),
+        cfg.max_batch,
+        cfg.max_wait.as_micros(),
+        cfg.queue_depth
+    );
+    let report = serve::run_load_generator(
+        ctx.backend.as_ref(),
+        &ctx.manifest,
+        &model_name,
+        &cfg,
+        requests,
+        producers,
+    )?;
+    println!("{}", report.table().render());
+    let json = report.to_json();
+    println!("{json}");
+    let json_path = ctx.out_dir.join("serve.json");
+    std::fs::write(&json_path, &json)?;
+    println!("wrote {}", json_path.display());
+    if cfg.verify {
+        println!("verified: serve outputs bit-identical to direct forward");
+    }
+    println!("serve: clean shutdown ({} completed, {} rejected, {:.1} req/s)",
+        report.completed, report.rejected, report.throughput_rps);
     Ok(())
 }
 

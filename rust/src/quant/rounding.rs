@@ -155,7 +155,7 @@ pub fn stochastic_into(pool: &ThreadPool, w: &[f32], g: &QGrid, seed: u64, out: 
             *o = s * r.clamp(lo, hi);
         }
     };
-    if w.len() <= MIN_PAR_CHUNK || pool.size() <= 1 {
+    if w.len() <= MIN_PAR_CHUNK || pool.width() <= 1 {
         // single chunk or sequential pool: still chunked logically so the
         // result matches the parallel path bit for bit
         for (ci, (wc, oc)) in w
@@ -173,8 +173,8 @@ pub fn stochastic_into(pool: &ThreadPool, w: &[f32], g: &QGrid, seed: u64, out: 
         .enumerate()
         .map(|(ci, (wc, oc))| (ci, wc, oc))
         .collect();
-    // pool-sized waves of scoped workers (same pattern as gram_tr_with)
-    let wave = pool.size();
+    // width-sized waves of scoped workers (same pattern as gram_tr_with)
+    let wave = pool.width();
     while !jobs.is_empty() {
         let batch: Vec<_> = jobs.drain(..wave.min(jobs.len())).collect();
         std::thread::scope(|sc| {

@@ -1,0 +1,121 @@
+//! Micro-batch assembly: stack coalesced requests into one padded batch
+//! tensor and slice per-request rows back out of the batched logits.
+//!
+//! Every batch is padded with zero rows to a **uniform** `pad_to` rows
+//! (normally the worker's `max_batch`): the PJRT path executes
+//! fixed-shape AOT graphs, and a single batch shape keeps the host path
+//! mirrorable. Padding is sound because both backends compute output
+//! rows independently of their batch neighbours (asserted by
+//! `backend::host` tests), so pad rows cost compute but never change a
+//! real row — and they are never returned: responses are sliced from the
+//! first `requests.len()` rows only.
+
+use crate::serve::queue::ServeRequest;
+use crate::tensor::Tensor;
+use crate::util::error::Error;
+
+/// One coalesced batch, ready for a single `forward` call.
+pub struct MicroBatch {
+    /// The member requests, in arrival order = batch-row order.
+    pub requests: Vec<ServeRequest>,
+    /// `[pad_to, …sample dims]`: request samples stacked along axis 0,
+    /// zero rows after `requests.len()`.
+    pub inputs: Tensor,
+    /// Number of zero pad rows (`pad_to − requests.len()`).
+    pub padded: usize,
+}
+
+/// Stack `requests` into a [`MicroBatch`] padded to `pad_to` rows (or to
+/// the request count, if larger). On failure the untouched requests come
+/// back with the error so the caller can still answer them.
+pub fn coalesce(
+    requests: Vec<ServeRequest>,
+    pad_to: usize,
+) -> std::result::Result<MicroBatch, (Vec<ServeRequest>, Error)> {
+    if requests.is_empty() {
+        return Err((requests, Error::invariant("coalesce on an empty request set")));
+    }
+    let pad_to = pad_to.max(requests.len());
+    let dims = requests[0].input.shape().to_vec();
+    let mismatch = requests[1..]
+        .iter()
+        .find(|r| r.input.shape() != dims.as_slice())
+        .map(|r| {
+            format!(
+                "serve batch mixes sample shapes: {:?} (request {}) vs {:?}",
+                r.input.shape(),
+                r.id,
+                dims
+            )
+        });
+    if let Some(msg) = mismatch {
+        return Err((requests, Error::shape(msg)));
+    }
+    let sample_len: usize = dims.iter().product();
+    let mut data = vec![0.0f32; pad_to * sample_len];
+    for (i, r) in requests.iter().enumerate() {
+        data[i * sample_len..(i + 1) * sample_len].copy_from_slice(r.input.data());
+    }
+    let mut shape = vec![pad_to];
+    shape.extend(dims);
+    let padded = pad_to - requests.len();
+    match Tensor::new(shape, data) {
+        Ok(inputs) => Ok(MicroBatch {
+            requests,
+            inputs,
+            padded,
+        }),
+        Err(e) => Err((requests, e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn req(id: u64, data: Vec<f32>, shape: Vec<usize>) -> ServeRequest {
+        let (tx, rx) = channel();
+        drop(rx); // test requests never get responses
+        ServeRequest {
+            id,
+            input: Tensor::new(shape, data).unwrap(),
+            submitted: Instant::now(),
+            tx,
+        }
+    }
+
+    #[test]
+    fn pads_final_batch_with_zero_rows() {
+        let reqs = vec![
+            req(0, vec![1.0, 2.0], vec![2]),
+            req(1, vec![3.0, 4.0], vec![2]),
+        ];
+        let b = coalesce(reqs, 4).unwrap();
+        assert_eq!(b.inputs.shape(), &[4, 2]);
+        assert_eq!(b.padded, 2);
+        assert_eq!(b.inputs.data(), &[1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(b.requests.len(), 2);
+    }
+
+    #[test]
+    fn oversized_request_set_grows_past_pad_to() {
+        let reqs = (0..3).map(|i| req(i, vec![i as f32], vec![1])).collect();
+        let b = coalesce(reqs, 2).unwrap();
+        assert_eq!(b.inputs.shape(), &[3, 1]);
+        assert_eq!(b.padded, 0);
+    }
+
+    #[test]
+    fn shape_mismatch_returns_requests_intact() {
+        let reqs = vec![
+            req(7, vec![1.0, 2.0], vec![2]),
+            req(8, vec![1.0, 2.0, 3.0], vec![3]),
+        ];
+        let (back, err) = coalesce(reqs, 4).unwrap_err();
+        assert_eq!(back.len(), 2, "requests come back for error responses");
+        assert_eq!(back[0].id, 7);
+        assert!(err.to_string().contains("shape"));
+    }
+}

@@ -1,0 +1,331 @@
+//! Serving metrics: per-request latency histogram, queue-depth and
+//! batch-size distributions, admission-control counters, and sustained
+//! throughput — collected lock-cheap during the run, summarized into a
+//! [`ServeReport`] at shutdown.
+//!
+//! Percentiles (p50/p95/p99) come from the same O(n) select-nth
+//! machinery the activation observers use
+//! ([`crate::tensor::ops::percentile_with`]), not a full sort. The
+//! report renders three ways: a [`crate::report::Table`] for humans, a
+//! hand-rolled JSON object (`util::json`-parseable — serde is not
+//! offline-available), and [`crate::bench_harness::Stats`] rows so the
+//! serve path lands in the committed `BENCH_host.json` baseline next to
+//! the kernel benches.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::bench_harness::{fmt_dur, Stats};
+use crate::report::Table;
+use crate::tensor::ops;
+
+#[derive(Default)]
+struct MetricsInner {
+    latencies_s: Vec<f32>,
+    batch_real: Vec<u32>,
+    depth_samples: Vec<u32>,
+    padded_rows: u64,
+    rejected: u64,
+    errors: u64,
+}
+
+/// Shared collector: producers record admission samples, the worker
+/// records batches and latencies, the collector records errors.
+#[derive(Default)]
+pub struct ServeMetrics {
+    inner: Mutex<MetricsInner>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admission→response latency of one completed request.
+    pub fn record_latency(&self, d: Duration) {
+        self.inner
+            .lock()
+            .unwrap()
+            .latencies_s
+            .push(d.as_secs_f32());
+    }
+
+    /// One executed batch: `real` request rows and `padded` zero rows.
+    pub fn record_batch(&self, real: usize, padded: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batch_real.push(real as u32);
+        g.padded_rows += padded as u64;
+    }
+
+    /// Queue depth observed right after an accepted push.
+    pub fn record_depth(&self, depth: usize) {
+        self.inner.lock().unwrap().depth_samples.push(depth as u32);
+    }
+
+    /// One admission-control rejection (queue full).
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// One request that came back with an error response.
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Summarize into a report. `wall_s` is the whole run's wall clock
+    /// (throughput = completed / wall).
+    pub fn report(
+        &self,
+        backend: &str,
+        model: &str,
+        max_batch: usize,
+        queue_depth: usize,
+        wall_s: f64,
+    ) -> ServeReport {
+        let g = self.inner.lock().unwrap();
+        let mut scratch = Vec::new();
+        let mut pct = |p: f64| -> f64 {
+            if g.latencies_s.is_empty() {
+                0.0
+            } else {
+                ops::percentile_with(&g.latencies_s, p, &mut scratch) as f64
+            }
+        };
+        let (lat_p50_s, lat_p95_s, lat_p99_s) = (pct(50.0), pct(95.0), pct(99.0));
+        let n = g.latencies_s.len();
+        let sum: f64 = g.latencies_s.iter().map(|&v| v as f64).sum();
+        let lat_mean_s = if n == 0 { 0.0 } else { sum / n as f64 };
+        let lat_min_s = g.latencies_s.iter().cloned().fold(f64::INFINITY, |a, v| a.min(v as f64));
+        let lat_max_s = g.latencies_s.iter().cloned().fold(0.0f64, |a, v| a.max(v as f64));
+        let batches = g.batch_real.len() as u64;
+        let real_total: u64 = g.batch_real.iter().map(|&b| b as u64).sum();
+        let batch_mean = if batches == 0 { 0.0 } else { real_total as f64 / batches as f64 };
+        let batch_max = g.batch_real.iter().cloned().max().unwrap_or(0) as u64;
+        let depth_n = g.depth_samples.len();
+        let depth_sum: u64 = g.depth_samples.iter().map(|&d| d as u64).sum();
+        let depth_mean = if depth_n == 0 { 0.0 } else { depth_sum as f64 / depth_n as f64 };
+        let depth_max = g.depth_samples.iter().cloned().max().unwrap_or(0) as u64;
+        ServeReport {
+            backend: backend.to_string(),
+            model: model.to_string(),
+            max_batch,
+            queue_depth,
+            completed: n as u64,
+            rejected: g.rejected,
+            errors: g.errors,
+            batches,
+            padded_rows: g.padded_rows,
+            batch_mean,
+            batch_max,
+            depth_mean,
+            depth_max,
+            lat_p50_s,
+            lat_p95_s,
+            lat_p99_s,
+            lat_mean_s,
+            lat_min_s: if n == 0 { 0.0 } else { lat_min_s },
+            lat_max_s,
+            wall_s,
+            throughput_rps: if wall_s > 0.0 { n as f64 / wall_s } else { 0.0 },
+            latencies_s: g.latencies_s.clone(),
+        }
+    }
+}
+
+/// A finished serving run, summarized.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub backend: String,
+    pub model: String,
+    pub max_batch: usize,
+    pub queue_depth: usize,
+    /// Requests that received a successful response.
+    pub completed: u64,
+    /// Admission-control rejections (each may have been retried).
+    pub rejected: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Zero pad rows executed across all batches.
+    pub padded_rows: u64,
+    pub batch_mean: f64,
+    pub batch_max: u64,
+    pub depth_mean: f64,
+    pub depth_max: u64,
+    pub lat_p50_s: f64,
+    pub lat_p95_s: f64,
+    pub lat_p99_s: f64,
+    pub lat_mean_s: f64,
+    pub lat_min_s: f64,
+    pub lat_max_s: f64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    /// Raw per-request latencies (seconds) for downstream stats.
+    pub latencies_s: Vec<f32>,
+}
+
+impl ServeReport {
+    /// JSON object in the same hand-rolled style as
+    /// [`crate::bench_harness::write_json`]; round-trips through
+    /// [`crate::util::json::parse`].
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\n",
+                "  \"serve\": {{\n",
+                "    \"backend\": \"{}\",\n",
+                "    \"model\": \"{}\",\n",
+                "    \"max_batch\": {},\n",
+                "    \"queue_depth\": {},\n",
+                "    \"completed\": {},\n",
+                "    \"rejected\": {},\n",
+                "    \"errors\": {},\n",
+                "    \"batches\": {},\n",
+                "    \"padded_rows\": {},\n",
+                "    \"batch_size_mean\": {:e},\n",
+                "    \"batch_size_max\": {},\n",
+                "    \"queue_depth_mean\": {:e},\n",
+                "    \"queue_depth_max\": {},\n",
+                "    \"latency_s\": {{\"p50\": {:e}, \"p95\": {:e}, \"p99\": {:e}, ",
+                "\"mean\": {:e}, \"min\": {:e}, \"max\": {:e}}},\n",
+                "    \"wall_s\": {:e},\n",
+                "    \"throughput_rps\": {:e}\n",
+                "  }}\n",
+                "}}"
+            ),
+            self.backend,
+            self.model,
+            self.max_batch,
+            self.queue_depth,
+            self.completed,
+            self.rejected,
+            self.errors,
+            self.batches,
+            self.padded_rows,
+            self.batch_mean,
+            self.batch_max,
+            self.depth_mean,
+            self.depth_max,
+            self.lat_p50_s,
+            self.lat_p95_s,
+            self.lat_p99_s,
+            self.lat_mean_s,
+            self.lat_min_s,
+            self.lat_max_s,
+            self.wall_s,
+            self.throughput_rps,
+        )
+    }
+
+    /// Human-readable summary table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Serve — {} on {} (batch ≤{}, queue {})",
+                self.model, self.backend, self.max_batch, self.queue_depth
+            ),
+            &["Metric", "Value"],
+        );
+        let rows: Vec<(&str, String)> = vec![
+            ("completed", self.completed.to_string()),
+            ("rejected (admission)", self.rejected.to_string()),
+            ("errors", self.errors.to_string()),
+            ("batches", self.batches.to_string()),
+            ("padded rows", self.padded_rows.to_string()),
+            (
+                "batch size mean/max",
+                format!("{:.2} / {}", self.batch_mean, self.batch_max),
+            ),
+            (
+                "queue depth mean/max",
+                format!("{:.2} / {}", self.depth_mean, self.depth_max),
+            ),
+            ("latency p50", fmt_dur(self.lat_p50_s)),
+            ("latency p95", fmt_dur(self.lat_p95_s)),
+            ("latency p99", fmt_dur(self.lat_p99_s)),
+            ("latency mean", fmt_dur(self.lat_mean_s)),
+            ("wall", format!("{:.3}s", self.wall_s)),
+            (
+                "throughput",
+                format!("{:.1} req/s", self.throughput_rps),
+            ),
+        ];
+        for (k, v) in rows {
+            t.row(vec![k.to_string(), v]);
+        }
+        t
+    }
+
+    /// The latency distribution as a [`Stats`] row, so serve latency
+    /// lands in the `BENCH_host.json` baseline alongside the kernels.
+    pub fn latency_stats(&self, name: &str) -> Stats {
+        let samples: Vec<f64> = self.latencies_s.iter().map(|&v| v as f64).collect();
+        crate::bench_harness::stats_from_samples(name, &samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled() -> ServeMetrics {
+        let m = ServeMetrics::new();
+        for i in 0..100u32 {
+            m.record_latency(Duration::from_micros(100 + i as u64));
+        }
+        m.record_batch(16, 0);
+        m.record_batch(4, 12);
+        m.record_depth(3);
+        m.record_depth(9);
+        m.record_rejected();
+        m.record_error();
+        m
+    }
+
+    #[test]
+    fn percentiles_ordered_and_counts_roll_up() {
+        let r = filled().report("host", "synthnet", 16, 64, 0.5);
+        assert_eq!(r.completed, 100);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.batches, 2);
+        assert_eq!(r.padded_rows, 12);
+        assert_eq!(r.batch_max, 16);
+        assert!((r.batch_mean - 10.0).abs() < 1e-9);
+        assert_eq!(r.depth_max, 9);
+        assert!(r.lat_p50_s <= r.lat_p95_s && r.lat_p95_s <= r.lat_p99_s);
+        assert!(r.lat_min_s > 0.0 && r.lat_max_s >= r.lat_p99_s);
+        assert!((r.throughput_rps - 200.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let r = filled().report("host", "synthnet", 16, 64, 0.5);
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        let s = j.get("serve").unwrap();
+        assert_eq!(s.get("completed").unwrap().as_f64().unwrap(), 100.0);
+        assert!(s.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+        let lat = s.get("latency_s").unwrap();
+        assert!(lat.get("p99").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn empty_run_reports_zeros() {
+        let r = ServeMetrics::new().report("host", "m", 8, 8, 0.0);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.throughput_rps, 0.0);
+        assert_eq!(r.lat_p50_s, 0.0);
+        assert_eq!(r.lat_min_s, 0.0);
+        // JSON stays parseable with zero samples
+        assert!(crate::util::json::parse(&r.to_json()).is_ok());
+    }
+
+    #[test]
+    fn latency_stats_bridge() {
+        let r = filled().report("host", "m", 8, 8, 1.0);
+        let s = r.latency_stats("host/serve_latency");
+        assert_eq!(s.iters, 100);
+        assert!(s.mean_s > 0.0 && s.min_s <= s.median_s && s.median_s <= s.max_s);
+    }
+}

@@ -1,0 +1,337 @@
+//! Batched serving: the first subsystem whose job is traffic, not
+//! calibration.
+//!
+//! The PTQ pipeline's output — a quantized weight set — only pays off
+//! behind an inference path. This module keeps a
+//! [`crate::backend::PreparedModel`] **hot** (staged once via
+//! [`crate::backend::Backend::prepare_serving`]) and streams request
+//! batches through it:
+//!
+//! ```text
+//!  producers ──push──► RequestQueue (bounded, reject-on-full)
+//!                          │ pop_batch(max_batch, max_wait)
+//!                          ▼
+//!                     micro-batcher (stack + pad to max_batch rows)
+//!                          │ one forward per batch
+//!                          ▼
+//!                     serve worker (hot PreparedModel, width-capped)
+//!                          │ per-request logits rows
+//!                          ▼
+//!                     response channels + ServeMetrics
+//! ```
+//!
+//! * [`queue`] — bounded MPSC admission queue; typed
+//!   [`queue::AdmissionError`] on overload.
+//! * [`batcher`] — request coalescing and zero-row padding.
+//! * [`worker`] — the hot loop; nested parallelism bounded by
+//!   [`crate::util::threadpool::with_width_cap`].
+//! * [`metrics`] — latency percentiles (select-nth), queue depth, batch
+//!   sizes, throughput; JSON / table / bench-baseline reporting.
+//!
+//! Serve-path outputs are **bit-identical** to a direct `forward` of the
+//! same samples (rows are computed independently of their batch
+//! neighbours; `rust/tests/serve.rs` asserts it end-to-end), so putting
+//! a model behind the queue never changes what it predicts.
+//!
+//! [`run_load_generator`] is the self-driving mode: it generates its own
+//! traffic against the synthetic host model (or any backend's model), so
+//! CI exercises the full path on a bare checkout — see the `repro serve`
+//! subcommand.
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod worker;
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use crate::backend::Backend;
+use crate::data::synth;
+use crate::io::manifest::{DatasetInfo, Manifest};
+use crate::quant::observer::ActQuantParams;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+pub use metrics::{ServeMetrics, ServeReport};
+pub use queue::{AdmissionError, Rejected, RequestQueue, ServeRequest, ServeResponse};
+pub use worker::{run_worker, WorkerConfig};
+
+/// Seed for load-generator traffic — disjoint from the calibration /
+/// eval / train split seeds (`data::synth`) and the model-construction
+/// seeds (`backend::host`).
+const LOADGEN_SEED: u64 = 3001;
+
+/// How long a producer backs off after an admission rejection before
+/// retrying (load-generator mode; a real client would shed or reroute).
+const RETRY_BACKOFF: Duration = Duration::from_micros(100);
+
+/// Serving knobs (the `repro serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Coalesce up to this many requests per forward (batches are padded
+    /// to exactly this many rows).
+    pub max_batch: usize,
+    /// How long a non-full batch waits for stragglers.
+    pub max_wait: Duration,
+    /// Admission bound: queued requests beyond this are rejected.
+    pub queue_depth: usize,
+    /// Width cap for the worker's inner kernel fan-out; 0 = the full
+    /// global pool.
+    pub worker_width: usize,
+    /// Re-check every response against a direct `forward` of the same
+    /// sample (bit-identity); load-generator mode only.
+    pub verify: bool,
+    /// Serve through `forward_actq` with these per-layer params/bits
+    /// (the quantized-activation deployment path); `None` = plain
+    /// `forward`.
+    pub actq: Option<(Vec<ActQuantParams>, Vec<u8>)>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 64,
+            worker_width: 0,
+            verify: true,
+            actq: None,
+        }
+    }
+}
+
+/// Synthetic request traffic shaped like the manifest's dataset: the
+/// class-textured generator when the dims match it, seeded Gaussian
+/// noise otherwise (serving latency does not care about label
+/// structure).
+fn gen_inputs(total: usize, ds: &DatasetInfo) -> Result<Tensor> {
+    if ds.image_hw == synth::IMG && ds.channels == synth::CHANNELS {
+        Ok(synth::generate(total, LOADGEN_SEED).0)
+    } else {
+        let mut data = vec![0.0f32; total * ds.image_hw * ds.image_hw * ds.channels];
+        Rng::new(LOADGEN_SEED).fill_gaussian(&mut data, 0.0, 1.0);
+        Tensor::new(
+            vec![total, ds.image_hw, ds.image_hw, ds.channels],
+            data,
+        )
+    }
+}
+
+/// Self-driving serving session: `producers` threads submit `total`
+/// single-sample requests (retrying with backoff on admission
+/// rejection), one worker serves them hot, and the call returns the
+/// metrics report after a clean shutdown. With `cfg.verify` every
+/// response is re-checked bit-for-bit against a direct `forward` of the
+/// same sample — an `Err` from this function means the serving path
+/// changed what the model computes (or a request never completed).
+pub fn run_load_generator(
+    backend: &dyn Backend,
+    manifest: &Manifest,
+    model_name: &str,
+    cfg: &ServeConfig,
+    total: usize,
+    producers: usize,
+) -> Result<ServeReport> {
+    if total == 0 {
+        return Err(Error::config("serve: need at least one request"));
+    }
+    let producers = producers.clamp(1, total);
+    let model = backend.load_model(manifest, model_name)?;
+    let prepared = backend.prepare_serving(&model, &model.weights)?;
+    let inputs = gen_inputs(total, &manifest.dataset)?;
+    let queue = RequestQueue::new(cfg.queue_depth);
+    let serve_metrics = ServeMetrics::new();
+    let wcfg = WorkerConfig {
+        max_batch: cfg.max_batch.max(1),
+        max_wait: cfg.max_wait,
+        width: if cfg.worker_width == 0 {
+            threadpool::global().size()
+        } else {
+            cfg.worker_width
+        },
+        actq: cfg.actq.clone(),
+    };
+    let (rtx, rrx) = channel::<ServeResponse>();
+    let mut responses: Vec<Option<Tensor>> = vec![None; total];
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            // If the worker dies — panic included — close the queue and
+            // error-out whatever is still queued, so producers stop
+            // retrying and the collector's recv() can terminate instead
+            // of hanging the whole run (the panic still propagates when
+            // the scope joins).
+            struct ShutdownGuard<'a>(&'a RequestQueue);
+            impl Drop for ShutdownGuard<'_> {
+                fn drop(&mut self) {
+                    self.0.close();
+                    while let Some(reqs) = self.0.pop_batch(64, Duration::ZERO) {
+                        for r in reqs {
+                            let _ = r.tx.send(ServeResponse {
+                                id: r.id,
+                                result: Err("serve worker terminated".into()),
+                            });
+                        }
+                    }
+                }
+            }
+            let _guard = ShutdownGuard(&queue);
+            run_worker(prepared.as_ref(), &queue, &wcfg, &serve_metrics)
+        });
+        let per = (total + producers - 1) / producers;
+        for p in 0..producers {
+            let (lo, hi) = (p * per, ((p + 1) * per).min(total));
+            if lo >= hi {
+                continue;
+            }
+            let rtx = rtx.clone();
+            let (queue, metrics, inputs) = (&queue, &serve_metrics, &inputs);
+            s.spawn(move || {
+                for i in lo..hi {
+                    let sample = inputs.slice_axis0(i, 1).and_then(|t| {
+                        let dims = t.shape()[1..].to_vec();
+                        t.reshape(dims)
+                    });
+                    let input = match sample {
+                        Ok(t) => t,
+                        Err(e) => {
+                            let _ = rtx.send(ServeResponse {
+                                id: i as u64,
+                                result: Err(e.to_string()),
+                            });
+                            continue;
+                        }
+                    };
+                    let mut req = ServeRequest {
+                        id: i as u64,
+                        input,
+                        submitted: Instant::now(),
+                        tx: rtx.clone(),
+                    };
+                    loop {
+                        match queue.push(req) {
+                            Ok(depth) => {
+                                metrics.record_depth(depth);
+                                break;
+                            }
+                            Err(rej) => match rej.error {
+                                AdmissionError::QueueFull { .. } => {
+                                    metrics.record_rejected();
+                                    req = rej.request;
+                                    std::thread::sleep(RETRY_BACKOFF);
+                                    // reset only after the backoff:
+                                    // latency measures time *in* the
+                                    // system, not retry sleeps
+                                    req.submitted = Instant::now();
+                                }
+                                AdmissionError::Closed => {
+                                    let ServeRequest { id, tx, .. } = rej.request;
+                                    let _ = tx.send(ServeResponse {
+                                        id,
+                                        result: Err("queue closed".into()),
+                                    });
+                                    break;
+                                }
+                            },
+                        }
+                    }
+                }
+            });
+        }
+        drop(rtx);
+        // Collect exactly one response per request, then shut down.
+        let mut got = 0usize;
+        while got < total {
+            match rrx.recv() {
+                Ok(resp) => {
+                    got += 1;
+                    match resp.result {
+                        Ok(t) => {
+                            if let Some(slot) = responses.get_mut(resp.id as usize) {
+                                *slot = Some(t);
+                            }
+                        }
+                        Err(msg) => {
+                            serve_metrics.record_error();
+                            log::warn!("serve: request {} failed: {msg}", resp.id);
+                        }
+                    }
+                }
+                Err(_) => break, // every sender gone — nothing more can arrive
+            }
+        }
+        queue.close();
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    if cfg.verify {
+        let direct = backend.prepare(&model, &model.weights)?;
+        for i in 0..total {
+            let got = responses[i].as_ref().ok_or_else(|| {
+                Error::invariant(format!("serve: request {i} got no successful response"))
+            })?;
+            let x = inputs.slice_axis0(i, 1)?;
+            let want = match &cfg.actq {
+                Some((params, bits)) => direct.forward_actq(&x, params, bits)?,
+                None => direct.forward(&x)?,
+            };
+            if got.shape() != want.shape() || got.data() != want.data() {
+                return Err(Error::invariant(format!(
+                    "serve: output for request {i} is not bit-identical to the \
+                     direct forward"
+                )));
+            }
+        }
+    }
+    Ok(serve_metrics.report(
+        backend.name(),
+        model_name,
+        cfg.max_batch.max(1),
+        cfg.queue_depth.max(1),
+        wall_s,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostBackend;
+
+    #[test]
+    fn load_generator_serves_and_verifies_small_run() {
+        let be = HostBackend::new();
+        let manifest = Manifest::synthetic();
+        let cfg = ServeConfig {
+            max_batch: 8,
+            queue_depth: 16,
+            ..ServeConfig::default()
+        };
+        let report =
+            run_load_generator(&be, &manifest, "synthnet", &cfg, 48, 3).unwrap();
+        assert_eq!(report.completed, 48);
+        assert_eq!(report.errors, 0);
+        assert!(report.batches >= 48 / 8, "at least ⌈48/8⌉ batches");
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.lat_p99_s >= report.lat_p50_s);
+    }
+
+    #[test]
+    fn zero_requests_is_a_config_error() {
+        let be = HostBackend::new();
+        let manifest = Manifest::synthetic();
+        let cfg = ServeConfig::default();
+        assert!(run_load_generator(&be, &manifest, "synthnet", &cfg, 0, 1).is_err());
+    }
+
+    #[test]
+    fn gen_inputs_matches_dataset_dims() {
+        let m = Manifest::synthetic();
+        let x = gen_inputs(5, &m.dataset).unwrap();
+        assert_eq!(
+            x.shape(),
+            &[5, m.dataset.image_hw, m.dataset.image_hw, m.dataset.channels]
+        );
+    }
+}

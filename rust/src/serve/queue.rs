@@ -1,0 +1,260 @@
+//! Bounded MPSC request queue with admission control.
+//!
+//! Producers [`RequestQueue::push`] single-sample requests; the serve
+//! worker drains them with [`RequestQueue::pop_batch`], which coalesces
+//! up to `max_batch` requests per call (micro-batching — see
+//! `serve::batcher`). The queue is **bounded**: a push against a full
+//! queue is rejected immediately with a typed [`AdmissionError`] and the
+//! request handed back to the caller ([`Rejected`]), so overload turns
+//! into fast feedback at the edge instead of unbounded memory growth and
+//! tail-latency collapse. [`RequestQueue::close`] starts a clean
+//! shutdown: further pushes are rejected, `pop_batch` drains what is
+//! queued and then returns `None`.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::tensor::Tensor;
+
+/// One inference request: a single sample (no leading batch dimension;
+/// the micro-batcher adds it) plus the response channel.
+pub struct ServeRequest {
+    /// Caller-assigned id, echoed on the response.
+    pub id: u64,
+    /// One sample, e.g. `[H, W, C]` for the image models.
+    pub input: Tensor,
+    /// Admission time — latency is measured from here to response send.
+    pub submitted: Instant,
+    pub tx: Sender<ServeResponse>,
+}
+
+/// The worker's answer: the logits row for this request (shape
+/// `[1, classes]`, bit-identical to a direct `forward` of the same
+/// sample) or a stringified error.
+pub struct ServeResponse {
+    pub id: u64,
+    pub result: std::result::Result<Tensor, String>,
+}
+
+/// Why admission control turned a request away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The queue already holds `depth` requests; shed load or retry.
+    QueueFull { depth: usize },
+    /// The queue is shutting down; no further requests are accepted.
+    Closed,
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::QueueFull { depth } => {
+                write!(f, "queue full (depth {depth})")
+            }
+            AdmissionError::Closed => write!(f, "queue closed"),
+        }
+    }
+}
+
+/// A rejected push: the error plus the request, returned intact so the
+/// caller can retry, reroute, or answer it directly.
+pub struct Rejected {
+    pub request: ServeRequest,
+    pub error: AdmissionError,
+}
+
+impl fmt::Debug for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Rejected({}, request {})", self.error, self.request.id)
+    }
+}
+
+struct QueueInner {
+    q: VecDeque<ServeRequest>,
+    closed: bool,
+}
+
+/// The bounded queue. `Mutex + Condvar` (not a channel) because the
+/// consumer needs batched, deadline-bounded draining and the producers
+/// need reject-on-full — neither fits `std::sync::mpsc`.
+pub struct RequestQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    depth: usize,
+}
+
+impl RequestQueue {
+    /// A queue admitting at most `depth` (min 1) waiting requests.
+    pub fn new(depth: usize) -> Self {
+        RequestQueue {
+            inner: Mutex::new(QueueInner {
+                q: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    /// Configured admission bound.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Requests currently waiting (racy snapshot, for metrics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit a request, or hand it back with a typed error. On success
+    /// returns the queue depth *after* the push (a natural metrics
+    /// sample point).
+    pub fn push(&self, request: ServeRequest) -> std::result::Result<usize, Rejected> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(Rejected {
+                request,
+                error: AdmissionError::Closed,
+            });
+        }
+        if g.q.len() >= self.depth {
+            return Err(Rejected {
+                request,
+                error: AdmissionError::QueueFull { depth: self.depth },
+            });
+        }
+        g.q.push_back(request);
+        let depth_now = g.q.len();
+        drop(g);
+        self.cv.notify_one();
+        Ok(depth_now)
+    }
+
+    /// Begin shutdown: reject new pushes, wake the worker so it drains
+    /// the backlog and exits.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Micro-batch drain: block until at least one request is queued
+    /// (or `None` once closed and empty), then keep coalescing arrivals
+    /// for up to `max_wait` — returning early as soon as `max_batch`
+    /// requests are in hand or the queue closes. The wait bounds the
+    /// latency a lone request pays for the *chance* of batching.
+    pub fn pop_batch(
+        &self,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Option<Vec<ServeRequest>> {
+        let max_batch = max_batch.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.q.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        let deadline = Instant::now() + max_wait;
+        while g.q.len() < max_batch && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ng, timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = g.q.len().min(max_batch);
+        Some(g.q.drain(..take).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{channel, Receiver};
+
+    fn req(id: u64) -> (ServeRequest, Receiver<ServeResponse>) {
+        let (tx, rx) = channel();
+        (
+            ServeRequest {
+                id,
+                input: Tensor::zeros(vec![2, 2, 1]),
+                submitted: Instant::now(),
+                tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn rejects_when_full_with_typed_error() {
+        let q = RequestQueue::new(2);
+        let mut rxs = Vec::new();
+        for id in 0..2 {
+            let (r, rx) = req(id);
+            assert_eq!(q.push(r).unwrap(), id as usize + 1);
+            rxs.push(rx);
+        }
+        let (r, _rx) = req(2);
+        let rej = q.push(r).unwrap_err();
+        assert_eq!(rej.error, AdmissionError::QueueFull { depth: 2 });
+        assert_eq!(rej.request.id, 2, "request handed back intact");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_rejects_and_drains() {
+        let q = RequestQueue::new(4);
+        let (r, _rx) = req(0);
+        q.push(r).unwrap();
+        q.close();
+        let (r, _rx2) = req(1);
+        let rej = q.push(r).unwrap_err();
+        assert_eq!(rej.error, AdmissionError::Closed);
+        // the backlog is still drained after close …
+        let drained = q.pop_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].id, 0);
+        // … and only then does the worker see shutdown
+        assert!(q.pop_batch(8, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn pop_batch_coalesces_up_to_max_batch() {
+        let q = RequestQueue::new(8);
+        let mut rxs = Vec::new();
+        for id in 0..5 {
+            let (r, rx) = req(id);
+            q.push(r).unwrap();
+            rxs.push(rx);
+        }
+        let first = q.pop_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), [0, 1, 2, 3]);
+        let rest = q.pop_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].id, 4);
+    }
+
+    #[test]
+    fn zero_depth_clamped() {
+        assert_eq!(RequestQueue::new(0).depth(), 1);
+    }
+}

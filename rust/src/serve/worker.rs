@@ -1,0 +1,85 @@
+//! The serve worker: holds a prepared model hot and drives coalesced
+//! micro-batches through the backend's quantized forward until the queue
+//! shuts down.
+//!
+//! One `forward` per batch; per-request logits rows are sliced back out
+//! (sound because both backends compute rows independently — see
+//! `serve::batcher`). Inner kernel parallelism runs under
+//! [`threadpool::with_width_cap`], the same nested-parallelism mechanism
+//! `Ctx::run_many` hands experiment cells — so a worker co-scheduled
+//! with experiments (or future sibling workers) can be bounded to its
+//! share of the pool via [`WorkerConfig::width`] (`--worker-width`); by
+//! default a lone worker uses the full pool. Forward errors are answered
+//! per request (stringified) and the loop keeps serving — a poisoned
+//! batch must not wedge the queue.
+
+use std::time::Duration;
+
+use crate::backend::PreparedModel;
+use crate::quant::observer::ActQuantParams;
+use crate::serve::batcher;
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::queue::{RequestQueue, ServeRequest, ServeResponse};
+use crate::util::threadpool;
+
+/// Worker knobs (a subset of `serve::ServeConfig`, copied so the worker
+/// thread borrows nothing mutable).
+pub struct WorkerConfig {
+    /// Coalesce up to this many requests per forward; batches are padded
+    /// to exactly this many rows.
+    pub max_batch: usize,
+    /// How long a non-full batch waits for stragglers.
+    pub max_wait: Duration,
+    /// Width cap for the worker's inner kernel fan-out.
+    pub width: usize,
+    /// When set, serve through `forward_actq` with these per-layer
+    /// params/bits (the quantized-activation deployment path).
+    pub actq: Option<(Vec<ActQuantParams>, Vec<u8>)>,
+}
+
+/// Answer every request with the same error (errors are *counted* by the
+/// response collector, so rejected batches don't double-book metrics).
+fn respond_all(requests: &[ServeRequest], msg: &str) {
+    for r in requests {
+        let _ = r.tx.send(ServeResponse {
+            id: r.id,
+            result: Err(msg.to_string()),
+        });
+    }
+}
+
+/// Drain the queue until it closes. Every popped request gets exactly
+/// one response — a logits row or an error.
+pub fn run_worker(
+    prepared: &dyn PreparedModel,
+    queue: &RequestQueue,
+    cfg: &WorkerConfig,
+    metrics: &ServeMetrics,
+) {
+    while let Some(requests) = queue.pop_batch(cfg.max_batch, cfg.max_wait) {
+        let batch = match batcher::coalesce(requests, cfg.max_batch) {
+            Ok(b) => b,
+            Err((requests, e)) => {
+                respond_all(&requests, &e.to_string());
+                continue;
+            }
+        };
+        let out = threadpool::with_width_cap(cfg.width, || match &cfg.actq {
+            Some((params, bits)) => prepared.forward_actq(&batch.inputs, params, bits),
+            None => prepared.forward(&batch.inputs),
+        });
+        match out {
+            Ok(logits) => {
+                metrics.record_batch(batch.requests.len(), batch.padded);
+                for (i, r) in batch.requests.iter().enumerate() {
+                    let result = logits
+                        .slice_axis0(i, 1)
+                        .map_err(|e| e.to_string());
+                    metrics.record_latency(r.submitted.elapsed());
+                    let _ = r.tx.send(ServeResponse { id: r.id, result });
+                }
+            }
+            Err(e) => respond_all(&batch.requests, &e.to_string()),
+        }
+    }
+}

@@ -24,11 +24,54 @@
 //! `&ThreadPool` so callers control sharing; [`ThreadPool::seq`] gives a
 //! free sequential pool for contexts that are already parallel (e.g.
 //! per-layer coding lengths inside `mixed::allocate`).
+//!
+//! Nested fan-outs are bounded by a thread-local **width cap**
+//! ([`with_width_cap`]): an outer fan-out (experiment table cells in
+//! `Ctx::run_many`, the serve worker) wraps each task so its inner
+//! kernels see a width-reduced view of the same shared pool instead of
+//! each spawning a full pool's worth of scoped workers.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+thread_local! {
+    /// Per-thread fan-out cap for the scoped APIs (see [`with_width_cap`]).
+    static WIDTH_CAP: Cell<usize> = Cell::new(usize::MAX);
+}
+
+/// Run `f` with every scoped fan-out on **this thread** capped at `cap`
+/// workers (min 1), restoring the previous cap afterwards — also on
+/// panic, so a poisoned cell can't leak a narrow cap into unrelated work.
+///
+/// This is the nested-parallelism bound: when N independent tasks are
+/// already fanned out across the global pool (experiment table cells via
+/// `Ctx::run_many`, the serve worker next to live producers), each task's
+/// *inner* matmuls/kernels would otherwise each spawn a full pool's worth
+/// of scoped workers — transient oversubscription ≈ tasks × pool size.
+/// The outer fan-out hands each task `with_width_cap(size / tasks, ..)`
+/// instead, so the whole tree stays within one pool's width. Caps nest
+/// narrowing-only (`min` with the ambient cap — an inner scope can
+/// tighten but never widen its parent's bound) and are thread-local, so
+/// sibling tasks never see each other's cap.
+pub fn with_width_cap<T>(cap: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            WIDTH_CAP.with(|c| c.set(self.0));
+        }
+    }
+    let prev = WIDTH_CAP.with(|c| c.replace(cap.max(1).min(c.get())));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The ambient fan-out cap on this thread (`usize::MAX` when uncapped).
+pub fn current_width_cap() -> usize {
+    WIDTH_CAP.with(|c| c.get())
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -94,6 +137,15 @@ impl ThreadPool {
         self.size
     }
 
+    /// The fan-out width scoped methods use from **this thread**: the
+    /// configured size, reduced by any ambient [`with_width_cap`]. All
+    /// width decisions in the scoped API (and in `linalg`/`quant`
+    /// kernels that take a pool) go through this, so an outer fan-out
+    /// can bound its children without plumbing a second pool around.
+    pub fn width(&self) -> usize {
+        self.size.min(current_width_cap())
+    }
+
     // ---- scoped fork-join API -------------------------------------------
 
     /// Raw scoped escape hatch: exactly [`std::thread::scope`]. Present so
@@ -106,13 +158,13 @@ impl ThreadPool {
         std::thread::scope(f)
     }
 
-    /// How many chunks to split `n` elements into: at most `size`, at
-    /// least one, and never chunks smaller than [`MIN_PAR_CHUNK`].
+    /// How many chunks to split `n` elements into: at most [`Self::width`],
+    /// at least one, and never chunks smaller than [`MIN_PAR_CHUNK`].
     fn chunk_count(&self, n: usize) -> usize {
         if n == 0 {
             return 1;
         }
-        self.size.min((n / MIN_PAR_CHUNK).max(1))
+        self.width().min((n / MIN_PAR_CHUNK).max(1))
     }
 
     /// Elementwise kernel driver: split `input`/`output` into aligned
@@ -186,7 +238,7 @@ impl ThreadPool {
         R: Send,
         F: Fn(usize) -> R + Sync,
     {
-        let threads = self.size.min(n);
+        let threads = self.width().min(n);
         if threads <= 1 {
             return (0..n).map(|i| f(i)).collect();
         }
@@ -229,7 +281,7 @@ impl ThreadPool {
         assert!(row_len > 0, "par_row_blocks needs row_len > 0");
         debug_assert_eq!(out.len() % row_len, 0);
         let rows = out.len() / row_len;
-        let blocks = self.size.min(rows).max(1);
+        let blocks = self.width().min(rows).max(1);
         if blocks <= 1 {
             f(0, out);
             return;
@@ -462,5 +514,42 @@ mod tests {
     fn host_threads_positive() {
         assert!(host_threads() >= 1);
         assert!(global().size() >= 1);
+    }
+
+    #[test]
+    fn width_cap_bounds_scoped_fanout() {
+        let pool = ThreadPool::new(8);
+        let input = vec![1.0f32; 8 * MIN_PAR_CHUNK];
+        let uncapped = pool.par_chunk_map(&input, |_, c| c.len());
+        assert!(uncapped.len() > 1, "uncapped pool should split the input");
+        let capped = with_width_cap(1, || pool.par_chunk_map(&input, |_, c| c.len()));
+        assert_eq!(capped.len(), 1, "cap 1 must run inline");
+        assert_eq!(current_width_cap(), usize::MAX, "cap restored after scope");
+        // caps nest via min: widening inside a narrow cap has no effect
+        let nested = with_width_cap(2, || with_width_cap(8, || pool.width()));
+        assert_eq!(nested, 2);
+        // a capped fan-out still covers the whole input
+        let total: usize =
+            with_width_cap(2, || pool.par_chunk_map(&input, |_, c| c.len()))
+                .iter()
+                .sum();
+        assert_eq!(total, input.len());
+    }
+
+    #[test]
+    fn width_cap_restored_on_panic() {
+        let caught =
+            std::panic::catch_unwind(|| with_width_cap(1, || panic!("bang")));
+        assert!(caught.is_err());
+        assert_eq!(current_width_cap(), usize::MAX);
+    }
+
+    #[test]
+    fn width_cap_is_thread_local() {
+        with_width_cap(1, || {
+            let other = std::thread::spawn(current_width_cap);
+            assert_eq!(other.join().unwrap(), usize::MAX);
+            assert_eq!(current_width_cap(), 1);
+        });
     }
 }
