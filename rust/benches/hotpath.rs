@@ -20,10 +20,15 @@ mod common;
 
 use std::path::PathBuf;
 
-use attention_round::backend::HostBackend;
+use attention_round::backend::{Backend, HostBackend};
 use attention_round::bench_harness::{artifacts_dir, write_json, Bencher, Stats};
 use attention_round::coordinator::capture::{capture, reference_outputs};
+use attention_round::coordinator::config::CalibConfig;
+use attention_round::coordinator::pipeline::{
+    quantize_and_eval, resolve_uniform_bits, QuantSpec,
+};
 use attention_round::data::{synth, Split};
+use attention_round::deploy::{bitpack, PackedModel};
 use attention_round::io::manifest::{LayerInfo, Manifest};
 use attention_round::serve::{self, ServeConfig};
 use attention_round::io::npy;
@@ -208,6 +213,50 @@ fn host_benches(b: &Bencher) -> Vec<Stats> {
         );
         all.push(lat);
     }
+
+    // deploy: bitstream pack/unpack of a resnet-layer-sized code vector
+    // at 4 bits (the parallel byte-aligned-block kernels)
+    let codes: Vec<u32> = {
+        let mut r = Rng::new(21);
+        (0..w.len()).map(|_| r.below(16) as u32).collect()
+    };
+    let mut packed_bytes = vec![0u8; bitpack::packed_len(codes.len(), 4)];
+    all.push(b.run("host/pack_147k_4b", || {
+        bitpack::pack_into_with(pool, &codes, 4, &mut packed_bytes).unwrap()
+    }));
+    let mut unpacked = vec![0u32; codes.len()];
+    all.push(b.run("host/unpack_147k_4b", || {
+        bitpack::unpack_into_with(pool, &packed_bytes, 4, &mut unpacked).unwrap()
+    }));
+
+    // serving straight off a packed artifact: same load-generator
+    // geometry as host/serve_e2e_256req_b16, but the worker dequantizes
+    // layer-by-layer from packed codes (deploy::dequant) — the pair
+    // quantifies the dequant-on-the-fly overhead.
+    let q_out = {
+        let model = be.load_model(&manifest, "synthnet").unwrap();
+        let spec = QuantSpec {
+            model: "synthnet".into(),
+            wbits: resolve_uniform_bits(&model, 4),
+            abits: None,
+        };
+        let cfg = CalibConfig {
+            method: rounding::Rounding::Nearest,
+            calib_samples: 64,
+            ..CalibConfig::quick()
+        };
+        let calib = synth::split(64, synth::CALIB_SEED);
+        let eval = synth::split(64, synth::EVAL_SEED);
+        quantize_and_eval(&be, &manifest, &spec, &cfg, &calib, &eval).unwrap()
+    };
+    let art = PackedModel::from_outcome(&q_out, None).unwrap();
+    all.push(b.run("host/serve_from_artifact_256req_b16", || {
+        let r = serve::run_artifact_load_generator(
+            &be, &manifest, &art, &serve_cfg, 256, 4,
+        )
+        .unwrap();
+        assert_eq!(r.completed, 256);
+    }));
 
     all
 }

@@ -131,8 +131,12 @@ fn avg_pool(x: &Tensor) -> Result<Tensor> {
 
 /// Per-tensor affine fake-quant (in place) on the activation grid the
 /// observers picked: x' = clip(⌊(x − z)/s⌉, 0, 2^b − 1)·s + z.
-fn fake_quant_act(xs: &mut [f32], p: &ActQuantParams, bits: u8) {
-    let levels = ((1u32 << bits) - 1) as f32;
+/// `pub(crate)`: the packed-artifact forward (`deploy::dequant`) applies
+/// the same transform so its actq path matches `run_graph` bit-for-bit.
+pub(crate) fn fake_quant_act(xs: &mut [f32], p: &ActQuantParams, bits: u8) {
+    // u64 shift: callers validate bits <= 16, but a u8 up to 63 must
+    // degrade to a huge grid, not a shift-overflow panic
+    let levels = ((1u64 << bits.min(63)) - 1) as f32;
     let s = p.scale.max(1e-12);
     for v in xs.iter_mut() {
         let q = round_half_even((*v - p.zero) / s).clamp(0.0, levels);
@@ -166,32 +170,36 @@ fn mat_transposed_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
 }
 
 /// Everything one layer application produces under the host execution
-/// convention. Eval (`run_graph`), the QAT forward, and (through
-/// `run_graph`) the serve worker all consume the same pass, so the
-/// convention — pool 4-D input for linear layers, matmul, bias add in
-/// f64, relu/identity — has exactly one home.
-struct LayerPass {
+/// convention. Eval (`run_graph`), the QAT forward, the packed-artifact
+/// forward (`deploy::dequant`), and (through `run_graph`) the serve
+/// worker all consume the same pass, so the convention — pool 4-D input
+/// for linear layers, matmul, bias add in f64, relu/identity — has
+/// exactly one home.
+pub(crate) struct LayerPass {
     /// Matmul input (post pool / input transform), row-major rows × n.
-    a: Vec<f32>,
+    pub(crate) a: Vec<f32>,
     /// Shape of the matmul-input view (NHWC for conv, [rows, n] linear).
-    in_shape: Vec<usize>,
-    rows: usize,
-    n: usize,
-    m: usize,
+    pub(crate) in_shape: Vec<usize>,
+    pub(crate) rows: usize,
+    pub(crate) n: usize,
+    pub(crate) m: usize,
     /// Some((batch, hw)) when the layer pooled its 4-D input.
-    pooled: Option<(usize, usize)>,
+    pub(crate) pooled: Option<(usize, usize)>,
     /// Pre-activation with bias, rows × m (f64 — the QAT backward masks
     /// ReLU against it).
-    z: Vec<f64>,
+    pub(crate) z: Vec<f64>,
     /// Activated output; only built when `want_out` was set (the
     /// bias-free reference path reads `z` instead).
-    out: Option<Tensor>,
+    pub(crate) out: Option<Tensor>,
 }
 
 /// Apply one layer: validate the kind, pool 4-D input for linear layers,
 /// run the caller's input transform (activation fake-quant) in place,
 /// matmul `a @ w`, add `bias` (f64 accumulate), and activate.
-fn layer_pass(
+/// `pub(crate)`: also the per-layer forward behind the dequant-on-the-fly
+/// packed-artifact path (`deploy::dequant`), which feeds it weight
+/// slices from a reusable scratch buffer instead of whole tensors.
+pub(crate) fn layer_pass(
     pool: &ThreadPool,
     layer: &LayerInfo,
     w_data: &[f32],
@@ -835,6 +843,20 @@ impl Backend for HostBackend {
         // Host tensors are already resident; the plain prepared handle
         // IS the serving handle (Send + Sync, zero per-call staging).
         self.prepare(model, weights)
+    }
+
+    fn prepare_artifact<'a>(
+        &'a self,
+        model: &'a LoadedModel,
+        artifact: &'a crate::deploy::artifact::PackedModel,
+        _staged: &'a mut Vec<Tensor>,
+    ) -> Result<Box<dyn PreparedModel + 'a>> {
+        // Streaming override: codes stay packed, weights exist in f32
+        // one layer at a time (reusable scratch feeding layer_pass) —
+        // no second full-f32 copy of the model.
+        Ok(Box::new(crate::deploy::dequant::PackedHostForward::new(
+            model, artifact,
+        )?))
     }
 
     fn prepare_layer<'a>(

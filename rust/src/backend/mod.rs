@@ -198,6 +198,28 @@ pub trait Backend: Send + Sync {
         weights: &'a [Tensor],
     ) -> Result<Box<dyn PreparedModel + 'a>>;
 
+    /// Stage a **packed quantized artifact** (`deploy::artifact`) for
+    /// serving. The default implementation dequantizes every layer into
+    /// `staged` — a caller-owned buffer, so the tensors outlive the
+    /// returned handle — and stages them via
+    /// [`Backend::prepare_serving`]; that is the right shape for PJRT,
+    /// which must upload resident f32 device buffers anyway. The host
+    /// backend overrides this with a streaming dequant-on-the-fly
+    /// handle (`deploy::dequant::PackedHostForward`) that keeps the
+    /// codes packed and never materializes a second full-f32 copy of
+    /// the model.
+    fn prepare_artifact<'a>(
+        &'a self,
+        model: &'a LoadedModel,
+        artifact: &'a crate::deploy::artifact::PackedModel,
+        staged: &'a mut Vec<Tensor>,
+    ) -> Result<Box<dyn PreparedModel + 'a>> {
+        artifact.check_matches(model)?;
+        *staged = artifact.dequantize_all()?;
+        let staged: &'a [Tensor] = staged;
+        self.prepare_serving(model, staged)
+    }
+
     /// Stage one layer's forward map for reference-output batching.
     fn prepare_layer<'a>(
         &'a self,

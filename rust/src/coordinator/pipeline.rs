@@ -85,6 +85,10 @@ pub struct Outcome {
     pub per_layer: Vec<LayerOutcome>,
     pub qweights: Vec<Tensor>,
     pub act_params: Option<Vec<ActQuantParams>>,
+    /// Per-layer activation bit widths matching `act_params` (the
+    /// pinning rule applied to `spec.abits`) — recorded so a saved
+    /// artifact carries its full actq deployment config.
+    pub act_bits: Option<Vec<u8>>,
     pub wall_s: f64,
 }
 
@@ -254,6 +258,7 @@ pub fn quantize_and_eval(
         per_layer,
         qweights,
         act_params: spec.abits.map(|_| act_params),
+        act_bits,
         wall_s: t0.elapsed().as_secs_f64(),
     })
 }

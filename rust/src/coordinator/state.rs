@@ -1,21 +1,25 @@
 //! Quantized-model state store: persist a calibration outcome to disk and
 //! reload it for serving/evaluation without re-running calibration.
 //!
-//! Format: a directory with `qmodel.json` (metadata: model, per-layer
-//! bits/scales/method, activation params, accuracy) plus one `.npy` per
-//! quantized weight. Everything round-trips through the in-repo JSON and
-//! npy codecs, so a saved model is loadable by any future build.
+//! Since the deploy subsystem landed this is a thin veneer over
+//! [`crate::deploy::artifact`]: [`save`] emits the **v2 packed** format
+//! (integer codes bit-packed at each layer's allocated width — a real
+//! storage win instead of the v1 full-f32 npy-per-layer layout), and
+//! [`load`] reads both v2 and legacy v1 directories, returning the
+//! dequantized [`QuantizedModel`] view. Loading validates arity
+//! (layers vs weight files vs activation params) and rejects
+//! non-positive/non-finite scales with a typed parse error instead of
+//! silently producing a model that NaNs at forward time.
 
 use std::path::{Path, PathBuf};
 
 use crate::coordinator::pipeline::Outcome;
-use crate::io::npy;
+use crate::deploy::artifact::PackedModel;
 use crate::quant::observer::ActQuantParams;
 use crate::tensor::Tensor;
-use crate::util::error::{Error, Result};
-use crate::util::json::{self, Json};
+use crate::util::error::Result;
 
-/// A reloadable quantized model.
+/// A reloadable quantized model (dequantized view of an artifact).
 #[derive(Debug)]
 pub struct QuantizedModel {
     pub model: String,
@@ -26,101 +30,30 @@ pub struct QuantizedModel {
     pub scales: Vec<f32>,
     pub qweights: Vec<Tensor>,
     pub act_params: Option<Vec<ActQuantParams>>,
+    /// Per-layer activation widths (v2 artifacts; `None` for v1 dirs,
+    /// which never recorded them).
+    pub act_bits: Option<Vec<u8>>,
 }
 
-/// Persist a pipeline outcome under `dir`.
+/// Persist a pipeline outcome under `dir` as a v2 packed artifact.
 pub fn save(outcome: &Outcome, dir: &Path) -> Result<()> {
-    std::fs::create_dir_all(dir)?;
-    let mut wfiles = Vec::new();
-    for (i, (q, l)) in outcome
-        .qweights
-        .iter()
-        .zip(&outcome.per_layer)
-        .enumerate()
-    {
-        let fname = format!("{i:02}_{}.q.npy", l.name.replace('.', "_"));
-        npy::write_f32(&dir.join(&fname), q)?;
-        wfiles.push(Json::str(fname));
-    }
-    let layers: Vec<Json> = outcome
-        .per_layer
-        .iter()
-        .map(|l| {
-            Json::obj(vec![
-                ("name", Json::str(l.name.clone())),
-                ("bits", Json::num(l.bits as f64)),
-                ("scale", Json::num(l.scale as f64)),
-            ])
-        })
-        .collect();
-    let mut fields = vec![
-        ("format_version", Json::num(1.0)),
-        ("model", Json::str(outcome.model.clone())),
-        ("method", Json::str(outcome.method.name())),
-        ("acc", Json::num(outcome.acc)),
-        ("fp_acc", Json::num(outcome.fp_acc)),
-        ("layers", Json::arr(layers)),
-        ("weight_files", Json::arr(wfiles)),
-    ];
-    if let Some(ap) = &outcome.act_params {
-        let aps: Vec<Json> = ap
-            .iter()
-            .map(|p| {
-                Json::obj(vec![
-                    ("scale", Json::num(p.scale as f64)),
-                    ("zero", Json::num(p.zero as f64)),
-                ])
-            })
-            .collect();
-        fields.push(("act_params", Json::arr(aps)));
-    }
-    std::fs::write(
-        dir.join("qmodel.json"),
-        Json::obj(fields).to_string_pretty(),
-    )?;
-    Ok(())
+    PackedModel::from_outcome(outcome, None)?.save(dir)
 }
 
-/// Reload a saved quantized model.
+/// Reload a saved quantized model (v2 packed or legacy v1 f32 dirs).
 pub fn load(dir: &Path) -> Result<QuantizedModel> {
-    let j = json::parse_file(&dir.join("qmodel.json"))?;
-    let layers = j.get("layers")?.as_arr()?;
-    let wfiles = j.get("weight_files")?.str_vec()?;
-    if layers.len() != wfiles.len() {
-        return Err(Error::parse("qmodel.json: layers/weights arity mismatch"));
-    }
-    let mut bits = Vec::new();
-    let mut scales = Vec::new();
-    for l in layers {
-        bits.push(l.get("bits")?.as_usize()? as u8);
-        scales.push(l.get("scale")?.as_f64()? as f32);
-    }
-    let qweights: Vec<Tensor> = wfiles
-        .iter()
-        .map(|f| npy::read_f32(&dir.join(f)))
-        .collect::<Result<_>>()?;
-    let act_params = match j.opt("act_params") {
-        Some(ap) => {
-            let mut out = Vec::new();
-            for p in ap.as_arr()? {
-                out.push(ActQuantParams {
-                    scale: p.get("scale")?.as_f64()? as f32,
-                    zero: p.get("zero")?.as_f64()? as f32,
-                });
-            }
-            Some(out)
-        }
-        None => None,
-    };
+    let art = PackedModel::load(dir)?;
+    let qweights = art.dequantize_all()?;
     Ok(QuantizedModel {
-        model: j.get("model")?.as_str()?.to_string(),
-        method: j.get("method")?.as_str()?.to_string(),
-        acc: j.get("acc")?.as_f64()?,
-        fp_acc: j.get("fp_acc")?.as_f64()?,
-        bits,
-        scales,
+        model: art.model.clone(),
+        method: art.method.clone(),
+        acc: art.acc,
+        fp_acc: art.fp_acc,
+        bits: art.layers.iter().map(|l| l.bits).collect(),
+        scales: art.layers.iter().map(|l| l.scale).collect(),
         qweights,
-        act_params,
+        act_params: art.act_params.clone(),
+        act_bits: art.act_bits.clone(),
     })
 }
 
@@ -134,6 +67,12 @@ mod tests {
     use super::*;
     use crate::coordinator::pipeline::LayerOutcome;
     use crate::quant::rounding::Rounding;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ar_state_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
 
     fn fake_outcome(with_acts: bool) -> Outcome {
         Outcome {
@@ -167,13 +106,14 @@ mod tests {
                     ActQuantParams { scale: 0.2, zero: 0.0 },
                 ]
             }),
+            act_bits: with_acts.then(|| vec![8, 4]),
             wall_s: 1.0,
         }
     }
 
     #[test]
     fn save_load_roundtrip() {
-        let dir = std::env::temp_dir().join(format!("ar_state_{}", std::process::id()));
+        let dir = tmp("rt");
         let out = fake_outcome(true);
         save(&out, &dir).unwrap();
         let back = load(&dir).unwrap();
@@ -185,21 +125,107 @@ mod tests {
         let ap = back.act_params.unwrap();
         assert_eq!(ap[0].scale, 0.1);
         assert_eq!(ap[0].zero, -1.0);
+        assert_eq!(back.act_bits, Some(vec![8, 4]));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_emits_format_version_2() {
+        let dir = tmp("v2");
+        save(&fake_outcome(false), &dir).unwrap();
+        let hdr = std::fs::read_to_string(dir.join("qmodel.json")).unwrap();
+        assert!(hdr.contains("\"format_version\": 2"), "{hdr}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
     fn save_load_without_act_params() {
-        let dir =
-            std::env::temp_dir().join(format!("ar_state_na_{}", std::process::id()));
+        let dir = tmp("na");
         save(&fake_outcome(false), &dir).unwrap();
         let back = load(&dir).unwrap();
         assert!(back.act_params.is_none());
+        assert!(back.act_bits.is_none());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
     fn load_missing_dir_errors() {
         assert!(load(Path::new("/nonexistent/qmodel")).is_err());
+    }
+
+    /// A legacy v1 directory (full-f32 npy per layer, no act_bits) must
+    /// still load — the migration path for pre-deploy saves.
+    #[test]
+    fn loads_legacy_v1_dirs() {
+        let dir = tmp("v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let w0 = Tensor::new(vec![2, 2], vec![0.5, -0.25, 0.0, 1.0]).unwrap();
+        crate::io::npy::write_f32(&dir.join("00_stem.q.npy"), &w0).unwrap();
+        std::fs::write(
+            dir.join("qmodel.json"),
+            r#"{
+              "format_version": 1,
+              "model": "legacy", "method": "nearest",
+              "acc": 0.4, "fp_acc": 0.8,
+              "layers": [{"name": "stem", "bits": 4, "scale": 0.25}],
+              "weight_files": ["00_stem.q.npy"],
+              "act_params": [{"scale": 0.1, "zero": 0.0}]
+            }"#,
+        )
+        .unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.model, "legacy");
+        assert_eq!(back.bits, vec![4]);
+        assert_eq!(back.qweights[0], w0);
+        assert!(back.act_params.is_some());
+        assert!(back.act_bits.is_none(), "v1 never recorded act widths");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The load-validation bugfix: arity mismatches and non-positive
+    /// scales are typed parse errors, not a model that NaNs at forward.
+    #[test]
+    fn load_rejects_arity_and_scale_garbage() {
+        let dir = tmp("bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let w0 = Tensor::new(vec![1], vec![0.5]).unwrap();
+        crate::io::npy::write_f32(&dir.join("w.npy"), &w0).unwrap();
+        // layers/weight_files arity mismatch
+        std::fs::write(
+            dir.join("qmodel.json"),
+            r#"{"format_version": 1, "model": "m", "method": "nearest",
+                "acc": 0, "fp_acc": 0,
+                "layers": [{"name": "a", "bits": 4, "scale": 0.1},
+                           {"name": "b", "bits": 4, "scale": 0.1}],
+                "weight_files": ["w.npy"]}"#,
+        )
+        .unwrap();
+        assert!(load(&dir).is_err());
+        // act_params arity mismatch
+        std::fs::write(
+            dir.join("qmodel.json"),
+            r#"{"format_version": 1, "model": "m", "method": "nearest",
+                "acc": 0, "fp_acc": 0,
+                "layers": [{"name": "a", "bits": 4, "scale": 0.1}],
+                "weight_files": ["w.npy"],
+                "act_params": [{"scale": 0.1, "zero": 0}, {"scale": 0.1, "zero": 0}]}"#,
+        )
+        .unwrap();
+        assert!(load(&dir).is_err());
+        // scale <= 0
+        std::fs::write(
+            dir.join("qmodel.json"),
+            r#"{"format_version": 1, "model": "m", "method": "nearest",
+                "acc": 0, "fp_acc": 0,
+                "layers": [{"name": "a", "bits": 4, "scale": 0}],
+                "weight_files": ["w.npy"]}"#,
+        )
+        .unwrap();
+        let e = load(&dir).unwrap_err();
+        assert!(
+            matches!(e, crate::util::error::Error::Parse(_)),
+            "want a typed parse error, got {e}"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,838 @@
+//! Versioned quantized-model artifact format (single directory).
+//!
+//! ## v2 (written by this module)
+//!
+//! ```text
+//! <dir>/qmodel.json      header: format_version 2, model/method/acc,
+//!                        per-layer {name, bits, scale, shape, encoding,
+//!                        file, packed_bytes, checksum, coding_length},
+//!                        optional act_params + act_bits (the activation
+//!                        deployment config), method provenance
+//! <dir>/NN_<layer>.qbin  LSB-first packed integer codes (deploy::bitpack)
+//! <dir>/NN_<layer>.q.npy f32 fallback for layers that are not exactly
+//!                        on a 2–8-bit grid (legacy tensors, wide grids)
+//! ```
+//!
+//! A layer's codes are grid offsets `q − lo` with `lo = −2^{b−1}`
+//! (signed symmetric grid, like [`crate::quant::QGrid::signed`]);
+//! dequantization computes `s · (code + lo)` — the **same single f32
+//! multiply** every rounding kernel finalizes with, so a dequantized
+//! layer is bit-identical to the tensor that was packed. Packing
+//! verifies this round-trip element-by-element and falls back to the
+//! f32 encoding for any layer where it does not hold, so `save ∘ load`
+//! is lossless for every input, packed or not.
+//!
+//! ## v1 (read-compatible)
+//!
+//! The original `coordinator::state` format: the same header keys at
+//! `format_version: 1` with every weight stored as a full-f32 `.q.npy`
+//! — zero storage win, no `act_bits`. [`PackedModel::load`] reads both;
+//! `coordinator::state::save` now always emits v2.
+//!
+//! ## Validation
+//!
+//! The loader rejects: arity mismatches (layers vs weight files vs
+//! activation params), non-finite or non-positive scales, packed
+//! streams whose byte length or FNV-1a checksum disagree with the
+//! header, nonzero pad bits, and codes outside the declared width
+//! (impossible by construction for intact streams, guaranteed by the
+//! width mask on unpack) — all as typed [`Error::Parse`] values instead
+//! of a model that NaNs at forward time.
+
+use std::path::Path;
+
+use crate::coordinator::pipeline::Outcome;
+use crate::deploy::bitpack;
+use crate::io::npy;
+use crate::quant::observer::ActQuantParams;
+use crate::quant::round_half_even;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Json};
+use crate::util::threadpool;
+
+/// Current written format version.
+pub const FORMAT_VERSION: u32 = 2;
+
+/// Integer grid floor for a signed symmetric `bits`-wide grid.
+fn grid_lo(bits: u8) -> i64 {
+    -(1i64 << (bits - 1))
+}
+
+/// FNV-1a 64-bit — the stream checksum (offline substrate; no crc crate).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// How one layer's weights are stored on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// `deploy::bitpack` integer codes at the layer's width.
+    Packed,
+    /// Full-f32 npy (v1 dirs; v2 fallback for off-grid tensors).
+    F32,
+}
+
+impl Encoding {
+    fn name(self) -> &'static str {
+        match self {
+            Encoding::Packed => "qpack",
+            Encoding::F32 => "f32",
+        }
+    }
+}
+
+/// One layer's metadata in the artifact header.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub name: String,
+    pub bits: u8,
+    pub scale: f32,
+    pub shape: Vec<usize>,
+    pub encoding: Encoding,
+    pub file: String,
+    /// Coding-length provenance from `mixed::allocate` (Eq. 12), when
+    /// the pack ran under the paper's mixed-precision allocation.
+    pub coding_length: Option<f64>,
+}
+
+impl PackedLayer {
+    pub fn params(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// On-disk payload bytes for this layer.
+    pub fn payload_bytes(&self) -> usize {
+        match self.encoding {
+            Encoding::Packed => bitpack::packed_len(self.params(), self.bits),
+            Encoding::F32 => self.params() * 4,
+        }
+    }
+}
+
+/// In-memory layer payload (codes stay packed until dequantization).
+#[derive(Debug, Clone)]
+enum Payload {
+    Packed(Vec<u8>),
+    F32(Tensor),
+}
+
+/// A loaded (or about-to-be-saved) quantized model artifact.
+#[derive(Debug)]
+pub struct PackedModel {
+    pub format_version: u32,
+    pub model: String,
+    pub method: String,
+    pub acc: f64,
+    pub fp_acc: f64,
+    pub layers: Vec<PackedLayer>,
+    /// Per-layer activation quant params (the actq deployment config).
+    pub act_params: Option<Vec<ActQuantParams>>,
+    /// Per-layer activation bit widths (v2 only; v1 dirs did not record
+    /// them — consumers fall back to the weight widths).
+    pub act_bits: Option<Vec<u8>>,
+    payloads: Vec<Payload>,
+}
+
+impl PackedModel {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Encode a pipeline outcome. Layers whose quantized weights sit
+    /// exactly on their declared 2–8-bit grid are bit-packed; anything
+    /// else (wide grids, off-grid legacy tensors) keeps the f32
+    /// encoding so `save ∘ load` is lossless for every input.
+    /// `coding_lengths` is the per-layer provenance from
+    /// `mixed::allocate` when the pack ran under Algorithm-1 bits.
+    pub fn from_outcome(
+        outcome: &Outcome,
+        coding_lengths: Option<&[f64]>,
+    ) -> Result<PackedModel> {
+        if outcome.qweights.len() != outcome.per_layer.len() {
+            return Err(Error::shape(format!(
+                "outcome has {} weight tensors for {} layer records",
+                outcome.qweights.len(),
+                outcome.per_layer.len()
+            )));
+        }
+        if let Some(cl) = coding_lengths {
+            if cl.len() != outcome.per_layer.len() {
+                return Err(Error::shape(format!(
+                    "{} coding lengths for {} layers",
+                    cl.len(),
+                    outcome.per_layer.len()
+                )));
+            }
+        }
+        let pool = threadpool::global();
+        let mut layers = Vec::with_capacity(outcome.per_layer.len());
+        let mut payloads = Vec::with_capacity(outcome.per_layer.len());
+        for (li, (l, qw)) in outcome
+            .per_layer
+            .iter()
+            .zip(&outcome.qweights)
+            .enumerate()
+        {
+            let fname_base = format!("{li:02}_{}", l.name.replace('.', "_"));
+            let (encoding, file, payload) = match encode_codes(qw.data(), l.scale, l.bits) {
+                Some(codes) => {
+                    let mut packed =
+                        vec![0u8; bitpack::packed_len(codes.len(), l.bits)];
+                    bitpack::pack_into_with(pool, &codes, l.bits, &mut packed)?;
+                    (
+                        Encoding::Packed,
+                        format!("{fname_base}.qbin"),
+                        Payload::Packed(packed),
+                    )
+                }
+                None => {
+                    log::warn!(
+                        "{}: not exactly on a {}-bit grid at scale {} — storing f32",
+                        l.name,
+                        l.bits,
+                        l.scale
+                    );
+                    (
+                        Encoding::F32,
+                        format!("{fname_base}.q.npy"),
+                        Payload::F32(qw.clone()),
+                    )
+                }
+            };
+            layers.push(PackedLayer {
+                name: l.name.clone(),
+                bits: l.bits,
+                scale: l.scale,
+                shape: qw.shape().to_vec(),
+                encoding,
+                file,
+                coding_length: coding_lengths.map(|cl| cl[li]),
+            });
+            payloads.push(payload);
+        }
+        Ok(PackedModel {
+            format_version: FORMAT_VERSION,
+            model: outcome.model.clone(),
+            method: outcome.method.name().to_string(),
+            acc: outcome.acc,
+            fp_acc: outcome.fp_acc,
+            layers,
+            act_params: outcome.act_params.clone(),
+            act_bits: outcome.act_bits.clone(),
+            payloads,
+        })
+    }
+
+    /// Dequantize layer `li` into `out` (resized to the layer's element
+    /// count), using `codes` as unpack scratch. Bit-identical to the
+    /// tensor that was packed: the same `s · q` f32 multiply every
+    /// rounding kernel finalizes with.
+    pub fn dequantize_layer_into(
+        &self,
+        li: usize,
+        codes: &mut Vec<u32>,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let l = self
+            .layers
+            .get(li)
+            .ok_or_else(|| Error::shape(format!("layer {li} out of range")))?;
+        let n = l.params();
+        match &self.payloads[li] {
+            Payload::Packed(bytes) => {
+                codes.resize(n, 0);
+                bitpack::unpack_into(bytes, l.bits, codes)?;
+                out.resize(n, 0.0);
+                let (s, lo) = (l.scale, grid_lo(l.bits));
+                for (o, &c) in out.iter_mut().zip(codes.iter()) {
+                    *o = s * ((c as i64 + lo) as f32);
+                }
+            }
+            Payload::F32(t) => {
+                out.clear();
+                out.extend_from_slice(t.data());
+            }
+        }
+        Ok(())
+    }
+
+    /// Dequantize one layer into a fresh tensor.
+    pub fn dequantize(&self, li: usize) -> Result<Tensor> {
+        let mut codes = Vec::new();
+        let mut data = Vec::new();
+        self.dequantize_layer_into(li, &mut codes, &mut data)?;
+        Tensor::new(self.layers[li].shape.clone(), data)
+    }
+
+    /// Dequantize every layer (the staging path for backends that need
+    /// resident f32 weights, e.g. PJRT device upload; the host serving
+    /// path streams per layer instead — see `deploy::dequant`).
+    pub fn dequantize_all(&self) -> Result<Vec<Tensor>> {
+        (0..self.num_layers()).map(|li| self.dequantize(li)).collect()
+    }
+
+    /// Weight-payload f32 baseline in bytes (what v1 stored).
+    pub fn f32_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.params() as u64 * 4).sum()
+    }
+
+    /// On-disk weight-payload bytes under this artifact's encodings.
+    pub fn payload_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.payload_bytes() as u64).sum()
+    }
+
+    /// The artifact's weights must match the execution model it will be
+    /// served through: same layer count, same per-layer weight shapes.
+    pub fn check_matches(&self, model: &crate::coordinator::model::LoadedModel) -> Result<()> {
+        if self.num_layers() != model.num_layers() {
+            return Err(Error::shape(format!(
+                "artifact has {} layers, model {} has {}",
+                self.num_layers(),
+                model.info.name,
+                model.num_layers()
+            )));
+        }
+        for (l, w) in self.layers.iter().zip(&model.weights) {
+            if l.shape != w.shape() {
+                return Err(Error::shape(format!(
+                    "artifact layer {} shape {:?} vs model weight {:?}",
+                    l.name,
+                    l.shape,
+                    w.shape()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-encode any f32-payload layers whose tensors sit exactly on
+    /// their declared grid — the v1→v2 migration path (`load` a legacy
+    /// dir, `repack`, `save` to a new dir). Returns how many layers
+    /// switched to the packed encoding; off-grid layers stay f32.
+    pub fn repack(&mut self) -> Result<usize> {
+        let pool = threadpool::global();
+        let mut packed_count = 0;
+        for (li, (l, p)) in self.layers.iter_mut().zip(&mut self.payloads).enumerate() {
+            let t = match p {
+                Payload::F32(t) => t,
+                Payload::Packed(_) => continue,
+            };
+            if let Some(codes) = encode_codes(t.data(), l.scale, l.bits) {
+                let mut bytes = vec![0u8; bitpack::packed_len(codes.len(), l.bits)];
+                bitpack::pack_into_with(pool, &codes, l.bits, &mut bytes)?;
+                *p = Payload::Packed(bytes);
+                l.encoding = Encoding::Packed;
+                l.file = format!("{li:02}_{}.qbin", l.name.replace('.', "_"));
+                packed_count += 1;
+            }
+        }
+        Ok(packed_count)
+    }
+
+    /// Write the artifact directory. Always emits the **v2 layout**
+    /// regardless of where the model was loaded from, so saving a
+    /// v1-loaded artifact migrates it forward. Target a fresh directory
+    /// — stale files from a previous format are not cleaned up.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut layer_json = Vec::with_capacity(self.layers.len());
+        for (l, p) in self.layers.iter().zip(&self.payloads) {
+            let mut fields = vec![
+                ("name", Json::str(l.name.clone())),
+                ("bits", Json::num(l.bits as f64)),
+                ("scale", Json::num(l.scale as f64)),
+                (
+                    "shape",
+                    Json::arr(l.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+                ("encoding", Json::str(l.encoding.name())),
+                ("file", Json::str(l.file.clone())),
+            ];
+            match p {
+                Payload::Packed(bytes) => {
+                    fields.push(("packed_bytes", Json::num(bytes.len() as f64)));
+                    fields.push((
+                        "checksum",
+                        Json::str(format!("{:016x}", fnv1a64(bytes))),
+                    ));
+                    std::fs::write(dir.join(&l.file), bytes)?;
+                }
+                Payload::F32(t) => {
+                    npy::write_f32(&dir.join(&l.file), t)?;
+                }
+            }
+            if let Some(cl) = l.coding_length {
+                fields.push(("coding_length", Json::num(cl)));
+            }
+            layer_json.push(Json::obj(fields));
+        }
+        let mut fields = vec![
+            ("format_version", Json::num(FORMAT_VERSION as f64)),
+            ("model", Json::str(self.model.clone())),
+            ("method", Json::str(self.method.clone())),
+            ("acc", Json::num(self.acc)),
+            ("fp_acc", Json::num(self.fp_acc)),
+            ("layers", Json::arr(layer_json)),
+        ];
+        if let Some(ap) = &self.act_params {
+            let aps = ap
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("scale", Json::num(p.scale as f64)),
+                        ("zero", Json::num(p.zero as f64)),
+                    ])
+                })
+                .collect();
+            fields.push(("act_params", Json::arr(aps)));
+        }
+        if let Some(ab) = &self.act_bits {
+            fields.push((
+                "act_bits",
+                Json::arr(ab.iter().map(|&b| Json::num(b as f64)).collect()),
+            ));
+        }
+        std::fs::write(
+            dir.join("qmodel.json"),
+            Json::obj(fields).to_string_pretty(),
+        )?;
+        Ok(())
+    }
+
+    /// Load an artifact directory — v2 packed or a legacy v1 f32 dir.
+    pub fn load(dir: &Path) -> Result<PackedModel> {
+        let j = json::parse_file(&dir.join("qmodel.json"))?;
+        let version = j
+            .opt("format_version")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(1);
+        match version {
+            1 => load_v1(&j, dir),
+            2 => load_v2(&j, dir),
+            other => Err(Error::parse(format!(
+                "qmodel.json: unsupported format_version {other} (this build reads 1..=2)"
+            ))),
+        }
+    }
+}
+
+/// Does `dir` look like a saved quantized-model artifact?
+pub fn is_artifact_dir(dir: &Path) -> bool {
+    dir.join("qmodel.json").is_file()
+}
+
+/// Recover integer codes from a quantized tensor, verifying the
+/// round-trip is exact: `None` means the tensor is not exactly
+/// `s · q` for in-range grid integers at this width (caller falls back
+/// to the f32 encoding).
+fn encode_codes(qw: &[f32], scale: f32, bits: u8) -> Option<Vec<u32>> {
+    if !(bitpack::MIN_BITS..=bitpack::MAX_BITS).contains(&bits) {
+        return None;
+    }
+    if !(scale.is_finite() && scale > 0.0) {
+        return None;
+    }
+    let lo = grid_lo(bits);
+    let hi = -lo - 1;
+    let mut codes = Vec::with_capacity(qw.len());
+    for &v in qw {
+        let q = round_half_even(v / scale);
+        if !q.is_finite() {
+            return None;
+        }
+        let qi = q as i64;
+        if qi < lo || qi > hi {
+            return None;
+        }
+        // the exactness gate: dequant must reproduce the input
+        // bit-for-bit (same `s · q` multiply as the rounding kernels)
+        if scale * (qi as f32) != v {
+            return None;
+        }
+        codes.push((qi - lo) as u32);
+    }
+    Some(codes)
+}
+
+fn parse_scale(v: &Json, name: &str) -> Result<f32> {
+    let s = v.as_f64()? as f32;
+    if !(s.is_finite() && s > 0.0) {
+        return Err(Error::parse(format!(
+            "qmodel.json: layer {name}: scale {s} must be finite and positive"
+        )));
+    }
+    Ok(s)
+}
+
+fn parse_bits(v: &Json, name: &str) -> Result<u8> {
+    let b = v.as_usize()?;
+    if !(1..=32).contains(&b) {
+        return Err(Error::parse(format!(
+            "qmodel.json: layer {name}: bits {b} out of range 1..=32"
+        )));
+    }
+    Ok(b as u8)
+}
+
+/// Activation widths feed `(1 << bits)` grids in `fake_quant_act` /
+/// `forward_actq`, so the loader bounds them to the quantizer's own
+/// 1..=16 range — tighter than weight bits, which may legitimately be
+/// declared wider on f32-fallback layers.
+fn parse_act_width(v: &Json) -> Result<u8> {
+    let b = v.as_usize()?;
+    if !(1..=16).contains(&b) {
+        return Err(Error::parse(format!(
+            "qmodel.json: act width {b} out of range 1..=16"
+        )));
+    }
+    Ok(b as u8)
+}
+
+fn parse_act_config(j: &Json, k: usize) -> Result<(Option<Vec<ActQuantParams>>, Option<Vec<u8>>)> {
+    let act_params = match j.opt("act_params") {
+        Some(ap) => {
+            let arr = ap.as_arr()?;
+            if arr.len() != k {
+                return Err(Error::parse(format!(
+                    "qmodel.json: {} act_params for {k} layers",
+                    arr.len()
+                )));
+            }
+            let mut out = Vec::with_capacity(arr.len());
+            for p in arr {
+                let scale = p.get("scale")?.as_f64()? as f32;
+                if !(scale.is_finite() && scale > 0.0) {
+                    return Err(Error::parse(format!(
+                        "qmodel.json: act scale {scale} must be finite and positive"
+                    )));
+                }
+                let zero = p.get("zero")?.as_f64()? as f32;
+                if !zero.is_finite() {
+                    return Err(Error::parse("qmodel.json: act zero must be finite"));
+                }
+                out.push(ActQuantParams { scale, zero });
+            }
+            Some(out)
+        }
+        None => None,
+    };
+    let act_bits = match j.opt("act_bits") {
+        Some(ab) => {
+            let arr = ab.as_arr()?;
+            if arr.len() != k {
+                return Err(Error::parse(format!(
+                    "qmodel.json: {} act_bits for {k} layers",
+                    arr.len()
+                )));
+            }
+            Some(
+                arr.iter()
+                    .map(parse_act_width)
+                    .collect::<Result<Vec<u8>>>()?,
+            )
+        }
+        None => None,
+    };
+    if act_bits.is_some() && act_params.is_none() {
+        return Err(Error::parse("qmodel.json: act_bits without act_params"));
+    }
+    Ok((act_params, act_bits))
+}
+
+fn load_v1(j: &Json, dir: &Path) -> Result<PackedModel> {
+    let layers_j = j.get("layers")?.as_arr()?;
+    let wfiles = j.get("weight_files")?.str_vec()?;
+    if layers_j.len() != wfiles.len() {
+        return Err(Error::parse(format!(
+            "qmodel.json: {} layer records for {} weight files",
+            layers_j.len(),
+            wfiles.len()
+        )));
+    }
+    let mut layers = Vec::with_capacity(layers_j.len());
+    let mut payloads = Vec::with_capacity(layers_j.len());
+    for (l, f) in layers_j.iter().zip(&wfiles) {
+        let name = l.get("name")?.as_str()?.to_string();
+        let bits = parse_bits(l.get("bits")?, &name)?;
+        let scale = parse_scale(l.get("scale")?, &name)?;
+        let t = npy::read_f32(&dir.join(f))?;
+        layers.push(PackedLayer {
+            name,
+            bits,
+            scale,
+            shape: t.shape().to_vec(),
+            encoding: Encoding::F32,
+            file: f.clone(),
+            coding_length: None,
+        });
+        payloads.push(Payload::F32(t));
+    }
+    let (act_params, act_bits) = parse_act_config(j, layers.len())?;
+    Ok(PackedModel {
+        format_version: 1,
+        model: j.get("model")?.as_str()?.to_string(),
+        method: j.get("method")?.as_str()?.to_string(),
+        acc: j.get("acc")?.as_f64()?,
+        fp_acc: j.get("fp_acc")?.as_f64()?,
+        layers,
+        act_params,
+        act_bits,
+        payloads,
+    })
+}
+
+fn load_v2(j: &Json, dir: &Path) -> Result<PackedModel> {
+    let layers_j = j.get("layers")?.as_arr()?;
+    let mut layers = Vec::with_capacity(layers_j.len());
+    let mut payloads = Vec::with_capacity(layers_j.len());
+    for l in layers_j {
+        let name = l.get("name")?.as_str()?.to_string();
+        let bits = parse_bits(l.get("bits")?, &name)?;
+        let scale = parse_scale(l.get("scale")?, &name)?;
+        let shape = l.get("shape")?.usize_vec()?;
+        let n: usize = shape.iter().product();
+        let file = l.get("file")?.as_str()?.to_string();
+        let encoding = l.get("encoding")?.as_str()?;
+        let (encoding, payload) = match encoding {
+            "qpack" => {
+                if !(bitpack::MIN_BITS..=bitpack::MAX_BITS).contains(&bits) {
+                    return Err(Error::parse(format!(
+                        "qmodel.json: layer {name}: packed width {bits} out of \
+                         range {}..={}",
+                        bitpack::MIN_BITS,
+                        bitpack::MAX_BITS
+                    )));
+                }
+                let declared = l.get("packed_bytes")?.as_usize()?;
+                let want = bitpack::packed_len(n, bits);
+                if declared != want {
+                    return Err(Error::parse(format!(
+                        "qmodel.json: layer {name}: packed_bytes {declared} but \
+                         {n} codes at {bits}b need {want}"
+                    )));
+                }
+                let bytes = std::fs::read(dir.join(&file)).map_err(|e| {
+                    Error::parse(format!("reading {}: {e}", dir.join(&file).display()))
+                })?;
+                if bytes.len() != want {
+                    return Err(Error::parse(format!(
+                        "{file}: {} bytes on disk, header says {want}",
+                        bytes.len()
+                    )));
+                }
+                let sum = format!("{:016x}", fnv1a64(&bytes));
+                let declared_sum = l.get("checksum")?.as_str()?;
+                if sum != declared_sum {
+                    return Err(Error::parse(format!(
+                        "{file}: checksum mismatch ({sum} vs header {declared_sum})"
+                    )));
+                }
+                bitpack::validate_padding(&bytes, n, bits)
+                    .map_err(|e| Error::parse(format!("{file}: {e}")))?;
+                (Encoding::Packed, Payload::Packed(bytes))
+            }
+            "f32" => {
+                let t = npy::read_f32(&dir.join(&file))?;
+                if t.shape() != shape.as_slice() {
+                    return Err(Error::parse(format!(
+                        "{file}: npy shape {:?} but header says {shape:?}",
+                        t.shape()
+                    )));
+                }
+                (Encoding::F32, Payload::F32(t))
+            }
+            other => {
+                return Err(Error::parse(format!(
+                    "qmodel.json: layer {name}: unknown encoding {other:?}"
+                )))
+            }
+        };
+        layers.push(PackedLayer {
+            name,
+            bits,
+            scale,
+            shape,
+            encoding,
+            file,
+            coding_length: l
+                .opt("coding_length")
+                .map(|v| v.as_f64())
+                .transpose()?,
+        });
+        payloads.push(payload);
+    }
+    let (act_params, act_bits) = parse_act_config(j, layers.len())?;
+    Ok(PackedModel {
+        format_version: 2,
+        model: j.get("model")?.as_str()?.to_string(),
+        method: j.get("method")?.as_str()?.to_string(),
+        acc: j.get("acc")?.as_f64()?,
+        fp_acc: j.get("fp_acc")?.as_f64()?,
+        layers,
+        act_params,
+        act_bits,
+        payloads,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::LayerOutcome;
+    use crate::quant::rounding::{nearest, Rounding};
+    use crate::quant::QGrid;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ar_artifact_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// An outcome whose qweights really sit on their grids (produced by
+    /// the nearest kernel, like the pipeline's static rounding path).
+    /// Scales are binary-exact so the header JSON prints them verbatim
+    /// (the corruption test rewrites the header by string match).
+    fn grid_outcome() -> Outcome {
+        let grids = [QGrid::signed(4, 0.25).unwrap(), QGrid::signed(3, 0.125).unwrap()];
+        let mut rng = Rng::new(42);
+        let mut w0 = vec![0.0f32; 24 * 8];
+        rng.fill_gaussian(&mut w0, 0.0, 0.5);
+        let mut w1 = vec![0.0f32; 13]; // ragged length: partial final byte
+        rng.fill_gaussian(&mut w1, 0.0, 0.25);
+        let q0 = nearest(&w0, &grids[0]);
+        let q1 = nearest(&w1, &grids[1]);
+        Outcome {
+            model: "m".into(),
+            method: Rounding::Nearest,
+            acc: 0.5,
+            fp_acc: 0.9,
+            per_layer: vec![
+                LayerOutcome {
+                    name: "stem".into(),
+                    bits: 4,
+                    scale: 0.25,
+                    first_loss: f32::NAN,
+                    last_loss: f32::NAN,
+                },
+                LayerOutcome {
+                    name: "head.fc".into(),
+                    bits: 3,
+                    scale: 0.125,
+                    first_loss: f32::NAN,
+                    last_loss: f32::NAN,
+                },
+            ],
+            qweights: vec![
+                Tensor::new(vec![24, 8], q0).unwrap(),
+                Tensor::new(vec![13], q1).unwrap(),
+            ],
+            act_params: Some(vec![
+                ActQuantParams { scale: 0.1, zero: -1.0 },
+                ActQuantParams { scale: 0.2, zero: 0.0 },
+            ]),
+            act_bits: Some(vec![8, 4]),
+            wall_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn packed_roundtrip_is_bit_identical_and_smaller() {
+        let out = grid_outcome();
+        let art = PackedModel::from_outcome(&out, Some(&[12.5, 3.25])).unwrap();
+        assert!(art
+            .layers
+            .iter()
+            .all(|l| l.encoding == Encoding::Packed));
+        let dir = tmpdir("roundtrip");
+        art.save(&dir).unwrap();
+        let back = PackedModel::load(&dir).unwrap();
+        assert_eq!(back.format_version, 2);
+        assert_eq!(back.model, "m");
+        assert_eq!(back.method, "nearest");
+        assert_eq!(back.layers[1].name, "head.fc");
+        assert_eq!(back.layers[0].coding_length, Some(12.5));
+        assert_eq!(back.act_bits.as_deref(), Some(&[8u8, 4][..]));
+        for li in 0..2 {
+            let deq = back.dequantize(li).unwrap();
+            assert_eq!(deq, out.qweights[li], "layer {li} must round-trip exactly");
+        }
+        // real storage win: 4b + 3b vs 32b
+        assert!(back.payload_bytes() * 4 < back.f32_bytes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn off_grid_layer_falls_back_to_f32_losslessly() {
+        let mut out = grid_outcome();
+        // clearly off-grid values
+        out.qweights[0] = Tensor::new(vec![24, 8], vec![0.0137; 24 * 8]).unwrap();
+        let art = PackedModel::from_outcome(&out, None).unwrap();
+        assert_eq!(art.layers[0].encoding, Encoding::F32);
+        assert_eq!(art.layers[1].encoding, Encoding::Packed);
+        let dir = tmpdir("fallback");
+        art.save(&dir).unwrap();
+        let back = PackedModel::load(&dir).unwrap();
+        assert_eq!(back.dequantize(0).unwrap(), out.qweights[0]);
+        assert_eq!(back.dequantize(1).unwrap(), out.qweights[1]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn loader_rejects_corrupt_stream_and_bad_scales() {
+        let out = grid_outcome();
+        let art = PackedModel::from_outcome(&out, None).unwrap();
+        let dir = tmpdir("corrupt");
+        art.save(&dir).unwrap();
+        // flip one payload byte -> checksum mismatch
+        let f = dir.join(&art.layers[0].file);
+        let mut bytes = std::fs::read(&f).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&f, &bytes).unwrap();
+        let e = PackedModel::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+        // restore, then poison a scale in the header
+        bytes[0] ^= 0xFF;
+        std::fs::write(&f, &bytes).unwrap();
+        let hdr = std::fs::read_to_string(dir.join("qmodel.json")).unwrap();
+        assert!(hdr.contains("\"scale\": 0.25"), "{hdr}");
+        std::fs::write(
+            dir.join("qmodel.json"),
+            hdr.replace("\"scale\": 0.25", "\"scale\": -1"),
+        )
+        .unwrap();
+        let e = PackedModel::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("scale"), "{e}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn unknown_future_version_is_rejected() {
+        let dir = tmpdir("future");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("qmodel.json"),
+            r#"{"format_version": 3, "model": "m", "method": "x", "acc": 0,
+                "fp_acc": 0, "layers": []}"#,
+        )
+        .unwrap();
+        assert!(PackedModel::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

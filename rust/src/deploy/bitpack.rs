@@ -1,0 +1,336 @@
+//! LSB-first bitstream packing of integer quantization codes at
+//! arbitrary widths 2–8.
+//!
+//! A quantized layer is a vector of integer grid indices ("codes") plus
+//! a scale; storing them as f32 (the v1 artifact format) wastes
+//! 32 − bits bits per weight. This module packs codes back-to-back into
+//! a byte stream: code `i` occupies bits `[i·b, (i+1)·b)` of the stream,
+//! least-significant-bit first within each byte — the layout every
+//! standard bitstream reader expects, and self-describing given `(n,
+//! bits)`.
+//!
+//! ## Exactness and determinism
+//!
+//! Packing is a pure function of `(codes, bits)`: the parallel variants
+//! split the code vector at [`GROUP`]-aligned element boundaries (8
+//! codes at width b occupy exactly b bytes, so every block starts
+//! byte-aligned for **any** width 2–8) and write disjoint output
+//! ranges, making them bit-identical to the sequential form by
+//! construction — property-tested in this module. Pad bits in the final
+//! partial byte are always zero, which the artifact loader verifies.
+//!
+//! ## Control flow
+//!
+//! The inner loops carry a u64 accumulator and flush whole bytes; the
+//! flush pattern depends only on `(bits, element index)`, never on the
+//! code values, so there are no data-dependent branches on the hot path
+//! and the loop bodies vectorize/pipeline cleanly (same discipline as
+//! `quant::kernel`).
+
+use crate::util::error::{Error, Result};
+use crate::util::threadpool::ThreadPool;
+
+/// Narrowest packable width (a 1-bit grid has no sign bit to carry).
+pub const MIN_BITS: u8 = 2;
+/// Widest packable width (wider layers ship as f32 — see
+/// `deploy::artifact`).
+pub const MAX_BITS: u8 = 8;
+
+/// Elements per byte-aligned packing group: 8 codes at width `b` occupy
+/// exactly `b` bytes, so any multiple of 8 elements starts a new block
+/// on a byte boundary for every width 2–8.
+const GROUP: usize = 8;
+
+/// Smallest per-block element count worth forking a scoped worker for
+/// (packing is a few ops per element; mirror the pool's chunk gate).
+const MIN_PACK_BLOCK: usize = 16 * 1024;
+
+/// Packed byte length of `n` codes at `bits` per code.
+pub fn packed_len(n: usize, bits: u8) -> usize {
+    (n * bits as usize + 7) / 8
+}
+
+fn check_bits(bits: u8) -> Result<()> {
+    if !(MIN_BITS..=MAX_BITS).contains(&bits) {
+        return Err(Error::config(format!(
+            "bitpack: width {bits} out of range {MIN_BITS}..={MAX_BITS}"
+        )));
+    }
+    Ok(())
+}
+
+fn check_lens(n_codes: usize, n_bytes: usize, bits: u8) -> Result<()> {
+    let need = packed_len(n_codes, bits);
+    if n_bytes != need {
+        return Err(Error::shape(format!(
+            "bitpack: {n_codes} codes at {bits}b need {need} bytes, got {n_bytes}"
+        )));
+    }
+    Ok(())
+}
+
+/// Sequential packing core over one byte-aligned block. `out` must be
+/// exactly `packed_len(codes.len(), bits)` bytes; codes must fit the
+/// width (validated by the public entry points).
+fn pack_block(codes: &[u32], bits: u8, out: &mut [u8]) {
+    let bits = bits as u32;
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut oi = 0usize;
+    for &c in codes {
+        acc |= (c as u64) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out[oi] = acc as u8;
+            oi += 1;
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        // final partial byte: high pad bits are zero (acc was shifted)
+        out[oi] = acc as u8;
+    }
+}
+
+/// Sequential unpacking core, mirror of [`pack_block`].
+fn unpack_block(bytes: &[u8], bits: u8, out: &mut [u32]) {
+    let bits = bits as u32;
+    let mask = (1u64 << bits) - 1;
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut bi = 0usize;
+    for o in out.iter_mut() {
+        while nbits < bits {
+            acc |= (bytes[bi] as u64) << nbits;
+            bi += 1;
+            nbits += 8;
+        }
+        *o = (acc & mask) as u32;
+        acc >>= bits;
+        nbits -= bits;
+    }
+}
+
+/// Pack `codes` at `bits` per code into `out` (exactly
+/// [`packed_len`] bytes). Errors if a code exceeds the width or the
+/// buffer length is wrong. Sequential reference form.
+pub fn pack_into(codes: &[u32], bits: u8, out: &mut [u8]) -> Result<()> {
+    check_bits(bits)?;
+    check_lens(codes.len(), out.len(), bits)?;
+    validate_codes(codes, bits)?;
+    pack_block(codes, bits, out);
+    Ok(())
+}
+
+/// [`pack_into`] parallelized over byte-aligned row blocks of `pool`.
+/// Bit-identical to the sequential form for every pool size.
+pub fn pack_into_with(
+    pool: &ThreadPool,
+    codes: &[u32],
+    bits: u8,
+    out: &mut [u8],
+) -> Result<()> {
+    check_bits(bits)?;
+    check_lens(codes.len(), out.len(), bits)?;
+    validate_codes(codes, bits)?;
+    let n = codes.len();
+    let blocks = pool.width().min((n / MIN_PACK_BLOCK).max(1));
+    if blocks <= 1 {
+        pack_block(codes, bits, out);
+        return Ok(());
+    }
+    // Per-block element count: a multiple of GROUP, so every block's
+    // output range starts and ends on a byte boundary (only the final
+    // block may be ragged).
+    let per = ((n + blocks - 1) / blocks + GROUP - 1) / GROUP * GROUP;
+    let per_bytes = per / GROUP * bits as usize;
+    pool.scope(|s| {
+        let mut rest = &mut out[..];
+        for chunk in codes.chunks(per) {
+            let take = if chunk.len() == per {
+                per_bytes
+            } else {
+                packed_len(chunk.len(), bits)
+            };
+            let (o, rem) = rest.split_at_mut(take);
+            rest = rem;
+            s.spawn(move || pack_block(chunk, bits, o));
+        }
+    });
+    Ok(())
+}
+
+/// Allocating convenience form of [`pack_into`].
+pub fn pack(codes: &[u32], bits: u8) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; packed_len(codes.len(), bits)];
+    pack_into(codes, bits, &mut out)?;
+    Ok(out)
+}
+
+/// Unpack `out.len()` codes at `bits` per code from `bytes` (exactly
+/// [`packed_len`] bytes). Sequential reference form.
+pub fn unpack_into(bytes: &[u8], bits: u8, out: &mut [u32]) -> Result<()> {
+    check_bits(bits)?;
+    check_lens(out.len(), bytes.len(), bits)?;
+    unpack_block(bytes, bits, out);
+    Ok(())
+}
+
+/// [`unpack_into`] parallelized over byte-aligned row blocks of `pool`.
+pub fn unpack_into_with(
+    pool: &ThreadPool,
+    bytes: &[u8],
+    bits: u8,
+    out: &mut [u32],
+) -> Result<()> {
+    check_bits(bits)?;
+    check_lens(out.len(), bytes.len(), bits)?;
+    let n = out.len();
+    let blocks = pool.width().min((n / MIN_PACK_BLOCK).max(1));
+    if blocks <= 1 {
+        unpack_block(bytes, bits, out);
+        return Ok(());
+    }
+    let per = ((n + blocks - 1) / blocks + GROUP - 1) / GROUP * GROUP;
+    let per_bytes = per / GROUP * bits as usize;
+    pool.scope(|s| {
+        let mut rest_bytes = bytes;
+        for ochunk in out.chunks_mut(per) {
+            let take = if ochunk.len() == per {
+                per_bytes
+            } else {
+                packed_len(ochunk.len(), bits)
+            };
+            let (b, rem) = rest_bytes.split_at(take);
+            rest_bytes = rem;
+            s.spawn(move || unpack_block(b, bits, ochunk));
+        }
+    });
+    Ok(())
+}
+
+/// Allocating convenience form of [`unpack_into`].
+pub fn unpack(bytes: &[u8], n: usize, bits: u8) -> Result<Vec<u32>> {
+    let mut out = vec![0u32; n];
+    unpack_into(bytes, bits, &mut out)?;
+    Ok(out)
+}
+
+/// Every code must fit the declared width (codes are grid offsets
+/// `q − lo`, so a valid `b`-bit layer uses exactly the range
+/// `0..2^b`).
+pub fn validate_codes(codes: &[u32], bits: u8) -> Result<()> {
+    let mask = !((1u32 << bits) - 1);
+    if let Some(c) = codes.iter().find(|&&c| c & mask != 0) {
+        return Err(Error::invariant(format!(
+            "bitpack: code {c} exceeds the {bits}-bit width"
+        )));
+    }
+    Ok(())
+}
+
+/// Verify the pad bits beyond `n · bits` in the final byte are zero —
+/// the loader's cheap corruption check for truncated/garbled streams.
+pub fn validate_padding(bytes: &[u8], n: usize, bits: u8) -> Result<()> {
+    check_bits(bits)?;
+    check_lens(n, bytes.len(), bits)?;
+    let used = n * bits as usize;
+    let pad = bytes.len() * 8 - used;
+    if pad > 0 {
+        let last = bytes[bytes.len() - 1];
+        if last >> (8 - pad) != 0 {
+            return Err(Error::parse(
+                "bitpack: nonzero pad bits in the final byte (corrupt stream)",
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::threadpool;
+
+    fn random_codes(n: usize, bits: u8, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(1usize << bits) as u32).collect()
+    }
+
+    #[test]
+    fn roundtrip_all_widths_and_ragged_lengths() {
+        // lengths straddle word/group boundaries on purpose: 1 element,
+        // sub-group, exact group, group+1, non-multiples of 8 and 64
+        for bits in MIN_BITS..=MAX_BITS {
+            for &n in &[1usize, 3, 7, 8, 9, 63, 64, 65, 1000, 4099] {
+                let codes = random_codes(n, bits, 7 + n as u64 + bits as u64);
+                let packed = pack(&codes, bits).unwrap();
+                assert_eq!(packed.len(), packed_len(n, bits));
+                validate_padding(&packed, n, bits).unwrap();
+                let back = unpack(&packed, n, bits).unwrap();
+                assert_eq!(back, codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_codes_roundtrip() {
+        for bits in MIN_BITS..=MAX_BITS {
+            let hi = (1u32 << bits) - 1;
+            let codes = vec![0, hi, 0, hi, hi, 0, 1, hi - 1, hi];
+            let packed = pack(&codes, bits).unwrap();
+            assert_eq!(unpack(&packed, codes.len(), bits).unwrap(), codes);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bit_for_bit() {
+        let pool = threadpool::global();
+        for bits in [2u8, 3, 5, 8] {
+            // large enough to actually fan out, not a multiple of the
+            // group or the block size
+            let n = MIN_PACK_BLOCK * 3 + 37;
+            let codes = random_codes(n, bits, 99 + bits as u64);
+            let mut seq = vec![0u8; packed_len(n, bits)];
+            pack_into(&codes, bits, &mut seq).unwrap();
+            let mut par = vec![0u8; packed_len(n, bits)];
+            pack_into_with(pool, &codes, bits, &mut par).unwrap();
+            assert_eq!(seq, par, "pack bits={bits}");
+            let mut out_seq = vec![0u32; n];
+            unpack_into(&seq, bits, &mut out_seq).unwrap();
+            let mut out_par = vec![0u32; n];
+            unpack_into_with(pool, &par, bits, &mut out_par).unwrap();
+            assert_eq!(out_seq, out_par, "unpack bits={bits}");
+            assert_eq!(out_par, codes);
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_codes_and_widths() {
+        assert!(pack(&[4], 2).is_err()); // 4 needs 3 bits
+        assert!(pack(&[0], 1).is_err());
+        assert!(pack(&[0], 9).is_err());
+        let mut small = vec![0u8; 1];
+        assert!(pack_into(&[0, 0, 0, 0, 0], 4, &mut small).is_err()); // wants 3 bytes
+    }
+
+    #[test]
+    fn padding_validation_catches_corruption() {
+        let codes = random_codes(5, 3, 1); // 15 bits -> 2 bytes, 1 pad bit
+        let mut packed = pack(&codes, 3).unwrap();
+        validate_padding(&packed, 5, 3).unwrap();
+        *packed.last_mut().unwrap() |= 0x80; // flip the pad bit
+        assert!(validate_padding(&packed, 5, 3).is_err());
+    }
+
+    #[test]
+    fn packed_len_edges() {
+        assert_eq!(packed_len(0, 4), 0);
+        assert_eq!(packed_len(1, 2), 1);
+        assert_eq!(packed_len(8, 3), 3);
+        assert_eq!(packed_len(9, 3), 4);
+        assert_eq!(packed_len(147_456, 4), 73_728);
+    }
+}

@@ -1,0 +1,246 @@
+//! Dequant-on-the-fly execution of a packed artifact on the host
+//! backend.
+//!
+//! The naive way to serve a packed model is to dequantize every layer
+//! up front — which materializes a second full-f32 copy of the model
+//! and gives back the memory the packing saved. [`PackedHostForward`]
+//! instead keeps the codes packed and dequantizes **one layer at a
+//! time** into a reusable scratch buffer (sized to the largest layer)
+//! that feeds [`crate::backend::host`]'s shared `layer_pass` directly,
+//! so a forward touches at most `max_layer_params` f32s of transient
+//! weight storage regardless of model size.
+//!
+//! Dequantization is the same `s · q` multiply the rounding kernels
+//! finalize with (see `deploy::artifact`), and `layer_pass` is the
+//! exact per-layer forward `run_graph` uses — so a forward off the
+//! packed representation is **bit-identical** to quantize-then-forward
+//! with the original tensors (asserted end-to-end by
+//! `rust/tests/deploy.rs`).
+//!
+//! The scratch lives behind a `Mutex` so the handle satisfies the
+//! `PreparedModel: Send + Sync` serving contract; the serve worker is a
+//! single consumer, so the lock is uncontended on the hot path.
+
+use std::sync::Mutex;
+
+use crate::backend::host::{fake_quant_act, layer_pass};
+use crate::backend::PreparedModel;
+use crate::coordinator::model::LoadedModel;
+use crate::deploy::artifact::PackedModel;
+use crate::quant::observer::ActQuantParams;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::threadpool::{self, ThreadPool};
+
+struct Scratch {
+    codes: Vec<u32>,
+    w: Vec<f32>,
+}
+
+/// A packed artifact staged for host serving: codes stay packed,
+/// weights exist in f32 only one layer at a time.
+pub struct PackedHostForward<'a> {
+    pool: &'static ThreadPool,
+    model: &'a LoadedModel,
+    artifact: &'a PackedModel,
+    scratch: Mutex<Scratch>,
+}
+
+impl<'a> PackedHostForward<'a> {
+    /// Validate the artifact against the execution model (layer count,
+    /// per-layer shapes, 2-D conv-as-matmul weights) and stage it.
+    pub fn new(model: &'a LoadedModel, artifact: &'a PackedModel) -> Result<Self> {
+        artifact.check_matches(model)?;
+        for l in &artifact.layers {
+            if l.shape.len() != 2 {
+                return Err(Error::shape(format!(
+                    "{}: host backend executes 2-D (conv-as-matmul) weights, \
+                     got {:?} — use the PJRT backend for real checkpoints",
+                    l.name, l.shape
+                )));
+            }
+        }
+        let max = artifact
+            .layers
+            .iter()
+            .map(|l| l.params())
+            .max()
+            .unwrap_or(0);
+        Ok(PackedHostForward {
+            pool: threadpool::global(),
+            model,
+            artifact,
+            scratch: Mutex::new(Scratch {
+                codes: Vec::with_capacity(max),
+                w: Vec::with_capacity(max),
+            }),
+        })
+    }
+
+    fn run(
+        &self,
+        x: &Tensor,
+        mut record: Option<&mut Vec<Tensor>>,
+        actq: Option<(&[ActQuantParams], &[u8])>,
+    ) -> Result<Tensor> {
+        let mut guard = self.scratch.lock().unwrap();
+        let Scratch { codes, w } = &mut *guard;
+        let mut cur = x.clone();
+        for (li, layer) in self.model.info.layers.iter().enumerate() {
+            let pl = &self.artifact.layers[li];
+            let nm = (pl.shape[0], pl.shape[1]);
+            self.artifact.dequantize_layer_into(li, codes, w)?;
+            let bias = self
+                .model
+                .biases
+                .get(li)
+                .map(|b| b.data())
+                .unwrap_or(&[]);
+            let tf: Option<Box<dyn Fn(&mut [f32])>> = actq.map(|(params, bits)| {
+                let (p, b) = (params[li], bits[li]);
+                Box::new(move |a: &mut [f32]| fake_quant_act(a, &p, b))
+                    as Box<dyn Fn(&mut [f32])>
+            });
+            let pass =
+                layer_pass(self.pool, layer, w, nm, bias, &cur, tf.as_deref(), true)?;
+            if let Some(rec) = record.as_mut() {
+                rec.push(Tensor::new(pass.in_shape.clone(), pass.a.clone())?);
+            }
+            cur = pass.out.expect("want_out set");
+        }
+        Ok(cur)
+    }
+}
+
+impl PreparedModel for PackedHostForward<'_> {
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.run(x, None, None)
+    }
+
+    fn forward_actq(
+        &self,
+        x: &Tensor,
+        act_params: &[ActQuantParams],
+        act_bits: &[u8],
+    ) -> Result<Tensor> {
+        let k = self.model.num_layers();
+        if act_params.len() != k || act_bits.len() != k {
+            return Err(Error::shape(format!(
+                "expected {k} activation params/bits, got {}/{}",
+                act_params.len(),
+                act_bits.len()
+            )));
+        }
+        self.run(x, None, Some((act_params, act_bits)))
+    }
+
+    fn collect(&self, x: &Tensor) -> Result<(Vec<Tensor>, Tensor)> {
+        let mut rec = Vec::with_capacity(self.model.num_layers());
+        let logits = self.run(x, Some(&mut rec), None)?;
+        Ok((rec, logits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Backend, HostBackend};
+    use crate::coordinator::pipeline::{LayerOutcome, Outcome};
+    use crate::data::synth;
+    use crate::io::manifest::Manifest;
+    use crate::quant::rounding::{nearest, Rounding};
+    use crate::quant::scale::absmax_scale;
+    use crate::quant::QGrid;
+
+    /// Quantize every layer of a loaded model with nearest/absmax at
+    /// `bits` (the static-rounding pipeline path) and wrap it in an
+    /// outcome + packed artifact.
+    fn packed_from_model(
+        model: &LoadedModel,
+        bits: u8,
+        with_acts: bool,
+    ) -> (PackedModel, Vec<Tensor>) {
+        let mut per_layer = Vec::new();
+        let mut qweights = Vec::new();
+        for (l, w) in model.info.layers.iter().zip(&model.weights) {
+            let s = absmax_scale(w.data(), bits);
+            let grid = QGrid::signed(bits, s).unwrap();
+            qweights.push(
+                Tensor::new(w.shape().to_vec(), nearest(w.data(), &grid)).unwrap(),
+            );
+            per_layer.push(LayerOutcome {
+                name: l.name.clone(),
+                bits,
+                scale: s,
+                first_loss: f32::NAN,
+                last_loss: f32::NAN,
+            });
+        }
+        let k = model.num_layers();
+        let outcome = Outcome {
+            model: model.info.name.clone(),
+            method: Rounding::Nearest,
+            acc: 0.0,
+            fp_acc: 0.0,
+            per_layer,
+            qweights: qweights.clone(),
+            act_params: with_acts.then(|| {
+                vec![ActQuantParams { scale: 0.05, zero: 0.0 }; k]
+            }),
+            act_bits: with_acts.then(|| vec![8u8; k]),
+            wall_s: 0.0,
+        };
+        (PackedModel::from_outcome(&outcome, None).unwrap(), qweights)
+    }
+
+    #[test]
+    fn packed_forward_matches_dequantized_prepare_bit_for_bit() {
+        let be = HostBackend::new();
+        let manifest = Manifest::synthetic();
+        let model = be.load_model(&manifest, "synthnet").unwrap();
+        let (art, qweights) = packed_from_model(&model, 4, false);
+        let packed = PackedHostForward::new(&model, &art).unwrap();
+        let direct = be.prepare(&model, &qweights).unwrap();
+        let (x, _) = synth::generate(5, 2024);
+        let got = packed.forward(&x).unwrap();
+        let want = direct.forward(&x).unwrap();
+        assert_eq!(got.shape(), want.shape());
+        assert_eq!(got.data(), want.data(), "packed forward must be bit-identical");
+    }
+
+    #[test]
+    fn packed_forward_actq_and_collect_match() {
+        let be = HostBackend::new();
+        let manifest = Manifest::synthetic();
+        let model = be.load_model(&manifest, "synthnet").unwrap();
+        let (art, qweights) = packed_from_model(&model, 4, true);
+        let packed = PackedHostForward::new(&model, &art).unwrap();
+        let direct = be.prepare(&model, &qweights).unwrap();
+        let (x, _) = synth::generate(3, 77);
+        let params = art.act_params.clone().unwrap();
+        let bits = art.act_bits.clone().unwrap();
+        let got = packed.forward_actq(&x, &params, &bits).unwrap();
+        let want = direct.forward_actq(&x, &params, &bits).unwrap();
+        assert_eq!(got.data(), want.data());
+        let (rec_p, log_p) = packed.collect(&x).unwrap();
+        let (rec_d, log_d) = direct.collect(&x).unwrap();
+        assert_eq!(log_p.data(), log_d.data());
+        assert_eq!(rec_p.len(), rec_d.len());
+        for (a, b) in rec_p.iter().zip(&rec_d) {
+            assert_eq!(a.data(), b.data());
+        }
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let be = HostBackend::new();
+        let manifest = Manifest::synthetic();
+        let model = be.load_model(&manifest, "synthnet").unwrap();
+        let (art, _) = packed_from_model(&model, 4, false);
+        let packed = PackedHostForward::new(&model, &art).unwrap();
+        let (x, _) = synth::generate(2, 5);
+        assert!(packed
+            .forward_actq(&x, &[ActQuantParams { scale: 0.1, zero: 0.0 }], &[8])
+            .is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! Packed quantized artifacts + deployment: the storage story the
+//! paper's mixed-precision allocation promises.
+//!
+//! The calibration pipeline's output is a mixed-precision model whose
+//! layers carry 2–8 bits each (coding-length allocation, Eq. 12–14) —
+//! but the v1 saved-model format persisted every weight as full f32, so
+//! a "quantized" model on disk was exactly as large as the FP original.
+//! This subsystem ships the real thing: integer codes at the allocated
+//! width, a versioned artifact directory, and a serving path that runs
+//! straight off the packed representation.
+//!
+//! ```text
+//!  quantize_and_eval ──► PackedModel::from_outcome   (artifact)
+//!        │                     │ save / load  ◄── v1 f32 dirs too
+//!        │                     ▼
+//!        │               <dir>/qmodel.json + *.qbin  (bitpack)
+//!        │                     │
+//!        │                     ▼ Backend::prepare_artifact
+//!        │               PackedHostForward            (dequant)
+//!        │                     │ per-layer scratch, no full f32 copy
+//!        ▼                     ▼
+//!  direct forward  ══ bit-identical ══  serve --artifact (PR-4 queue)
+//! ```
+//!
+//! * [`bitpack`] — LSB-first bitstream pack/unpack of integer codes at
+//!   widths 2–8, `_into` variants, parallel over byte-aligned row
+//!   blocks, bit-exact roundtrip property-tested.
+//! * [`artifact`] — the versioned single-directory format v2: header
+//!   JSON with per-layer name/bits/scale/shape/coding-length
+//!   provenance, one packed `.qbin` per layer with length + checksum,
+//!   loader validates streams and still reads v1 f32 dirs.
+//! * [`dequant`] — dequant-on-the-fly into reusable scratch feeding
+//!   `backend::host::layer_pass`, so a forward runs off the packed
+//!   representation without materializing a second full-f32 model.
+//! * [`report`] — per-layer and total compression accounting (packed
+//!   vs f32 bytes, effective bits/weight) as table + JSON.
+//!
+//! CLI: `repro pack` quantizes and writes an artifact; `repro serve
+//! --artifact <dir>` loads one (with its activation-quant deployment
+//! config) and serves it through the `serve` queue/batcher.
+
+pub mod artifact;
+pub mod bitpack;
+pub mod dequant;
+pub mod report;
+
+pub use artifact::{is_artifact_dir, PackedModel};
+pub use dequant::PackedHostForward;
+pub use report::{compression_table, summarize, Compression};

@@ -1,0 +1,173 @@
+//! Compression accounting for packed artifacts: per-layer and total
+//! packed bytes vs the f32 baseline, effective bits per weight, and the
+//! JSON summary the CI `artifact-smoke` job asserts on.
+
+use crate::deploy::artifact::PackedModel;
+use crate::report::Table;
+
+/// Whole-artifact compression summary.
+#[derive(Debug, Clone)]
+pub struct Compression {
+    pub model: String,
+    pub method: String,
+    pub layers: usize,
+    /// Weight payload at f32 (what the v1 format stored).
+    pub f32_bytes: u64,
+    /// Weight payload under this artifact's encodings.
+    pub packed_bytes: u64,
+    /// `packed_bytes / f32_bytes`.
+    pub ratio: f64,
+    /// `8 · packed_bytes / total_params` — the storage-weighted mean
+    /// width, including any f32-fallback layers.
+    pub effective_bits: f64,
+}
+
+/// Summarize an artifact's weight-storage footprint.
+pub fn summarize(art: &PackedModel) -> Compression {
+    let f32_bytes = art.f32_bytes();
+    let packed_bytes = art.payload_bytes();
+    let params: u64 = art.layers.iter().map(|l| l.params() as u64).sum();
+    Compression {
+        model: art.model.clone(),
+        method: art.method.clone(),
+        layers: art.num_layers(),
+        f32_bytes,
+        packed_bytes,
+        ratio: if f32_bytes > 0 {
+            packed_bytes as f64 / f32_bytes as f64
+        } else {
+            0.0
+        },
+        effective_bits: if params > 0 {
+            packed_bytes as f64 * 8.0 / params as f64
+        } else {
+            0.0
+        },
+    }
+}
+
+/// Per-layer compression table (plus a total row).
+pub fn compression_table(art: &PackedModel) -> Table {
+    let c = summarize(art);
+    let mut t = Table::new(
+        format!("Packed artifact — {} ({})", c.model, c.method),
+        &["Layer", "Bits", "Params", "f32 B", "Packed B", "Ratio", "L (bits)"],
+    );
+    for l in &art.layers {
+        let f32b = l.params() * 4;
+        let pb = l.payload_bytes();
+        t.row(vec![
+            l.name.clone(),
+            format!("{}{}", l.bits, match l.encoding {
+                crate::deploy::artifact::Encoding::Packed => "",
+                crate::deploy::artifact::Encoding::F32 => " (f32)",
+            }),
+            l.params().to_string(),
+            f32b.to_string(),
+            pb.to_string(),
+            format!("{:.3}", pb as f64 / f32b.max(1) as f64),
+            l.coding_length
+                .map(|v| format!("{v:.1}"))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.row(vec![
+        "TOTAL".into(),
+        format!("{:.2} eff", c.effective_bits),
+        art.layers
+            .iter()
+            .map(|l| l.params())
+            .sum::<usize>()
+            .to_string(),
+        c.f32_bytes.to_string(),
+        c.packed_bytes.to_string(),
+        format!("{:.3}", c.ratio),
+        "-".into(),
+    ]);
+    t
+}
+
+impl Compression {
+    /// JSON in the same hand-rolled style as `ServeReport::to_json`;
+    /// round-trips through [`crate::util::json::parse`]. CI asserts
+    /// `ratio < 0.5` from this object.
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\n",
+                "  \"pack\": {{\n",
+                "    \"model\": \"{}\",\n",
+                "    \"method\": \"{}\",\n",
+                "    \"layers\": {},\n",
+                "    \"f32_bytes\": {},\n",
+                "    \"packed_bytes\": {},\n",
+                "    \"ratio\": {:e},\n",
+                "    \"effective_bits_per_weight\": {:e}\n",
+                "  }}\n",
+                "}}"
+            ),
+            self.model,
+            self.method,
+            self.layers,
+            self.f32_bytes,
+            self.packed_bytes,
+            self.ratio,
+            self.effective_bits,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::{LayerOutcome, Outcome};
+    use crate::quant::rounding::{nearest, Rounding};
+    use crate::quant::QGrid;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn outcome(bits: u8, n: usize) -> Outcome {
+        let s = 0.02f32;
+        let grid = QGrid::signed(bits, s).unwrap();
+        let mut w = vec![0.0f32; n];
+        Rng::new(3).fill_gaussian(&mut w, 0.0, 0.05);
+        Outcome {
+            model: "m".into(),
+            method: Rounding::Nearest,
+            acc: 0.0,
+            fp_acc: 0.0,
+            per_layer: vec![LayerOutcome {
+                name: "l0".into(),
+                bits,
+                scale: s,
+                first_loss: f32::NAN,
+                last_loss: f32::NAN,
+            }],
+            qweights: vec![Tensor::from_vec(nearest(&w, &grid))],
+            act_params: None,
+            act_bits: None,
+            wall_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn four_bit_layer_is_one_eighth_of_f32() {
+        let art = PackedModel::from_outcome(&outcome(4, 1024), None).unwrap();
+        let c = summarize(&art);
+        assert_eq!(c.f32_bytes, 4096);
+        assert_eq!(c.packed_bytes, 512);
+        assert!((c.ratio - 0.125).abs() < 1e-12);
+        assert!((c.effective_bits - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_and_json_shape() {
+        let art = PackedModel::from_outcome(&outcome(3, 64), None).unwrap();
+        let t = compression_table(&art);
+        assert_eq!(t.num_rows(), 2); // one layer + total
+        let j = crate::util::json::parse(&summarize(&art).to_json()).unwrap();
+        let p = j.get("pack").unwrap();
+        assert_eq!(p.get("layers").unwrap().as_usize().unwrap(), 1);
+        assert!(p.get("ratio").unwrap().as_f64().unwrap() < 0.5);
+    }
+}

@@ -27,6 +27,9 @@
 //! * [`backend`] — pluggable execution backends: the PJRT device path
 //!   and a pure-host executor that runs the whole pipeline with zero
 //!   artifacts.
+//! * [`deploy`] — packed quantized artifacts: integer-code bitstreams
+//!   at the allocated 2–8-bit widths, the versioned artifact format,
+//!   dequant-on-the-fly serving, compression accounting.
 //! * [`coordinator`] — the calibration pipeline and experiment drivers.
 //! * [`serve`] — batched serving: hot prepared model, bounded request
 //!   queue with admission control, micro-batching worker, latency /
@@ -38,6 +41,7 @@ pub mod backend;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod data;
+pub mod deploy;
 pub mod io;
 pub mod linalg;
 pub mod mixed;

@@ -5,8 +5,10 @@
 //! repro evaluate  --model M           FP32 top-1 on the eval split
 //! repro quantize  --model M --wbits B [--abits B] [--method ...]
 //! repro allocate  --model M --bits 3,4,5,6      Algorithm-1 bit allocation
+//! repro pack      --model M [--mixed|--wbits B] [--abits B] [--pack-out D]
 //! repro qat       --model M --steps N           budgeted STE-QAT
 //! repro serve     --requests N [--batch B --max-wait-us U --queue-depth D]
+//! repro serve     --artifact DIR                serve a packed artifact
 //! repro reproduce <table1..5|fig2|fig3|fig4|fig5|all>
 //! ```
 //!
@@ -16,14 +18,19 @@
 //! `--backend auto` (the default) a checkout without artifacts runs the
 //! whole pipeline on the host backend against the synthetic model.
 
+use std::path::PathBuf;
+
+use attention_round::coordinator::capture::capture;
 use attention_round::coordinator::config::CalibConfig;
 use attention_round::coordinator::experiments::{self, Ctx};
 use attention_round::coordinator::pipeline::{
-    quantize_and_eval, resolve_uniform_bits, QuantSpec,
+    quantize_and_eval, resolve_act_bits, resolve_uniform_bits, QuantSpec,
 };
-use attention_round::coordinator::{evaluate, qat};
+use attention_round::coordinator::{evaluate, qat, state};
+use attention_round::deploy;
 use attention_round::io::manifest::Manifest;
 use attention_round::mixed;
+use attention_round::quant::observer::{observe_with, ActQuantParams};
 use attention_round::quant::rounding::Rounding;
 use attention_round::report::pct;
 use attention_round::serve;
@@ -61,8 +68,11 @@ fn parser() -> Parser {
         .opt("queue-depth", Some("64"), "serve: admission bound (reject beyond)")
         .opt("producers", Some("4"), "serve: load-generator producer threads")
         .opt("worker-width", Some("0"), "serve: worker inner-parallelism cap (0 = full pool)")
+        .opt("artifact", None, "serve: packed artifact dir (serve a saved quantized model)")
+        .opt("pack-out", None, "pack: artifact output dir (default <out>/qmodels/<model>-<tag>)")
+        .flag("mixed", "pack: Algorithm-1 per-layer bits from --bits/--eps2 instead of uniform --wbits")
         .flag("no-verify", "serve: skip the bit-identity check against direct forward")
-        .flag("save", "persist the quantized model under <out>/qmodels/")
+        .flag("save", "persist the quantized model under <out>/qmodels/ (packed v2 artifact)")
         .flag("help", "print usage")
 }
 
@@ -84,7 +94,7 @@ fn run(argv: &[String]) -> Result<()> {
     let a = p.parse(argv)?;
     if a.has_flag("help") || a.positional.is_empty() {
         println!("{}", p.usage());
-        println!("subcommands: info | evaluate | quantize | allocate | qat | serve | reproduce <target>");
+        println!("subcommands: info | evaluate | quantize | allocate | pack | qat | serve | reproduce <target>");
         return Ok(());
     }
     let cmd = a.positional[0].as_str();
@@ -95,6 +105,7 @@ fn run(argv: &[String]) -> Result<()> {
         "evaluate" => cmd_evaluate(&artifacts, &a),
         "quantize" => cmd_quantize(&artifacts, &a),
         "allocate" => cmd_allocate(&artifacts, &a),
+        "pack" => cmd_pack(&artifacts, &a),
         "qat" => cmd_qat(&artifacts, &a),
         "serve" => cmd_serve(&artifacts, &a),
         "reproduce" => cmd_reproduce(&artifacts, &a),
@@ -264,6 +275,86 @@ fn cmd_allocate(artifacts: &str, a: &attention_round::util::args::Args) -> Resul
     Ok(())
 }
 
+/// `repro pack` — quantize a model and write a **packed v2 artifact**:
+/// integer codes bit-packed at each layer's width (`deploy::bitpack`),
+/// header with per-layer scale/shape/checksum and, under `--mixed`, the
+/// Algorithm-1 coding-length provenance. Prints the per-layer
+/// compression table and writes `<out>/pack.json` (the CI
+/// `artifact-smoke` job asserts ratio < 0.5 from it).
+fn cmd_pack(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
+    let ctx = load_ctx(artifacts, a)?;
+    let mut cfg = ctx.cfg.clone();
+    cfg.method = Rounding::parse(a.get("method")?)
+        .ok_or_else(|| Error::config("bad --method"))?;
+    let model_name = pick_model(&ctx, a)?;
+    let loaded = ctx.backend.load_model(&ctx.manifest, &model_name)?;
+    let abits = a.get("abits").ok().map(|s| s.parse::<u8>()).transpose()
+        .map_err(|_| Error::config("bad --abits"))?;
+    let (wbits, lengths, bits_desc) = if a.has_flag("mixed") {
+        let bit_list: Vec<u8> = a
+            .get("bits")?
+            .split(',')
+            .map(|s| s.trim().parse::<u8>().map_err(|_| Error::config("bad --bits")))
+            .collect::<Result<_>>()?;
+        let eps2 = a.get_f64("eps2")?;
+        let alloc =
+            mixed::allocate(&loaded.info.layers, &loaded.weights, &bit_list, eps2)?;
+        let desc = bit_list
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join("-");
+        (alloc.bits, Some(alloc.lengths), format!("mix{desc}"))
+    } else {
+        let wb = a.get_usize("wbits")? as u8;
+        (resolve_uniform_bits(&loaded, wb), None, format!("w{wb}"))
+    };
+    let spec = QuantSpec {
+        model: model_name.clone(),
+        wbits,
+        abits,
+    };
+    let out = quantize_and_eval(
+        ctx.backend.as_ref(), &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
+    )?;
+    let packed = deploy::PackedModel::from_outcome(&out, lengths.as_deref())?;
+    let tag = format!(
+        "pack-{}-{}a{}",
+        cfg.method.name(),
+        bits_desc,
+        abits.map(|b| b.to_string()).unwrap_or_else(|| "fp".into())
+    );
+    let dir = match a.get("pack-out") {
+        Ok(d) => PathBuf::from(d),
+        Err(_) => state::default_dir(&ctx.out_dir, &model_name, &tag),
+    };
+    packed.save(&dir)?;
+    println!("{}", deploy::compression_table(&packed).render());
+    println!(
+        "{model_name} via {:?} on {}: top-1 {}% (FP {}%), {:.1}s",
+        cfg.method,
+        ctx.backend.platform(),
+        pct(out.acc),
+        pct(out.fp_acc),
+        out.wall_s
+    );
+    let summary = deploy::summarize(&packed);
+    let json = summary.to_json();
+    println!("{json}");
+    let json_path = ctx.out_dir.join("pack.json");
+    std::fs::write(&json_path, &json)?;
+    println!("wrote {}", json_path.display());
+    println!(
+        "packed artifact: {} ({} -> {} weight bytes, ratio {:.3}, {:.2} bits/weight)",
+        dir.display(),
+        summary.f32_bytes,
+        summary.packed_bytes,
+        summary.ratio,
+        summary.effective_bits
+    );
+    Ok(())
+}
+
 fn cmd_qat(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
     let ctx = load_ctx(artifacts, a)?;
     let model_name = pick_model(&ctx, a)?;
@@ -293,15 +384,70 @@ fn cmd_qat(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()>
     Ok(())
 }
 
+/// Observer-calibrate an activation-quant deployment config for the
+/// plain-pipeline serve path (`serve --abits B` with no artifact):
+/// capture layer inputs over the calibration split and observe each
+/// with the configured observer, first/last pinned to 8-bit like the
+/// quantization pipeline.
+fn derive_actq(
+    ctx: &Ctx,
+    model_name: &str,
+    abits: u8,
+) -> Result<(Vec<ActQuantParams>, Vec<u8>)> {
+    if !(2..=16).contains(&abits) {
+        return Err(Error::config(format!(
+            "--abits {abits} out of range 2..=16"
+        )));
+    }
+    let model = ctx.backend.load_model(&ctx.manifest, model_name)?;
+    let bits = resolve_act_bits(&model, abits);
+    let cache = capture(
+        ctx.backend.as_ref(),
+        &ctx.manifest,
+        &model,
+        &model.weights,
+        &ctx.calib,
+        ctx.cfg.calib_samples,
+    )?;
+    let mut scratch = Vec::new();
+    let mut params = Vec::with_capacity(model.num_layers());
+    for li in 0..model.num_layers() {
+        let x = cache.peek(li)?;
+        params.push(observe_with(
+            x.data(),
+            bits[li],
+            ctx.cfg.observer,
+            &mut scratch,
+        )?);
+    }
+    Ok((params, bits))
+}
+
+fn print_serve_report(ctx: &Ctx, report: &serve::ServeReport) -> Result<()> {
+    println!("{}", report.table().render());
+    let json = report.to_json();
+    println!("{json}");
+    let json_path = ctx.out_dir.join("serve.json");
+    std::fs::write(&json_path, &json)?;
+    println!("wrote {}", json_path.display());
+    Ok(())
+}
+
 /// `repro serve` — the batched-serving load generator: keeps a prepared
 /// model hot behind the bounded request queue, drives `--requests`
 /// synthetic requests through the micro-batching worker, and reports
 /// p50/p95/p99 latency + sustained throughput as a table and as JSON
-/// (stdout and `<out>/serve.json`, which the CI smoke job asserts on).
+/// (stdout and `<out>/serve.json`, which the CI smoke jobs assert on).
+///
+/// Two model sources: `--artifact DIR` serves a saved packed quantized
+/// model (with its recorded activation-quant deployment config;
+/// dequant-on-the-fly on the host backend), while the plain path serves
+/// the backend's own weights — with `--abits B` behind an
+/// observer-calibrated activation-quant config (the actq deployment
+/// path), FP32 activations otherwise.
 fn cmd_serve(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
     let ctx = load_ctx(artifacts, a)?;
-    let model_name = pick_model(&ctx, a)?;
-    let cfg = serve::ServeConfig {
+    let mut cfg = serve::ServeConfig {
         max_batch: a.get_usize("batch")?.max(1),
         max_wait: std::time::Duration::from_micros(a.get_usize("max-wait-us")? as u64),
         queue_depth: a.get_usize("queue-depth")?.max(1),
@@ -311,6 +457,68 @@ fn cmd_serve(artifacts: &str, a: &attention_round::util::args::Args) -> Result<(
     };
     let requests = a.get_usize("requests")?;
     let producers = a.get_usize("producers")?.max(1);
+
+    if let Ok(dir) = a.get("artifact") {
+        let art = deploy::PackedModel::load(std::path::Path::new(dir))?;
+        if let Ok(s) = a.get("abits") {
+            // A saved W+A artifact already carries its deployment
+            // config (which run_artifact_load_generator applies);
+            // silently serving something else would deploy a different
+            // model than the operator asked for.
+            if art.act_params.is_some() {
+                return Err(Error::config(
+                    "--abits conflicts with --artifact: this artifact already \
+                     carries its activation deployment config (re-pack with a \
+                     different --abits instead)",
+                ));
+            }
+            let abits: u8 = s.parse().map_err(|_| Error::config("bad --abits"))?;
+            cfg.actq = Some(derive_actq(&ctx, &art.model, abits)?);
+            println!(
+                "serving through forward_actq at {abits}b activations \
+                 (observer-calibrated; weights-only artifact)"
+            );
+        }
+        println!(
+            "serving {requests} requests ({producers} producers) from packed artifact \
+             {dir} ({} via {}, {}{}) on [{}], batch ≤{} / wait {}µs / queue {}",
+            art.model,
+            art.method,
+            mixed::format_size_mb(art.payload_bytes() as f64),
+            if art.act_params.is_some() { ", actq" } else { "" },
+            ctx.backend.platform(),
+            cfg.max_batch,
+            cfg.max_wait.as_micros(),
+            cfg.queue_depth
+        );
+        let report = serve::run_artifact_load_generator(
+            ctx.backend.as_ref(),
+            &ctx.manifest,
+            &art,
+            &cfg,
+            requests,
+            producers,
+        )?;
+        print_serve_report(&ctx, &report)?;
+        if cfg.verify {
+            println!(
+                "verified: artifact serve outputs bit-identical to the \
+                 dequantized direct forward"
+            );
+        }
+        println!(
+            "serve: clean shutdown ({} completed, {} rejected, {:.1} req/s)",
+            report.completed, report.rejected, report.throughput_rps
+        );
+        return Ok(());
+    }
+
+    let model_name = pick_model(&ctx, a)?;
+    if let Ok(s) = a.get("abits") {
+        let abits: u8 = s.parse().map_err(|_| Error::config("bad --abits"))?;
+        cfg.actq = Some(derive_actq(&ctx, &model_name, abits)?);
+        println!("serving through forward_actq at {abits}b activations (observer-calibrated)");
+    }
     println!(
         "serving {requests} requests ({} producers) on {} [{}], batch ≤{} / wait {}µs / queue {}",
         producers,
@@ -328,12 +536,7 @@ fn cmd_serve(artifacts: &str, a: &attention_round::util::args::Args) -> Result<(
         requests,
         producers,
     )?;
-    println!("{}", report.table().render());
-    let json = report.to_json();
-    println!("{json}");
-    let json_path = ctx.out_dir.join("serve.json");
-    std::fs::write(&json_path, &json)?;
-    println!("wrote {}", json_path.display());
+    print_serve_report(&ctx, &report)?;
     if cfg.verify {
         println!("verified: serve outputs bit-identical to direct forward");
     }

@@ -46,8 +46,9 @@ pub mod worker;
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
-use crate::backend::Backend;
+use crate::backend::{Backend, PreparedModel};
 use crate::data::synth;
+use crate::deploy::artifact::PackedModel;
 use crate::io::manifest::{DatasetInfo, Manifest};
 use crate::quant::observer::ActQuantParams;
 use crate::tensor::Tensor;
@@ -120,30 +121,21 @@ fn gen_inputs(total: usize, ds: &DatasetInfo) -> Result<Tensor> {
     }
 }
 
-/// Self-driving serving session: `producers` threads submit `total`
-/// single-sample requests (retrying with backoff on admission
-/// rejection), one worker serves them hot, and the call returns the
-/// metrics report after a clean shutdown. With `cfg.verify` every
-/// response is re-checked bit-for-bit against a direct `forward` of the
-/// same sample — an `Err` from this function means the serving path
-/// changed what the model computes (or a request never completed).
-pub fn run_load_generator(
-    backend: &dyn Backend,
-    manifest: &Manifest,
-    model_name: &str,
+/// The queue → micro-batcher → worker → collector session core shared
+/// by the pipeline and from-artifact load generators: `producers`
+/// threads submit `total` single-sample requests (retrying with backoff
+/// on admission rejection), one worker serves them hot off `prepared`,
+/// and the call returns one response slot per request after a clean
+/// shutdown.
+fn run_session(
+    prepared: &dyn PreparedModel,
+    inputs: &Tensor,
     cfg: &ServeConfig,
     total: usize,
     producers: usize,
-) -> Result<ServeReport> {
-    if total == 0 {
-        return Err(Error::config("serve: need at least one request"));
-    }
-    let producers = producers.clamp(1, total);
-    let model = backend.load_model(manifest, model_name)?;
-    let prepared = backend.prepare_serving(&model, &model.weights)?;
-    let inputs = gen_inputs(total, &manifest.dataset)?;
+    serve_metrics: &ServeMetrics,
+) -> Vec<Option<Tensor>> {
     let queue = RequestQueue::new(cfg.queue_depth);
-    let serve_metrics = ServeMetrics::new();
     let wcfg = WorkerConfig {
         max_batch: cfg.max_batch.max(1),
         max_wait: cfg.max_wait,
@@ -156,7 +148,6 @@ pub fn run_load_generator(
     };
     let (rtx, rrx) = channel::<ServeResponse>();
     let mut responses: Vec<Option<Tensor>> = vec![None; total];
-    let t0 = Instant::now();
     std::thread::scope(|s| {
         s.spawn(|| {
             // If the worker dies — panic included — close the queue and
@@ -179,7 +170,7 @@ pub fn run_load_generator(
                 }
             }
             let _guard = ShutdownGuard(&queue);
-            run_worker(prepared.as_ref(), &queue, &wcfg, &serve_metrics)
+            run_worker(prepared, &queue, &wcfg, serve_metrics)
         });
         let per = (total + producers - 1) / producers;
         for p in 0..producers {
@@ -188,7 +179,7 @@ pub fn run_load_generator(
                 continue;
             }
             let rtx = rtx.clone();
-            let (queue, metrics, inputs) = (&queue, &serve_metrics, &inputs);
+            let (queue, metrics) = (&queue, serve_metrics);
             s.spawn(move || {
                 for i in lo..hi {
                     let sample = inputs.slice_axis0(i, 1).and_then(|t| {
@@ -265,29 +256,158 @@ pub fn run_load_generator(
         }
         queue.close();
     });
+    responses
+}
+
+/// Re-check every collected response bit-for-bit against a direct
+/// forward of the same sample on `direct` (through `forward_actq` when
+/// an activation deployment config is set). An `Err` means the serving
+/// path changed what the model computes, or a request never completed.
+fn verify_bit_identity(
+    direct: &dyn PreparedModel,
+    inputs: &Tensor,
+    responses: &[Option<Tensor>],
+    actq: &Option<(Vec<ActQuantParams>, Vec<u8>)>,
+) -> Result<()> {
+    for (i, slot) in responses.iter().enumerate() {
+        let got = slot.as_ref().ok_or_else(|| {
+            Error::invariant(format!("serve: request {i} got no successful response"))
+        })?;
+        let x = inputs.slice_axis0(i, 1)?;
+        let want = match actq {
+            Some((params, bits)) => direct.forward_actq(&x, params, bits)?,
+            None => direct.forward(&x)?,
+        };
+        if got.shape() != want.shape() || got.data() != want.data() {
+            return Err(Error::invariant(format!(
+                "serve: output for request {i} is not bit-identical to the \
+                 direct forward"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Self-driving serving session over a backend's own model weights:
+/// loads the model, stages it via `prepare_serving`, and drives `total`
+/// requests through [`run_session`]. With `cfg.verify` every response
+/// is re-checked bit-for-bit against a direct `forward` of the same
+/// sample — an `Err` from this function means the serving path changed
+/// what the model computes (or a request never completed).
+pub fn run_load_generator(
+    backend: &dyn Backend,
+    manifest: &Manifest,
+    model_name: &str,
+    cfg: &ServeConfig,
+    total: usize,
+    producers: usize,
+) -> Result<ServeReport> {
+    if total == 0 {
+        return Err(Error::config("serve: need at least one request"));
+    }
+    let producers = producers.clamp(1, total);
+    let model = backend.load_model(manifest, model_name)?;
+    let prepared = backend.prepare_serving(&model, &model.weights)?;
+    let inputs = gen_inputs(total, &manifest.dataset)?;
+    let serve_metrics = ServeMetrics::new();
+    let t0 = Instant::now();
+    let responses = run_session(
+        prepared.as_ref(),
+        &inputs,
+        cfg,
+        total,
+        producers,
+        &serve_metrics,
+    );
     let wall_s = t0.elapsed().as_secs_f64();
     if cfg.verify {
         let direct = backend.prepare(&model, &model.weights)?;
-        for i in 0..total {
-            let got = responses[i].as_ref().ok_or_else(|| {
-                Error::invariant(format!("serve: request {i} got no successful response"))
-            })?;
-            let x = inputs.slice_axis0(i, 1)?;
-            let want = match &cfg.actq {
-                Some((params, bits)) => direct.forward_actq(&x, params, bits)?,
-                None => direct.forward(&x)?,
-            };
-            if got.shape() != want.shape() || got.data() != want.data() {
-                return Err(Error::invariant(format!(
-                    "serve: output for request {i} is not bit-identical to the \
-                     direct forward"
-                )));
-            }
-        }
+        verify_bit_identity(direct.as_ref(), &inputs, &responses, &cfg.actq)?;
     }
     Ok(serve_metrics.report(
         backend.name(),
         model_name,
+        cfg.max_batch.max(1),
+        cfg.queue_depth.max(1),
+        wall_s,
+    ))
+}
+
+/// Serve a **packed quantized artifact** (`deploy::artifact`): the
+/// deployment path `repro serve --artifact <dir>` drives. The model
+/// named in the artifact header supplies structure and biases; the
+/// artifact supplies the packed weights (staged via
+/// [`Backend::prepare_artifact`] — dequant-on-the-fly on the host
+/// backend) and, when present, its activation-quant deployment config,
+/// which **overrides** `cfg.actq` so a saved W+A model serves exactly
+/// the configuration it was calibrated with. With `cfg.verify`, every
+/// response is re-checked bit-for-bit against a direct forward of the
+/// dequantized weights — i.e. serve-from-artifact vs
+/// quantize-then-forward.
+pub fn run_artifact_load_generator(
+    backend: &dyn Backend,
+    manifest: &Manifest,
+    artifact: &PackedModel,
+    cfg: &ServeConfig,
+    total: usize,
+    producers: usize,
+) -> Result<ServeReport> {
+    if total == 0 {
+        return Err(Error::config("serve: need at least one request"));
+    }
+    let producers = producers.clamp(1, total);
+    let model = backend.load_model(manifest, &artifact.model)?;
+    artifact.check_matches(&model)?;
+    let mut cfg = cfg.clone();
+    if let Some(params) = &artifact.act_params {
+        let bits: Vec<u8> = match &artifact.act_bits {
+            Some(b) => b.clone(),
+            None => {
+                // v1 dirs carry act_params but never recorded widths;
+                // the weight widths are the documented fallback — but
+                // only where they are usable activation widths (the
+                // actq grids shift by them).
+                let bits: Vec<u8> = artifact.layers.iter().map(|l| l.bits).collect();
+                if let Some(&b) = bits.iter().find(|&&b| !(1..=16).contains(&b)) {
+                    return Err(Error::config(format!(
+                        "artifact {}: v1 dir has act_params but no act_bits, and \
+                         weight width {b} is not a usable activation width — \
+                         re-save the model to migrate it to v2",
+                        artifact.model
+                    )));
+                }
+                log::warn!(
+                    "artifact {}: act_params without act_bits (v1 dir) — \
+                     serving with the weight widths",
+                    artifact.model
+                );
+                bits
+            }
+        };
+        cfg.actq = Some((params.clone(), bits));
+    }
+    let mut staged = Vec::new();
+    let prepared = backend.prepare_artifact(&model, artifact, &mut staged)?;
+    let inputs = gen_inputs(total, &manifest.dataset)?;
+    let serve_metrics = ServeMetrics::new();
+    let t0 = Instant::now();
+    let responses = run_session(
+        prepared.as_ref(),
+        &inputs,
+        &cfg,
+        total,
+        producers,
+        &serve_metrics,
+    );
+    let wall_s = t0.elapsed().as_secs_f64();
+    if cfg.verify {
+        let deq = artifact.dequantize_all()?;
+        let direct = backend.prepare(&model, &deq)?;
+        verify_bit_identity(direct.as_ref(), &inputs, &responses, &cfg.actq)?;
+    }
+    Ok(serve_metrics.report(
+        backend.name(),
+        &artifact.model,
         cfg.max_batch.max(1),
         cfg.queue_depth.max(1),
         wall_s,
