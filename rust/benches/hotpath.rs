@@ -214,6 +214,36 @@ fn host_benches(b: &Bencher) -> Vec<Stats> {
         all.push(lat);
     }
 
+    // fault-tolerant fleet serving: 2 supervised workers off the same
+    // bounded queue (the `serve::fleet` path — supervisors, per-worker
+    // prepared handles, split width caps). Tracked next to the
+    // single-worker row so supervision overhead shows up in the baseline.
+    let fleet_cfg = ServeConfig {
+        max_batch: 8,
+        queue_depth: 64,
+        workers: 2,
+        verify: false,
+        ..ServeConfig::default()
+    };
+    let mut fleet_report = None;
+    all.push(b.run("host/serve_fleet_e2e_256req_w2_b8", || {
+        let r = serve::run_load_generator(&be, &manifest, "synthnet", &fleet_cfg, 256, 4)
+            .unwrap();
+        assert_eq!(r.workers, 2);
+        assert_eq!(r.completed, 256);
+        assert!(r.accounting_balanced());
+        fleet_report = Some(r);
+    }));
+    if let Some(r) = fleet_report {
+        let lat = r.latency_stats("host/serve_fleet_request_latency_256req_w2_b8");
+        lat.print();
+        println!(
+            "  -> fleet throughput ~{:.0} req/s across {} workers (batches/worker {:?})",
+            r.throughput_rps, r.workers, r.worker_batches
+        );
+        all.push(lat);
+    }
+
     // deploy: bitstream pack/unpack of a resnet-layer-sized code vector
     // at 4 bits (the parallel byte-aligned-block kernels)
     let codes: Vec<u32> = {

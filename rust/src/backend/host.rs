@@ -793,6 +793,25 @@ impl Backend for HostBackend {
         &self.metrics
     }
 
+    fn worker_topology(&self, requested: usize) -> crate::backend::WorkerTopology {
+        // Serve workers block on the queue between batches, so running
+        // more workers than cores is fine (and what the fleet tests
+        // rely on for a deterministic worker count regardless of the
+        // machine); each worker's inner kernel fan-out is capped to its
+        // share of the pool so the fleet never oversubscribes *compute*.
+        // 32 bounds thread creation against absurd --workers values.
+        let workers = requested.clamp(1, 32);
+        let width = (self.pool.size() / workers).max(1);
+        crate::backend::WorkerTopology {
+            workers,
+            worker_width: width,
+            detail: format!(
+                "host pool of {} threads split {workers} × width {width}",
+                self.pool.size()
+            ),
+        }
+    }
+
     fn load_model(&self, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
         let info = manifest.model(name)?;
         if !info.w_files.is_empty() {

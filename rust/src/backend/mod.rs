@@ -161,6 +161,21 @@ pub trait CalibScan {
     fn state(&self) -> &ScanState;
 }
 
+/// How a backend maps a requested serve-fleet size onto its execution
+/// resources (see `serve::fleet`): how many supervised workers it will
+/// actually run and how wide each worker's inner kernel fan-out should
+/// be. The host backend splits the global thread pool across workers;
+/// a device backend runs one worker per device.
+#[derive(Debug, Clone)]
+pub struct WorkerTopology {
+    /// Workers the backend supports for this request (≥ 1).
+    pub workers: usize,
+    /// Per-worker kernel width cap; 0 = no split (full pool).
+    pub worker_width: usize,
+    /// Human-readable explanation for the serve banner/logs.
+    pub detail: String,
+}
+
 /// An execution backend: everything the coordinator needs to run the
 /// capture → calibrate → evaluate pipeline and the QAT comparator.
 pub trait Backend: Send + Sync {
@@ -177,6 +192,19 @@ pub trait Backend: Send + Sync {
     /// manifest's npy checkpoints; the host backend additionally
     /// constructs synthetic models (empty `w_files`) in memory.
     fn load_model(&self, manifest: &Manifest, name: &str) -> Result<LoadedModel>;
+
+    /// Map a requested serve-fleet size onto this backend's resources.
+    /// The default is the conservative single-worker topology; backends
+    /// that can run a real fleet override it (`host` splits the thread
+    /// pool, `pjrt` would run one worker per device).
+    fn worker_topology(&self, requested: usize) -> WorkerTopology {
+        let _ = requested;
+        WorkerTopology {
+            workers: 1,
+            worker_width: 0,
+            detail: "default single-worker topology".into(),
+        }
+    }
 
     /// Stage a weight set for forward / forward_actq / collect calls.
     fn prepare<'a>(

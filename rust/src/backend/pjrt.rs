@@ -278,6 +278,25 @@ impl Backend for PjrtBackend {
         &self.rt.metrics
     }
 
+    fn worker_topology(&self, requested: usize) -> crate::backend::WorkerTopology {
+        // One worker per device is the right fleet shape here, but the
+        // vendored PJRT surface exposes a single client with no device
+        // enumeration — so the honest answer today is one worker. A
+        // real client would enumerate addressable devices and stage one
+        // prepared handle (executable + resident weights) per device.
+        if requested > 1 {
+            log::warn!(
+                "serve: pjrt backend runs 1 worker (no device enumeration \
+                 in the vendored PJRT client); requested {requested}"
+            );
+        }
+        crate::backend::WorkerTopology {
+            workers: 1,
+            worker_width: 0,
+            detail: "pjrt: single device client".into(),
+        }
+    }
+
     fn load_model(&self, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
         LoadedModel::load(manifest, name)
     }

@@ -3,6 +3,7 @@
 use crate::backend::{Backend, PreparedModel};
 use crate::coordinator::model::LoadedModel;
 use crate::data::Split;
+use crate::deploy::artifact::PackedModel;
 use crate::io::manifest::Manifest;
 use crate::quant::observer::ActQuantParams;
 use crate::tensor::{ops, Tensor};
@@ -46,6 +47,31 @@ pub fn evaluate_actq(
     let batch = manifest.dataset.eval_batch;
     run_eval(backend, &model.info.name, eval, batch, |x| {
         prepared.forward_actq(x, act_params, act_bits)
+    })
+}
+
+/// Score a **packed quantized artifact** directly: top-1 through the
+/// backend's artifact staging path ([`Backend::prepare_artifact`] — the
+/// streaming dequant-on-the-fly `PackedHostForward` on the host
+/// backend), with the artifact's own activation deployment config
+/// ([`PackedModel::deployment_actq`]) when it carries one. This is what
+/// `repro evaluate --artifact <dir>` runs — the same handle the serve
+/// path drives, so the score measures exactly what deployment serves.
+pub fn evaluate_artifact(
+    backend: &dyn Backend,
+    manifest: &Manifest,
+    artifact: &PackedModel,
+    eval: &Split,
+) -> Result<f64> {
+    let model = backend.load_model(manifest, &artifact.model)?;
+    artifact.check_matches(&model)?;
+    let actq = artifact.deployment_actq()?;
+    let mut staged = Vec::new();
+    let prepared = backend.prepare_artifact(&model, artifact, &mut staged)?;
+    let batch = manifest.dataset.eval_batch;
+    run_eval(backend, &model.info.name, eval, batch, |x| match &actq {
+        Some((params, bits)) => prepared.forward_actq(x, params, bits),
+        None => prepared.forward(x),
     })
 }
 

@@ -277,6 +277,43 @@ impl PackedModel {
         (0..self.num_layers()).map(|li| self.dequantize(li)).collect()
     }
 
+    /// The activation-quant deployment config this artifact should be
+    /// *served and evaluated* with: `act_params` paired with `act_bits`
+    /// when present, or — for v1 dirs, which carried params but never
+    /// recorded widths — the weight widths as the documented fallback,
+    /// provided every one is a usable activation width (the actq grids
+    /// shift by them). `None` when the artifact has no activation
+    /// config (plain `forward`). Both the serve path and
+    /// `repro evaluate --artifact` resolve through here, so a saved W+A
+    /// model always runs exactly the configuration it was calibrated
+    /// with.
+    pub fn deployment_actq(&self) -> Result<Option<(Vec<ActQuantParams>, Vec<u8>)>> {
+        let Some(params) = &self.act_params else {
+            return Ok(None);
+        };
+        let bits: Vec<u8> = match &self.act_bits {
+            Some(b) => b.clone(),
+            None => {
+                let bits: Vec<u8> = self.layers.iter().map(|l| l.bits).collect();
+                if let Some(&b) = bits.iter().find(|&&b| !(1..=16).contains(&b)) {
+                    return Err(Error::config(format!(
+                        "artifact {}: v1 dir has act_params but no act_bits, and \
+                         weight width {b} is not a usable activation width — \
+                         re-save the model to migrate it to v2",
+                        self.model
+                    )));
+                }
+                log::warn!(
+                    "artifact {}: act_params without act_bits (v1 dir) — \
+                     serving with the weight widths",
+                    self.model
+                );
+                bits
+            }
+        };
+        Ok(Some((params.clone(), bits)))
+    }
+
     /// Weight-payload f32 baseline in bytes (what v1 stored).
     pub fn f32_bytes(&self) -> u64 {
         self.layers.iter().map(|l| l.params() as u64 * 4).sum()

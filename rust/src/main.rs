@@ -3,11 +3,13 @@
 //! ```text
 //! repro info                          artifact + model inventory
 //! repro evaluate  --model M           FP32 top-1 on the eval split
+//! repro evaluate  --artifact DIR      score a packed artifact's top-1
 //! repro quantize  --model M --wbits B [--abits B] [--method ...]
 //! repro allocate  --model M --bits 3,4,5,6      Algorithm-1 bit allocation
 //! repro pack      --model M [--mixed|--wbits B] [--abits B] [--pack-out D]
 //! repro qat       --model M --steps N           budgeted STE-QAT
 //! repro serve     --requests N [--batch B --max-wait-us U --queue-depth D]
+//!                 [--workers N --deadline-ms D --chaos <scenario|matrix>]
 //! repro serve     --artifact DIR                serve a packed artifact
 //! repro reproduce <table1..5|fig2|fig3|fig4|fig5|all>
 //! ```
@@ -67,8 +69,11 @@ fn parser() -> Parser {
         .opt("max-wait-us", Some("200"), "serve: micro-batch coalesce window (µs)")
         .opt("queue-depth", Some("64"), "serve: admission bound (reject beyond)")
         .opt("producers", Some("4"), "serve: load-generator producer threads")
-        .opt("worker-width", Some("0"), "serve: worker inner-parallelism cap (0 = full pool)")
-        .opt("artifact", None, "serve: packed artifact dir (serve a saved quantized model)")
+        .opt("worker-width", Some("0"), "serve: per-worker inner-parallelism cap (0 = split the pool across the fleet)")
+        .opt("workers", Some("1"), "serve: fleet size (supervised workers off the one queue)")
+        .opt("deadline-ms", None, "serve: per-request deadline in ms (expired requests are shed, never served stale)")
+        .opt("chaos", None, "serve: fault-injection scenario (worker-crash|slow-consumer|latency-spike|burst|mixed-size) or 'matrix' for all")
+        .opt("artifact", None, "packed artifact dir (serve or evaluate a saved quantized model)")
         .opt("pack-out", None, "pack: artifact output dir (default <out>/qmodels/<model>-<tag>)")
         .flag("mixed", "pack: Algorithm-1 per-layer bits from --bits/--eps2 instead of uniform --wbits")
         .flag("no-verify", "serve: skip the bit-identity check against direct forward")
@@ -172,6 +177,24 @@ fn pick_model(ctx: &Ctx, a: &attention_round::util::args::Args) -> Result<String
 
 fn cmd_evaluate(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
     let ctx = load_ctx(artifacts, a)?;
+    if let Ok(dir) = a.get("artifact") {
+        // score a packed artifact directly, through the same staging
+        // path the serve subsystem drives (dequant-on-the-fly on host)
+        let art = deploy::PackedModel::load(std::path::Path::new(dir))?;
+        let acc = evaluate::evaluate_artifact(
+            ctx.backend.as_ref(), &ctx.manifest, &art, &ctx.eval,
+        )?;
+        println!(
+            "{} [{}] from artifact {dir}: top-1 {}{} (packed at {}, FP {})",
+            art.model,
+            ctx.backend.name(),
+            pct(acc),
+            if art.act_params.is_some() { " (actq)" } else { "" },
+            pct(art.acc),
+            pct(art.fp_acc)
+        );
+        return Ok(());
+    }
     let model_name = pick_model(&ctx, a)?;
     let model = ctx.backend.load_model(&ctx.manifest, &model_name)?;
     let acc = evaluate::evaluate(
@@ -433,6 +456,45 @@ fn print_serve_report(ctx: &Ctx, report: &serve::ServeReport) -> Result<()> {
     Ok(())
 }
 
+/// Judge a chaos run against its scenario's SLO; a failed verdict is a
+/// hard error so CI chaos jobs exit nonzero.
+fn print_chaos_verdict(
+    cfg: &serve::ServeConfig,
+    report: &serve::ServeReport,
+) -> Result<()> {
+    if let Some(spec) = &cfg.chaos {
+        let v = serve::judge(spec, report);
+        println!("{}", v.line());
+        if !v.pass {
+            return Err(Error::invariant(format!(
+                "chaos scenario {:?} failed its SLO (lost {}, p99 {:.3}ms vs \
+                 target {:.0}ms)",
+                spec.name,
+                v.lost,
+                v.p99_s * 1e3,
+                v.p99_target_s * 1e3
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The `serve: clean shutdown` line the CI smoke jobs grep for, now with
+/// the full terminal-state accounting.
+fn shutdown_line(report: &serve::ServeReport) -> String {
+    format!(
+        "serve: clean shutdown ({} completed, {} rejected, {} expired, {} errors, \
+         {} restarts, accounting {}, {:.1} req/s)",
+        report.completed,
+        report.rejected,
+        report.expired,
+        report.errors,
+        report.restarts,
+        if report.accounting_balanced() { "balanced" } else { "UNBALANCED" },
+        report.throughput_rps
+    )
+}
+
 /// `repro serve` — the batched-serving load generator: keeps a prepared
 /// model hot behind the bounded request queue, drives `--requests`
 /// synthetic requests through the micro-batching worker, and reports
@@ -447,18 +509,42 @@ fn print_serve_report(ctx: &Ctx, report: &serve::ServeReport) -> Result<()> {
 /// path), FP32 activations otherwise.
 fn cmd_serve(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
     let ctx = load_ctx(artifacts, a)?;
+    let deadline = a
+        .get("deadline-ms")
+        .ok()
+        .map(|s| s.parse::<u64>())
+        .transpose()
+        .map_err(|_| Error::config("bad --deadline-ms"))?
+        .map(std::time::Duration::from_millis);
     let mut cfg = serve::ServeConfig {
         max_batch: a.get_usize("batch")?.max(1),
         max_wait: std::time::Duration::from_micros(a.get_usize("max-wait-us")? as u64),
         queue_depth: a.get_usize("queue-depth")?.max(1),
+        workers: a.get_usize("workers")?.max(1),
         worker_width: a.get_usize("worker-width")?,
+        deadline,
         verify: !a.has_flag("no-verify"),
         actq: None,
+        chaos: None,
+        fleet: serve::FleetConfig::default(),
     };
     let requests = a.get_usize("requests")?;
     let producers = a.get_usize("producers")?.max(1);
+    let chaos_arg = a.get("chaos").ok().map(str::to_string);
+    if let Some(name) = chaos_arg.as_deref() {
+        if name != "matrix" {
+            cfg.chaos = Some(serve::ChaosSpec::scenario(name, serve::CHAOS_SEED)?);
+            println!("chaos scenario {name:?} armed (seed {})", serve::CHAOS_SEED);
+        }
+    }
 
     if let Ok(dir) = a.get("artifact") {
+        if chaos_arg.as_deref() == Some("matrix") {
+            return Err(Error::config(
+                "--chaos matrix runs against the backend's own model; pass a \
+                 single scenario name with --artifact",
+            ));
+        }
         let art = deploy::PackedModel::load(std::path::Path::new(dir))?;
         if let Ok(s) = a.get("abits") {
             // A saved W+A artifact already carries its deployment
@@ -500,16 +586,14 @@ fn cmd_serve(artifacts: &str, a: &attention_round::util::args::Args) -> Result<(
             producers,
         )?;
         print_serve_report(&ctx, &report)?;
+        print_chaos_verdict(&cfg, &report)?;
         if cfg.verify {
             println!(
                 "verified: artifact serve outputs bit-identical to the \
                  dequantized direct forward"
             );
         }
-        println!(
-            "serve: clean shutdown ({} completed, {} rejected, {:.1} req/s)",
-            report.completed, report.rejected, report.throughput_rps
-        );
+        println!("{}", shutdown_line(&report));
         return Ok(());
     }
 
@@ -519,14 +603,64 @@ fn cmd_serve(artifacts: &str, a: &attention_round::util::args::Args) -> Result<(
         cfg.actq = Some(derive_actq(&ctx, &model_name, abits)?);
         println!("serving through forward_actq at {abits}b activations (observer-calibrated)");
     }
+    if chaos_arg.as_deref() == Some("matrix") {
+        println!(
+            "chaos matrix: {} scenarios × {requests} requests on {} [{}]",
+            serve::SCENARIOS.len(),
+            model_name,
+            ctx.backend.platform()
+        );
+        let results = serve::run_matrix(
+            ctx.backend.as_ref(),
+            &ctx.manifest,
+            &model_name,
+            &cfg,
+            requests,
+            producers,
+            serve::CHAOS_SEED,
+        )?;
+        let mut entries = Vec::new();
+        let mut failed = Vec::new();
+        for (spec, report, verdict) in &results {
+            println!("{}", report.table().render());
+            println!("{}", verdict.line());
+            if !verdict.pass {
+                failed.push(spec.name.clone());
+            }
+            entries.push(verdict.to_json());
+        }
+        let json = format!(
+            "{{\n  \"chaos_matrix\": [\n    {}\n  ]\n}}",
+            entries.join(",\n    ")
+        );
+        println!("{json}");
+        let json_path = ctx.out_dir.join("chaos.json");
+        std::fs::write(&json_path, &json)?;
+        println!("wrote {}", json_path.display());
+        if !failed.is_empty() {
+            return Err(Error::invariant(format!(
+                "chaos matrix: scenarios failed their SLO: {failed:?}"
+            )));
+        }
+        println!(
+            "chaos matrix: all {} scenarios passed their SLO",
+            results.len()
+        );
+        return Ok(());
+    }
     println!(
-        "serving {requests} requests ({} producers) on {} [{}], batch ≤{} / wait {}µs / queue {}",
+        "serving {requests} requests ({} producers) on {} [{}], {} worker(s), \
+         batch ≤{} / wait {}µs / queue {}{}",
         producers,
         model_name,
         ctx.backend.platform(),
+        cfg.workers,
         cfg.max_batch,
         cfg.max_wait.as_micros(),
-        cfg.queue_depth
+        cfg.queue_depth,
+        cfg.deadline
+            .map(|d| format!(" / deadline {}ms", d.as_millis()))
+            .unwrap_or_default()
     );
     let report = serve::run_load_generator(
         ctx.backend.as_ref(),
@@ -537,11 +671,11 @@ fn cmd_serve(artifacts: &str, a: &attention_round::util::args::Args) -> Result<(
         producers,
     )?;
     print_serve_report(&ctx, &report)?;
+    print_chaos_verdict(&cfg, &report)?;
     if cfg.verify {
         println!("verified: serve outputs bit-identical to direct forward");
     }
-    println!("serve: clean shutdown ({} completed, {} rejected, {:.1} req/s)",
-        report.completed, report.rejected, report.throughput_rps);
+    println!("{}", shutdown_line(&report));
     Ok(())
 }
 

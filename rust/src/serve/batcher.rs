@@ -9,6 +9,10 @@
 //! `backend::host` tests), so pad rows cost compute but never change a
 //! real row — and they are never returned: responses are sliced from the
 //! first `requests.len()` rows only.
+//!
+//! Mixed-size traffic never reaches [`coalesce`]: the worker splits each
+//! pop into same-shape groups first (`serve::worker`), so the shape
+//! check here is defense in depth, not the routing mechanism.
 
 use crate::serve::queue::ServeRequest;
 use crate::tensor::Tensor;
@@ -82,6 +86,7 @@ mod tests {
             id,
             input: Tensor::new(shape, data).unwrap(),
             submitted: Instant::now(),
+            deadline: None,
             tx,
         }
     }

@@ -1,0 +1,284 @@
+//! Worker supervision: N serve workers off the one bounded queue, each
+//! under a supervisor that catches panics, restarts with bounded
+//! exponential backoff, and trips a circuit breaker on a restart storm.
+//!
+//! The PR-4 single-worker session tied shutdown to a `ShutdownGuard`
+//! inside the one worker thread: worker dies → queue closes → the run
+//! drains. With a fleet that is wrong twice over — one worker's panic
+//! must *not* end the session (the supervisor restarts it and the queue
+//! keeps its contents), and the queue must close only when the *last*
+//! supervisor gives up or finishes. So the guard is hoisted to the fleet
+//! level: [`supervise`] holds a [`LastWorkerOut`] whose `Drop`
+//! decrements a shared alive-counter and, at zero, closes the queue and
+//! answers everything still queued with a typed
+//! [`ServeOutcome::Failed`] — no submitted request is ever silently
+//! dropped, even if every worker dies.
+//!
+//! Failure layering (who answers what):
+//! * a panic mid-batch → the worker's own in-flight guard
+//!   (`serve::worker`) fails over exactly the popped requests;
+//! * the supervisor catches the panic, restarts the worker after
+//!   backoff — queued requests are untouched;
+//! * restarts past [`FleetConfig::max_restarts`] trip the breaker: that
+//!   supervisor exits, and if it was the last one alive,
+//!   [`LastWorkerOut`] drain-fails the backlog.
+//!
+//! Supervisors never propagate panics to the session scope — a chaos
+//! run with injected crashes still joins cleanly and reports.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crate::backend::PreparedModel;
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::queue::{RequestQueue, ServeOutcome, ServeResponse};
+use crate::serve::worker::{run_worker, WorkerConfig};
+
+/// Supervision knobs.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// First restart delay; doubles per consecutive restart.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+    /// Circuit breaker: give up on a worker after this many restarts.
+    pub max_restarts: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            backoff_base: Duration::from_micros(500),
+            backoff_max: Duration::from_millis(50),
+            max_restarts: 5,
+        }
+    }
+}
+
+/// Render a `catch_unwind` payload (worker panics carry `&str` or
+/// `String`; anything else gets a placeholder).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Last-supervisor-out shutdown guard: decrements `alive` on drop; the
+/// supervisor that brings it to zero closes the queue and answers the
+/// remaining backlog with `Failed`, so producers stop retrying and the
+/// collector terminates instead of hanging.
+struct LastWorkerOut<'a> {
+    queue: &'a RequestQueue,
+    alive: &'a AtomicUsize,
+}
+
+impl Drop for LastWorkerOut<'_> {
+    fn drop(&mut self) {
+        if self.alive.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.queue.close();
+            while let Some(reqs) = self.queue.pop_batch(64, Duration::ZERO) {
+                for r in reqs {
+                    let _ = r.tx.send(ServeResponse {
+                        id: r.id,
+                        outcome: ServeOutcome::Failed(
+                            "serve fleet: all workers terminated".into(),
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Run one supervised worker until the queue closes cleanly or the
+/// restart breaker trips. `alive` must start at the fleet's worker
+/// count; every supervisor decrements it exactly once on exit (panic
+/// paths included — the guard is a `Drop`).
+///
+/// A worker panic is *contained* here: the in-flight requests were
+/// already failed over by the worker's own guard, the queue keeps its
+/// contents, and the worker restarts after `backoff_base · 2ⁿ` (capped
+/// at `backoff_max`). A clean `run_worker` return (queue closed and
+/// drained) ends supervision without touching the queue.
+pub fn supervise(
+    worker_id: usize,
+    prepared: &dyn PreparedModel,
+    queue: &RequestQueue,
+    cfg: &WorkerConfig,
+    metrics: &ServeMetrics,
+    fleet: &FleetConfig,
+    alive: &AtomicUsize,
+) {
+    let _last_out = LastWorkerOut { queue, alive };
+    let mut restarts = 0usize;
+    let mut backoff = fleet.backoff_base;
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            run_worker(worker_id, prepared, queue, cfg, metrics)
+        }));
+        match run {
+            Ok(()) => return, // queue closed and drained: clean exit
+            Err(payload) => {
+                let msg = panic_message(&payload);
+                if restarts >= fleet.max_restarts {
+                    log::error!(
+                        "serve fleet: worker {worker_id} panicked ({msg}) after \
+                         {restarts} restarts — circuit breaker open, giving up"
+                    );
+                    return; // LastWorkerOut answers the backlog if we're last
+                }
+                restarts += 1;
+                metrics.record_restart();
+                log::warn!(
+                    "serve fleet: worker {worker_id} panicked ({msg}); \
+                     restart {restarts}/{} after {backoff:?}",
+                    fleet.max_restarts
+                );
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(fleet.backoff_max);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::observer::ActQuantParams;
+    use crate::serve::queue::ServeRequest;
+    use crate::tensor::Tensor;
+    use crate::util::error::Result;
+    use crate::util::threadpool;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    /// Forward either panics every call or returns `[rows, 1]` zeros.
+    struct StubPrep {
+        panic_always: bool,
+    }
+
+    impl PreparedModel for StubPrep {
+        fn forward(&self, x: &Tensor) -> Result<Tensor> {
+            if self.panic_always {
+                panic!("stub: injected forward panic");
+            }
+            Ok(Tensor::zeros(vec![x.shape()[0], 1]))
+        }
+        fn forward_actq(
+            &self,
+            x: &Tensor,
+            _p: &[ActQuantParams],
+            _b: &[u8],
+        ) -> Result<Tensor> {
+            self.forward(x)
+        }
+        fn collect(&self, x: &Tensor) -> Result<(Vec<Tensor>, Tensor)> {
+            Ok((Vec::new(), self.forward(x)?))
+        }
+    }
+
+    fn wcfg() -> WorkerConfig {
+        WorkerConfig {
+            max_batch: 2,
+            max_wait: Duration::from_micros(50),
+            width: 1,
+            actq: None,
+            chaos: None,
+        }
+    }
+
+    fn fast_fleet(max_restarts: usize) -> FleetConfig {
+        FleetConfig {
+            backoff_base: Duration::from_micros(10),
+            backoff_max: Duration::from_micros(100),
+            max_restarts,
+        }
+    }
+
+    #[test]
+    fn clean_queue_close_ends_supervision_without_restarts() {
+        let prep = StubPrep { panic_always: false };
+        let queue = RequestQueue::new(4);
+        let metrics = ServeMetrics::new();
+        let alive = AtomicUsize::new(1);
+        let (tx, rx) = channel::<ServeResponse>();
+        queue
+            .push(ServeRequest {
+                id: 0,
+                input: Tensor::zeros(vec![2]),
+                submitted: Instant::now(),
+                deadline: None,
+                tx,
+            })
+            .unwrap();
+        queue.close();
+        supervise(0, &prep, &queue, &wcfg(), &metrics, &fast_fleet(3), &alive);
+        let resp = rx.recv().unwrap();
+        assert!(matches!(resp.outcome, ServeOutcome::Answer(_)));
+        assert_eq!(metrics.report("host", "stub", 2, 4, 1, 0.1).restarts, 0);
+        assert_eq!(alive.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn restart_storm_trips_breaker_and_fails_backlog() {
+        let prep = StubPrep { panic_always: true };
+        let queue = RequestQueue::new(16);
+        let metrics = ServeMetrics::new();
+        let alive = AtomicUsize::new(1);
+        let mut rxs = Vec::new();
+        for id in 0..8u64 {
+            let (tx, rx) = channel::<ServeResponse>();
+            queue
+                .push(ServeRequest {
+                    id,
+                    input: Tensor::zeros(vec![2]),
+                    submitted: Instant::now(),
+                    deadline: None,
+                    tx,
+                })
+                .unwrap();
+            rxs.push(rx);
+        }
+        supervise(0, &prep, &queue, &wcfg(), &metrics, &fast_fleet(2), &alive);
+        // breaker: exactly max_restarts restarts were attempted, then the
+        // last supervisor out closed the queue and failed the backlog —
+        // every request still gets exactly one terminal response
+        let report = metrics.report("host", "stub", 2, 16, 1, 0.1);
+        assert_eq!(report.restarts, 2);
+        assert!(queue.is_closed());
+        for rx in &rxs {
+            let resp = rx.recv().expect("exactly one terminal response");
+            assert!(
+                matches!(resp.outcome, ServeOutcome::Failed(_)),
+                "panicking worker must fail requests, not answer them"
+            );
+            assert!(rx.try_recv().is_err(), "no double-response");
+        }
+    }
+
+    #[test]
+    fn width_cap_restored_after_worker_panic() {
+        // `with_width_cap`'s restore is a Drop guard, so an unwinding
+        // worker must put the thread-local cap back — a restarted worker
+        // on the same supervisor thread sees the full pool again.
+        let before = threadpool::current_width_cap();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            threadpool::with_width_cap(1, || -> usize { panic!("boom") })
+        }));
+        assert!(r.is_err());
+        assert_eq!(threadpool::current_width_cap(), before);
+    }
+
+    #[test]
+    fn panic_message_extracts_both_payload_kinds() {
+        let s = catch_unwind(|| panic!("static")).unwrap_err();
+        assert_eq!(panic_message(&*s), "static");
+        let owned = catch_unwind(|| panic!("{}-{}", 1, 2)).unwrap_err();
+        assert_eq!(panic_message(&*owned), "1-2");
+    }
+}

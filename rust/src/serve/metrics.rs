@@ -1,7 +1,21 @@
 //! Serving metrics: per-request latency histogram, queue-depth and
-//! batch-size distributions, admission-control counters, and sustained
-//! throughput — collected lock-cheap during the run, summarized into a
-//! [`ServeReport`] at shutdown.
+//! batch-size distributions, terminal-state accounting, fleet restart
+//! counts, and sustained throughput — collected lock-cheap during the
+//! run, summarized into a [`ServeReport`] at shutdown.
+//!
+//! Counting discipline (one site per number, so chaos runs can assert
+//! exact balances):
+//! * producers record `submitted` (once per request), admission
+//!   `rejected` samples (retries each count) and queue depth;
+//! * workers record latencies — **answers only**, so `completed` is
+//!   exactly the answered set — and per-worker batch geometry;
+//! * the response collector is the single counting site for terminal
+//!   `expired` / `errors` / `rejected_final`;
+//! * fleet supervisors record `restarts`.
+//!
+//! [`ServeReport::accounting_balanced`] then checks the zero-lost
+//! invariant: every submitted request reached exactly one terminal
+//! state (`submitted == completed + rejected_final + expired + errors`).
 //!
 //! Percentiles (p50/p95/p99) come from the same O(n) select-nth
 //! machinery the activation observers use
@@ -24,13 +38,19 @@ struct MetricsInner {
     latencies_s: Vec<f32>,
     batch_real: Vec<u32>,
     depth_samples: Vec<u32>,
+    worker_batches: Vec<u64>,
     padded_rows: u64,
+    submitted: u64,
     rejected: u64,
+    rejected_final: u64,
+    expired: u64,
     errors: u64,
+    restarts: u64,
 }
 
-/// Shared collector: producers record admission samples, the worker
-/// records batches and latencies, the collector records errors.
+/// Shared collector: producers record admission samples, workers record
+/// batches and latencies, the collector records terminal states, the
+/// fleet records restarts.
 #[derive(Default)]
 pub struct ServeMetrics {
     inner: Mutex<MetricsInner>,
@@ -41,7 +61,12 @@ impl ServeMetrics {
         Self::default()
     }
 
-    /// Admission→response latency of one completed request.
+    /// One request entering the system (before its first push attempt).
+    pub fn record_submitted(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    /// Admission→response latency of one *answered* request.
     pub fn record_latency(&self, d: Duration) {
         self.inner
             .lock()
@@ -50,11 +75,16 @@ impl ServeMetrics {
             .push(d.as_secs_f32());
     }
 
-    /// One executed batch: `real` request rows and `padded` zero rows.
-    pub fn record_batch(&self, real: usize, padded: usize) {
+    /// One executed batch on `worker_id`: `real` request rows and
+    /// `padded` zero rows.
+    pub fn record_batch(&self, worker_id: usize, real: usize, padded: usize) {
         let mut g = self.inner.lock().unwrap();
         g.batch_real.push(real as u32);
         g.padded_rows += padded as u64;
+        if g.worker_batches.len() <= worker_id {
+            g.worker_batches.resize(worker_id + 1, 0);
+        }
+        g.worker_batches[worker_id] += 1;
     }
 
     /// Queue depth observed right after an accepted push.
@@ -62,24 +92,42 @@ impl ServeMetrics {
         self.inner.lock().unwrap().depth_samples.push(depth as u32);
     }
 
-    /// One admission-control rejection (queue full).
+    /// One admission-control rejection (queue full; the producer may
+    /// retry, so this counts *events*, not requests).
     pub fn record_rejected(&self) {
         self.inner.lock().unwrap().rejected += 1;
     }
 
-    /// One request that came back with an error response.
+    /// One request whose *terminal* state is an admission rejection
+    /// (queue closed before it ever got in).
+    pub fn record_rejected_final(&self) {
+        self.inner.lock().unwrap().rejected_final += 1;
+    }
+
+    /// One request shed past its deadline (terminal `Expired`).
+    pub fn record_expired(&self) {
+        self.inner.lock().unwrap().expired += 1;
+    }
+
+    /// One request answered with a failure (terminal `Failed`).
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
     }
 
-    /// Summarize into a report. `wall_s` is the whole run's wall clock
-    /// (throughput = completed / wall).
+    /// One supervised worker restart after a panic.
+    pub fn record_restart(&self) {
+        self.inner.lock().unwrap().restarts += 1;
+    }
+
+    /// Summarize into a report. `workers` is the fleet size; `wall_s` is
+    /// the whole run's wall clock (throughput = completed / wall).
     pub fn report(
         &self,
         backend: &str,
         model: &str,
         max_batch: usize,
         queue_depth: usize,
+        workers: usize,
         wall_s: f64,
     ) -> ServeReport {
         let g = self.inner.lock().unwrap();
@@ -105,15 +153,25 @@ impl ServeMetrics {
         let depth_sum: u64 = g.depth_samples.iter().map(|&d| d as u64).sum();
         let depth_mean = if depth_n == 0 { 0.0 } else { depth_sum as f64 / depth_n as f64 };
         let depth_max = g.depth_samples.iter().cloned().max().unwrap_or(0) as u64;
+        let mut worker_batches = g.worker_batches.clone();
+        if worker_batches.len() < workers {
+            worker_batches.resize(workers, 0);
+        }
         ServeReport {
             backend: backend.to_string(),
             model: model.to_string(),
             max_batch,
             queue_depth,
+            workers,
+            submitted: g.submitted,
             completed: n as u64,
             rejected: g.rejected,
+            rejected_final: g.rejected_final,
+            expired: g.expired,
             errors: g.errors,
+            restarts: g.restarts,
             batches,
+            worker_batches,
             padded_rows: g.padded_rows,
             batch_mean,
             batch_max,
@@ -139,14 +197,26 @@ pub struct ServeReport {
     pub model: String,
     pub max_batch: usize,
     pub queue_depth: usize,
-    /// Requests that received a successful response.
+    /// Fleet size (supervised workers off the one queue).
+    pub workers: usize,
+    /// Requests that entered the system.
+    pub submitted: u64,
+    /// Requests that received an answer (terminal `Answer`).
     pub completed: u64,
-    /// Admission-control rejections (each may have been retried).
+    /// Admission-control rejection *events* (each may have been retried).
     pub rejected: u64,
-    /// Requests answered with an error.
+    /// Requests whose terminal state is a rejection (queue closed).
+    pub rejected_final: u64,
+    /// Requests shed past their deadline (terminal `Expired`).
+    pub expired: u64,
+    /// Requests answered with an error (terminal `Failed`).
     pub errors: u64,
-    /// Batches executed.
+    /// Supervised worker restarts (panic recoveries).
+    pub restarts: u64,
+    /// Batches executed, fleet-wide.
     pub batches: u64,
+    /// Batches executed per worker (index = worker id).
+    pub worker_batches: Vec<u64>,
     /// Zero pad rows executed across all batches.
     pub padded_rows: u64,
     pub batch_mean: f64,
@@ -166,10 +236,24 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// The zero-lost-requests invariant: every submitted request reached
+    /// exactly one terminal state.
+    pub fn accounting_balanced(&self) -> bool {
+        self.submitted
+            == self.completed + self.rejected_final + self.expired + self.errors
+    }
+
     /// JSON object in the same hand-rolled style as
     /// [`crate::bench_harness::write_json`]; round-trips through
-    /// [`crate::util::json::parse`].
+    /// [`crate::util::json::parse`]. Pre-fleet keys are kept stable
+    /// (CI's smoke asserts read them); fleet-era keys are additive.
     pub fn to_json(&self) -> String {
+        let worker_batches = self
+            .worker_batches
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
         format!(
             concat!(
                 "{{\n",
@@ -178,10 +262,17 @@ impl ServeReport {
                 "    \"model\": \"{}\",\n",
                 "    \"max_batch\": {},\n",
                 "    \"queue_depth\": {},\n",
+                "    \"workers\": {},\n",
+                "    \"submitted\": {},\n",
                 "    \"completed\": {},\n",
                 "    \"rejected\": {},\n",
+                "    \"rejected_final\": {},\n",
+                "    \"expired\": {},\n",
                 "    \"errors\": {},\n",
+                "    \"restarts\": {},\n",
+                "    \"accounting_balanced\": {},\n",
                 "    \"batches\": {},\n",
+                "    \"worker_batches\": [{}],\n",
                 "    \"padded_rows\": {},\n",
                 "    \"batch_size_mean\": {:e},\n",
                 "    \"batch_size_max\": {},\n",
@@ -198,10 +289,17 @@ impl ServeReport {
             self.model,
             self.max_batch,
             self.queue_depth,
+            self.workers,
+            self.submitted,
             self.completed,
             self.rejected,
+            self.rejected_final,
+            self.expired,
             self.errors,
+            self.restarts,
+            self.accounting_balanced(),
             self.batches,
+            worker_batches,
             self.padded_rows,
             self.batch_mean,
             self.batch_max,
@@ -222,16 +320,41 @@ impl ServeReport {
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             format!(
-                "Serve — {} on {} (batch ≤{}, queue {})",
-                self.model, self.backend, self.max_batch, self.queue_depth
+                "Serve — {} on {} ({} worker{}, batch ≤{}, queue {})",
+                self.model,
+                self.backend,
+                self.workers,
+                if self.workers == 1 { "" } else { "s" },
+                self.max_batch,
+                self.queue_depth
             ),
             &["Metric", "Value"],
         );
         let rows: Vec<(&str, String)> = vec![
+            ("submitted", self.submitted.to_string()),
             ("completed", self.completed.to_string()),
-            ("rejected (admission)", self.rejected.to_string()),
+            ("rejected (admission events)", self.rejected.to_string()),
+            ("rejected (terminal)", self.rejected_final.to_string()),
+            ("expired (deadline shed)", self.expired.to_string()),
             ("errors", self.errors.to_string()),
+            (
+                "accounting",
+                if self.accounting_balanced() {
+                    "balanced".into()
+                } else {
+                    format!(
+                        "UNBALANCED ({} submitted vs {} terminal)",
+                        self.submitted,
+                        self.completed + self.rejected_final + self.expired + self.errors
+                    )
+                },
+            ),
+            ("worker restarts", self.restarts.to_string()),
             ("batches", self.batches.to_string()),
+            (
+                "batches per worker",
+                format!("{:?}", self.worker_batches),
+            ),
             ("padded rows", self.padded_rows.to_string()),
             (
                 "batch size mean/max",
@@ -271,25 +394,36 @@ mod tests {
 
     fn filled() -> ServeMetrics {
         let m = ServeMetrics::new();
+        for _ in 0..103 {
+            m.record_submitted();
+        }
         for i in 0..100u32 {
             m.record_latency(Duration::from_micros(100 + i as u64));
         }
-        m.record_batch(16, 0);
-        m.record_batch(4, 12);
+        m.record_batch(0, 16, 0);
+        m.record_batch(1, 4, 12);
         m.record_depth(3);
         m.record_depth(9);
         m.record_rejected();
+        m.record_rejected_final();
+        m.record_expired();
         m.record_error();
+        m.record_restart();
         m
     }
 
     #[test]
     fn percentiles_ordered_and_counts_roll_up() {
-        let r = filled().report("host", "synthnet", 16, 64, 0.5);
+        let r = filled().report("host", "synthnet", 16, 64, 2, 0.5);
+        assert_eq!(r.submitted, 103);
         assert_eq!(r.completed, 100);
         assert_eq!(r.rejected, 1);
+        assert_eq!(r.rejected_final, 1);
+        assert_eq!(r.expired, 1);
         assert_eq!(r.errors, 1);
+        assert_eq!(r.restarts, 1);
         assert_eq!(r.batches, 2);
+        assert_eq!(r.worker_batches, vec![1, 1]);
         assert_eq!(r.padded_rows, 12);
         assert_eq!(r.batch_max, 16);
         assert!((r.batch_mean - 10.0).abs() < 1e-9);
@@ -297,14 +431,33 @@ mod tests {
         assert!(r.lat_p50_s <= r.lat_p95_s && r.lat_p95_s <= r.lat_p99_s);
         assert!(r.lat_min_s > 0.0 && r.lat_max_s >= r.lat_p99_s);
         assert!((r.throughput_rps - 200.0).abs() < 1e-6);
+        // 103 submitted = 100 answered + 1 rejected + 1 expired + 1 error
+        assert!(r.accounting_balanced());
+    }
+
+    #[test]
+    fn accounting_detects_lost_requests() {
+        let m = ServeMetrics::new();
+        m.record_submitted();
+        m.record_submitted();
+        m.record_latency(Duration::from_micros(5)); // only 1 of 2 terminal
+        let r = m.report("host", "m", 8, 8, 1, 0.1);
+        assert!(!r.accounting_balanced());
+        assert!(r.to_json().contains("\"accounting_balanced\": false"));
     }
 
     #[test]
     fn json_roundtrips_through_parser() {
-        let r = filled().report("host", "synthnet", 16, 64, 0.5);
+        let r = filled().report("host", "synthnet", 16, 64, 2, 0.5);
         let j = crate::util::json::parse(&r.to_json()).unwrap();
         let s = j.get("serve").unwrap();
         assert_eq!(s.get("completed").unwrap().as_f64().unwrap(), 100.0);
+        assert_eq!(s.get("submitted").unwrap().as_f64().unwrap(), 103.0);
+        assert_eq!(s.get("workers").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(s.get("restarts").unwrap().as_f64().unwrap(), 1.0);
+        assert!(s.get("accounting_balanced").unwrap().as_bool().unwrap());
+        let wb = s.get("worker_batches").unwrap().as_arr().unwrap();
+        assert_eq!(wb.len(), 2);
         assert!(s.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
         let lat = s.get("latency_s").unwrap();
         assert!(lat.get("p99").unwrap().as_f64().unwrap() > 0.0);
@@ -312,18 +465,21 @@ mod tests {
 
     #[test]
     fn empty_run_reports_zeros() {
-        let r = ServeMetrics::new().report("host", "m", 8, 8, 0.0);
+        let r = ServeMetrics::new().report("host", "m", 8, 8, 1, 0.0);
         assert_eq!(r.completed, 0);
         assert_eq!(r.throughput_rps, 0.0);
         assert_eq!(r.lat_p50_s, 0.0);
         assert_eq!(r.lat_min_s, 0.0);
+        assert!(r.accounting_balanced(), "0 == 0 balances");
+        // worker_batches padded to the fleet size even with no batches
+        assert_eq!(r.worker_batches, vec![0]);
         // JSON stays parseable with zero samples
         assert!(crate::util::json::parse(&r.to_json()).is_ok());
     }
 
     #[test]
     fn latency_stats_bridge() {
-        let r = filled().report("host", "m", 8, 8, 1.0);
+        let r = filled().report("host", "m", 8, 8, 1, 1.0);
         let s = r.latency_stats("host/serve_latency");
         assert_eq!(s.iters, 100);
         assert!(s.mean_s > 0.0 && s.min_s <= s.median_s && s.median_s <= s.max_s);

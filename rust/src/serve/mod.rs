@@ -2,33 +2,43 @@
 //! calibration.
 //!
 //! The PTQ pipeline's output — a quantized weight set — only pays off
-//! behind an inference path. This module keeps a
-//! [`crate::backend::PreparedModel`] **hot** (staged once via
-//! [`crate::backend::Backend::prepare_serving`]) and streams request
-//! batches through it:
+//! behind an inference path. This module keeps
+//! [`crate::backend::PreparedModel`]s **hot** (staged via
+//! [`crate::backend::Backend::prepare_serving`], one handle per fleet
+//! worker) and streams request batches through them:
 //!
 //! ```text
 //!  producers ──push──► RequestQueue (bounded, reject-on-full)
 //!                          │ pop_batch(max_batch, max_wait)
+//!             ┌────────────┼────────────┐
+//!             ▼            ▼            ▼
+//!         worker 0     worker 1  …  worker N-1     (fleet: each under a
+//!         (shed expired → shape-group → pad →       supervisor with
+//!          one forward per micro-batch)             restart + breaker)
+//!             └────────────┼────────────┘
 //!                          ▼
-//!                     micro-batcher (stack + pad to max_batch rows)
-//!                          │ one forward per batch
-//!                          ▼
-//!                     serve worker (hot PreparedModel, width-capped)
-//!                          │ per-request logits rows
-//!                          ▼
-//!                     response channels + ServeMetrics
+//!              response channel + ServeMetrics
+//!              (collector: single counting site
+//!               for terminal states)
 //! ```
 //!
 //! * [`queue`] — bounded MPSC admission queue; typed
-//!   [`queue::AdmissionError`] on overload.
+//!   [`queue::AdmissionError`] on overload; [`queue::ServeOutcome`] is
+//!   every request's exactly-one terminal state.
 //! * [`batcher`] — request coalescing and zero-row padding.
-//! * [`worker`] — the hot loop; nested parallelism bounded by
-//!   [`crate::util::threadpool::with_width_cap`].
-//! * [`metrics`] — latency percentiles (select-nth), queue depth, batch
-//!   sizes, throughput; JSON / table / bench-baseline reporting.
+//! * [`worker`] — the hot loop; deadline shedding *before* compute,
+//!   same-shape grouping, in-flight fail-over guard; nested parallelism
+//!   bounded by [`crate::util::threadpool::with_width_cap`].
+//! * [`fleet`] — worker supervision: panic containment, bounded
+//!   exponential restart backoff, restart-storm circuit breaker,
+//!   last-worker-out shutdown.
+//! * [`chaos`] — deterministic fault injection and hostile traffic
+//!   shapes, with per-scenario SLO verdicts.
+//! * [`metrics`] — latency percentiles (select-nth), terminal-state
+//!   accounting, per-worker batch counts, restarts, throughput; JSON /
+//!   table / bench-baseline reporting.
 //!
-//! Serve-path outputs are **bit-identical** to a direct `forward` of the
+//! Serve-path answers are **bit-identical** to a direct `forward` of the
 //! same samples (rows are computed independently of their batch
 //! neighbours; `rust/tests/serve.rs` asserts it end-to-end), so putting
 //! a model behind the queue never changes what it predicts.
@@ -36,14 +46,18 @@
 //! [`run_load_generator`] is the self-driving mode: it generates its own
 //! traffic against the synthetic host model (or any backend's model), so
 //! CI exercises the full path on a bare checkout — see the `repro serve`
-//! subcommand.
+//! subcommand and the `--chaos` scenario matrix.
 
 pub mod batcher;
+pub mod chaos;
+pub mod fleet;
 pub mod metrics;
 pub mod queue;
 pub mod worker;
 
+use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::backend::{Backend, PreparedModel};
@@ -56,8 +70,15 @@ use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 use crate::util::threadpool;
 
+pub use chaos::{
+    judge, run_matrix, Arrivals, ArrivalGate, ChaosSpec, SloVerdict, WorkerChaos,
+    CHAOS_SEED, SCENARIOS,
+};
+pub use fleet::{supervise, FleetConfig};
 pub use metrics::{ServeMetrics, ServeReport};
-pub use queue::{AdmissionError, Rejected, RequestQueue, ServeRequest, ServeResponse};
+pub use queue::{
+    AdmissionError, Rejected, RequestQueue, ServeOutcome, ServeRequest, ServeResponse,
+};
 pub use worker::{run_worker, WorkerConfig};
 
 /// Seed for load-generator traffic — disjoint from the calibration /
@@ -79,16 +100,29 @@ pub struct ServeConfig {
     pub max_wait: Duration,
     /// Admission bound: queued requests beyond this are rejected.
     pub queue_depth: usize,
-    /// Width cap for the worker's inner kernel fan-out; 0 = the full
-    /// global pool.
+    /// Requested fleet size; the backend's
+    /// [`crate::backend::WorkerTopology`] decides what it actually
+    /// supports (`--workers`).
+    pub workers: usize,
+    /// Width cap for each worker's inner kernel fan-out; 0 = let the
+    /// backend topology split the pool across the fleet.
     pub worker_width: usize,
-    /// Re-check every response against a direct `forward` of the same
-    /// sample (bit-identity); load-generator mode only.
+    /// Per-request deadline (`--deadline-ms`): requests unserved past it
+    /// are shed before compute and answered [`ServeOutcome::Expired`].
+    /// `None` = never expire (a chaos scenario may still set one).
+    pub deadline: Option<Duration>,
+    /// Re-check every answered response against a direct `forward` of
+    /// the same sample (bit-identity); load-generator mode only.
     pub verify: bool,
     /// Serve through `forward_actq` with these per-layer params/bits
     /// (the quantized-activation deployment path); `None` = plain
     /// `forward`.
     pub actq: Option<(Vec<ActQuantParams>, Vec<u8>)>,
+    /// Deterministic fault-injection scenario (`--chaos`); `None` in
+    /// production.
+    pub chaos: Option<ChaosSpec>,
+    /// Supervision knobs (restart backoff, circuit breaker).
+    pub fleet: FleetConfig,
 }
 
 impl Default for ServeConfig {
@@ -97,81 +131,105 @@ impl Default for ServeConfig {
             max_batch: 16,
             max_wait: Duration::from_micros(200),
             queue_depth: 64,
+            workers: 1,
             worker_width: 0,
+            deadline: None,
             verify: true,
             actq: None,
+            chaos: None,
+            fleet: FleetConfig::default(),
         }
     }
 }
 
-/// Synthetic request traffic shaped like the manifest's dataset: the
-/// class-textured generator when the dims match it, seeded Gaussian
-/// noise otherwise (serving latency does not care about label
-/// structure).
-fn gen_inputs(total: usize, ds: &DatasetInfo) -> Result<Tensor> {
-    if ds.image_hw == synth::IMG && ds.channels == synth::CHANNELS {
-        Ok(synth::generate(total, LOADGEN_SEED).0)
+/// Synthetic request traffic shaped like the manifest's dataset, one
+/// tensor per request (`[H, W, C]`, no batch dim — the micro-batcher
+/// adds it): the class-textured generator when the dims match it,
+/// seeded Gaussian noise otherwise (serving latency does not care about
+/// label structure). With `mixed` every third request is half
+/// resolution — the conv stack is resolution-agnostic (1×1-as-matmul +
+/// spatial pooling), so these are *valid* requests the worker must
+/// shape-group, not malformed ones.
+fn gen_request_inputs(
+    total: usize,
+    ds: &DatasetInfo,
+    mixed: bool,
+) -> Result<Vec<Tensor>> {
+    let full = if ds.image_hw == synth::IMG && ds.channels == synth::CHANNELS {
+        synth::generate(total, LOADGEN_SEED).0
     } else {
         let mut data = vec![0.0f32; total * ds.image_hw * ds.image_hw * ds.channels];
         Rng::new(LOADGEN_SEED).fill_gaussian(&mut data, 0.0, 1.0);
-        Tensor::new(
-            vec![total, ds.image_hw, ds.image_hw, ds.channels],
-            data,
-        )
+        Tensor::new(vec![total, ds.image_hw, ds.image_hw, ds.channels], data)?
+    };
+    let mut rng = Rng::new(LOADGEN_SEED ^ 0x51ed);
+    let mut out = Vec::with_capacity(total);
+    for i in 0..total {
+        if mixed && i % 3 == 2 {
+            let hw = (ds.image_hw / 2).max(1);
+            let mut data = vec![0.0f32; hw * hw * ds.channels];
+            rng.fill_gaussian(&mut data, 0.0, 1.0);
+            out.push(Tensor::new(vec![hw, hw, ds.channels], data)?);
+        } else {
+            let t = full.slice_axis0(i, 1)?;
+            let dims = t.shape()[1..].to_vec();
+            out.push(t.reshape(dims)?);
+        }
     }
+    Ok(out)
 }
 
-/// The queue → micro-batcher → worker → collector session core shared
-/// by the pipeline and from-artifact load generators: `producers`
-/// threads submit `total` single-sample requests (retrying with backoff
-/// on admission rejection), one worker serves them hot off `prepared`,
-/// and the call returns one response slot per request after a clean
-/// shutdown.
+/// The queue → fleet → collector session core shared by the pipeline and
+/// from-artifact load generators: `producers` threads submit one request
+/// per sample (pacing per the chaos arrival process, retrying with
+/// backoff on admission rejection), `prepareds.len()` supervised workers
+/// serve them, and the call returns one answer slot per request after a
+/// clean shutdown. Non-answer terminal states (rejected / expired /
+/// failed) are counted into `serve_metrics` by the collector — the
+/// single counting site — and leave their slot `None`.
 fn run_session(
-    prepared: &dyn PreparedModel,
-    inputs: &Tensor,
+    prepareds: &[Box<dyn PreparedModel + '_>],
+    samples: &[Tensor],
     cfg: &ServeConfig,
-    total: usize,
+    worker_width: usize,
     producers: usize,
     serve_metrics: &ServeMetrics,
 ) -> Vec<Option<Tensor>> {
+    let total = samples.len();
+    let workers = prepareds.len().max(1);
     let queue = RequestQueue::new(cfg.queue_depth);
-    let wcfg = WorkerConfig {
-        max_batch: cfg.max_batch.max(1),
-        max_wait: cfg.max_wait,
-        width: if cfg.worker_width == 0 {
-            threadpool::global().size()
-        } else {
-            cfg.worker_width
-        },
-        actq: cfg.actq.clone(),
-    };
+    let chaos_rt = cfg.chaos.as_ref().map(|c| Arc::new(WorkerChaos::new(c)));
+    // the scenario supplies arrivals/deadline/collector-delay; an
+    // operator-passed deadline wins over the scenario's
+    let deadline = cfg
+        .deadline
+        .or(cfg.chaos.as_ref().and_then(|c| c.deadline));
+    let arrivals = cfg.chaos.as_ref().map_or(Arrivals::Greedy, |c| c.arrivals);
+    let collector_delay = cfg
+        .chaos
+        .as_ref()
+        .map_or(Duration::ZERO, |c| c.collector_delay);
+    let chaos_seed = cfg.chaos.as_ref().map_or(CHAOS_SEED, |c| c.seed);
+    let wcfgs: Vec<WorkerConfig> = (0..workers)
+        .map(|_| WorkerConfig {
+            max_batch: cfg.max_batch.max(1),
+            max_wait: cfg.max_wait,
+            width: worker_width.max(1),
+            actq: cfg.actq.clone(),
+            chaos: chaos_rt.clone(),
+        })
+        .collect();
+    let alive = AtomicUsize::new(workers);
     let (rtx, rrx) = channel::<ServeResponse>();
     let mut responses: Vec<Option<Tensor>> = vec![None; total];
     std::thread::scope(|s| {
-        s.spawn(|| {
-            // If the worker dies — panic included — close the queue and
-            // error-out whatever is still queued, so producers stop
-            // retrying and the collector's recv() can terminate instead
-            // of hanging the whole run (the panic still propagates when
-            // the scope joins).
-            struct ShutdownGuard<'a>(&'a RequestQueue);
-            impl Drop for ShutdownGuard<'_> {
-                fn drop(&mut self) {
-                    self.0.close();
-                    while let Some(reqs) = self.0.pop_batch(64, Duration::ZERO) {
-                        for r in reqs {
-                            let _ = r.tx.send(ServeResponse {
-                                id: r.id,
-                                result: Err("serve worker terminated".into()),
-                            });
-                        }
-                    }
-                }
-            }
-            let _guard = ShutdownGuard(&queue);
-            run_worker(prepared, &queue, &wcfg, serve_metrics)
-        });
+        for (wid, (prepared, wcfg)) in prepareds.iter().zip(&wcfgs).enumerate() {
+            let (queue, metrics, fleet, alive) =
+                (&queue, serve_metrics, &cfg.fleet, &alive);
+            s.spawn(move || {
+                supervise(wid, prepared.as_ref(), queue, wcfg, metrics, fleet, alive)
+            });
+        }
         let per = (total + producers - 1) / producers;
         for p in 0..producers {
             let (lo, hi) = (p * per, ((p + 1) * per).min(total));
@@ -181,25 +239,17 @@ fn run_session(
             let rtx = rtx.clone();
             let (queue, metrics) = (&queue, serve_metrics);
             s.spawn(move || {
+                let mut gate = ArrivalGate::new(arrivals, chaos_seed ^ p as u64);
                 for i in lo..hi {
-                    let sample = inputs.slice_axis0(i, 1).and_then(|t| {
-                        let dims = t.shape()[1..].to_vec();
-                        t.reshape(dims)
-                    });
-                    let input = match sample {
-                        Ok(t) => t,
-                        Err(e) => {
-                            let _ = rtx.send(ServeResponse {
-                                id: i as u64,
-                                result: Err(e.to_string()),
-                            });
-                            continue;
-                        }
-                    };
+                    gate.wait();
+                    metrics.record_submitted();
+                    let now = Instant::now();
                     let mut req = ServeRequest {
                         id: i as u64,
-                        input,
-                        submitted: Instant::now(),
+                        input: samples[i].clone(),
+                        submitted: now,
+                        // fixed at creation; retries below never extend it
+                        deadline: deadline.map(|d| now + d),
                         tx: rtx.clone(),
                     };
                     loop {
@@ -212,6 +262,18 @@ fn run_session(
                                 AdmissionError::QueueFull { .. } => {
                                     metrics.record_rejected();
                                     req = rej.request;
+                                    // the deadline keeps running while we
+                                    // fight for admission: shed here too
+                                    if req
+                                        .deadline
+                                        .is_some_and(|d| Instant::now() >= d)
+                                    {
+                                        let _ = req.tx.send(ServeResponse {
+                                            id: req.id,
+                                            outcome: ServeOutcome::Expired,
+                                        });
+                                        break;
+                                    }
                                     std::thread::sleep(RETRY_BACKOFF);
                                     // reset only after the backoff:
                                     // latency measures time *in* the
@@ -222,7 +284,9 @@ fn run_session(
                                     let ServeRequest { id, tx, .. } = rej.request;
                                     let _ = tx.send(ServeResponse {
                                         id,
-                                        result: Err("queue closed".into()),
+                                        outcome: ServeOutcome::Rejected(
+                                            AdmissionError::Closed,
+                                        ),
                                     });
                                     break;
                                 }
@@ -233,19 +297,32 @@ fn run_session(
             });
         }
         drop(rtx);
-        // Collect exactly one response per request, then shut down.
+        // Collect exactly one terminal response per request, then shut
+        // down. This is the single counting site for non-answer
+        // terminal states.
         let mut got = 0usize;
         while got < total {
             match rrx.recv() {
                 Ok(resp) => {
                     got += 1;
-                    match resp.result {
-                        Ok(t) => {
+                    if !collector_delay.is_zero() {
+                        // chaos: a slow downstream consumer
+                        std::thread::sleep(collector_delay);
+                    }
+                    match resp.outcome {
+                        ServeOutcome::Answer(t) => {
                             if let Some(slot) = responses.get_mut(resp.id as usize) {
                                 *slot = Some(t);
                             }
                         }
-                        Err(msg) => {
+                        ServeOutcome::Rejected(e) => {
+                            serve_metrics.record_rejected_final();
+                            log::debug!("serve: request {} rejected: {e}", resp.id);
+                        }
+                        ServeOutcome::Expired => {
+                            serve_metrics.record_expired();
+                        }
+                        ServeOutcome::Failed(msg) => {
                             serve_metrics.record_error();
                             log::warn!("serve: request {} failed: {msg}", resp.id);
                         }
@@ -259,21 +336,53 @@ fn run_session(
     responses
 }
 
-/// Re-check every collected response bit-for-bit against a direct
+/// Resolve the effective fleet geometry for a backend: topology-clamped
+/// worker count plus per-worker kernel width (explicit `--worker-width`
+/// wins; otherwise the topology's pool split; otherwise the full pool).
+fn resolve_topology(backend: &dyn Backend, cfg: &ServeConfig) -> (usize, usize) {
+    let topo = backend.worker_topology(cfg.workers.max(1));
+    let workers = topo.workers.max(1);
+    let width = if cfg.worker_width != 0 {
+        cfg.worker_width
+    } else if topo.worker_width != 0 {
+        topo.worker_width
+    } else {
+        threadpool::global().size()
+    };
+    log::info!(
+        "serve: fleet of {workers} worker(s), width {width} ({})",
+        topo.detail
+    );
+    (workers, width)
+}
+
+/// Re-check every *answered* response bit-for-bit against a direct
 /// forward of the same sample on `direct` (through `forward_actq` when
-/// an activation deployment config is set). An `Err` means the serving
-/// path changed what the model computes, or a request never completed.
+/// an activation deployment config is set). With `require_all` (fault-
+/// free runs) an unanswered request is itself an error; under chaos or
+/// deadlines, non-answers are legitimate terminal states and only the
+/// answers are checked — a served answer must *never* be stale, even
+/// mid-fault.
 fn verify_bit_identity(
     direct: &dyn PreparedModel,
-    inputs: &Tensor,
+    samples: &[Tensor],
     responses: &[Option<Tensor>],
     actq: &Option<(Vec<ActQuantParams>, Vec<u8>)>,
+    require_all: bool,
 ) -> Result<()> {
     for (i, slot) in responses.iter().enumerate() {
-        let got = slot.as_ref().ok_or_else(|| {
-            Error::invariant(format!("serve: request {i} got no successful response"))
-        })?;
-        let x = inputs.slice_axis0(i, 1)?;
+        let got = match slot {
+            Some(t) => t,
+            None if require_all => {
+                return Err(Error::invariant(format!(
+                    "serve: request {i} got no successful response"
+                )))
+            }
+            None => continue,
+        };
+        let mut shape = vec![1];
+        shape.extend(samples[i].shape().iter().copied());
+        let x = samples[i].clone().reshape(shape)?;
         let want = match actq {
             Some((params, bits)) => direct.forward_actq(&x, params, bits)?,
             None => direct.forward(&x)?,
@@ -289,11 +398,12 @@ fn verify_bit_identity(
 }
 
 /// Self-driving serving session over a backend's own model weights:
-/// loads the model, stages it via `prepare_serving`, and drives `total`
-/// requests through [`run_session`]. With `cfg.verify` every response
-/// is re-checked bit-for-bit against a direct `forward` of the same
-/// sample — an `Err` from this function means the serving path changed
-/// what the model computes (or a request never completed).
+/// loads the model, stages one `prepare_serving` handle per fleet
+/// worker, and drives `total` requests through [`run_session`]. With
+/// `cfg.verify` every answer is re-checked bit-for-bit against a direct
+/// `forward` of the same sample — an `Err` from this function means the
+/// serving path changed what the model computes (or, in a fault-free
+/// run, that a request never completed).
 pub fn run_load_generator(
     backend: &dyn Backend,
     manifest: &Manifest,
@@ -307,28 +417,40 @@ pub fn run_load_generator(
     }
     let producers = producers.clamp(1, total);
     let model = backend.load_model(manifest, model_name)?;
-    let prepared = backend.prepare_serving(&model, &model.weights)?;
-    let inputs = gen_inputs(total, &manifest.dataset)?;
+    let (workers, width) = resolve_topology(backend, cfg);
+    let prepareds: Vec<Box<dyn PreparedModel + '_>> = (0..workers)
+        .map(|_| backend.prepare_serving(&model, &model.weights))
+        .collect::<Result<_>>()?;
+    let mixed = cfg.chaos.as_ref().is_some_and(|c| c.mixed_sizes);
+    let samples = gen_request_inputs(total, &manifest.dataset, mixed)?;
     let serve_metrics = ServeMetrics::new();
     let t0 = Instant::now();
     let responses = run_session(
-        prepared.as_ref(),
-        &inputs,
+        &prepareds,
+        &samples,
         cfg,
-        total,
+        width,
         producers,
         &serve_metrics,
     );
     let wall_s = t0.elapsed().as_secs_f64();
     if cfg.verify {
         let direct = backend.prepare(&model, &model.weights)?;
-        verify_bit_identity(direct.as_ref(), &inputs, &responses, &cfg.actq)?;
+        let require_all = cfg.chaos.is_none() && cfg.deadline.is_none();
+        verify_bit_identity(
+            direct.as_ref(),
+            &samples,
+            &responses,
+            &cfg.actq,
+            require_all,
+        )?;
     }
     Ok(serve_metrics.report(
         backend.name(),
         model_name,
         cfg.max_batch.max(1),
         cfg.queue_depth.max(1),
+        workers,
         wall_s,
     ))
 }
@@ -336,14 +458,14 @@ pub fn run_load_generator(
 /// Serve a **packed quantized artifact** (`deploy::artifact`): the
 /// deployment path `repro serve --artifact <dir>` drives. The model
 /// named in the artifact header supplies structure and biases; the
-/// artifact supplies the packed weights (staged via
+/// artifact supplies the packed weights (staged per worker via
 /// [`Backend::prepare_artifact`] — dequant-on-the-fly on the host
-/// backend) and, when present, its activation-quant deployment config,
-/// which **overrides** `cfg.actq` so a saved W+A model serves exactly
-/// the configuration it was calibrated with. With `cfg.verify`, every
-/// response is re-checked bit-for-bit against a direct forward of the
-/// dequantized weights — i.e. serve-from-artifact vs
-/// quantize-then-forward.
+/// backend) and, when present, its activation-quant deployment config
+/// ([`PackedModel::deployment_actq`]), which **overrides** `cfg.actq`
+/// so a saved W+A model serves exactly the configuration it was
+/// calibrated with. With `cfg.verify`, every answer is re-checked
+/// bit-for-bit against a direct forward of the dequantized weights —
+/// i.e. serve-from-artifact vs quantize-then-forward.
 pub fn run_artifact_load_generator(
     backend: &dyn Backend,
     manifest: &Manifest,
@@ -359,43 +481,24 @@ pub fn run_artifact_load_generator(
     let model = backend.load_model(manifest, &artifact.model)?;
     artifact.check_matches(&model)?;
     let mut cfg = cfg.clone();
-    if let Some(params) = &artifact.act_params {
-        let bits: Vec<u8> = match &artifact.act_bits {
-            Some(b) => b.clone(),
-            None => {
-                // v1 dirs carry act_params but never recorded widths;
-                // the weight widths are the documented fallback — but
-                // only where they are usable activation widths (the
-                // actq grids shift by them).
-                let bits: Vec<u8> = artifact.layers.iter().map(|l| l.bits).collect();
-                if let Some(&b) = bits.iter().find(|&&b| !(1..=16).contains(&b)) {
-                    return Err(Error::config(format!(
-                        "artifact {}: v1 dir has act_params but no act_bits, and \
-                         weight width {b} is not a usable activation width — \
-                         re-save the model to migrate it to v2",
-                        artifact.model
-                    )));
-                }
-                log::warn!(
-                    "artifact {}: act_params without act_bits (v1 dir) — \
-                     serving with the weight widths",
-                    artifact.model
-                );
-                bits
-            }
-        };
-        cfg.actq = Some((params.clone(), bits));
+    if let Some(actq) = artifact.deployment_actq()? {
+        cfg.actq = Some(actq);
     }
-    let mut staged = Vec::new();
-    let prepared = backend.prepare_artifact(&model, artifact, &mut staged)?;
-    let inputs = gen_inputs(total, &manifest.dataset)?;
+    let (workers, width) = resolve_topology(backend, &cfg);
+    let mut stageds: Vec<Vec<Tensor>> = vec![Vec::new(); workers];
+    let prepareds: Vec<Box<dyn PreparedModel + '_>> = stageds
+        .iter_mut()
+        .map(|staged| backend.prepare_artifact(&model, artifact, staged))
+        .collect::<Result<_>>()?;
+    let mixed = cfg.chaos.as_ref().is_some_and(|c| c.mixed_sizes);
+    let samples = gen_request_inputs(total, &manifest.dataset, mixed)?;
     let serve_metrics = ServeMetrics::new();
     let t0 = Instant::now();
     let responses = run_session(
-        prepared.as_ref(),
-        &inputs,
+        &prepareds,
+        &samples,
         &cfg,
-        total,
+        width,
         producers,
         &serve_metrics,
     );
@@ -403,13 +506,21 @@ pub fn run_artifact_load_generator(
     if cfg.verify {
         let deq = artifact.dequantize_all()?;
         let direct = backend.prepare(&model, &deq)?;
-        verify_bit_identity(direct.as_ref(), &inputs, &responses, &cfg.actq)?;
+        let require_all = cfg.chaos.is_none() && cfg.deadline.is_none();
+        verify_bit_identity(
+            direct.as_ref(),
+            &samples,
+            &responses,
+            &cfg.actq,
+            require_all,
+        )?;
     }
     Ok(serve_metrics.report(
         backend.name(),
         &artifact.model,
         cfg.max_batch.max(1),
         cfg.queue_depth.max(1),
+        workers,
         wall_s,
     ))
 }
@@ -430,8 +541,11 @@ mod tests {
         };
         let report =
             run_load_generator(&be, &manifest, "synthnet", &cfg, 48, 3).unwrap();
+        assert_eq!(report.submitted, 48);
         assert_eq!(report.completed, 48);
         assert_eq!(report.errors, 0);
+        assert_eq!(report.expired, 0);
+        assert!(report.accounting_balanced());
         assert!(report.batches >= 48 / 8, "at least ⌈48/8⌉ batches");
         assert!(report.throughput_rps > 0.0);
         assert!(report.lat_p99_s >= report.lat_p50_s);
@@ -446,12 +560,22 @@ mod tests {
     }
 
     #[test]
-    fn gen_inputs_matches_dataset_dims() {
+    fn gen_inputs_match_dataset_dims_and_mix_sizes() {
         let m = Manifest::synthetic();
-        let x = gen_inputs(5, &m.dataset).unwrap();
+        let xs = gen_request_inputs(5, &m.dataset, false).unwrap();
+        assert_eq!(xs.len(), 5);
+        for x in &xs {
+            assert_eq!(
+                x.shape(),
+                &[m.dataset.image_hw, m.dataset.image_hw, m.dataset.channels]
+            );
+        }
+        let mixed = gen_request_inputs(6, &m.dataset, true).unwrap();
+        let half = m.dataset.image_hw / 2;
+        assert_eq!(mixed[2].shape(), &[half, half, m.dataset.channels]);
         assert_eq!(
-            x.shape(),
-            &[5, m.dataset.image_hw, m.dataset.image_hw, m.dataset.channels]
+            mixed[0].shape(),
+            &[m.dataset.image_hw, m.dataset.image_hw, m.dataset.channels]
         );
     }
 }

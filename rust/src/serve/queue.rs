@@ -10,6 +10,13 @@
 //! tail-latency collapse. [`RequestQueue::close`] starts a clean
 //! shutdown: further pushes are rejected, `pop_batch` drains what is
 //! queued and then returns `None`.
+//!
+//! Concurrency guarantee: `push` never blocks on anything but the queue
+//! mutex — it either admits or rejects immediately — so a `close()`
+//! racing any number of mid-`push` producers always resolves to
+//! [`AdmissionError::Closed`] with the request handed back intact;
+//! there is no state in which a producer can wedge against shutdown
+//! (`rust/tests/serve.rs` hammers this race).
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -28,15 +35,50 @@ pub struct ServeRequest {
     pub input: Tensor,
     /// Admission time — latency is measured from here to response send.
     pub submitted: Instant,
+    /// Absolute expiry: a request still unserved at this instant is shed
+    /// before any forward compute and answered with
+    /// [`ServeOutcome::Expired`]. Fixed at creation — producer retries
+    /// must not extend it. `None` = never expires.
+    pub deadline: Option<Instant>,
     pub tx: Sender<ServeResponse>,
 }
 
-/// The worker's answer: the logits row for this request (shape
-/// `[1, classes]`, bit-identical to a direct `forward` of the same
-/// sample) or a stringified error.
+/// Every request's exactly-one terminal state. The serving contract is
+/// that each submitted request gets exactly one of these — never a
+/// stale answer, never a silent drop, never a hang — and the fleet
+/// accounting (`ServeReport::accounting_balanced`) asserts it.
+pub enum ServeOutcome {
+    /// The logits row for this request (shape `[1, classes]`,
+    /// bit-identical to a direct `forward` of the same sample).
+    Answer(Tensor),
+    /// Terminal admission rejection: the queue closed (or the producer
+    /// gave up) before the request was ever admitted.
+    Rejected(AdmissionError),
+    /// The deadline passed before the forward ran; the request was shed
+    /// pre-compute so it never wasted a batch slot.
+    Expired,
+    /// The worker (or its forward) failed while this request was in
+    /// flight — including a worker panic mid-batch, which fails over
+    /// exactly the popped requests (see `serve::worker`).
+    Failed(String),
+}
+
+impl ServeOutcome {
+    /// Short label for logs and accounting tables.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeOutcome::Answer(_) => "answer",
+            ServeOutcome::Rejected(_) => "rejected",
+            ServeOutcome::Expired => "expired",
+            ServeOutcome::Failed(_) => "failed",
+        }
+    }
+}
+
+/// The terminal response for one request — see [`ServeOutcome`].
 pub struct ServeResponse {
     pub id: u64,
-    pub result: std::result::Result<Tensor, String>,
+    pub outcome: ServeOutcome,
 }
 
 /// Why admission control turned a request away.
@@ -198,6 +240,7 @@ mod tests {
                 id,
                 input: Tensor::zeros(vec![2, 2, 1]),
                 submitted: Instant::now(),
+                deadline: None,
                 tx,
             },
             rx,

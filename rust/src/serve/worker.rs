@@ -6,20 +6,39 @@
 //! (sound because both backends compute rows independently — see
 //! `serve::batcher`). Inner kernel parallelism runs under
 //! [`threadpool::with_width_cap`], the same nested-parallelism mechanism
-//! `Ctx::run_many` hands experiment cells — so a worker co-scheduled
-//! with experiments (or future sibling workers) can be bounded to its
-//! share of the pool via [`WorkerConfig::width`] (`--worker-width`); by
-//! default a lone worker uses the full pool. Forward errors are answered
-//! per request (stringified) and the loop keeps serving — a poisoned
-//! batch must not wedge the queue.
+//! `Ctx::run_many` hands experiment cells — so fleet workers sharing the
+//! pool are each bounded to their slice via [`WorkerConfig::width`]
+//! (`--worker-width`, or the backend's
+//! [`crate::backend::WorkerTopology`] split).
+//!
+//! The robustness contract, in pop order:
+//! 1. **Exactly one terminal response per popped request.** Everything
+//!    popped goes straight into an [`InFlight`] guard whose `Drop` sends
+//!    [`ServeOutcome::Failed`] for whatever was not yet answered — so a
+//!    panic anywhere in the batch path (chaos-injected or real) fails
+//!    over exactly the in-flight requests: no orphan, no double-response
+//!    (answered requests leave the guard first).
+//! 2. **Deadline shed before compute.** Requests whose deadline already
+//!    passed are answered [`ServeOutcome::Expired`] *before* grouping,
+//!    padding, or forward — an expired request never wastes a batch
+//!    slot (`rust/tests/serve.rs` pins `batches == 0` for all-expired
+//!    traffic).
+//! 3. **Shape grouping.** Mixed-size traffic is split into same-shape
+//!    groups, each its own micro-batch — a well-formed request is never
+//!    errored for sharing a pop with a different-sized neighbour.
+//!
+//! Forward *errors* (not panics) are answered per request and the loop
+//! keeps serving — a poisoned batch must not wedge the queue.
 
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::backend::PreparedModel;
 use crate::quant::observer::ActQuantParams;
 use crate::serve::batcher;
+use crate::serve::chaos::WorkerChaos;
 use crate::serve::metrics::ServeMetrics;
-use crate::serve::queue::{RequestQueue, ServeRequest, ServeResponse};
+use crate::serve::queue::{RequestQueue, ServeOutcome, ServeRequest, ServeResponse};
 use crate::util::threadpool;
 
 /// Worker knobs (a subset of `serve::ServeConfig`, copied so the worker
@@ -35,51 +54,164 @@ pub struct WorkerConfig {
     /// When set, serve through `forward_actq` with these per-layer
     /// params/bits (the quantized-activation deployment path).
     pub actq: Option<(Vec<ActQuantParams>, Vec<u8>)>,
+    /// Deterministic fault injection shared across the fleet
+    /// (`serve::chaos`); `None` in production.
+    pub chaos: Option<Arc<WorkerChaos>>,
 }
 
-/// Answer every request with the same error (errors are *counted* by the
-/// response collector, so rejected batches don't double-book metrics).
-fn respond_all(requests: &[ServeRequest], msg: &str) {
+/// Popped requests awaiting their terminal response. Dropping the guard
+/// — normally via stack unwind after a panic — answers everything still
+/// inside with [`ServeOutcome::Failed`]; requests that were answered
+/// were first moved out via [`InFlight::take`], so nothing is ever
+/// answered twice.
+struct InFlight {
+    requests: Vec<ServeRequest>,
+}
+
+impl InFlight {
+    fn new(requests: Vec<ServeRequest>) -> Self {
+        InFlight { requests }
+    }
+
+    /// Move the requests out for answering; the guard is left empty, so
+    /// its `Drop` sends nothing.
+    fn take(&mut self) -> Vec<ServeRequest> {
+        std::mem::take(&mut self.requests)
+    }
+
+    /// Answer (with `Expired`) and remove every request whose deadline
+    /// has passed; returns how many were shed.
+    fn shed_expired(&mut self, now: Instant) -> usize {
+        let mut shed = 0usize;
+        let mut i = 0usize;
+        while i < self.requests.len() {
+            let expired = self.requests[i].deadline.is_some_and(|d| now >= d);
+            if expired {
+                let r = self.requests.remove(i);
+                let _ = r.tx.send(ServeResponse {
+                    id: r.id,
+                    outcome: ServeOutcome::Expired,
+                });
+                shed += 1;
+            } else {
+                i += 1;
+            }
+        }
+        shed
+    }
+
+    /// Detach the first request plus everything sharing its sample
+    /// shape (arrival order preserved within the group); `None` when
+    /// empty. The detached group must immediately re-enter a guard.
+    fn next_shape_group(&mut self) -> Option<Vec<ServeRequest>> {
+        if self.requests.is_empty() {
+            return None;
+        }
+        let dims = self.requests[0].input.shape().to_vec();
+        let mut group = Vec::new();
+        let mut i = 0usize;
+        while i < self.requests.len() {
+            if self.requests[i].input.shape() == dims.as_slice() {
+                group.push(self.requests.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        Some(group)
+    }
+}
+
+impl Drop for InFlight {
+    fn drop(&mut self) {
+        for r in self.requests.drain(..) {
+            let _ = r.tx.send(ServeResponse {
+                id: r.id,
+                outcome: ServeOutcome::Failed(
+                    "serve worker panicked mid-batch; request failed over".into(),
+                ),
+            });
+        }
+    }
+}
+
+/// Answer every request with the same `Failed` message (terminal-state
+/// *counting* happens at the response collector, so failed batches don't
+/// double-book metrics).
+fn respond_failed(requests: Vec<ServeRequest>, msg: &str) {
     for r in requests {
         let _ = r.tx.send(ServeResponse {
             id: r.id,
-            result: Err(msg.to_string()),
+            outcome: ServeOutcome::Failed(msg.to_string()),
         });
     }
 }
 
 /// Drain the queue until it closes. Every popped request gets exactly
-/// one response — a logits row or an error.
+/// one terminal response — answer, expiry, or failure.
 pub fn run_worker(
+    worker_id: usize,
     prepared: &dyn PreparedModel,
     queue: &RequestQueue,
     cfg: &WorkerConfig,
     metrics: &ServeMetrics,
 ) {
-    while let Some(requests) = queue.pop_batch(cfg.max_batch, cfg.max_wait) {
-        let batch = match batcher::coalesce(requests, cfg.max_batch) {
-            Ok(b) => b,
-            Err((requests, e)) => {
-                respond_all(&requests, &e.to_string());
-                continue;
-            }
-        };
-        let out = threadpool::with_width_cap(cfg.width, || match &cfg.actq {
-            Some((params, bits)) => prepared.forward_actq(&batch.inputs, params, bits),
-            None => prepared.forward(&batch.inputs),
-        });
-        match out {
-            Ok(logits) => {
-                metrics.record_batch(batch.requests.len(), batch.padded);
-                for (i, r) in batch.requests.iter().enumerate() {
-                    let result = logits
-                        .slice_axis0(i, 1)
-                        .map_err(|e| e.to_string());
-                    metrics.record_latency(r.submitted.elapsed());
-                    let _ = r.tx.send(ServeResponse { id: r.id, result });
+    while let Some(popped) = queue.pop_batch(cfg.max_batch, cfg.max_wait) {
+        // everything popped is guarded from this point on
+        let mut pending = InFlight::new(popped);
+        let shed = pending.shed_expired(Instant::now());
+        if shed > 0 {
+            log::debug!("serve worker {worker_id}: shed {shed} expired requests");
+        }
+        while let Some(group) = pending.next_shape_group() {
+            let batch = match batcher::coalesce(group, cfg.max_batch) {
+                Ok(b) => b,
+                Err((reqs, e)) => {
+                    respond_failed(reqs, &e.to_string());
+                    continue;
                 }
+            };
+            let batcher::MicroBatch {
+                requests,
+                inputs,
+                padded,
+            } = batch;
+            let mut guard = InFlight::new(requests);
+            // chaos fires while the guard owns the batch: an injected
+            // panic fails over exactly these requests (plus whatever
+            // `pending` still holds — also in flight)
+            if let Some(chaos) = &cfg.chaos {
+                chaos.before_batch();
             }
-            Err(e) => respond_all(&batch.requests, &e.to_string()),
+            let out = threadpool::with_width_cap(cfg.width, || match &cfg.actq {
+                Some((params, bits)) => prepared.forward_actq(&inputs, params, bits),
+                None => prepared.forward(&inputs),
+            });
+            match out {
+                Ok(logits) => {
+                    let requests = guard.take();
+                    metrics.record_batch(worker_id, requests.len(), padded);
+                    for (i, r) in requests.into_iter().enumerate() {
+                        match logits.slice_axis0(i, 1) {
+                            Ok(row) => {
+                                // latency counts answers only: `completed`
+                                // in the report is exactly the answered set
+                                metrics.record_latency(r.submitted.elapsed());
+                                let _ = r.tx.send(ServeResponse {
+                                    id: r.id,
+                                    outcome: ServeOutcome::Answer(row),
+                                });
+                            }
+                            Err(e) => {
+                                let _ = r.tx.send(ServeResponse {
+                                    id: r.id,
+                                    outcome: ServeOutcome::Failed(e.to_string()),
+                                });
+                            }
+                        }
+                    }
+                }
+                Err(e) => respond_failed(guard.take(), &e.to_string()),
+            }
         }
     }
 }

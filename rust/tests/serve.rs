@@ -3,26 +3,33 @@
 //! artifacts, so every clause runs on a bare checkout.
 //!
 //! Covered, per the serving contract:
-//! * serve-path responses are **bit-identical** to a direct `forward` of
+//! * serve-path answers are **bit-identical** to a direct `forward` of
 //!   the same samples (micro-batching + padding must never change what
-//!   the model computes);
+//!   the model computes) — single worker and 2-worker fleet;
 //! * admission control rejects with a typed error when the queue is
 //!   full, and hands the request back intact;
+//! * `close()` racing any number of mid-`push` producers resolves every
+//!   push (admit or typed rejection) — never a deadlock;
 //! * a padded final batch returns only real results — exactly one
 //!   response per request, none for pad rows;
-//! * a concurrent multi-producer run completes every request with a
-//!   clean shutdown and non-zero throughput.
+//! * expired requests are shed *before* forward compute (`batches == 0`
+//!   for all-expired traffic) and answered with a typed `Expired`;
+//! * with worker-crash chaos injection the fleet restarts the worker and
+//!   every submitted request reaches exactly one terminal state
+//!   (accounting balances);
+//! * the full chaos scenario matrix runs no-skip with zero lost
+//!   requests per scenario.
 
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use attention_round::backend::{Backend, HostBackend};
+use attention_round::data::synth;
 use attention_round::io::manifest::Manifest;
 use attention_round::serve::{
-    self, run_worker, AdmissionError, RequestQueue, ServeConfig, ServeRequest,
-    ServeResponse, WorkerConfig,
+    self, run_worker, AdmissionError, ChaosSpec, RequestQueue, ServeConfig,
+    ServeOutcome, ServeRequest, ServeResponse, WorkerConfig,
 };
-use attention_round::data::synth;
 use attention_round::tensor::Tensor;
 
 fn sample(x: &Tensor, i: usize) -> Tensor {
@@ -49,17 +56,19 @@ fn serve_n(
         max_wait: Duration::from_micros(100),
         width: 1, // tiny model: keep the worker's inner kernels inline
         actq: None,
+        chaos: None,
     };
     let (rtx, rrx) = channel::<ServeResponse>();
     let mut out: Vec<Option<Tensor>> = vec![None; n];
     std::thread::scope(|s| {
-        s.spawn(|| run_worker(prepared.as_ref(), &queue, &wcfg, &metrics));
+        s.spawn(|| run_worker(0, prepared.as_ref(), &queue, &wcfg, &metrics));
         for i in 0..n {
             queue
                 .push(ServeRequest {
                     id: i as u64,
                     input: sample(&inputs, i),
                     submitted: Instant::now(),
+                    deadline: None,
                     tx: rtx.clone(),
                 })
                 .unwrap();
@@ -67,7 +76,10 @@ fn serve_n(
         drop(rtx);
         for _ in 0..n {
             let resp = rrx.recv().expect("one response per request");
-            let t = resp.result.expect("forward should succeed");
+            let t = match resp.outcome {
+                ServeOutcome::Answer(t) => t,
+                other => panic!("request {} got {:?} kind", resp.id, other.kind()),
+            };
             assert!(out[resp.id as usize].is_none(), "duplicate response");
             out[resp.id as usize] = Some(t);
         }
@@ -130,6 +142,7 @@ fn admission_control_rejects_when_queue_is_full() {
         id,
         input: Tensor::zeros(vec![2, 2, 1]),
         submitted: Instant::now(),
+        deadline: None,
         tx: tx.clone(),
     };
     for id in 0..3 {
@@ -145,6 +158,265 @@ fn admission_control_rejects_when_queue_is_full() {
 }
 
 #[test]
+fn close_racing_concurrent_pushers_never_deadlocks() {
+    // The regression the bounded queue must hold: close() against any
+    // number of mid-push producers resolves every push immediately —
+    // admitted, QueueFull, or Closed with the request intact. A wedge
+    // here hangs the scope join (and the test, which IS the detector).
+    let queue = RequestQueue::new(4);
+    let (tx, rx) = channel::<ServeResponse>();
+    std::thread::scope(|s| {
+        for t in 0..8u64 {
+            let queue = &queue;
+            let tx = tx.clone();
+            s.spawn(move || {
+                for i in 0..500u64 {
+                    let id = t * 1000 + i;
+                    let req = ServeRequest {
+                        id,
+                        input: Tensor::zeros(vec![2]),
+                        submitted: Instant::now(),
+                        deadline: None,
+                        tx: tx.clone(),
+                    };
+                    match queue.push(req) {
+                        Ok(depth) => assert!(depth >= 1 && depth <= 4),
+                        Err(rej) => {
+                            assert_eq!(
+                                rej.request.id, id,
+                                "rejected request handed back intact"
+                            );
+                            assert!(matches!(
+                                rej.error,
+                                AdmissionError::QueueFull { .. }
+                                    | AdmissionError::Closed
+                            ));
+                        }
+                    }
+                }
+            });
+        }
+        // drain concurrently so pushers make progress, close mid-storm
+        {
+            let queue = &queue;
+            s.spawn(move || {
+                while queue.pop_batch(4, Duration::from_micros(10)).is_some() {}
+            });
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        queue.close();
+    });
+    drop(tx);
+    assert!(queue.is_closed());
+    // post-close pushes still resolve to a typed Closed, request intact
+    let (tx2, _rx2) = channel();
+    let rej = queue
+        .push(ServeRequest {
+            id: 9999,
+            input: Tensor::zeros(vec![2]),
+            submitted: Instant::now(),
+            deadline: None,
+            tx: tx2,
+        })
+        .unwrap_err();
+    assert_eq!(rej.error, AdmissionError::Closed);
+    assert_eq!(rej.request.id, 9999);
+    drop(rx);
+}
+
+#[test]
+fn expired_requests_are_shed_before_any_forward() {
+    let be = HostBackend::new();
+    let manifest = Manifest::synthetic();
+    let model = be.load_model(&manifest, "synthnet").unwrap();
+    let prepared = be.prepare_serving(&model, &model.weights).unwrap();
+    let inputs = synth::generate(4, 777).0;
+    let queue = RequestQueue::new(8);
+    let metrics = serve::ServeMetrics::new();
+    let wcfg = WorkerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(50),
+        width: 1,
+        actq: None,
+        chaos: None,
+    };
+    let (rtx, rrx) = channel::<ServeResponse>();
+    let past = Instant::now()
+        .checked_sub(Duration::from_millis(5))
+        .unwrap_or_else(Instant::now);
+    std::thread::scope(|s| {
+        s.spawn(|| run_worker(0, prepared.as_ref(), &queue, &wcfg, &metrics));
+        for i in 0..4 {
+            queue
+                .push(ServeRequest {
+                    id: i as u64,
+                    input: sample(&inputs, i),
+                    submitted: Instant::now(),
+                    deadline: Some(past),
+                    tx: rtx.clone(),
+                })
+                .unwrap();
+        }
+        drop(rtx);
+        for _ in 0..4 {
+            let resp = rrx.recv().expect("expired requests still get a response");
+            assert!(
+                matches!(resp.outcome, ServeOutcome::Expired),
+                "past-deadline request must expire, got {:?}",
+                resp.outcome.kind()
+            );
+        }
+        queue.close();
+    });
+    let report = metrics.report("host", "synthnet", 4, 8, 1, 0.01);
+    assert_eq!(report.completed, 0);
+    assert_eq!(
+        report.batches, 0,
+        "expired requests must be shed BEFORE forward compute"
+    );
+}
+
+#[test]
+fn zero_deadline_expires_everything_end_to_end() {
+    let be = HostBackend::new();
+    let manifest = Manifest::synthetic();
+    let cfg = ServeConfig {
+        max_batch: 8,
+        queue_depth: 64,
+        workers: 2,
+        deadline: Some(Duration::ZERO),
+        ..ServeConfig::default()
+    };
+    let report =
+        serve::run_load_generator(&be, &manifest, "synthnet", &cfg, 32, 2).unwrap();
+    assert_eq!(report.submitted, 32);
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.expired, 32, "every request expires under a 0ms deadline");
+    assert_eq!(report.batches, 0, "no forward compute for expired traffic");
+    assert!(report.accounting_balanced());
+}
+
+#[test]
+fn two_worker_fleet_serves_bit_identical() {
+    let be = HostBackend::new();
+    let manifest = Manifest::synthetic();
+    let cfg = ServeConfig {
+        max_batch: 4,
+        queue_depth: 16,
+        workers: 2,
+        verify: true, // every answer re-checked against direct forward
+        ..ServeConfig::default()
+    };
+    let report =
+        serve::run_load_generator(&be, &manifest, "synthnet", &cfg, 64, 4).unwrap();
+    assert_eq!(report.workers, 2, "host topology must honor 2 workers");
+    assert_eq!(report.completed, 64);
+    assert_eq!(report.errors, 0);
+    assert!(report.accounting_balanced());
+    assert_eq!(report.worker_batches.len(), 2);
+    assert_eq!(
+        report.worker_batches.iter().sum::<u64>(),
+        report.batches,
+        "per-worker batch counts must roll up to the fleet total"
+    );
+}
+
+#[test]
+fn fleet_worker_crash_restarts_and_accounts_every_request() {
+    let be = HostBackend::new();
+    let manifest = Manifest::synthetic();
+    let spec = ChaosSpec {
+        name: "worker-crash-test".into(),
+        panic_on_batches: vec![1, 3],
+        ..ChaosSpec::quiet(serve::CHAOS_SEED)
+    };
+    let cfg = ServeConfig {
+        max_batch: 8,
+        queue_depth: 32,
+        workers: 2,
+        chaos: Some(spec),
+        ..ServeConfig::default()
+    };
+    let report =
+        serve::run_load_generator(&be, &manifest, "synthnet", &cfg, 96, 4).unwrap();
+    assert_eq!(report.submitted, 96);
+    assert_eq!(report.workers, 2);
+    // both injected panics fire (the global batch counter passes 1 and 3
+    // on a 96-request run) and each is a supervised restart
+    assert_eq!(report.restarts, 2, "each injected panic is one restart");
+    assert!(
+        report.errors >= 2,
+        "the crashed batches' in-flight requests fail over (got {})",
+        report.errors
+    );
+    assert!(
+        report.completed >= 1,
+        "restarted workers keep serving the queue"
+    );
+    assert!(
+        report.accounting_balanced(),
+        "every submitted request reaches exactly one terminal state \
+         (submitted {} vs completed {} + rejected {} + expired {} + errors {})",
+        report.submitted,
+        report.completed,
+        report.rejected_final,
+        report.expired,
+        report.errors
+    );
+}
+
+#[test]
+fn chaos_scenario_matrix_runs_no_skip() {
+    let be = HostBackend::new();
+    let manifest = Manifest::synthetic();
+    let cfg = ServeConfig {
+        max_batch: 8,
+        queue_depth: 32,
+        workers: 2,
+        ..ServeConfig::default()
+    };
+    let results = serve::run_matrix(
+        &be,
+        &manifest,
+        "synthnet",
+        &cfg,
+        64,
+        4,
+        serve::CHAOS_SEED,
+    )
+    .unwrap();
+    assert_eq!(
+        results.len(),
+        serve::SCENARIOS.len(),
+        "every named scenario must run — no skips"
+    );
+    for (spec, report, verdict) in &results {
+        assert_eq!(report.submitted, 64, "{}: all requests submitted", spec.name);
+        assert_eq!(
+            verdict.lost, 0,
+            "{}: zero lost requests (accounting must balance)",
+            spec.name
+        );
+        assert!(verdict.accounting_balanced, "{}", spec.name);
+        match spec.name.as_str() {
+            "worker-crash" => assert!(
+                report.restarts >= 1,
+                "worker-crash must exercise a supervised restart"
+            ),
+            "mixed-size" => assert_eq!(
+                report.errors, 0,
+                "mixed sizes must be shape-grouped, never errored"
+            ),
+            "slow-consumer" => assert!(
+                report.completed + report.expired > 0,
+                "slow consumer still terminates every request"
+            ),
+            _ => {}
+        }
+    }
+}
+
+#[test]
 fn concurrent_multi_producer_smoke() {
     // Small queue + several producers forces real contention: admission
     // rejections with retry, coalesced batches, clean drain at close.
@@ -154,14 +426,15 @@ fn concurrent_multi_producer_smoke() {
         max_batch: 8,
         max_wait: Duration::from_micros(200),
         queue_depth: 8,
-        worker_width: 0,
         verify: true, // every response re-checked against direct forward
-        actq: None,
+        ..ServeConfig::default()
     };
     let report =
         serve::run_load_generator(&be, &manifest, "synthnet", &cfg, 192, 4).unwrap();
+    assert_eq!(report.submitted, 192);
     assert_eq!(report.completed, 192, "every request must complete");
     assert_eq!(report.errors, 0);
+    assert!(report.accounting_balanced());
     assert!(report.throughput_rps > 0.0, "non-zero sustained throughput");
     assert!(report.batches >= 192 / 8, "batches actually coalesced");
     assert!(
@@ -171,14 +444,7 @@ fn concurrent_multi_producer_smoke() {
     assert!(report.wall_s > 0.0);
     // the JSON report round-trips through the in-repo parser
     let parsed = attention_round::util::json::parse(&report.to_json()).unwrap();
-    assert_eq!(
-        parsed
-            .get("serve")
-            .unwrap()
-            .get("completed")
-            .unwrap()
-            .as_f64()
-            .unwrap(),
-        192.0
-    );
+    let s = parsed.get("serve").unwrap();
+    assert_eq!(s.get("completed").unwrap().as_f64().unwrap(), 192.0);
+    assert!(s.get("accounting_balanced").unwrap().as_bool().unwrap());
 }

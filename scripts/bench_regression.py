@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""CI bench regression gate.
+
+Compares a freshly measured `cargo bench --bench hotpath -- --json` output
+against the committed `BENCH_host.json` baseline and fails (exit 1) when any
+bench shared by both files regressed by more than the threshold on `mean_s`.
+
+Self-skip: while the committed file is still the "baseline pending first
+toolchain run" placeholder (it carries only a `_meta` block and no per-bench
+entries), there is nothing honest to compare against, so the gate exits 0
+with a notice. It arms automatically the first time a measured baseline is
+committed — no workflow change needed.
+
+Usage:
+    scripts/bench_regression.py COMMITTED.json FRESH.json [--threshold 0.20]
+
+Notes:
+  * Only `mean_s` is gated. Percentiles of a --quick profile on shared CI
+    runners are too noisy to gate on.
+  * An absolute-delta floor (default 2us) keeps nanosecond-scale benches
+    from tripping the relative threshold on scheduler noise.
+  * Benches present in only one file are reported informationally, never
+    fatally — adding or retiring a bench must not require a baseline bump
+    in the same commit.
+"""
+
+import argparse
+import json
+import sys
+
+
+def bench_entries(doc):
+    """Per-bench rows: every non-underscore key mapping to a stats object."""
+    return {
+        name: row
+        for name, row in doc.items()
+        if not name.startswith("_") and isinstance(row, dict) and "mean_s" in row
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("committed", help="committed baseline (BENCH_host.json)")
+    ap.add_argument("fresh", help="freshly measured bench JSON")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.20,
+        help="max allowed relative mean_s regression (default 0.20 = 20%%)",
+    )
+    ap.add_argument(
+        "--abs-floor-s",
+        type=float,
+        default=2e-6,
+        help="ignore regressions smaller than this absolute delta in seconds",
+    )
+    args = ap.parse_args()
+
+    with open(args.committed) as f:
+        committed = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    base = bench_entries(committed)
+    meas = bench_entries(fresh)
+
+    if not base:
+        status = committed.get("_meta", {}).get("status", "<no _meta.status>")
+        print(
+            "bench_regression: committed baseline has no per-bench entries "
+            f"(status: {status!r}) -- gate self-skips until a measured "
+            "baseline is committed."
+        )
+        return 0
+    if not meas:
+        print("bench_regression: FRESH file has no per-bench entries", file=sys.stderr)
+        return 1
+
+    shared = sorted(set(base) & set(meas))
+    only_base = sorted(set(base) - set(meas))
+    only_fresh = sorted(set(meas) - set(base))
+    if only_base:
+        print(f"bench_regression: note: in baseline only: {', '.join(only_base)}")
+    if only_fresh:
+        print(f"bench_regression: note: new (unbaselined): {', '.join(only_fresh)}")
+    if not shared:
+        print("bench_regression: no shared bench names to compare", file=sys.stderr)
+        return 1
+
+    regressions = []
+    for name in shared:
+        old = float(base[name]["mean_s"])
+        new = float(meas[name]["mean_s"])
+        if old <= 0.0:
+            continue
+        rel = (new - old) / old
+        mark = ""
+        if rel > args.threshold and (new - old) > args.abs_floor_s:
+            mark = "  << REGRESSION"
+            regressions.append((name, old, new, rel))
+        print(f"  {name:55s} {old:.3e}s -> {new:.3e}s  ({rel:+7.1%}){mark}")
+
+    if regressions:
+        print(
+            f"\nbench_regression: FAIL -- {len(regressions)} bench(es) regressed "
+            f"more than {args.threshold:.0%} on mean_s:",
+            file=sys.stderr,
+        )
+        for name, old, new, rel in regressions:
+            print(f"  {name}: {old:.3e}s -> {new:.3e}s ({rel:+.1%})", file=sys.stderr)
+        return 1
+
+    print(
+        f"bench_regression: OK -- {len(shared)} shared benches within "
+        f"{args.threshold:.0%} of the committed baseline"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
