@@ -28,8 +28,9 @@ use attention_round::coordinator::pipeline::{
     quantize_and_eval, resolve_uniform_bits, QuantSpec,
 };
 use attention_round::data::{synth, Split};
-use attention_round::deploy::{bitpack, PackedModel};
+use attention_round::deploy::{bitpack, fused, PackedModel};
 use attention_round::io::manifest::{LayerInfo, Manifest};
+use attention_round::linalg::Mat;
 use attention_round::serve::{self, ServeConfig};
 use attention_round::io::npy;
 use attention_round::mixed::{self, kmeans};
@@ -259,10 +260,40 @@ fn host_benches(b: &Bencher) -> Vec<Stats> {
         bitpack::unpack_into_with(pool, &packed_bytes, 4, &mut unpacked).unwrap()
     }));
 
+    // fused dequant-matmul vs unfused dequantize-then-matmul on the same
+    // packed 1152x128 4-bit layer (147456 codes = the vector above) — the
+    // kernel-level half of the serving comparison. The unfused row is the
+    // old path verbatim: unpack all codes, dequantize to f32, widen both
+    // operands into Mats, matmul.
+    let fused_act = {
+        let mut a = vec![0.0f32; 64 * 1152];
+        Rng::new(31).fill_gaussian(&mut a, 0.0, 0.5);
+        a
+    };
+    let fpw = fused::PackedWeight {
+        bytes: &packed_bytes,
+        bits: 4,
+        scale: 0.01,
+        n: 1152,
+        m: 128,
+    };
+    let mut fused_out: Vec<f64> = Vec::new();
+    all.push(b.run("host/fused_dequant_matmul_64x1152x128_4b", || {
+        fused::matmul_packed_with(pool, &fused_act, 64, &fpw, &mut fused_out).unwrap()
+    }));
+    all.push(b.run("host/unfused_dequant_matmul_64x1152x128_4b", || {
+        bitpack::unpack_into_with(pool, &packed_bytes, 4, &mut unpacked).unwrap();
+        let wf: Vec<f32> = unpacked.iter().map(|&c| 0.01 * ((c as i64 - 8) as f32)).collect();
+        let am = Mat::from_rows_f32(64, 1152, &fused_act).unwrap();
+        let wm = Mat::from_rows_f32(1152, 128, &wf).unwrap();
+        am.matmul_with(pool, &wm).unwrap()
+    }));
+
     // serving straight off a packed artifact: same load-generator
-    // geometry as host/serve_e2e_256req_b16, but the worker dequantizes
-    // layer-by-layer from packed codes (deploy::dequant) — the pair
-    // quantifies the dequant-on-the-fly overhead.
+    // geometry as host/serve_e2e_256req_b16, but the worker multiplies
+    // straight off the packed codes (deploy::fused via deploy::dequant)
+    // — the pair quantifies the packed-vs-resident serving gap, which
+    // the fused kernel is meant to close to ~1.0x.
     let q_out = {
         let model = be.load_model(&manifest, "synthnet").unwrap();
         let spec = QuantSpec {
@@ -285,6 +316,25 @@ fn host_benches(b: &Bencher) -> Vec<Stats> {
             &be, &manifest, &art, &serve_cfg, 256, 4,
         )
         .unwrap();
+        assert_eq!(r.completed, 256);
+    }));
+
+    // 2-worker fused artifact serving: the lock-free PackedHostForward
+    // means fleet workers no longer serialize on a shared dequant
+    // scratch — this row is the scaling witness.
+    let fused_fleet_cfg = ServeConfig {
+        max_batch: 16,
+        queue_depth: 64,
+        workers: 2,
+        verify: false,
+        ..ServeConfig::default()
+    };
+    all.push(b.run("host/serve_fused_from_artifact_256req_w2_b16", || {
+        let r = serve::run_artifact_load_generator(
+            &be, &manifest, &art, &fused_fleet_cfg, 256, 4,
+        )
+        .unwrap();
+        assert_eq!(r.workers, 2);
         assert_eq!(r.completed, 256);
     }));
 

@@ -46,6 +46,7 @@
 //! with zero training and zero artifacts, giving quantization quality
 //! something real to degrade. Construction is cached per model name.
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -55,6 +56,7 @@ use crate::backend::{
 };
 use crate::coordinator::model::LoadedModel;
 use crate::data::synth;
+use crate::deploy::fused;
 use crate::io::manifest::{LayerInfo, Manifest, ModelInfo};
 use crate::linalg::Mat;
 use crate::quant::observer::ActQuantParams;
@@ -169,15 +171,29 @@ fn mat_transposed_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
     t
 }
 
+/// Weight provider for [`layer_pass`]: either a resident f32 matrix
+/// (the classic path) or a packed bitstream consumed in place by the
+/// fused dequant-matmul kernel (`deploy::fused`) — a whole-f32 layer is
+/// never materialized for packed weights. Both variants produce
+/// bit-identical pre-activations for the same underlying weights
+/// (property-tested in rust/tests/fused_kernel.rs).
+pub(crate) enum HostWeights<'w> {
+    Dense(&'w [f32]),
+    Packed { bytes: &'w [u8], bits: u8, scale: f32 },
+}
+
 /// Everything one layer application produces under the host execution
 /// convention. Eval (`run_graph`), the QAT forward, the packed-artifact
 /// forward (`deploy::dequant`), and (through `run_graph`) the serve
 /// worker all consume the same pass, so the convention — pool 4-D input
 /// for linear layers, matmul, bias add in f64, relu/identity — has
 /// exactly one home.
-pub(crate) struct LayerPass {
+pub(crate) struct LayerPass<'x> {
     /// Matmul input (post pool / input transform), row-major rows × n.
-    pub(crate) a: Vec<f32>,
+    /// Borrows the caller's tensor when no pooling or transform touched
+    /// it — the common serve-path case, saving one full activation copy
+    /// per layer per batch.
+    pub(crate) a: Cow<'x, [f32]>,
     /// Shape of the matmul-input view (NHWC for conv, [rows, n] linear).
     pub(crate) in_shape: Vec<usize>,
     pub(crate) rows: usize,
@@ -196,27 +212,27 @@ pub(crate) struct LayerPass {
 /// Apply one layer: validate the kind, pool 4-D input for linear layers,
 /// run the caller's input transform (activation fake-quant) in place,
 /// matmul `a @ w`, add `bias` (f64 accumulate), and activate.
-/// `pub(crate)`: also the per-layer forward behind the dequant-on-the-fly
-/// packed-artifact path (`deploy::dequant`), which feeds it weight
-/// slices from a reusable scratch buffer instead of whole tensors.
-pub(crate) fn layer_pass(
+/// `pub(crate)`: also the per-layer forward behind the packed-artifact
+/// path (`deploy::dequant`), which hands it [`HostWeights::Packed`]
+/// views straight off the artifact bytes.
+pub(crate) fn layer_pass<'x>(
     pool: &ThreadPool,
     layer: &LayerInfo,
-    w_data: &[f32],
+    weights: HostWeights<'_>,
     (n, m): (usize, usize),
     bias: &[f32],
-    x: &Tensor,
+    x: &'x Tensor,
     transform: Option<&dyn Fn(&mut [f32])>,
     want_out: bool,
-) -> Result<LayerPass> {
-    let (mut a, in_shape);
+) -> Result<LayerPass<'x>> {
+    let (mut a, in_shape): (Cow<'x, [f32]>, Vec<usize>);
     let mut pooled = None;
     if is_linear(&layer.kind) && x.shape().len() == 4 {
         let sh = x.shape();
         pooled = Some((sh[0], sh[1] * sh[2]));
         let p = avg_pool(x)?;
         in_shape = p.shape().to_vec();
-        a = p.into_data();
+        a = Cow::Owned(p.into_data());
     } else if !is_linear(&layer.kind) && layer.kind != "conv" {
         return Err(Error::config(format!(
             "{}: host backend supports conv(1x1)/linear layers, got {:?}",
@@ -224,10 +240,10 @@ pub(crate) fn layer_pass(
         )));
     } else {
         in_shape = x.shape().to_vec();
-        a = x.data().to_vec();
+        a = Cow::Borrowed(x.data());
     }
     if let Some(f) = transform {
-        f(&mut a);
+        f(a.to_mut());
     }
     if a.len() % n != 0 {
         return Err(Error::shape(format!(
@@ -236,10 +252,20 @@ pub(crate) fn layer_pass(
         )));
     }
     let rows = a.len() / n;
-    let xm = Mat::from_rows_f32(rows, n, &a)?;
-    let wm = Mat::from_rows_f32(n, m, w_data)?;
-    let mut zm = xm.matmul_with(pool, &wm)?;
-    for zrow in zm.data.chunks_mut(m) {
+    let mut z = match weights {
+        HostWeights::Dense(w_data) => {
+            let xm = Mat::from_rows_f32(rows, n, a.as_ref())?;
+            let wm = Mat::from_rows_f32(n, m, w_data)?;
+            xm.matmul_with(pool, &wm)?.data
+        }
+        HostWeights::Packed { bytes, bits, scale } => {
+            let pw = fused::PackedWeight { bytes, bits, scale, n, m };
+            let mut z = Vec::new();
+            fused::matmul_packed_with(pool, a.as_ref(), rows, &pw, &mut z)?;
+            z
+        }
+    };
+    for zrow in z.chunks_mut(m) {
         for (zv, &b) in zrow.iter_mut().zip(bias) {
             *zv += b as f64;
         }
@@ -247,7 +273,7 @@ pub(crate) fn layer_pass(
     let relu = layer.act == "relu";
     let out = if want_out {
         let mut outd = vec![0.0f32; rows * m];
-        for (o, &zv) in outd.iter_mut().zip(&zm.data) {
+        for (o, &zv) in outd.iter_mut().zip(&z) {
             let v = zv as f32;
             *o = if relu { v.max(0.0) } else { v };
         }
@@ -267,7 +293,7 @@ pub(crate) fn layer_pass(
         n,
         m,
         pooled,
-        z: zm.data,
+        z,
         out,
     })
 }
@@ -294,12 +320,24 @@ fn run_graph(
             Box::new(move |a: &mut [f32]| fake_quant_act(a, &p, b))
                 as Box<dyn Fn(&mut [f32])>
         });
-        let pass =
-            layer_pass(pool, layer, w.data(), nm, bias, &cur, tf.as_deref(), true)?;
-        if let Some(rec) = record.as_mut() {
-            rec.push(Tensor::new(pass.in_shape.clone(), pass.a.clone())?);
-        }
-        cur = pass.out.expect("want_out set");
+        // scope the pass so its borrow of `cur` ends before reassignment
+        let next = {
+            let pass = layer_pass(
+                pool,
+                layer,
+                HostWeights::Dense(w.data()),
+                nm,
+                bias,
+                &cur,
+                tf.as_deref(),
+                true,
+            )?;
+            if let Some(rec) = record.as_mut() {
+                rec.push(Tensor::new(pass.in_shape.clone(), pass.a.to_vec())?);
+            }
+            pass.out.expect("want_out set")
+        };
+        cur = next;
     }
     Ok(cur)
 }
@@ -313,7 +351,7 @@ fn layer_forward(
     w: &Tensor,
 ) -> Result<Tensor> {
     let nm = weight_dims(layer, w)?;
-    let pass = layer_pass(pool, layer, w.data(), nm, &[], x, None, false)?;
+    let pass = layer_pass(pool, layer, HostWeights::Dense(w.data()), nm, &[], x, None, false)?;
     let out: Vec<f32> = pass.z.iter().map(|&v| v as f32).collect();
     let shape = if pass.in_shape.len() == 4 {
         vec![pass.in_shape[0], pass.in_shape[1], pass.in_shape[2], pass.m]
@@ -674,27 +712,32 @@ fn host_qat_step(
         let tf = |a: &mut [f32]| fake_quant_relu_acts(a, abits);
         let tfopt: Option<&dyn Fn(&mut [f32])> =
             if li > 0 { Some(&tf) } else { None };
-        let pass = layer_pass(
-            pool,
-            layer,
-            &wq,
-            nm,
-            state.bs[li].data(),
-            &cur,
-            tfopt,
-            true,
-        )?;
-        ctxs.push(QatLayerCtx {
-            a: pass.a,
-            rows: pass.rows,
-            n: pass.n,
-            m: pass.m,
-            wq,
-            z: pass.z,
-            pooled: pass.pooled,
-            relu: layer.act == "relu",
-        });
-        cur = pass.out.expect("want_out set");
+        // scope the pass so its borrow of `cur` ends before reassignment
+        let next = {
+            let pass = layer_pass(
+                pool,
+                layer,
+                HostWeights::Dense(&wq),
+                nm,
+                state.bs[li].data(),
+                &cur,
+                tfopt,
+                true,
+            )?;
+            let next = pass.out.expect("want_out set");
+            ctxs.push(QatLayerCtx {
+                a: pass.a.into_owned(),
+                rows: pass.rows,
+                n: pass.n,
+                m: pass.m,
+                wq,
+                z: pass.z,
+                pooled: pass.pooled,
+                relu: layer.act == "relu",
+            });
+            next
+        };
+        cur = next;
     }
     // ---- softmax cross-entropy ----
     let classes = ctxs[k - 1].m;

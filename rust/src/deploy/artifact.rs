@@ -122,6 +122,15 @@ enum Payload {
     F32(Tensor),
 }
 
+/// Borrowed payload view handed out by [`PackedModel::layer_view`]:
+/// either the raw LSB-first bitstream with its grid params, or the
+/// resident f32 tensor of a lossless-fallback layer.
+#[derive(Debug, Clone, Copy)]
+pub enum LayerView<'a> {
+    Packed { bytes: &'a [u8], bits: u8, scale: f32 },
+    F32(&'a Tensor),
+}
+
 /// A loaded (or about-to-be-saved) quantized model artifact.
 #[derive(Debug)]
 pub struct PackedModel {
@@ -260,6 +269,25 @@ impl PackedModel {
             }
         }
         Ok(())
+    }
+
+    /// Borrow layer `li`'s payload without dequantizing: the packed
+    /// bytes plus grid params, or the resident f32 tensor for lossless
+    /// layers. This is what the fused dequant-matmul serving path
+    /// consumes — no scratch, no full-layer f32 expansion, no lock.
+    pub fn layer_view(&self, li: usize) -> Result<LayerView<'_>> {
+        let l = self
+            .layers
+            .get(li)
+            .ok_or_else(|| Error::shape(format!("layer {li} out of range")))?;
+        Ok(match &self.payloads[li] {
+            Payload::Packed(bytes) => LayerView::Packed {
+                bytes,
+                bits: l.bits,
+                scale: l.scale,
+            },
+            Payload::F32(t) => LayerView::F32(t),
+        })
     }
 
     /// Dequantize one layer into a fresh tensor.

@@ -21,11 +21,15 @@
 //!
 //! ## Control flow
 //!
-//! The inner loops carry a u64 accumulator and flush whole bytes; the
-//! flush pattern depends only on `(bits, element index)`, never on the
-//! code values, so there are no data-dependent branches on the hot path
-//! and the loop bodies vectorize/pipeline cleanly (same discipline as
-//! `quant::kernel`).
+//! The bulk of every (un)pack runs 8 codes at a time: a whole
+//! [`GROUP`] at width `b` is exactly one little-endian u64 worth of
+//! `b` bytes, so the group cores do a single `to_le_bytes`/
+//! `from_le_bytes` per group with fully unrolled shift/mask extracts —
+//! no per-bit loop, no data-dependent branches (same discipline as
+//! `quant::kernel`). Ragged heads/tails fall back to the streaming u64
+//! accumulator, which also powers [`unpack_range`], the random-access
+//! entry the fused dequant-matmul kernel uses to walk a packed layer
+//! panel by panel from any (generally mid-byte) element offset.
 
 use crate::util::error::{Error, Result};
 use crate::util::threadpool::ThreadPool;
@@ -69,10 +73,10 @@ fn check_lens(n_codes: usize, n_bytes: usize, bits: u8) -> Result<()> {
     Ok(())
 }
 
-/// Sequential packing core over one byte-aligned block. `out` must be
-/// exactly `packed_len(codes.len(), bits)` bytes; codes must fit the
-/// width (validated by the public entry points).
-fn pack_block(codes: &[u32], bits: u8, out: &mut [u8]) {
+/// Streaming packing core: byte-at-a-time u64 accumulator. Handles any
+/// element count; the group-unrolled fast path below handles the
+/// GROUP-aligned bulk and leaves this for the ragged tail.
+fn pack_stream(codes: &[u32], bits: u8, out: &mut [u8]) {
     let bits = bits as u32;
     let mut acc: u64 = 0;
     let mut nbits: u32 = 0;
@@ -93,13 +97,22 @@ fn pack_block(codes: &[u32], bits: u8, out: &mut [u8]) {
     }
 }
 
-/// Sequential unpacking core, mirror of [`pack_block`].
-fn unpack_block(bytes: &[u8], bits: u8, out: &mut [u32]) {
+/// Streaming unpacking core starting at an arbitrary element index
+/// `start` of the stream (the first code read begins at bit
+/// `start·bits`, which is mid-byte for most offsets). Mirror of
+/// [`pack_stream`] when `start == 0`.
+fn unpack_stream_at(bytes: &[u8], bits: u8, start: usize, out: &mut [u32]) {
+    if out.is_empty() {
+        return;
+    }
     let bits = bits as u32;
     let mask = (1u64 << bits) - 1;
-    let mut acc: u64 = 0;
-    let mut nbits: u32 = 0;
-    let mut bi = 0usize;
+    let bitpos = start * bits as usize;
+    let lead = (bitpos % 8) as u32;
+    let mut bi = bitpos / 8;
+    let mut acc = (bytes[bi] as u64) >> lead;
+    let mut nbits = 8 - lead;
+    bi += 1;
     for o in out.iter_mut() {
         while nbits < bits {
             acc |= (bytes[bi] as u64) << nbits;
@@ -110,6 +123,92 @@ fn unpack_block(bytes: &[u8], bits: u8, out: &mut [u32]) {
         acc >>= bits;
         nbits -= bits;
     }
+}
+
+/// 8-wide unrolled packing over whole groups: 8 codes at width `b`
+/// occupy exactly `b` bytes ≤ 8, so each group assembles into one u64
+/// with fully unrolled shifts and stores via a single `to_le_bytes` —
+/// no per-bit loop, no data-dependent flushing. `codes.len()` must be a
+/// multiple of [`GROUP`].
+fn pack_groups(codes: &[u32], bits: u8, out: &mut [u8]) {
+    debug_assert_eq!(codes.len() % GROUP, 0);
+    let b = bits as usize;
+    let bits = bits as u32;
+    for (grp, ob) in codes.chunks_exact(GROUP).zip(out.chunks_exact_mut(b)) {
+        let acc = (grp[0] as u64)
+            | (grp[1] as u64) << bits
+            | (grp[2] as u64) << (2 * bits)
+            | (grp[3] as u64) << (3 * bits)
+            | (grp[4] as u64) << (4 * bits)
+            | (grp[5] as u64) << (5 * bits)
+            | (grp[6] as u64) << (6 * bits)
+            | (grp[7] as u64) << (7 * bits);
+        ob.copy_from_slice(&acc.to_le_bytes()[..b]);
+    }
+}
+
+/// 8-wide unrolled unpacking over whole groups, mirror of
+/// [`pack_groups`]: one `from_le_bytes` load per group, fully unrolled
+/// shift-and-mask extracts. `out.len()` must be a multiple of
+/// [`GROUP`].
+fn unpack_groups(bytes: &[u8], bits: u8, out: &mut [u32]) {
+    debug_assert_eq!(out.len() % GROUP, 0);
+    let b = bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let bits = bits as u32;
+    for (bb, grp) in bytes.chunks_exact(b).zip(out.chunks_exact_mut(GROUP)) {
+        let mut buf = [0u8; 8];
+        buf[..b].copy_from_slice(bb);
+        let acc = u64::from_le_bytes(buf);
+        grp[0] = (acc & mask) as u32;
+        grp[1] = ((acc >> bits) & mask) as u32;
+        grp[2] = ((acc >> (2 * bits)) & mask) as u32;
+        grp[3] = ((acc >> (3 * bits)) & mask) as u32;
+        grp[4] = ((acc >> (4 * bits)) & mask) as u32;
+        grp[5] = ((acc >> (5 * bits)) & mask) as u32;
+        grp[6] = ((acc >> (6 * bits)) & mask) as u32;
+        grp[7] = ((acc >> (7 * bits)) & mask) as u32;
+    }
+}
+
+/// Sequential packing core over one byte-aligned block: group-unrolled
+/// bulk + streaming ragged tail. `out` must be exactly
+/// `packed_len(codes.len(), bits)` bytes; codes must fit the width
+/// (validated by the public entry points).
+fn pack_block(codes: &[u32], bits: u8, out: &mut [u8]) {
+    let main = codes.len() / GROUP * GROUP;
+    let main_bytes = main / GROUP * bits as usize;
+    pack_groups(&codes[..main], bits, &mut out[..main_bytes]);
+    pack_stream(&codes[main..], bits, &mut out[main_bytes..]);
+}
+
+/// Sequential unpacking core, mirror of [`pack_block`].
+fn unpack_block(bytes: &[u8], bits: u8, out: &mut [u32]) {
+    let main = out.len() / GROUP * GROUP;
+    let main_bytes = main / GROUP * bits as usize;
+    unpack_groups(&bytes[..main_bytes], bits, &mut out[..main]);
+    unpack_stream_at(bytes, bits, main, &mut out[main..]);
+}
+
+/// Unpack `out.len()` codes starting at element index `start` of the
+/// stream — the random-access primitive the fused dequant-matmul kernel
+/// uses to walk a packed layer in cache-sized column panels without
+/// ever unpacking the whole layer. A row panel generally starts
+/// mid-byte (bit `start·bits`), so this runs a streaming head up to the
+/// next [`GROUP`] boundary, the unrolled group core over the aligned
+/// bulk, and a streaming tail. The caller guarantees
+/// `start + out.len()` codes exist in `bytes` (slice indexing panics
+/// otherwise).
+pub fn unpack_range(bytes: &[u8], bits: u8, start: usize, out: &mut [u32]) {
+    let end = start + out.len();
+    let head_end = (start + (GROUP - start % GROUP) % GROUP).min(end);
+    let head = head_end - start;
+    unpack_stream_at(bytes, bits, start, &mut out[..head]);
+    let main = (end - head_end) / GROUP * GROUP;
+    let b0 = head_end / GROUP * bits as usize;
+    let b1 = b0 + main / GROUP * bits as usize;
+    unpack_groups(&bytes[b0..b1], bits, &mut out[head..head + main]);
+    unpack_stream_at(bytes, bits, head_end + main, &mut out[head + main..]);
 }
 
 /// Pack `codes` at `bits` per code into `out` (exactly
@@ -304,6 +403,61 @@ mod tests {
             unpack_into_with(pool, &par, bits, &mut out_par).unwrap();
             assert_eq!(out_seq, out_par, "unpack bits={bits}");
             assert_eq!(out_par, codes);
+        }
+    }
+
+    #[test]
+    fn unpack_range_matches_full_unpack_at_arbitrary_offsets() {
+        // starts/lengths chosen to hit mid-byte bit offsets, sub-group
+        // heads, aligned bulks, and ragged tails for every width
+        for bits in MIN_BITS..=MAX_BITS {
+            let n = 523;
+            let codes = random_codes(n, bits, 0xA11 + bits as u64);
+            let packed = pack(&codes, bits).unwrap();
+            let full = unpack(&packed, n, bits).unwrap();
+            for &(start, len) in &[
+                (0usize, 0usize),
+                (0, 1),
+                (0, n),
+                (1, 7),
+                (3, 8),
+                (5, 16),
+                (7, 9),
+                (8, 24),
+                (13, 100),
+                (64, 459),
+                (511, 12),
+                (522, 1),
+            ] {
+                let mut out = vec![0u32; len];
+                unpack_range(&packed, bits, start, &mut out);
+                assert_eq!(
+                    out,
+                    &full[start..start + len],
+                    "bits={bits} start={start} len={len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn group_core_matches_stream_core() {
+        // pack_block/unpack_block route the aligned bulk through the
+        // unrolled group core; pin it against the streaming core alone.
+        for bits in MIN_BITS..=MAX_BITS {
+            let n = 8 * 13; // whole groups only
+            let codes = random_codes(n, bits, 0x6B0 + bits as u64);
+            let mut grouped = vec![0u8; packed_len(n, bits)];
+            pack_groups(&codes, bits, &mut grouped);
+            let mut streamed = vec![0u8; packed_len(n, bits)];
+            pack_stream(&codes, bits, &mut streamed);
+            assert_eq!(grouped, streamed, "pack bits={bits}");
+            let mut out_g = vec![0u32; n];
+            unpack_groups(&grouped, bits, &mut out_g);
+            let mut out_s = vec![0u32; n];
+            unpack_stream_at(&grouped, bits, 0, &mut out_s);
+            assert_eq!(out_g, out_s, "unpack bits={bits}");
+            assert_eq!(out_g, codes);
         }
     }
 

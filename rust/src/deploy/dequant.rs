@@ -1,49 +1,43 @@
-//! Dequant-on-the-fly execution of a packed artifact on the host
-//! backend.
+//! Fused execution of a packed artifact on the host backend.
 //!
 //! The naive way to serve a packed model is to dequantize every layer
 //! up front — which materializes a second full-f32 copy of the model
 //! and gives back the memory the packing saved. [`PackedHostForward`]
-//! instead keeps the codes packed and dequantizes **one layer at a
-//! time** into a reusable scratch buffer (sized to the largest layer)
-//! that feeds [`crate::backend::host`]'s shared `layer_pass` directly,
-//! so a forward touches at most `max_layer_params` f32s of transient
-//! weight storage regardless of model size.
+//! never dequantizes a layer at all: each forward borrows the layer's
+//! payload via [`PackedModel::layer_view`] and hands `layer_pass` a
+//! `HostWeights::Packed` provider, so the fused dequant-matmul kernel
+//! (`deploy::fused`) streams the bitstream through cache-sized panels
+//! inside the matmul tile. Lossless-fallback f32 layers are borrowed
+//! in place as `HostWeights::Dense`. A whole-f32 layer therefore never
+//! exists anywhere, for any model size.
 //!
-//! Dequantization is the same `s · q` multiply the rounding kernels
-//! finalize with (see `deploy::artifact`), and `layer_pass` is the
-//! exact per-layer forward `run_graph` uses — so a forward off the
+//! The in-tile dequant is the same `s · q` multiply the rounding
+//! kernels finalize with (see `deploy::artifact`), and `layer_pass` is
+//! the exact per-layer forward `run_graph` uses — so a forward off the
 //! packed representation is **bit-identical** to quantize-then-forward
 //! with the original tensors (asserted end-to-end by
-//! `rust/tests/deploy.rs`).
+//! `rust/tests/deploy.rs` and in this module).
 //!
-//! The scratch lives behind a `Mutex` so the handle satisfies the
-//! `PreparedModel: Send + Sync` serving contract; the serve worker is a
-//! single consumer, so the lock is uncontended on the hot path.
+//! The handle holds no mutable state — panel scratch is owned by the
+//! kernel's row-block workers — so it is lock-free `Send + Sync` and
+//! N fleet workers serving one artifact never serialize on it (the
+//! PR-6 `Mutex<Scratch>` bottleneck is gone).
 
-use std::sync::Mutex;
-
-use crate::backend::host::{fake_quant_act, layer_pass};
+use crate::backend::host::{fake_quant_act, layer_pass, HostWeights};
 use crate::backend::PreparedModel;
 use crate::coordinator::model::LoadedModel;
-use crate::deploy::artifact::PackedModel;
+use crate::deploy::artifact::{LayerView, PackedModel};
 use crate::quant::observer::ActQuantParams;
 use crate::tensor::Tensor;
 use crate::util::error::{Error, Result};
 use crate::util::threadpool::{self, ThreadPool};
 
-struct Scratch {
-    codes: Vec<u32>,
-    w: Vec<f32>,
-}
-
-/// A packed artifact staged for host serving: codes stay packed,
-/// weights exist in f32 only one layer at a time.
+/// A packed artifact staged for host serving: codes stay packed and
+/// are multiplied in place by the fused dequant-matmul kernel.
 pub struct PackedHostForward<'a> {
     pool: &'static ThreadPool,
     model: &'a LoadedModel,
     artifact: &'a PackedModel,
-    scratch: Mutex<Scratch>,
 }
 
 impl<'a> PackedHostForward<'a> {
@@ -60,20 +54,10 @@ impl<'a> PackedHostForward<'a> {
                 )));
             }
         }
-        let max = artifact
-            .layers
-            .iter()
-            .map(|l| l.params())
-            .max()
-            .unwrap_or(0);
         Ok(PackedHostForward {
             pool: threadpool::global(),
             model,
             artifact,
-            scratch: Mutex::new(Scratch {
-                codes: Vec::with_capacity(max),
-                w: Vec::with_capacity(max),
-            }),
         })
     }
 
@@ -83,13 +67,16 @@ impl<'a> PackedHostForward<'a> {
         mut record: Option<&mut Vec<Tensor>>,
         actq: Option<(&[ActQuantParams], &[u8])>,
     ) -> Result<Tensor> {
-        let mut guard = self.scratch.lock().unwrap();
-        let Scratch { codes, w } = &mut *guard;
         let mut cur = x.clone();
         for (li, layer) in self.model.info.layers.iter().enumerate() {
             let pl = &self.artifact.layers[li];
             let nm = (pl.shape[0], pl.shape[1]);
-            self.artifact.dequantize_layer_into(li, codes, w)?;
+            let weights = match self.artifact.layer_view(li)? {
+                LayerView::Packed { bytes, bits, scale } => {
+                    HostWeights::Packed { bytes, bits, scale }
+                }
+                LayerView::F32(t) => HostWeights::Dense(t.data()),
+            };
             let bias = self
                 .model
                 .biases
@@ -101,12 +88,17 @@ impl<'a> PackedHostForward<'a> {
                 Box::new(move |a: &mut [f32]| fake_quant_act(a, &p, b))
                     as Box<dyn Fn(&mut [f32])>
             });
-            let pass =
-                layer_pass(self.pool, layer, w, nm, bias, &cur, tf.as_deref(), true)?;
-            if let Some(rec) = record.as_mut() {
-                rec.push(Tensor::new(pass.in_shape.clone(), pass.a.clone())?);
-            }
-            cur = pass.out.expect("want_out set");
+            // scope the pass so its borrow of `cur` ends before
+            // reassignment
+            let next = {
+                let pass =
+                    layer_pass(self.pool, layer, weights, nm, bias, &cur, tf.as_deref(), true)?;
+                if let Some(rec) = record.as_mut() {
+                    rec.push(Tensor::new(pass.in_shape.clone(), pass.a.to_vec())?);
+                }
+                pass.out.expect("want_out set")
+            };
+            cur = next;
         }
         Ok(cur)
     }

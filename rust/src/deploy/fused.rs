@@ -1,0 +1,253 @@
+//! Fused dequant-matmul: multiply activations straight off the packed
+//! bitstream, so a forward off an artifact never materializes a whole
+//! f32 layer anywhere.
+//!
+//! The unfused serving path was: unpack all `n·m` codes → dequantize
+//! into a full f32 scratch → widen into a second full f64 `Mat` → ikj
+//! matmul. For the zoo's 1152×128 layer that is ~1.7 MB of scratch
+//! traffic per layer per batch before the first multiply. This kernel
+//! walks the LSB-first bitstream in cache-sized **column panels** of
+//! [`PANEL_ELEMS`] elements (whole weight rows at a time): each panel
+//! is unpacked with the group-unrolled `bitpack::unpack_range`,
+//! dequantized panel-locally, and immediately consumed by the
+//! [`crate::linalg::simd::axpy`] inner loop — codes stream through L1/L2
+//! and are gone.
+//!
+//! ## Bit-identity
+//!
+//! The result is `assert_eq!`-identical to unpack → dequantize →
+//! [`crate::linalg::Mat::matmul_with`], because every per-element
+//! operation is literally the same, in the same order:
+//!
+//! * dequant is the same single f32 multiply `s · ((c + lo) as f32)`
+//!   the artifact path applies, then the same exact f32→f64 widening
+//!   `Mat::from_rows_f32` performs (widening is exact, so doing it
+//!   per-panel instead of per-layer changes nothing);
+//! * the k-loop visits weight rows in ascending order — panels ascend,
+//!   rows ascend within a panel — exactly like `matmul_with`'s ikj
+//!   loop, and each `c[i][j]` sees one `+ a[i][k]·w[k][j]` per k with
+//!   separate mul and add (no FMA);
+//! * row-block parallelism partitions output rows, which are
+//!   independent accumulators.
+//!
+//! Property-tested against the unfused path across widths 2–8, ragged
+//! shapes, and pool widths in this module and rust/tests/fused_kernel.rs.
+
+use crate::linalg::simd;
+use crate::util::error::{Error, Result};
+use crate::util::threadpool::{ThreadPool, MIN_PAR_CHUNK};
+
+use super::bitpack;
+
+/// Borrowed packed weight matrix: `n × m` codes (row-major, row =
+/// input channel) at `bits` per code in an LSB-first bitstream.
+#[derive(Debug, Clone, Copy)]
+pub struct PackedWeight<'a> {
+    pub bytes: &'a [u8],
+    pub bits: u8,
+    pub scale: f32,
+    /// Input dimension (weight rows).
+    pub n: usize,
+    /// Output dimension (weight columns).
+    pub m: usize,
+}
+
+/// Elements per dequant panel: 8192 codes ≈ 32 KiB unpacked + 64 KiB
+/// widened — panel scratch for a worker stays L1/L2-resident while the
+/// packed source bytes (2–8 KiB per panel) stream through.
+const PANEL_ELEMS: usize = 8192;
+
+/// out[rows × m] = a[rows × n] · dequant(pw), accumulated in f64 —
+/// bit-identical to dequantizing the whole layer and calling
+/// [`crate::linalg::Mat::matmul_with`] (see the module docs for why).
+/// `out` is cleared and resized; row blocks fan out across `pool`, and
+/// each worker owns its panel scratch (~96 KiB) — no shared state, no
+/// lock.
+pub fn matmul_packed_with(
+    pool: &ThreadPool,
+    a: &[f32],
+    rows: usize,
+    pw: &PackedWeight<'_>,
+    out: &mut Vec<f64>,
+) -> Result<()> {
+    if !(bitpack::MIN_BITS..=bitpack::MAX_BITS).contains(&pw.bits) {
+        return Err(Error::config(format!(
+            "fused matmul: width {} out of range {}..={}",
+            pw.bits,
+            bitpack::MIN_BITS,
+            bitpack::MAX_BITS
+        )));
+    }
+    if a.len() != rows * pw.n {
+        return Err(Error::shape(format!(
+            "fused matmul: {} activations for {rows}x{}",
+            a.len(),
+            pw.n
+        )));
+    }
+    let need = bitpack::packed_len(pw.n * pw.m, pw.bits);
+    if pw.bytes.len() != need {
+        return Err(Error::shape(format!(
+            "fused matmul: {}x{} codes at {}b need {need} bytes, got {}",
+            pw.n,
+            pw.m,
+            pw.bits,
+            pw.bytes.len()
+        )));
+    }
+    let (n, m) = (pw.n, pw.m);
+    out.clear();
+    out.resize(rows * m, 0.0);
+    if rows == 0 || n == 0 || m == 0 {
+        return Ok(());
+    }
+    let (s, bits) = (pw.scale, pw.bits);
+    let lo = -(1i64 << (bits - 1));
+    let bytes = pw.bytes;
+    // Whole weight rows per panel, so each panel is a contiguous code
+    // range [t0·m, t1·m) and a contiguous j-stripe of every activation
+    // row.
+    let panel_rows = (PANEL_ELEMS / m).clamp(1, n);
+    let fill = |first_row: usize, block: &mut [f64]| {
+        // per-worker panel scratch — each row block owns its own
+        let mut codes = vec![0u32; panel_rows * m];
+        let mut wpanel = vec![0.0f64; panel_rows * m];
+        let mut t0 = 0usize;
+        while t0 < n {
+            let t1 = (t0 + panel_rows).min(n);
+            let cnt = (t1 - t0) * m;
+            bitpack::unpack_range(bytes, bits, t0 * m, &mut codes[..cnt]);
+            // same f32 multiply as dequantize_layer_into, then the same
+            // exact widening Mat::from_rows_f32 performs
+            for (wv, &c) in wpanel[..cnt].iter_mut().zip(&codes[..cnt]) {
+                *wv = (s * ((c as i64 + lo) as f32)) as f64;
+            }
+            for (bi, crow) in block.chunks_mut(m).enumerate() {
+                let i = first_row + bi;
+                let arow = &a[i * n + t0..i * n + t1];
+                for (dt, &av) in arow.iter().enumerate() {
+                    simd::axpy(crow, av as f64, &wpanel[dt * m..dt * m + m]);
+                }
+            }
+            t0 = t1;
+        }
+    };
+    if rows * n * m < MIN_PAR_CHUNK {
+        fill(0, out);
+    } else {
+        pool.par_row_blocks(out, m, fill);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    /// The unfused reference: unpack all codes, dequantize into a full
+    /// f32 layer, widen into Mats, matmul.
+    fn unfused(
+        pool: &ThreadPool,
+        a: &[f32],
+        rows: usize,
+        pw: &PackedWeight<'_>,
+    ) -> Vec<f64> {
+        let mut codes = vec![0u32; pw.n * pw.m];
+        bitpack::unpack_into(pw.bytes, pw.bits, &mut codes).unwrap();
+        let lo = -(1i64 << (pw.bits - 1));
+        let w: Vec<f32> = codes
+            .iter()
+            .map(|&c| pw.scale * ((c as i64 + lo) as f32))
+            .collect();
+        let am = Mat::from_rows_f32(rows, pw.n, a).unwrap();
+        let wm = Mat::from_rows_f32(pw.n, pw.m, &w).unwrap();
+        am.matmul_with(pool, &wm).unwrap().data
+    }
+
+    fn random_packed(n: usize, m: usize, bits: u8, seed: u64) -> (Vec<u8>, f32) {
+        let mut rng = Rng::new(seed);
+        let codes: Vec<u32> = (0..n * m)
+            .map(|_| rng.below(1usize << bits) as u32)
+            .collect();
+        (bitpack::pack(&codes, bits).unwrap(), 0.01 + bits as f32 * 0.003)
+    }
+
+    #[test]
+    fn fused_matches_unfused_across_widths_and_shapes() {
+        let seq = ThreadPool::seq();
+        for bits in bitpack::MIN_BITS..=bitpack::MAX_BITS {
+            for &(rows, n, m) in &[
+                (1usize, 1usize, 1usize),
+                (7, 5, 3),
+                (16, 9, 4),
+                (33, 17, 10),
+                (8, 128, 16),
+                (64, 31, 2),
+            ] {
+                let (bytes, scale) = random_packed(n, m, bits, 31 * n as u64 + bits as u64);
+                let pw = PackedWeight { bytes: &bytes, bits, scale, n, m };
+                let mut act = vec![0.0f32; rows * n];
+                Rng::new(77 + rows as u64).fill_gaussian(&mut act, 0.0, 1.0);
+                let mut got = Vec::new();
+                matmul_packed_with(&seq, &act, rows, &pw, &mut got).unwrap();
+                let want = unfused(&seq, &act, rows, &pw);
+                assert_eq!(got, want, "bits={bits} {rows}x{n}x{m}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fused_bit_identical_to_sequential() {
+        // big enough to cross MIN_PAR_CHUNK and fan out for real
+        let (rows, n, m) = (24, 300, 40);
+        let (bytes, scale) = random_packed(n, m, 4, 0xF05);
+        let pw = PackedWeight { bytes: &bytes, bits: 4, scale, n, m };
+        let mut act = vec![0.0f32; rows * n];
+        Rng::new(0xAC7).fill_gaussian(&mut act, 0.0, 0.5);
+        let mut seq_out = Vec::new();
+        matmul_packed_with(&ThreadPool::seq(), &act, rows, &pw, &mut seq_out).unwrap();
+        for width in [2usize, 8] {
+            let mut par_out = Vec::new();
+            matmul_packed_with(&ThreadPool::new(width), &act, rows, &pw, &mut par_out)
+                .unwrap();
+            assert_eq!(seq_out, par_out, "pool width {width}");
+        }
+        assert_eq!(seq_out, unfused(&ThreadPool::seq(), &act, rows, &pw));
+    }
+
+    #[test]
+    fn zero_weights_and_zero_scale() {
+        let seq = ThreadPool::seq();
+        let (n, m, bits) = (12usize, 5usize, 4u8);
+        // code 2^(b-1) is grid point 0 at every width
+        let codes = vec![1u32 << (bits - 1); n * m];
+        let bytes = bitpack::pack(&codes, bits).unwrap();
+        let act = vec![1.0f32; 3 * n];
+        let pw = PackedWeight { bytes: &bytes, bits, scale: 0.07, n, m };
+        let mut out = Vec::new();
+        matmul_packed_with(&seq, &act, 3, &pw, &mut out).unwrap();
+        assert_eq!(out, unfused(&seq, &act, 3, &pw));
+        assert!(out.iter().all(|&v| v == 0.0));
+        // scale 0 collapses every weight to ±0.0
+        let (bytes2, _) = random_packed(n, m, bits, 5);
+        let pw0 = PackedWeight { bytes: &bytes2, bits, scale: 0.0, n, m };
+        let mut out0 = Vec::new();
+        matmul_packed_with(&seq, &act, 3, &pw0, &mut out0).unwrap();
+        assert_eq!(out0, unfused(&seq, &act, 3, &pw0));
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_widths() {
+        let (bytes, scale) = random_packed(4, 4, 4, 1);
+        let act = vec![0.0f32; 8];
+        let mut out = Vec::new();
+        let bad_bits = PackedWeight { bytes: &bytes, bits: 9, scale, n: 4, m: 4 };
+        assert!(matmul_packed_with(&ThreadPool::seq(), &act, 2, &bad_bits, &mut out).is_err());
+        let pw = PackedWeight { bytes: &bytes, bits: 4, scale, n: 4, m: 4 };
+        assert!(matmul_packed_with(&ThreadPool::seq(), &act, 3, &pw, &mut out).is_err());
+        let short = PackedWeight { bytes: &bytes[..4], bits: 4, scale, n: 4, m: 4 };
+        assert!(matmul_packed_with(&ThreadPool::seq(), &act, 2, &short, &mut out).is_err());
+    }
+}

@@ -17,21 +17,27 @@
 //!        │                     │
 //!        │                     ▼ Backend::prepare_artifact
 //!        │               PackedHostForward            (dequant)
-//!        │                     │ per-layer scratch, no full f32 copy
+//!        │                     │ fused panels, no full f32 layer ever
 //!        ▼                     ▼
 //!  direct forward  ══ bit-identical ══  serve --artifact (PR-4 queue)
 //! ```
 //!
 //! * [`bitpack`] — LSB-first bitstream pack/unpack of integer codes at
 //!   widths 2–8, `_into` variants, parallel over byte-aligned row
-//!   blocks, bit-exact roundtrip property-tested.
+//!   blocks, 8-wide group-unrolled cores + random-access
+//!   `unpack_range`, bit-exact roundtrip property-tested.
 //! * [`artifact`] — the versioned single-directory format v2: header
 //!   JSON with per-layer name/bits/scale/shape/coding-length
 //!   provenance, one packed `.qbin` per layer with length + checksum,
 //!   loader validates streams and still reads v1 f32 dirs.
-//! * [`dequant`] — dequant-on-the-fly into reusable scratch feeding
-//!   `backend::host::layer_pass`, so a forward runs off the packed
-//!   representation without materializing a second full-f32 model.
+//! * [`fused`] — the fused dequant-matmul microkernel: walks the
+//!   bitstream in cache-sized column panels and applies the `s·q`
+//!   multiply inside the matmul tile, so a forward off a packed
+//!   artifact never materializes a whole f32 layer anywhere —
+//!   bit-identical to dequantize-then-matmul by construction.
+//! * [`dequant`] — the lock-free `PackedHostForward` handle wiring
+//!   [`fused`] (and borrowed f32 fallback layers) into
+//!   `backend::host::layer_pass`.
 //! * [`report`] — per-layer and total compression accounting (packed
 //!   vs f32 bytes, effective bits/weight) as table + JSON.
 //!
@@ -42,8 +48,9 @@
 pub mod artifact;
 pub mod bitpack;
 pub mod dequant;
+pub mod fused;
 pub mod report;
 
-pub use artifact::{is_artifact_dir, PackedModel};
+pub use artifact::{is_artifact_dir, LayerView, PackedModel};
 pub use dequant::PackedHostForward;
 pub use report::{compression_table, summarize, Compression};

@@ -17,6 +17,8 @@
 use crate::util::error::{Error, Result};
 use crate::util::threadpool::{ThreadPool, MIN_PAR_CHUNK};
 
+pub mod simd;
+
 /// Row-major dense matrix of f64 (the determinant accumulates across
 /// hundreds of multiplications — f32 would visibly drift).
 #[derive(Debug, Clone)]
@@ -257,7 +259,12 @@ impl Mat {
 
     /// C = self · other with C's rows computed in parallel blocks. The
     /// per-row ikj loop accumulates in ascending-k order regardless of
-    /// blocking, so this is bit-identical to the sequential form.
+    /// blocking, so this is bit-identical to the sequential form. The
+    /// inner j-loop is the [`simd`] axpy kernel: unconditional, so the
+    /// lanes stay full (a data-dependent zero skip would block
+    /// vectorization, and adding `±0.0·b` products from a `+0.0` start
+    /// cannot flip a bit for finite operands — 0·∞/0·NaN is the only
+    /// case where skip and no-skip differ).
     pub fn matmul_with(&self, pool: &ThreadPool, other: &Mat) -> Result<Mat> {
         if self.cols != other.rows {
             return Err(Error::shape(format!(
@@ -277,13 +284,7 @@ impl Mat {
                 let i = first_row + bi;
                 for t in 0..k {
                     let av = a[i * k + t];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[t * n..(t + 1) * n];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv += av * bv;
-                    }
+                    simd::axpy(crow, av, &b[t * n..(t + 1) * n]);
                 }
             }
         };

@@ -1,0 +1,199 @@
+//! Explicit-width SIMD microkernel for the matmul inner loop.
+//!
+//! The whole host matmul family (`Mat::matmul_with`, the fused packed
+//! kernel in `deploy::fused`) reduces to one primitive: a row-scaled
+//! accumulate `c[j] += a · b[j]` over a contiguous column panel. This
+//! module provides that primitive three ways — AVX (4×f64 lanes, two
+//! per iteration), SSE2 (2×f64 lanes, four per iteration), and an
+//! 8-wide manually unrolled scalar form — selected at runtime and
+//! gated behind the `simd` cargo feature.
+//!
+//! ## Why every path is bit-identical
+//!
+//! Each output element `c[j]` sees exactly one multiply and one add per
+//! call, in the same order, whichever lane it lands in: the vector
+//! paths use separate `mul` + `add` instructions (never FMA, which
+//! fuses the intermediate rounding away), and IEEE 754 arithmetic is
+//! deterministic per element. Vectorizing across `j` therefore cannot
+//! change a single bit of any `c[j]` — there is no reassociation,
+//! because each lane owns a distinct output element. The scalar
+//! fallback unrolls 8 wide for the same reason the callers block by
+//! rows: independent accumulators pipeline; the unroll factor is
+//! likewise invisible in the results. `axpy` vs [`axpy_scalar`]
+//! identity is property-tested in rust/tests/fused_kernel.rs, so the
+//! `core::arch` path can never silently diverge.
+
+/// c[j] += a · b[j] for every j. Runtime-dispatched: AVX when the CPU
+/// has it, SSE2 otherwise (baseline on x86_64), the unrolled scalar
+/// form on other targets or with the `simd` feature disabled.
+#[inline]
+pub fn axpy(c: &mut [f64], a: f64, b: &[f64]) {
+    debug_assert_eq!(c.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // SAFETY: sse2 is part of the x86_64 baseline; the avx call is
+        // guarded by the runtime feature probe.
+        unsafe {
+            if use_avx() {
+                x86::axpy_avx(c, a, b);
+            } else {
+                x86::axpy_sse2(c, a, b);
+            }
+        }
+        return;
+    }
+    #[allow(unreachable_code)]
+    axpy_scalar(c, a, b)
+}
+
+/// The scalar reference form of [`axpy`]: 8 independent update slots per
+/// iteration. Public so the identity property test (and the bench
+/// harness) can pin the vector paths against it.
+#[inline]
+pub fn axpy_scalar(c: &mut [f64], a: f64, b: &[f64]) {
+    debug_assert_eq!(c.len(), b.len());
+    let mut cc = c.chunks_exact_mut(8);
+    let mut bc = b.chunks_exact(8);
+    for (cw, bw) in (&mut cc).zip(&mut bc) {
+        cw[0] += a * bw[0];
+        cw[1] += a * bw[1];
+        cw[2] += a * bw[2];
+        cw[3] += a * bw[3];
+        cw[4] += a * bw[4];
+        cw[5] += a * bw[5];
+        cw[6] += a * bw[6];
+        cw[7] += a * bw[7];
+    }
+    for (cv, &bv) in cc.into_remainder().iter_mut().zip(bc.remainder()) {
+        *cv += a * bv;
+    }
+}
+
+/// One-time AVX probe, cached in a process-wide flag (0 = unprobed,
+/// 1 = sse2 only, 2 = avx). Shared with the `quant::kernel` slice
+/// quantizers so the whole crate dispatches off one probe.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+pub(crate) fn use_avx() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static LEVEL: AtomicU8 = AtomicU8::new(0);
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => {
+            let l = if std::is_x86_feature_detected!("avx") { 2 } else { 1 };
+            LEVEL.store(l, Ordering::Relaxed);
+            l == 2
+        }
+        l => l == 2,
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// SAFETY: caller must ensure the CPU supports AVX and
+    /// `c.len() == b.len()`.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy_avx(c: &mut [f64], a: f64, b: &[f64]) {
+        let n = c.len();
+        let av = _mm256_set1_pd(a);
+        let cp = c.as_mut_ptr();
+        let bp = b.as_ptr();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let r0 = _mm256_add_pd(
+                _mm256_loadu_pd(cp.add(j)),
+                _mm256_mul_pd(av, _mm256_loadu_pd(bp.add(j))),
+            );
+            let r1 = _mm256_add_pd(
+                _mm256_loadu_pd(cp.add(j + 4)),
+                _mm256_mul_pd(av, _mm256_loadu_pd(bp.add(j + 4))),
+            );
+            _mm256_storeu_pd(cp.add(j), r0);
+            _mm256_storeu_pd(cp.add(j + 4), r1);
+            j += 8;
+        }
+        if j + 4 <= n {
+            let r = _mm256_add_pd(
+                _mm256_loadu_pd(cp.add(j)),
+                _mm256_mul_pd(av, _mm256_loadu_pd(bp.add(j))),
+            );
+            _mm256_storeu_pd(cp.add(j), r);
+            j += 4;
+        }
+        while j < n {
+            *cp.add(j) += a * *bp.add(j);
+            j += 1;
+        }
+    }
+
+    /// SAFETY: caller must ensure `c.len() == b.len()` (sse2 is the
+    /// x86_64 baseline).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn axpy_sse2(c: &mut [f64], a: f64, b: &[f64]) {
+        let n = c.len();
+        let av = _mm_set1_pd(a);
+        let cp = c.as_mut_ptr();
+        let bp = b.as_ptr();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let r0 = _mm_add_pd(_mm_loadu_pd(cp.add(j)), _mm_mul_pd(av, _mm_loadu_pd(bp.add(j))));
+            let r1 = _mm_add_pd(
+                _mm_loadu_pd(cp.add(j + 2)),
+                _mm_mul_pd(av, _mm_loadu_pd(bp.add(j + 2))),
+            );
+            let r2 = _mm_add_pd(
+                _mm_loadu_pd(cp.add(j + 4)),
+                _mm_mul_pd(av, _mm_loadu_pd(bp.add(j + 4))),
+            );
+            let r3 = _mm_add_pd(
+                _mm_loadu_pd(cp.add(j + 6)),
+                _mm_mul_pd(av, _mm_loadu_pd(bp.add(j + 6))),
+            );
+            _mm_storeu_pd(cp.add(j), r0);
+            _mm_storeu_pd(cp.add(j + 2), r1);
+            _mm_storeu_pd(cp.add(j + 4), r2);
+            _mm_storeu_pd(cp.add(j + 6), r3);
+            j += 8;
+        }
+        while j < n {
+            *cp.add(j) += a * *bp.add(j);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dispatch_matches_scalar_bit_for_bit() {
+        let mut rng = Rng::new(0x51AD);
+        // ragged lengths around the 8/4/2-wide boundaries
+        for &n in &[0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 100, 1023] {
+            let mut bf = vec![0.0f32; n];
+            rng.fill_gaussian(&mut bf, 0.0, 1.0);
+            let b: Vec<f64> = bf.iter().map(|&v| v as f64).collect();
+            let mut c0: Vec<f64> = (0..n).map(|i| (i as f64) * 0.25 - 3.0).collect();
+            let mut c1 = c0.clone();
+            let a = rng.gaussian_f32(0.0, 2.0) as f64;
+            axpy(&mut c0, a, &b);
+            axpy_scalar(&mut c1, a, &b);
+            assert_eq!(c0, c1, "axpy diverged from scalar at n={n}");
+        }
+    }
+
+    #[test]
+    fn zero_and_special_scalars() {
+        let b = vec![1.5f64, -2.25, 0.0, -0.0, 7.125];
+        for a in [0.0f64, -0.0, 1.0, -3.5] {
+            let mut c0 = vec![0.5f64; 5];
+            let mut c1 = c0.clone();
+            axpy(&mut c0, a, &b);
+            axpy_scalar(&mut c1, a, &b);
+            assert_eq!(c0, c1);
+        }
+    }
+}

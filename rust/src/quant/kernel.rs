@@ -127,6 +127,204 @@ pub fn quant_sse_multi(
     }
 }
 
+// ---- explicit-SIMD slice quantizers -------------------------------------
+//
+// The `_into` rounding kernels feed contiguous chunks here. The vector
+// paths run the exact scalar op chain — divps, add/sub MAGIC, clamp,
+// mulps — with the same IEEE-correctly-rounded instructions, so every
+// lane reproduces the scalar result bit for bit. The clamp is written
+// `min(hi, max(lo, r))` with the constants as the FIRST operand: x86
+// min/max return the second operand when either input is NaN, so a NaN
+// quotient propagates to the output exactly like `f32::clamp` does.
+
+/// out[i] = s · clamp(round_half_even(w[i]/s), lo, hi) over a contiguous
+/// slice; AVX/SSE2 when available, [`quantize_nearest_slice_scalar`]
+/// otherwise. Bit-identical either way.
+#[inline]
+pub fn quantize_nearest_slice(w: &[f32], s: f32, lo: f32, hi: f32, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), out.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // SAFETY: sse2 is the x86_64 baseline; avx is runtime-probed.
+        unsafe {
+            if crate::linalg::simd::use_avx() {
+                x86q::quantize_nearest_avx(w, s, lo, hi, out);
+            } else {
+                x86q::quantize_nearest_sse2(w, s, lo, hi, out);
+            }
+        }
+        return;
+    }
+    #[allow(unreachable_code)]
+    quantize_nearest_slice_scalar(w, s, lo, hi, out)
+}
+
+/// Scalar reference form of [`quantize_nearest_slice`]; public so the
+/// identity property tests can pin the vector paths against it.
+#[inline]
+pub fn quantize_nearest_slice_scalar(w: &[f32], s: f32, lo: f32, hi: f32, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(w) {
+        *o = s * round_half_even_fast(v / s).clamp(lo, hi);
+    }
+}
+
+/// out[i] = s · clamp(round_half_even(w[i]/s + alpha[i]), lo, hi) — the
+/// Attention Round finalizer over a contiguous slice, SIMD-dispatched
+/// like [`quantize_nearest_slice`].
+#[inline]
+pub fn quantize_attention_slice(
+    w: &[f32],
+    alpha: &[f32],
+    s: f32,
+    lo: f32,
+    hi: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), out.len());
+    debug_assert_eq!(w.len(), alpha.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // SAFETY: sse2 is the x86_64 baseline; avx is runtime-probed.
+        unsafe {
+            if crate::linalg::simd::use_avx() {
+                x86q::quantize_attention_avx(w, alpha, s, lo, hi, out);
+            } else {
+                x86q::quantize_attention_sse2(w, alpha, s, lo, hi, out);
+            }
+        }
+        return;
+    }
+    #[allow(unreachable_code)]
+    quantize_attention_slice_scalar(w, alpha, s, lo, hi, out)
+}
+
+/// Scalar reference form of [`quantize_attention_slice`].
+#[inline]
+pub fn quantize_attention_slice_scalar(
+    w: &[f32],
+    alpha: &[f32],
+    s: f32,
+    lo: f32,
+    hi: f32,
+    out: &mut [f32],
+) {
+    for ((o, &v), &a) in out.iter_mut().zip(w).zip(alpha) {
+        *o = s * round_half_even_fast(v / s + a).clamp(lo, hi);
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86q {
+    use super::{round_half_even_fast, MAGIC};
+    use core::arch::x86_64::*;
+
+    /// SAFETY: caller must ensure AVX support and equal slice lengths.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn quantize_nearest_avx(w: &[f32], s: f32, lo: f32, hi: f32, out: &mut [f32]) {
+        let n = w.len();
+        let (sv, mg) = (_mm256_set1_ps(s), _mm256_set1_ps(MAGIC));
+        let (lov, hiv) = (_mm256_set1_ps(lo), _mm256_set1_ps(hi));
+        let (wp, op) = (w.as_ptr(), out.as_mut_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let q = _mm256_div_ps(_mm256_loadu_ps(wp.add(i)), sv);
+            let r = _mm256_sub_ps(_mm256_add_ps(q, mg), mg);
+            let c = _mm256_min_ps(hiv, _mm256_max_ps(lov, r));
+            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(sv, c));
+            i += 8;
+        }
+        while i < n {
+            *op.add(i) = s * round_half_even_fast(*wp.add(i) / s).clamp(lo, hi);
+            i += 1;
+        }
+    }
+
+    /// SAFETY: caller must ensure equal slice lengths (sse2 is baseline).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn quantize_nearest_sse2(w: &[f32], s: f32, lo: f32, hi: f32, out: &mut [f32]) {
+        let n = w.len();
+        let (sv, mg) = (_mm_set1_ps(s), _mm_set1_ps(MAGIC));
+        let (lov, hiv) = (_mm_set1_ps(lo), _mm_set1_ps(hi));
+        let (wp, op) = (w.as_ptr(), out.as_mut_ptr());
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let q = _mm_div_ps(_mm_loadu_ps(wp.add(i)), sv);
+            let r = _mm_sub_ps(_mm_add_ps(q, mg), mg);
+            let c = _mm_min_ps(hiv, _mm_max_ps(lov, r));
+            _mm_storeu_ps(op.add(i), _mm_mul_ps(sv, c));
+            i += 4;
+        }
+        while i < n {
+            *op.add(i) = s * round_half_even_fast(*wp.add(i) / s).clamp(lo, hi);
+            i += 1;
+        }
+    }
+
+    /// SAFETY: caller must ensure AVX support and equal slice lengths.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn quantize_attention_avx(
+        w: &[f32],
+        alpha: &[f32],
+        s: f32,
+        lo: f32,
+        hi: f32,
+        out: &mut [f32],
+    ) {
+        let n = w.len();
+        let (sv, mg) = (_mm256_set1_ps(s), _mm256_set1_ps(MAGIC));
+        let (lov, hiv) = (_mm256_set1_ps(lo), _mm256_set1_ps(hi));
+        let (wp, ap, op) = (w.as_ptr(), alpha.as_ptr(), out.as_mut_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let q = _mm256_add_ps(
+                _mm256_div_ps(_mm256_loadu_ps(wp.add(i)), sv),
+                _mm256_loadu_ps(ap.add(i)),
+            );
+            let r = _mm256_sub_ps(_mm256_add_ps(q, mg), mg);
+            let c = _mm256_min_ps(hiv, _mm256_max_ps(lov, r));
+            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(sv, c));
+            i += 8;
+        }
+        while i < n {
+            *op.add(i) =
+                s * round_half_even_fast(*wp.add(i) / s + *ap.add(i)).clamp(lo, hi);
+            i += 1;
+        }
+    }
+
+    /// SAFETY: caller must ensure equal slice lengths (sse2 is baseline).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn quantize_attention_sse2(
+        w: &[f32],
+        alpha: &[f32],
+        s: f32,
+        lo: f32,
+        hi: f32,
+        out: &mut [f32],
+    ) {
+        let n = w.len();
+        let (sv, mg) = (_mm_set1_ps(s), _mm_set1_ps(MAGIC));
+        let (lov, hiv) = (_mm_set1_ps(lo), _mm_set1_ps(hi));
+        let (wp, ap, op) = (w.as_ptr(), alpha.as_ptr(), out.as_mut_ptr());
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let q = _mm_add_ps(
+                _mm_div_ps(_mm_loadu_ps(wp.add(i)), sv),
+                _mm_loadu_ps(ap.add(i)),
+            );
+            let r = _mm_sub_ps(_mm_add_ps(q, mg), mg);
+            let c = _mm_min_ps(hiv, _mm_max_ps(lov, r));
+            _mm_storeu_ps(op.add(i), _mm_mul_ps(sv, c));
+            i += 4;
+        }
+        while i < n {
+            *op.add(i) =
+                s * round_half_even_fast(*wp.add(i) / s + *ap.add(i)).clamp(lo, hi);
+            i += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,6 +394,62 @@ mod tests {
             let ffast = g.scale * floor_fast(v / g.scale).clamp(g.lo, g.hi);
             let fref = g.scale * (v / g.scale).floor().clamp(g.lo, g.hi);
             assert_eq!(ffast, fref, "floor mismatch at {v}");
+        }
+    }
+
+    #[test]
+    fn simd_slices_match_scalar_bit_for_bit() {
+        let mut rng = Rng::new(0x51CE);
+        // ragged lengths around the 8/4-lane boundaries
+        for &n in &[0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 1000] {
+            let mut w = vec![0.0f32; n];
+            let mut alpha = vec![0.0f32; n];
+            rng.fill_gaussian(&mut w, 0.0, 0.3);
+            rng.fill_gaussian(&mut alpha, 0.0, 0.5);
+            let g = QGrid::signed(4, 0.07).unwrap();
+            let mut got = vec![0.0f32; n];
+            let mut want = vec![0.0f32; n];
+            quantize_nearest_slice(&w, g.scale, g.lo, g.hi, &mut got);
+            quantize_nearest_slice_scalar(&w, g.scale, g.lo, g.hi, &mut want);
+            assert_eq!(got, want, "nearest slice diverged at n={n}");
+            quantize_attention_slice(&w, &alpha, g.scale, g.lo, g.hi, &mut got);
+            quantize_attention_slice_scalar(&w, &alpha, g.scale, g.lo, g.hi, &mut want);
+            assert_eq!(got, want, "attention slice diverged at n={n}");
+        }
+    }
+
+    #[test]
+    fn simd_slices_match_scalar_on_extremes() {
+        // NaN/inf/huge/signed-zero inputs: compare bit patterns so a NaN
+        // result still has to match exactly (the SIMD clamp is written
+        // min(hi, max(lo, r)) precisely so NaN propagates like f32::clamp).
+        let w = [
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MAX,
+            f32::MIN,
+            1.0e9,
+            -1.0e9,
+            0.0,
+            -0.0,
+            0.105,
+            -0.105,
+            4.2e6,
+        ];
+        let alpha = [0.5f32; 12];
+        let g = QGrid::signed(8, 0.37).unwrap();
+        let mut got = [0.0f32; 12];
+        let mut want = [0.0f32; 12];
+        quantize_nearest_slice(&w, g.scale, g.lo, g.hi, &mut got);
+        quantize_nearest_slice_scalar(&w, g.scale, g.lo, g.hi, &mut want);
+        for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "nearest bits at {i}: {x} vs {y}");
+        }
+        quantize_attention_slice(&w, &alpha, g.scale, g.lo, g.hi, &mut got);
+        quantize_attention_slice_scalar(&w, &alpha, g.scale, g.lo, g.hi, &mut want);
+        for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "attention bits at {i}: {x} vs {y}");
         }
     }
 

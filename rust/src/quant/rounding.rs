@@ -6,7 +6,9 @@
 //! stay in f32, which is what the forward executables consume (fake
 //! quantization, standard for PTQ evaluation).
 
-use super::kernel::{ceil_fast, floor_fast, round_half_even_fast};
+use super::kernel::{
+    ceil_fast, floor_fast, quantize_attention_slice, quantize_nearest_slice,
+};
 use super::{round_half_even, QGrid};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{ThreadPool, MIN_PAR_CHUNK};
@@ -99,13 +101,13 @@ pub fn attention_finalize(w: &[f32], alpha: &[f32], g: &QGrid) -> Vec<f32> {
 // (see kernel.rs for the exactness argument; verified by
 // tests/kernel_properties.rs).
 
-/// In-place parallel [`nearest`].
+/// In-place parallel [`nearest`]. Chunks dispatch into the explicit-SIMD
+/// slice quantizer (`quant::kernel::quantize_nearest_slice`), which is
+/// bit-identical to the scalar expression on every path.
 pub fn nearest_into(pool: &ThreadPool, w: &[f32], g: &QGrid, out: &mut [f32]) {
     let (s, lo, hi) = (g.scale, g.lo, g.hi);
     pool.par_chunks(w, out, |_, ic, oc| {
-        for (o, &v) in oc.iter_mut().zip(ic) {
-            *o = s * round_half_even_fast(v / s).clamp(lo, hi);
-        }
+        quantize_nearest_slice(ic, s, lo, hi, oc);
     });
 }
 
@@ -186,7 +188,8 @@ pub fn stochastic_into(pool: &ThreadPool, w: &[f32], g: &QGrid, seed: u64, out: 
     }
 }
 
-/// In-place parallel [`attention_finalize`].
+/// In-place parallel [`attention_finalize`], dispatching chunks into the
+/// explicit-SIMD attention slice quantizer.
 pub fn attention_finalize_into(
     pool: &ThreadPool,
     w: &[f32],
@@ -197,10 +200,7 @@ pub fn attention_finalize_into(
     assert_eq!(w.len(), alpha.len(), "attention_finalize_into arity");
     let (s, lo, hi) = (g.scale, g.lo, g.hi);
     pool.par_chunks(w, out, |off, ic, oc| {
-        let ac = &alpha[off..off + ic.len()];
-        for ((o, &v), &a) in oc.iter_mut().zip(ic).zip(ac) {
-            *o = s * round_half_even_fast(v / s + a).clamp(lo, hi);
-        }
+        quantize_attention_slice(ic, &alpha[off..off + ic.len()], s, lo, hi, oc);
     });
 }
 

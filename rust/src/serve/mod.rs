@@ -459,8 +459,10 @@ pub fn run_load_generator(
 /// deployment path `repro serve --artifact <dir>` drives. The model
 /// named in the artifact header supplies structure and biases; the
 /// artifact supplies the packed weights (staged per worker via
-/// [`Backend::prepare_artifact`] — dequant-on-the-fly on the host
-/// backend) and, when present, its activation-quant deployment config
+/// [`Backend::prepare_artifact`] — on the host backend a lock-free
+/// handle running the fused dequant-matmul kernel straight off the
+/// packed codes, so workers scale without serializing on shared
+/// scratch) and, when present, its activation-quant deployment config
 /// ([`PackedModel::deployment_actq`]), which **overrides** `cfg.actq`
 /// so a saved W+A model serves exactly the configuration it was
 /// calibrated with. With `cfg.verify`, every answer is re-checked

@@ -1,0 +1,196 @@
+//! Property suite for the fused dequant-matmul kernel and the explicit
+//! SIMD paths: the fused forward must equal dequantize-then-matmul with
+//! `assert_eq!` (no tolerance) for every width 2–8, ragged shape, and
+//! pool width, and every `core::arch` path must equal its scalar
+//! fallback bit for bit. Run with `--no-default-features` too — CI does
+//! — to pin the scalar-only build to the same outputs.
+
+use attention_round::deploy::bitpack;
+use attention_round::deploy::fused::{matmul_packed_with, PackedWeight};
+use attention_round::linalg::{simd, Mat};
+use attention_round::quant::kernel::{
+    quantize_attention_slice, quantize_attention_slice_scalar, quantize_nearest_slice,
+    quantize_nearest_slice_scalar,
+};
+use attention_round::util::rng::Rng;
+use attention_round::util::threadpool::ThreadPool;
+
+fn random_codes(n: usize, bits: u8, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(1usize << bits) as u32).collect()
+}
+
+fn random_acts(len: usize, seed: u64) -> Vec<f32> {
+    let mut a = vec![0.0f32; len];
+    Rng::new(seed).fill_gaussian(&mut a, 0.0, 0.7);
+    a
+}
+
+/// The unfused reference path: unpack every code, dequantize into a
+/// full f32 layer with the artifact's `s · q` multiply, widen both
+/// operands into `Mat`s, and run the dense matmul.
+fn dequant_then_matmul(
+    pool: &ThreadPool,
+    act: &[f32],
+    rows: usize,
+    pw: &PackedWeight<'_>,
+) -> Vec<f64> {
+    let mut codes = vec![0u32; pw.n * pw.m];
+    bitpack::unpack_into(pw.bytes, pw.bits, &mut codes).unwrap();
+    let lo = -(1i64 << (pw.bits - 1));
+    let w: Vec<f32> = codes
+        .iter()
+        .map(|&c| pw.scale * ((c as i64 + lo) as f32))
+        .collect();
+    let am = Mat::from_rows_f32(rows, pw.n, act).unwrap();
+    let wm = Mat::from_rows_f32(pw.n, pw.m, &w).unwrap();
+    am.matmul_with(pool, &wm).unwrap().data
+}
+
+#[test]
+fn fused_equals_dequant_then_matmul_all_widths_shapes_pools() {
+    let pools = [ThreadPool::seq(), ThreadPool::new(2), ThreadPool::new(8)];
+    for bits in bitpack::MIN_BITS..=bitpack::MAX_BITS {
+        for &(rows, n, m) in &[
+            (1usize, 1usize, 1usize),
+            (7, 5, 3),
+            (16, 9, 4),
+            (33, 17, 10),
+            (8, 128, 16),
+            (64, 31, 2),
+            (5, 300, 40), // > PANEL_ELEMS per panel-row sweep at m=40
+        ] {
+            let codes = random_codes(n * m, bits, 1000 + n as u64 * 7 + bits as u64);
+            let bytes = bitpack::pack(&codes, bits).unwrap();
+            let pw = PackedWeight {
+                bytes: &bytes,
+                bits,
+                scale: 0.004 * bits as f32,
+                n,
+                m,
+            };
+            let act = random_acts(rows * n, 31 + rows as u64);
+            let want = dequant_then_matmul(&pools[0], &act, rows, &pw);
+            for (pi, pool) in pools.iter().enumerate() {
+                let mut got = Vec::new();
+                matmul_packed_with(pool, &act, rows, &pw, &mut got).unwrap();
+                assert_eq!(
+                    got, want,
+                    "fused != unfused at bits={bits} {rows}x{n}x{m} pool#{pi}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_handles_zero_weight_layers() {
+    let seq = ThreadPool::seq();
+    for bits in [2u8, 5, 8] {
+        let (rows, n, m) = (6usize, 24usize, 9usize);
+        // code 2^(b-1) sits at grid point 0 for every width
+        let codes = vec![1u32 << (bits - 1); n * m];
+        let bytes = bitpack::pack(&codes, bits).unwrap();
+        let pw = PackedWeight { bytes: &bytes, bits, scale: 0.05, n, m };
+        let act = random_acts(rows * n, 5);
+        let mut got = Vec::new();
+        matmul_packed_with(&seq, &act, rows, &pw, &mut got).unwrap();
+        assert_eq!(got, dequant_then_matmul(&seq, &act, rows, &pw));
+        assert!(got.iter().all(|&v| v == 0.0), "bits={bits}");
+    }
+}
+
+#[test]
+fn fused_parallel_equals_sequential_on_large_layer() {
+    // crosses MIN_PAR_CHUNK so par_row_blocks really fans out, and the
+    // 1152-row walk spans many panels
+    let (rows, n, m) = (32usize, 1152usize, 128usize);
+    let codes = random_codes(n * m, 4, 0xBEE);
+    let bytes = bitpack::pack(&codes, 4).unwrap();
+    let pw = PackedWeight { bytes: &bytes, bits: 4, scale: 0.01, n, m };
+    let act = random_acts(rows * n, 0xACE);
+    let mut seq_out = Vec::new();
+    matmul_packed_with(&ThreadPool::seq(), &act, rows, &pw, &mut seq_out).unwrap();
+    for width in [2usize, 8] {
+        let mut par_out = Vec::new();
+        matmul_packed_with(&ThreadPool::new(width), &act, rows, &pw, &mut par_out).unwrap();
+        assert_eq!(seq_out, par_out, "pool width {width}");
+    }
+    assert_eq!(seq_out, dequant_then_matmul(&ThreadPool::seq(), &act, rows, &pw));
+}
+
+#[test]
+fn axpy_simd_equals_scalar() {
+    let mut rng = Rng::new(0xA0);
+    for &n in &[0usize, 1, 2, 3, 5, 7, 8, 9, 13, 16, 17, 100, 1001] {
+        let mut bf = vec![0.0f32; n];
+        rng.fill_gaussian(&mut bf, 0.0, 1.0);
+        let b: Vec<f64> = bf.iter().map(|&v| v as f64).collect();
+        let mut c0: Vec<f64> = (0..n).map(|i| i as f64 * 0.5 - 7.0).collect();
+        let mut c1 = c0.clone();
+        for a in [0.0f64, -0.0, 1.0, -2.75, 1e-8] {
+            simd::axpy(&mut c0, a, &b);
+            simd::axpy_scalar(&mut c1, a, &b);
+            assert_eq!(c0, c1, "axpy diverged at n={n} a={a}");
+        }
+    }
+}
+
+#[test]
+fn quantize_slices_simd_equal_scalar() {
+    let mut rng = Rng::new(0x51DE);
+    for &n in &[0usize, 1, 3, 4, 7, 8, 9, 15, 16, 31, 997] {
+        let mut w = vec![0.0f32; n];
+        let mut alpha = vec![0.0f32; n];
+        rng.fill_gaussian(&mut w, 0.0, 0.4);
+        rng.fill_gaussian(&mut alpha, 0.0, 0.5);
+        for (s, lo, hi) in [(0.07f32, -8.0f32, 7.0f32), (0.013, -2.0, 1.0)] {
+            let mut got = vec![0.0f32; n];
+            let mut want = vec![0.0f32; n];
+            quantize_nearest_slice(&w, s, lo, hi, &mut got);
+            quantize_nearest_slice_scalar(&w, s, lo, hi, &mut want);
+            assert_eq!(got, want, "nearest n={n} s={s}");
+            quantize_attention_slice(&w, &alpha, s, lo, hi, &mut got);
+            quantize_attention_slice_scalar(&w, &alpha, s, lo, hi, &mut want);
+            assert_eq!(got, want, "attention n={n} s={s}");
+        }
+    }
+}
+
+#[test]
+fn dense_matmul_unconditional_axpy_matches_naive_with_zero_rich_input() {
+    // the old inner loop skipped av == 0.0; the vectorized loop must
+    // produce identical results on zero-rich activations (±0.0 products
+    // from a +0.0 start never flip a bit for finite data)
+    let mut rng = Rng::new(0x0);
+    let (m, k, n) = (9usize, 14usize, 6usize);
+    let mut a = vec![0.0f32; m * k];
+    rng.fill_gaussian(&mut a, 0.0, 1.0);
+    for (i, v) in a.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            *v = 0.0; // a third of the entries exactly zero (post-ReLU shape)
+        }
+        if i % 7 == 0 {
+            *v = -0.0;
+        }
+    }
+    let mut b = vec![0.0f32; k * n];
+    rng.fill_gaussian(&mut b, 0.0, 1.0);
+    let am = Mat::from_rows_f32(m, k, &a).unwrap();
+    let bm = Mat::from_rows_f32(k, n, &b).unwrap();
+    let got = am.matmul_with(&ThreadPool::seq(), &bm).unwrap();
+    // naive ascending-k reference with the skip, in f64
+    let mut want = vec![0.0f64; m * n];
+    for i in 0..m {
+        for t in 0..k {
+            let av = a[i * k + t] as f64;
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                want[i * n + j] += av * b[t * n + j] as f64;
+            }
+        }
+    }
+    assert_eq!(got.data, want);
+}
