@@ -96,7 +96,9 @@ impl<'a> PackedHostForward<'a> {
                 if let Some(rec) = record.as_mut() {
                     rec.push(Tensor::new(pass.in_shape.clone(), pass.a.to_vec())?);
                 }
-                pass.out.expect("want_out set")
+                pass.out.ok_or_else(|| {
+                    Error::invariant("layer_pass(want_out=true) returned no output")
+                })?
             };
             cur = next;
         }

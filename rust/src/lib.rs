@@ -36,6 +36,17 @@
 //!   throughput metrics.
 //! * [`report`] — tables, ASCII charts, CSV.
 //! * [`bench_harness`] — the in-repo criterion replacement.
+//!
+//! Machine-enforced invariants (`cargo run -p analyze`, blocking in CI):
+//! every `unsafe` carries a `// SAFETY:` comment, every SIMD path has a
+//! scalar sibling, kernel hot paths stay free of `unwrap`/`expect`/
+//! `Instant::now`/bare `thread::spawn`, and every public module keeps a
+//! module doc. See README "Correctness tooling".
+
+// Redundant with the workspace lint table on purpose: the guarantee is
+// part of this crate's contract even when the file is built outside the
+// workspace (e.g. vendored into another tree).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod backend;
 pub mod bench_harness;

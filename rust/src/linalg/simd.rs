@@ -95,35 +95,40 @@ mod x86 {
     /// `c.len() == b.len()`.
     #[target_feature(enable = "avx")]
     pub unsafe fn axpy_avx(c: &mut [f64], a: f64, b: &[f64]) {
-        let n = c.len();
-        let av = _mm256_set1_pd(a);
-        let cp = c.as_mut_ptr();
-        let bp = b.as_ptr();
-        let mut j = 0usize;
-        while j + 8 <= n {
-            let r0 = _mm256_add_pd(
-                _mm256_loadu_pd(cp.add(j)),
-                _mm256_mul_pd(av, _mm256_loadu_pd(bp.add(j))),
-            );
-            let r1 = _mm256_add_pd(
-                _mm256_loadu_pd(cp.add(j + 4)),
-                _mm256_mul_pd(av, _mm256_loadu_pd(bp.add(j + 4))),
-            );
-            _mm256_storeu_pd(cp.add(j), r0);
-            _mm256_storeu_pd(cp.add(j + 4), r1);
-            j += 8;
-        }
-        if j + 4 <= n {
-            let r = _mm256_add_pd(
-                _mm256_loadu_pd(cp.add(j)),
-                _mm256_mul_pd(av, _mm256_loadu_pd(bp.add(j))),
-            );
-            _mm256_storeu_pd(cp.add(j), r);
-            j += 4;
-        }
-        while j < n {
-            *cp.add(j) += a * *bp.add(j);
-            j += 1;
+        // SAFETY: the documented contract holds (AVX present, equal
+        // lengths); every unaligned load/store below stays inside
+        // `[0, n)` of its slice by the loop bounds.
+        unsafe {
+            let n = c.len();
+            let av = _mm256_set1_pd(a);
+            let cp = c.as_mut_ptr();
+            let bp = b.as_ptr();
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let r0 = _mm256_add_pd(
+                    _mm256_loadu_pd(cp.add(j)),
+                    _mm256_mul_pd(av, _mm256_loadu_pd(bp.add(j))),
+                );
+                let r1 = _mm256_add_pd(
+                    _mm256_loadu_pd(cp.add(j + 4)),
+                    _mm256_mul_pd(av, _mm256_loadu_pd(bp.add(j + 4))),
+                );
+                _mm256_storeu_pd(cp.add(j), r0);
+                _mm256_storeu_pd(cp.add(j + 4), r1);
+                j += 8;
+            }
+            if j + 4 <= n {
+                let r = _mm256_add_pd(
+                    _mm256_loadu_pd(cp.add(j)),
+                    _mm256_mul_pd(av, _mm256_loadu_pd(bp.add(j))),
+                );
+                _mm256_storeu_pd(cp.add(j), r);
+                j += 4;
+            }
+            while j < n {
+                *cp.add(j) += a * *bp.add(j);
+                j += 1;
+            }
         }
     }
 
@@ -131,34 +136,39 @@ mod x86 {
     /// x86_64 baseline).
     #[target_feature(enable = "sse2")]
     pub unsafe fn axpy_sse2(c: &mut [f64], a: f64, b: &[f64]) {
-        let n = c.len();
-        let av = _mm_set1_pd(a);
-        let cp = c.as_mut_ptr();
-        let bp = b.as_ptr();
-        let mut j = 0usize;
-        while j + 8 <= n {
-            let r0 = _mm_add_pd(_mm_loadu_pd(cp.add(j)), _mm_mul_pd(av, _mm_loadu_pd(bp.add(j))));
-            let r1 = _mm_add_pd(
-                _mm_loadu_pd(cp.add(j + 2)),
-                _mm_mul_pd(av, _mm_loadu_pd(bp.add(j + 2))),
-            );
-            let r2 = _mm_add_pd(
-                _mm_loadu_pd(cp.add(j + 4)),
-                _mm_mul_pd(av, _mm_loadu_pd(bp.add(j + 4))),
-            );
-            let r3 = _mm_add_pd(
-                _mm_loadu_pd(cp.add(j + 6)),
-                _mm_mul_pd(av, _mm_loadu_pd(bp.add(j + 6))),
-            );
-            _mm_storeu_pd(cp.add(j), r0);
-            _mm_storeu_pd(cp.add(j + 2), r1);
-            _mm_storeu_pd(cp.add(j + 4), r2);
-            _mm_storeu_pd(cp.add(j + 6), r3);
-            j += 8;
-        }
-        while j < n {
-            *cp.add(j) += a * *bp.add(j);
-            j += 1;
+        // SAFETY: sse2 is the x86_64 baseline and the caller guarantees
+        // equal-length slices; loop bounds keep every access in range.
+        unsafe {
+            let n = c.len();
+            let av = _mm_set1_pd(a);
+            let cp = c.as_mut_ptr();
+            let bp = b.as_ptr();
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let r0 =
+                    _mm_add_pd(_mm_loadu_pd(cp.add(j)), _mm_mul_pd(av, _mm_loadu_pd(bp.add(j))));
+                let r1 = _mm_add_pd(
+                    _mm_loadu_pd(cp.add(j + 2)),
+                    _mm_mul_pd(av, _mm_loadu_pd(bp.add(j + 2))),
+                );
+                let r2 = _mm_add_pd(
+                    _mm_loadu_pd(cp.add(j + 4)),
+                    _mm_mul_pd(av, _mm_loadu_pd(bp.add(j + 4))),
+                );
+                let r3 = _mm_add_pd(
+                    _mm_loadu_pd(cp.add(j + 6)),
+                    _mm_mul_pd(av, _mm_loadu_pd(bp.add(j + 6))),
+                );
+                _mm_storeu_pd(cp.add(j), r0);
+                _mm_storeu_pd(cp.add(j + 2), r1);
+                _mm_storeu_pd(cp.add(j + 4), r2);
+                _mm_storeu_pd(cp.add(j + 6), r3);
+                j += 8;
+            }
+            while j < n {
+                *cp.add(j) += a * *bp.add(j);
+                j += 1;
+            }
         }
     }
 }

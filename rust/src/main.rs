@@ -20,6 +20,8 @@
 //! `--backend auto` (the default) a checkout without artifacts runs the
 //! whole pipeline on the host backend against the synthetic model.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::path::PathBuf;
 
 use attention_round::coordinator::capture::capture;

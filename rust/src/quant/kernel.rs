@@ -221,42 +221,50 @@ mod x86q {
     /// SAFETY: caller must ensure AVX support and equal slice lengths.
     #[target_feature(enable = "avx")]
     pub unsafe fn quantize_nearest_avx(w: &[f32], s: f32, lo: f32, hi: f32, out: &mut [f32]) {
-        let n = w.len();
-        let (sv, mg) = (_mm256_set1_ps(s), _mm256_set1_ps(MAGIC));
-        let (lov, hiv) = (_mm256_set1_ps(lo), _mm256_set1_ps(hi));
-        let (wp, op) = (w.as_ptr(), out.as_mut_ptr());
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let q = _mm256_div_ps(_mm256_loadu_ps(wp.add(i)), sv);
-            let r = _mm256_sub_ps(_mm256_add_ps(q, mg), mg);
-            let c = _mm256_min_ps(hiv, _mm256_max_ps(lov, r));
-            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(sv, c));
-            i += 8;
-        }
-        while i < n {
-            *op.add(i) = s * round_half_even_fast(*wp.add(i) / s).clamp(lo, hi);
-            i += 1;
+        // SAFETY: contract — AVX present, `w.len() == out.len()`; loop
+        // bounds keep every unaligned access inside the slices.
+        unsafe {
+            let n = w.len();
+            let (sv, mg) = (_mm256_set1_ps(s), _mm256_set1_ps(MAGIC));
+            let (lov, hiv) = (_mm256_set1_ps(lo), _mm256_set1_ps(hi));
+            let (wp, op) = (w.as_ptr(), out.as_mut_ptr());
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let q = _mm256_div_ps(_mm256_loadu_ps(wp.add(i)), sv);
+                let r = _mm256_sub_ps(_mm256_add_ps(q, mg), mg);
+                let c = _mm256_min_ps(hiv, _mm256_max_ps(lov, r));
+                _mm256_storeu_ps(op.add(i), _mm256_mul_ps(sv, c));
+                i += 8;
+            }
+            while i < n {
+                *op.add(i) = s * round_half_even_fast(*wp.add(i) / s).clamp(lo, hi);
+                i += 1;
+            }
         }
     }
 
     /// SAFETY: caller must ensure equal slice lengths (sse2 is baseline).
     #[target_feature(enable = "sse2")]
     pub unsafe fn quantize_nearest_sse2(w: &[f32], s: f32, lo: f32, hi: f32, out: &mut [f32]) {
-        let n = w.len();
-        let (sv, mg) = (_mm_set1_ps(s), _mm_set1_ps(MAGIC));
-        let (lov, hiv) = (_mm_set1_ps(lo), _mm_set1_ps(hi));
-        let (wp, op) = (w.as_ptr(), out.as_mut_ptr());
-        let mut i = 0usize;
-        while i + 4 <= n {
-            let q = _mm_div_ps(_mm_loadu_ps(wp.add(i)), sv);
-            let r = _mm_sub_ps(_mm_add_ps(q, mg), mg);
-            let c = _mm_min_ps(hiv, _mm_max_ps(lov, r));
-            _mm_storeu_ps(op.add(i), _mm_mul_ps(sv, c));
-            i += 4;
-        }
-        while i < n {
-            *op.add(i) = s * round_half_even_fast(*wp.add(i) / s).clamp(lo, hi);
-            i += 1;
+        // SAFETY: sse2 is the x86_64 baseline; caller guarantees
+        // `w.len() == out.len()` and loop bounds stay in range.
+        unsafe {
+            let n = w.len();
+            let (sv, mg) = (_mm_set1_ps(s), _mm_set1_ps(MAGIC));
+            let (lov, hiv) = (_mm_set1_ps(lo), _mm_set1_ps(hi));
+            let (wp, op) = (w.as_ptr(), out.as_mut_ptr());
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let q = _mm_div_ps(_mm_loadu_ps(wp.add(i)), sv);
+                let r = _mm_sub_ps(_mm_add_ps(q, mg), mg);
+                let c = _mm_min_ps(hiv, _mm_max_ps(lov, r));
+                _mm_storeu_ps(op.add(i), _mm_mul_ps(sv, c));
+                i += 4;
+            }
+            while i < n {
+                *op.add(i) = s * round_half_even_fast(*wp.add(i) / s).clamp(lo, hi);
+                i += 1;
+            }
         }
     }
 
@@ -270,25 +278,29 @@ mod x86q {
         hi: f32,
         out: &mut [f32],
     ) {
-        let n = w.len();
-        let (sv, mg) = (_mm256_set1_ps(s), _mm256_set1_ps(MAGIC));
-        let (lov, hiv) = (_mm256_set1_ps(lo), _mm256_set1_ps(hi));
-        let (wp, ap, op) = (w.as_ptr(), alpha.as_ptr(), out.as_mut_ptr());
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let q = _mm256_add_ps(
-                _mm256_div_ps(_mm256_loadu_ps(wp.add(i)), sv),
-                _mm256_loadu_ps(ap.add(i)),
-            );
-            let r = _mm256_sub_ps(_mm256_add_ps(q, mg), mg);
-            let c = _mm256_min_ps(hiv, _mm256_max_ps(lov, r));
-            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(sv, c));
-            i += 8;
-        }
-        while i < n {
-            *op.add(i) =
-                s * round_half_even_fast(*wp.add(i) / s + *ap.add(i)).clamp(lo, hi);
-            i += 1;
+        // SAFETY: contract — AVX present, `w`, `alpha`, and `out` are
+        // equal-length; loop bounds keep every access inside the slices.
+        unsafe {
+            let n = w.len();
+            let (sv, mg) = (_mm256_set1_ps(s), _mm256_set1_ps(MAGIC));
+            let (lov, hiv) = (_mm256_set1_ps(lo), _mm256_set1_ps(hi));
+            let (wp, ap, op) = (w.as_ptr(), alpha.as_ptr(), out.as_mut_ptr());
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let q = _mm256_add_ps(
+                    _mm256_div_ps(_mm256_loadu_ps(wp.add(i)), sv),
+                    _mm256_loadu_ps(ap.add(i)),
+                );
+                let r = _mm256_sub_ps(_mm256_add_ps(q, mg), mg);
+                let c = _mm256_min_ps(hiv, _mm256_max_ps(lov, r));
+                _mm256_storeu_ps(op.add(i), _mm256_mul_ps(sv, c));
+                i += 8;
+            }
+            while i < n {
+                *op.add(i) =
+                    s * round_half_even_fast(*wp.add(i) / s + *ap.add(i)).clamp(lo, hi);
+                i += 1;
+            }
         }
     }
 
@@ -302,25 +314,29 @@ mod x86q {
         hi: f32,
         out: &mut [f32],
     ) {
-        let n = w.len();
-        let (sv, mg) = (_mm_set1_ps(s), _mm_set1_ps(MAGIC));
-        let (lov, hiv) = (_mm_set1_ps(lo), _mm_set1_ps(hi));
-        let (wp, ap, op) = (w.as_ptr(), alpha.as_ptr(), out.as_mut_ptr());
-        let mut i = 0usize;
-        while i + 4 <= n {
-            let q = _mm_add_ps(
-                _mm_div_ps(_mm_loadu_ps(wp.add(i)), sv),
-                _mm_loadu_ps(ap.add(i)),
-            );
-            let r = _mm_sub_ps(_mm_add_ps(q, mg), mg);
-            let c = _mm_min_ps(hiv, _mm_max_ps(lov, r));
-            _mm_storeu_ps(op.add(i), _mm_mul_ps(sv, c));
-            i += 4;
-        }
-        while i < n {
-            *op.add(i) =
-                s * round_half_even_fast(*wp.add(i) / s + *ap.add(i)).clamp(lo, hi);
-            i += 1;
+        // SAFETY: sse2 is the x86_64 baseline; caller guarantees the
+        // three slices are equal-length and loop bounds stay in range.
+        unsafe {
+            let n = w.len();
+            let (sv, mg) = (_mm_set1_ps(s), _mm_set1_ps(MAGIC));
+            let (lov, hiv) = (_mm_set1_ps(lo), _mm_set1_ps(hi));
+            let (wp, ap, op) = (w.as_ptr(), alpha.as_ptr(), out.as_mut_ptr());
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let q = _mm_add_ps(
+                    _mm_div_ps(_mm_loadu_ps(wp.add(i)), sv),
+                    _mm_loadu_ps(ap.add(i)),
+                );
+                let r = _mm_sub_ps(_mm_add_ps(q, mg), mg);
+                let c = _mm_min_ps(hiv, _mm_max_ps(lov, r));
+                _mm_storeu_ps(op.add(i), _mm_mul_ps(sv, c));
+                i += 4;
+            }
+            while i < n {
+                *op.add(i) =
+                    s * round_half_even_fast(*wp.add(i) / s + *ap.add(i)).clamp(lo, hi);
+                i += 1;
+            }
         }
     }
 }

@@ -22,8 +22,15 @@ use crate::util::error::Result;
 use crate::util::threadpool::{self, ThreadPool};
 
 /// MSE between w and nearest-round(w) on a signed grid with scale s.
+///
+/// A degenerate grid (`bits` outside 2..=16, or a non-finite / non-positive
+/// scale) scores `f64::INFINITY`: it can never win a scale search, which is
+/// exactly the semantics every caller of this cost function wants.
 pub fn quant_mse(w: &[f32], bits: u8, s: f32) -> f64 {
-    let g = QGrid::signed(bits, s).expect("valid grid");
+    let g = match QGrid::signed(bits, s) {
+        Ok(g) => g,
+        Err(_) => return f64::INFINITY,
+    };
     let mut acc = 0.0f64;
     for &v in w {
         let d = (v - g.nearest(v)) as f64;

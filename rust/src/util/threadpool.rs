@@ -30,6 +30,12 @@
 //! `Ctx::run_many`, the serve worker) wraps each task so its inner
 //! kernels see a width-reduced view of the same shared pool instead of
 //! each spawning a full pool's worth of scoped workers.
+//!
+//! Two of this module's claims are machine-enforced by the repo analyzer
+//! (`cargo run -p analyze`): the pool stays `unsafe`-free (AR001 would
+//! demand a SAFETY comment the moment one appears), and it is the only
+//! non-test site in the crate allowed to call `thread::spawn` — every
+//! other module must fan out through the width-capped pool (AR003).
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -551,5 +557,16 @@ mod tests {
             assert_eq!(other.join().unwrap(), usize::MAX);
             assert_eq!(current_width_cap(), 1);
         });
+    }
+
+    #[test]
+    fn pool_is_send_and_sync() {
+        // Compile-time assertion: the pool is shared by reference across
+        // scoped workers and stashed in lazily-initialised globals, both
+        // of which silently stop compiling if an inner refactor (e.g. an
+        // `Rc` or raw pointer in the queue) costs these auto-traits.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ThreadPool>();
+        assert_send_sync::<&ThreadPool>();
     }
 }

@@ -1,0 +1,118 @@
+//! Miri-targeted soundness subset (CI `sanitizers` job).
+//!
+//! Run as `cargo miri test -p attention_round --no-default-features
+//! --test miri_soundness`. The suite deliberately avoids file IO, large
+//! inputs, and the SIMD intrinsics Miri cannot interpret; it covers the
+//! crate's densest index arithmetic (bitpack shifting/masking), the
+//! scalar quantization kernels, and the scoped thread-pool fan-in that
+//! TSan exercises from the other side. Sizes are tiny: Miri runs ~100×
+//! slower than native, and the point is UB detection, not coverage.
+
+use attention_round::deploy::bitpack;
+use attention_round::quant::kernel::{
+    quant_sse_multi, quantize_attention_slice_scalar, quantize_nearest_slice_scalar,
+    round_half_even_fast,
+};
+use attention_round::quant::{round_half_even, QGrid};
+use attention_round::util::rng::Rng;
+use attention_round::util::threadpool::ThreadPool;
+
+/// Deterministic pseudo-weights without file IO.
+fn synth(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (rng.next_f32() - 0.5) * 4.0).collect()
+}
+
+#[test]
+fn bitpack_roundtrips_every_width_on_ragged_lengths() {
+    let mut rng = Rng::new(0xB17_5EED);
+    for bits in 2u8..=8 {
+        // ragged lengths around the u64-word and byte boundaries the
+        // packer's carry logic has to get right
+        for n in [1usize, 3, 7, 8, 9, 31, 32, 33, 65] {
+            let levels = 1usize << bits;
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(levels) as u32).collect();
+            let bytes = bitpack::pack(&codes, bits).expect("pack");
+            assert_eq!(bytes.len(), bitpack::packed_len(n, bits));
+            let back = bitpack::unpack(&bytes, n, bits).expect("unpack");
+            assert_eq!(back, codes, "width {bits}, n {n}");
+            bitpack::validate_padding(&bytes, n, bits).expect("padding clean");
+        }
+    }
+}
+
+#[test]
+fn unpack_range_mid_stream_matches_full_unpack() {
+    let mut rng = Rng::new(0x0FF5E7);
+    for bits in [3u8, 5, 7] {
+        let n = 41usize;
+        let levels = 1usize << bits;
+        let codes: Vec<u32> = (0..n).map(|_| rng.below(levels) as u32).collect();
+        let bytes = bitpack::pack(&codes, bits).expect("pack");
+        for (start, len) in [(0usize, 5usize), (7, 11), (n - 3, 3), (13, 0)] {
+            let mut out = vec![0u32; len];
+            bitpack::unpack_range(&bytes, bits, start, &mut out);
+            assert_eq!(out, codes[start..start + len], "bits {bits} start {start}");
+        }
+    }
+}
+
+#[test]
+fn scalar_kernels_match_grid_reference() {
+    let w = synth(57, 0x5CA1A7);
+    let bits = 4u8;
+    let s = 0.23f32;
+    let g = QGrid::signed(bits, s).expect("grid");
+    let half = 1i32 << (bits - 1);
+    let (lo, hi) = (-(half as f32), (half - 1) as f32);
+
+    let mut out = vec![0.0f32; w.len()];
+    quantize_nearest_slice_scalar(&w, s, lo, hi, &mut out);
+    for (&v, &q) in w.iter().zip(&out) {
+        assert_eq!(q.to_bits(), g.nearest(v).to_bits(), "v={v}");
+    }
+
+    // zero offsets must reduce attention rounding to nearest rounding
+    let alpha = vec![0.0f32; w.len()];
+    let mut out_a = vec![0.0f32; w.len()];
+    quantize_attention_slice_scalar(&w, &alpha, s, lo, hi, &mut out_a);
+    for (&a, &b) in out.iter().zip(&out_a) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn fast_round_matches_reference_around_ties() {
+    for i in -40..=40i32 {
+        let x = i as f32 * 0.5;
+        for off in [-0.25f32, 0.0, 0.25] {
+            let v = x + off;
+            assert_eq!(
+                round_half_even_fast(v).to_bits(),
+                round_half_even(v).to_bits(),
+                "v={v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn scope_map_fans_in_under_miri() {
+    let pool = ThreadPool::new(4);
+    let got = pool.scope_map(16, |i| i * i);
+    let want: Vec<usize> = (0..16).map(|i| i * i).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn fused_sse_sweep_is_pool_size_invariant() {
+    let w = synth(96, 0xF05E_D00D);
+    let scales = [0.11f32, 0.2, 0.31];
+    let mut seq = [0.0f64; 3];
+    let mut par = [0.0f64; 3];
+    quant_sse_multi(&ThreadPool::seq(), &w, 4, &scales, &mut seq);
+    quant_sse_multi(&ThreadPool::new(3), &w, 4, &scales, &mut par);
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.to_bits(), b.to_bits(), "chunk merge must be order-fixed");
+    }
+}

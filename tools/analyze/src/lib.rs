@@ -1,0 +1,849 @@
+//! Repo-invariant static analyzer: the soundness gate behind
+//! `cargo run -p analyze`.
+//!
+//! The repo's core contract — Eq.-3/Eq.-6 kernels and the packed-serving
+//! path stay bit-identical across scalar/AVX/SSE2 dispatch, thread
+//! counts, and fused vs. unfused execution — is sampled by property
+//! tests but *proved* nowhere. This crate enforces the structural half
+//! of that contract statically, as typed `file:line` violations:
+//!
+//! * **AR001 `unsafe-needs-safety`** — every `unsafe` block / `unsafe fn`
+//!   / `unsafe impl` carries a `SAFETY:` comment (same line, first line
+//!   of the block, or in the comment/attribute run directly above).
+//! * **AR002 `simd-scalar-sibling`** — every `#[target_feature]` item
+//!   has a scalar sibling in the same file (a `*_scalar` fn sharing its
+//!   name stem), and any file gated on `feature = "simd"` defines at
+//!   least one `*_scalar` fallback. This is the bit-identity pairing in
+//!   `linalg/simd.rs` and `quant/kernel.rs`: the vector path can never
+//!   exist without the reference it is property-tested against.
+//! * **AR003 `forbidden-api`** — outside tests and bins: no
+//!   `unwrap()`/`expect()` in the kernel hot paths (`quant/`, `linalg/`,
+//!   `deploy/`, `tensor/` — typed errors only), no `std::process::exit`
+//!   outside `main.rs`, no `Instant::now` inside `quant`/`linalg`/
+//!   `deploy` kernels (time-dependent kernels cannot be bit-identical),
+//!   and no bare `thread::spawn` bypassing the width-capped pool
+//!   (`util/threadpool.rs` is the only sanctioned spawner).
+//! * **AR004 `module-doc`** — every module file opens with a `//!`
+//!   doc-comment.
+//!
+//! The scan is a lexer-lite pass: comments, string/char literals, and
+//! raw strings are stripped with a small state machine (so patterns in
+//! strings or docs never false-positive), `#[cfg(test)]` items are
+//! brace-matched and excluded from AR003, and everything else is plain
+//! token matching. No dependencies, no `syn` — the analyzer must build
+//! in the same offline container as the crate it guards.
+//!
+//! Known lexer limits (fine for this repo, documented for honesty):
+//! byte-raw strings (`br"…"`) are not recognized as raw, and attributes
+//! are assumed to occupy whole lines.
+//!
+//! A site that must use a forbidden API can carry a justified waiver on
+//! the same line or the line above:
+//!
+//! ```text
+//! // analyzer: allow(AR003): poisoned lock means a worker panicked;
+//! // propagating the panic is the supervision contract.
+//! ```
+//!
+//! Waivers with an empty reason are rejected — the justification *is*
+//! the point.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The rule set, stable IDs first. IDs are load-bearing: tests, CI
+/// greps, and waiver comments name them.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Rule {
+    /// AR001: `unsafe` without an adjacent `SAFETY:` argument.
+    UnsafeNeedsSafety,
+    /// AR002: SIMD item without a scalar bit-identity sibling.
+    SimdScalarSibling,
+    /// AR003: forbidden API outside tests/bins.
+    ForbiddenApi,
+    /// AR004: module file without a `//!` doc-comment.
+    ModuleDoc,
+}
+
+/// Every rule, in report order.
+pub const ALL_RULES: [Rule; 4] = [
+    Rule::UnsafeNeedsSafety,
+    Rule::SimdScalarSibling,
+    Rule::ForbiddenApi,
+    Rule::ModuleDoc,
+];
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::UnsafeNeedsSafety => "AR001",
+            Rule::SimdScalarSibling => "AR002",
+            Rule::ForbiddenApi => "AR003",
+            Rule::ModuleDoc => "AR004",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::UnsafeNeedsSafety => "unsafe-needs-safety",
+            Rule::SimdScalarSibling => "simd-scalar-sibling",
+            Rule::ForbiddenApi => "forbidden-api",
+            Rule::ModuleDoc => "module-doc",
+        }
+    }
+}
+
+/// One finding: rule, repo-relative path, 1-based line, human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: Rule,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {} ({}): {}",
+            self.path,
+            self.line,
+            self.rule.id(),
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+// ---- lexer-lite source view ---------------------------------------------
+
+/// Per-line views of one source file: `code` has comments stripped and
+/// literal contents blanked (delimiters kept); `comment` holds the
+/// comment text of the line; `test` marks lines inside `#[cfg(test)]`
+/// items; `raw` keeps the original line for `//!` detection.
+struct SourceView {
+    code: Vec<String>,
+    comment: Vec<String>,
+    test: Vec<bool>,
+    raw: Vec<String>,
+}
+
+/// Lexer state carried across lines.
+enum LexState {
+    Code,
+    /// Block comment at the given nesting depth (Rust block comments nest).
+    Block(u32),
+    /// Inside a `"…"` string literal.
+    Str,
+    /// Inside a raw string with this many `#`s in its delimiter.
+    RawStr(u8),
+}
+
+impl SourceView {
+    fn parse(src: &str) -> SourceView {
+        let mut state = LexState::Code;
+        let mut code_lines = Vec::new();
+        let mut comment_lines = Vec::new();
+        let mut raw_lines = Vec::new();
+        for line in src.lines() {
+            raw_lines.push(line.to_string());
+            let chars: Vec<char> = line.chars().collect();
+            let n = chars.len();
+            let mut code = String::new();
+            let mut comment = String::new();
+            let mut i = 0usize;
+            while i < n {
+                match state {
+                    LexState::Block(depth) => {
+                        if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                            state = if depth <= 1 {
+                                LexState::Code
+                            } else {
+                                LexState::Block(depth - 1)
+                            };
+                            i += 2;
+                        } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                            state = LexState::Block(depth + 1);
+                            i += 2;
+                        } else {
+                            comment.push(chars[i]);
+                            i += 1;
+                        }
+                    }
+                    LexState::Str => {
+                        if chars[i] == '\\' {
+                            i += 2; // escape: skip the escaped char
+                        } else if chars[i] == '"' {
+                            code.push('"');
+                            state = LexState::Code;
+                            i += 1;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    LexState::RawStr(hashes) => {
+                        if chars[i] == '"' {
+                            let have = chars[i + 1..]
+                                .iter()
+                                .take_while(|&&c| c == '#')
+                                .count();
+                            if have >= hashes as usize {
+                                code.push('"');
+                                i += 1 + hashes as usize;
+                                state = LexState::Code;
+                            } else {
+                                i += 1;
+                            }
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    LexState::Code => {
+                        let c = chars[i];
+                        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                            // line comment (covers ///, //!): rest of line
+                            comment.extend(&chars[i + 2..]);
+                            i = n;
+                        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                            state = LexState::Block(1);
+                            i += 2;
+                        } else if c == '"' {
+                            code.push('"');
+                            state = LexState::Str;
+                            i += 1;
+                        } else if c == 'r' && raw_string_hashes(&chars, i).is_some() {
+                            let hashes = match raw_string_hashes(&chars, i) {
+                                Some(h) => h,
+                                None => 0,
+                            };
+                            code.push('"');
+                            i += 1 + hashes + 1; // r + hashes + opening quote
+                            state = LexState::RawStr(hashes as u8);
+                        } else if c == '\'' {
+                            i = skip_char_or_lifetime(&chars, i, &mut code);
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            code_lines.push(code);
+            comment_lines.push(comment);
+        }
+        let test = test_regions(&code_lines);
+        SourceView {
+            code: code_lines,
+            comment: comment_lines,
+            test,
+            raw: raw_lines,
+        }
+    }
+
+    /// Whitespace-squashed code of line `li` (for punctuation patterns).
+    fn squashed(&self, li: usize) -> String {
+        self.code[li].chars().filter(|c| !c.is_whitespace()).collect()
+    }
+}
+
+/// If `chars[i] == 'r'` opens a raw string (`r"`, `r#"`, …) and is not
+/// the tail of an identifier, return the `#` count.
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<usize> {
+    if i > 0 {
+        let prev = chars[i - 1];
+        if prev.is_alphanumeric() || prev == '_' {
+            return None;
+        }
+    }
+    let hashes = chars[i + 1..].iter().take_while(|&&c| c == '#').count();
+    match chars.get(i + 1 + hashes) {
+        Some('"') => Some(hashes),
+        _ => None,
+    }
+}
+
+/// At a `'`: skip a char literal (returning the index after it) or emit
+/// the `'` as code when it is a lifetime.
+fn skip_char_or_lifetime(chars: &[char], i: usize, code: &mut String) -> usize {
+    let n = chars.len();
+    if i + 1 < n && chars[i + 1] == '\\' {
+        // escaped char literal: closing quote is the next ' at or after i+3
+        let mut j = i + 3;
+        while j < n && chars[j] != '\'' {
+            j += 1;
+        }
+        return (j + 1).min(n);
+    }
+    if i + 2 < n && chars[i + 2] == '\'' {
+        return i + 3; // simple 'x'
+    }
+    code.push('\''); // lifetime
+    i + 1
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item by brace-matching
+/// from the attribute to the item's closing brace (literals are already
+/// blanked, so brace counting is reliable).
+fn test_regions(code_lines: &[String]) -> Vec<bool> {
+    let n = code_lines.len();
+    let mut test = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        let squashed: String = code_lines[i]
+            .chars()
+            .filter(|c| !c.is_whitespace())
+            .collect();
+        if squashed.contains("#[cfg(test)]") || squashed.contains("#[cfg(all(test") {
+            let mut depth = 0i64;
+            let mut opened = false;
+            let mut j = i;
+            while j < n {
+                test[j] = true;
+                for c in code_lines[j].chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                if !opened && code_lines[j].contains(';') {
+                    break; // brace-less item, e.g. `#[cfg(test)] mod t;`
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    test
+}
+
+// ---- token helpers ------------------------------------------------------
+
+/// Split a code line into identifier tokens and single punctuation chars.
+fn tokens(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut ident = String::new();
+    for c in line.chars() {
+        if c.is_alphanumeric() || c == '_' {
+            ident.push(c);
+        } else {
+            if !ident.is_empty() {
+                out.push(std::mem::take(&mut ident));
+            }
+            if !c.is_whitespace() {
+                out.push(c.to_string());
+            }
+        }
+    }
+    if !ident.is_empty() {
+        out.push(ident);
+    }
+    out
+}
+
+/// Does `squashed` contain `pattern` at an identifier boundary?
+fn contains_pattern(squashed: &str, pattern: &str) -> bool {
+    // Boundary checks apply only on sides where the pattern itself ends in
+    // an identifier char; `.unwrap(` legitimately follows `x`/`)`/`]`.
+    let head_is_ident = pattern
+        .chars()
+        .next()
+        .map(|c| c.is_alphanumeric() || c == '_')
+        .unwrap_or(false);
+    let mut from = 0usize;
+    while let Some(pos) = squashed[from..].find(pattern) {
+        let at = from + pos;
+        let boundary_ok = !head_is_ident
+            || at == 0
+            || !squashed[..at]
+                .chars()
+                .next_back()
+                .map(|p| p.is_alphanumeric() || p == '_')
+                .unwrap_or(false);
+        if boundary_ok {
+            // also require a non-identifier char after the pattern when
+            // the pattern itself ends in an identifier char
+            let end = at + pattern.len();
+            let tail_ok = !pattern
+                .chars()
+                .next_back()
+                .map(|c| c.is_alphanumeric() || c == '_')
+                .unwrap_or(false)
+                || !squashed[end..]
+                    .chars()
+                    .next()
+                    .map(|c| c.is_alphanumeric() || c == '_')
+                    .unwrap_or(false);
+            if tail_ok {
+                return true;
+            }
+        }
+        from = at + 1;
+    }
+    false
+}
+
+// ---- rule implementations -----------------------------------------------
+
+/// SIMD-suffix → scalar-sibling stems recognized by AR002.
+const SIMD_SUFFIXES: [&str; 6] = ["_avx512", "_avx2", "_avx", "_sse41", "_sse2", "_neon"];
+
+/// Path classification for AR003 scopes, derived from the repo-relative
+/// path (always `/`-separated).
+struct Scope {
+    /// Kernel hot paths: typed errors only, no panicking shortcuts.
+    hot_path: bool,
+    /// `quant`/`linalg`/`deploy`: no wall-clock reads inside kernels.
+    timed_kernel: bool,
+    /// A binary crate root (`main.rs`): `process::exit` is its job.
+    bin_root: bool,
+    /// The sanctioned spawner (`util/threadpool.rs`).
+    pool: bool,
+}
+
+impl Scope {
+    fn of(rel_path: &str) -> Scope {
+        let p = rel_path.replace('\\', "/");
+        let hot = ["rust/src/quant/", "rust/src/linalg/", "rust/src/deploy/", "rust/src/tensor/"]
+            .iter()
+            .any(|d| p.starts_with(d));
+        let timed = ["rust/src/quant/", "rust/src/linalg/", "rust/src/deploy/"]
+            .iter()
+            .any(|d| p.starts_with(d));
+        Scope {
+            hot_path: hot,
+            timed_kernel: timed,
+            bin_root: p.ends_with("/main.rs") || p == "main.rs",
+            pool: p.ends_with("util/threadpool.rs"),
+        }
+    }
+}
+
+/// Is there a `SAFETY:` argument attached to line `li`? Looks at the
+/// line itself, the first line inside a block opened here, and the
+/// comment/attribute run directly above (doc comments count).
+fn has_safety_comment(view: &SourceView, li: usize) -> bool {
+    if view.comment[li].contains("SAFETY:") {
+        return true;
+    }
+    if li + 1 < view.comment.len()
+        && view.code[li + 1].trim().is_empty()
+        && view.comment[li + 1].contains("SAFETY:")
+    {
+        return true;
+    }
+    let mut j = li;
+    while j > 0 {
+        j -= 1;
+        let code = view.code[j].trim();
+        let comment = view.comment[j].trim();
+        let is_attr = code.starts_with("#[") || code.starts_with("#![");
+        let is_comment_only = code.is_empty() && !comment.is_empty();
+        if !(is_attr || is_comment_only) {
+            return false; // hit real code or a blank line: run ended
+        }
+        if comment.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Is a waiver for `rule` present on line `li` or the line above, with a
+/// non-empty reason after the closing paren?
+fn waived(view: &SourceView, li: usize, rule: Rule) -> bool {
+    let check = |comment: &str| -> bool {
+        let lower = comment.to_ascii_lowercase();
+        let needle_id = format!("analyzer: allow({})", rule.id().to_ascii_lowercase());
+        let needle_name = format!("analyzer: allow({})", rule.name());
+        for needle in [needle_id, needle_name] {
+            if let Some(pos) = lower.find(&needle) {
+                let reason = lower[pos + needle.len()..]
+                    .trim_start_matches([':', ' ', '-', '—'])
+                    .trim();
+                if reason.len() >= 4 {
+                    return true;
+                }
+            }
+        }
+        false
+    };
+    if check(&view.comment[li]) {
+        return true;
+    }
+    li > 0 && check(&view.comment[li - 1])
+}
+
+/// AR001: every `unsafe` block/fn/impl needs a `SAFETY:` argument.
+fn check_unsafe_safety(rel_path: &str, view: &SourceView, out: &mut Vec<Violation>) {
+    let n = view.code.len();
+    for li in 0..n {
+        let toks = tokens(&view.code[li]);
+        for (k, t) in toks.iter().enumerate() {
+            if t != "unsafe" {
+                continue;
+            }
+            // what does this `unsafe` introduce?
+            let next = toks.get(k + 1).cloned().or_else(|| {
+                (li + 1..n)
+                    .find(|&j| !view.code[j].trim().is_empty())
+                    .and_then(|j| tokens(&view.code[j]).first().cloned())
+            });
+            let introduces = matches!(
+                next.as_deref(),
+                Some("{") | Some("fn") | Some("impl") | Some("extern") | Some("trait")
+            );
+            if introduces && !has_safety_comment(view, li) && !waived(view, li, Rule::UnsafeNeedsSafety)
+            {
+                out.push(Violation {
+                    rule: Rule::UnsafeNeedsSafety,
+                    path: rel_path.to_string(),
+                    line: li + 1,
+                    message: format!(
+                        "`unsafe {}` without a `// SAFETY:` argument on or above it",
+                        next.as_deref().unwrap_or("?")
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// One declared `fn` in a file.
+struct FnDecl {
+    name: String,
+    line: usize,
+    target_feature: bool,
+}
+
+/// Collect `fn` declarations with whether their attribute run carries
+/// `#[target_feature]`.
+fn fn_decls(view: &SourceView) -> Vec<FnDecl> {
+    let n = view.code.len();
+    let mut out = Vec::new();
+    for li in 0..n {
+        let toks = tokens(&view.code[li]);
+        for w in 0..toks.len() {
+            if toks[w] != "fn" {
+                continue;
+            }
+            let Some(name) = toks.get(w + 1) else { continue };
+            if !name.chars().next().map(|c| c.is_alphabetic() || c == '_').unwrap_or(false) {
+                continue;
+            }
+            // walk the attribute/comment run above for #[target_feature
+            let mut tf = view.code[li].contains("target_feature");
+            let mut j = li;
+            while !tf && j > 0 {
+                j -= 1;
+                let code = view.code[j].trim();
+                let comment_only = code.is_empty() && !view.comment[j].trim().is_empty();
+                let is_attr = code.starts_with("#[");
+                let is_kw_tail = code.ends_with("unsafe") || code.ends_with("pub");
+                if !(is_attr || comment_only || is_kw_tail) {
+                    break;
+                }
+                tf = code.contains("target_feature");
+            }
+            out.push(FnDecl {
+                name: name.clone(),
+                line: li + 1,
+                target_feature: tf,
+            });
+            break; // one decl per line is enough for this codebase
+        }
+    }
+    out
+}
+
+/// AR002: `#[target_feature]` fns need a `*_scalar` sibling sharing
+/// their stem; `feature = "simd"` files need at least one `*_scalar`.
+fn check_simd_siblings(rel_path: &str, view: &SourceView, out: &mut Vec<Violation>) {
+    let decls = fn_decls(view);
+    let scalar_bases: Vec<String> = decls
+        .iter()
+        .filter(|d| d.name.ends_with("_scalar"))
+        .map(|d| d.name[..d.name.len() - "_scalar".len()].to_string())
+        .collect();
+    for d in decls.iter().filter(|d| d.target_feature) {
+        let stem = SIMD_SUFFIXES
+            .iter()
+            .find_map(|s| d.name.strip_suffix(s))
+            .unwrap_or(&d.name);
+        let paired = scalar_bases
+            .iter()
+            .any(|b| b.starts_with(stem) || stem.starts_with(b.as_str()));
+        if !paired && !waived(view, d.line - 1, Rule::SimdScalarSibling) {
+            out.push(Violation {
+                rule: Rule::SimdScalarSibling,
+                path: rel_path.to_string(),
+                line: d.line,
+                message: format!(
+                    "`#[target_feature]` fn `{}` has no `{}*_scalar` bit-identity sibling in this file",
+                    d.name, stem
+                ),
+            });
+        }
+    }
+    if scalar_bases.is_empty() {
+        for li in 0..view.code.len() {
+            if view.squashed(li).contains("feature=\"simd\"") {
+                out.push(Violation {
+                    rule: Rule::SimdScalarSibling,
+                    path: rel_path.to_string(),
+                    line: li + 1,
+                    message: "file is gated on `feature = \"simd\"` but defines no `*_scalar` fallback"
+                        .to_string(),
+                });
+                break; // one per file is enough signal
+            }
+        }
+    }
+}
+
+/// AR003: forbidden APIs outside tests/bins, scoped by path.
+fn check_forbidden_apis(rel_path: &str, view: &SourceView, out: &mut Vec<Violation>) {
+    let scope = Scope::of(rel_path);
+    let mut push = |li: usize, message: String| {
+        if !waived(view, li, Rule::ForbiddenApi) {
+            out.push(Violation {
+                rule: Rule::ForbiddenApi,
+                path: rel_path.to_string(),
+                line: li + 1,
+                message,
+            });
+        }
+    };
+    for li in 0..view.code.len() {
+        if view.test[li] {
+            continue;
+        }
+        let squashed = view.squashed(li);
+        if squashed.is_empty() {
+            continue;
+        }
+        if !scope.bin_root && contains_pattern(&squashed, "process::exit") {
+            push(
+                li,
+                "`process::exit` outside a binary root: return a typed error instead".to_string(),
+            );
+        }
+        if scope.timed_kernel && contains_pattern(&squashed, "Instant::now") {
+            push(
+                li,
+                "`Instant::now` inside a kernel module: timing belongs to callers, \
+                 kernels must be deterministic"
+                    .to_string(),
+            );
+        }
+        if !scope.pool && contains_pattern(&squashed, "thread::spawn") {
+            push(
+                li,
+                "bare `thread::spawn` bypasses the width-capped pool: use \
+                 `util::threadpool` (scoped APIs or the global pool)"
+                    .to_string(),
+            );
+        }
+        if scope.hot_path {
+            for pat in [".unwrap(", ".expect("] {
+                if contains_pattern(&squashed, pat) {
+                    push(
+                        li,
+                        format!(
+                            "`{})` in a kernel hot path: convert to a typed \
+                             `util::error::Error` (or waive with a justified \
+                             `analyzer: allow(AR003)`)",
+                            &pat[1..]
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// AR004: the file opens with a `//!` module doc-comment (inner
+/// attributes may precede it).
+fn check_module_doc(rel_path: &str, view: &SourceView, out: &mut Vec<Violation>) {
+    for li in 0..view.raw.len() {
+        if view.raw[li].trim_start().starts_with("//!") {
+            return;
+        }
+        let code = view.code[li].trim();
+        if code.is_empty() || code.starts_with("#![") {
+            continue;
+        }
+        break; // reached the first real item without a module doc
+    }
+    out.push(Violation {
+        rule: Rule::ModuleDoc,
+        path: rel_path.to_string(),
+        line: 1,
+        message: "module file has no `//!` doc-comment".to_string(),
+    });
+}
+
+// ---- entry points -------------------------------------------------------
+
+/// Scan one file's source under its repo-relative path.
+pub fn scan_source(rel_path: &str, src: &str) -> Vec<Violation> {
+    let view = SourceView::parse(src);
+    let mut out = Vec::new();
+    check_unsafe_safety(rel_path, &view, &mut out);
+    check_simd_siblings(rel_path, &view, &mut out);
+    check_forbidden_apis(rel_path, &view, &mut out);
+    check_module_doc(rel_path, &view, &mut out);
+    out.sort_by_key(|v| v.line);
+    out
+}
+
+/// Recursively collect `.rs` files under `dir` (sorted for stable output).
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            rs_files(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The directories a default scan covers, relative to the repo root.
+/// `rust/src` is the library under guard; the analyzer dogfoods itself.
+pub const DEFAULT_SCAN_DIRS: [&str; 2] = ["rust/src", "tools/analyze/src"];
+
+/// Scan the default directory set under `root`. Missing directories are
+/// skipped (a fixture tree has no `tools/`), unreadable files are IO
+/// errors. Returns violations sorted by path then line, plus the number
+/// of files scanned.
+pub fn scan_tree(root: &Path) -> io::Result<(Vec<Violation>, usize)> {
+    let mut files = Vec::new();
+    for dir in DEFAULT_SCAN_DIRS {
+        let d = root.join(dir);
+        if d.is_dir() {
+            rs_files(&d, &mut files)?;
+        }
+    }
+    let mut all = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(f)?;
+        all.extend(scan_source(&rel, &src));
+    }
+    all.sort_by(|a, b| a.path.cmp(&b.path).then(a.line.cmp(&b.line)));
+    Ok((all, files.len()))
+}
+
+/// Scan explicit files/directories (CLI operands). Paths are reported
+/// relative to `root` when they live under it, verbatim otherwise.
+pub fn scan_paths(root: &Path, paths: &[PathBuf]) -> io::Result<(Vec<Violation>, usize)> {
+    let mut files = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            rs_files(p, &mut files)?;
+        } else {
+            files.push(p.clone());
+        }
+    }
+    let mut all = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(f)?;
+        all.extend(scan_source(&rel, &src));
+    }
+    all.sort_by(|a, b| a.path.cmp(&b.path).then(a.line.cmp(&b.line)));
+    Ok((all, files.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_blanks_strings_and_comments() {
+        let v = SourceView::parse(
+            "let x = \".unwrap( unsafe {\"; // unsafe in a comment\nlet y = 2;",
+        );
+        assert!(!v.code[0].contains("unwrap"));
+        assert!(!v.code[0].contains("unsafe"));
+        assert!(v.comment[0].contains("unsafe in a comment"));
+        assert_eq!(v.code[1].trim(), "let y = 2;");
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings_and_chars() {
+        let v = SourceView::parse("let p = r#\"x \".unwrap(\" y\"#; let c = '{'; let l: &'static str = \"\";");
+        assert!(!v.code[0].contains("unwrap"));
+        assert!(!v.code[0].contains('{'), "char-literal brace must be blanked");
+        assert!(v.code[0].contains("'static"), "lifetime must survive");
+    }
+
+    #[test]
+    fn nested_block_comments_end_correctly() {
+        let v = SourceView::parse("/* a /* b */ still comment */ let z = 1;");
+        assert_eq!(v.code[0].trim(), "let z = 1;");
+    }
+
+    #[test]
+    fn test_region_covers_braced_mod() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn live2() {}\n";
+        let v = SourceView::parse(src);
+        assert!(!v.test[0]);
+        assert!(v.test[1] && v.test[2] && v.test[3] && v.test[4]);
+        assert!(!v.test[5]);
+    }
+
+    #[test]
+    fn boundary_matching_rejects_identifier_tails() {
+        assert!(contains_pattern("std::process::exit(1)", "process::exit"));
+        assert!(!contains_pattern("my_process::exit(1)", "process::exit"));
+        assert!(contains_pattern("x.unwrap()", ".unwrap("));
+        assert!(!contains_pattern("unsafe_op_in_unsafe_fn", "unsafe"));
+    }
+
+    #[test]
+    fn safety_comment_found_through_attr_run() {
+        let src = "/// SAFETY: caller checks lengths.\n#[target_feature(enable = \"avx\")]\npub unsafe fn f_avx() {}\npub fn f_scalar() {}\n//! not a doc\n";
+        let v = scan_source("rust/src/linalg/x.rs", src);
+        assert!(
+            v.iter().all(|x| x.rule != Rule::UnsafeNeedsSafety),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn waiver_needs_a_reason() {
+        let bare = "//! doc\n// analyzer: allow(AR003)\nlet v = x.unwrap();\n";
+        let good = "//! doc\n// analyzer: allow(AR003): poison propagation is the contract here\nlet v = x.unwrap();\n";
+        assert!(scan_source("rust/src/quant/w.rs", bare)
+            .iter()
+            .any(|v| v.rule == Rule::ForbiddenApi));
+        assert!(scan_source("rust/src/quant/w.rs", good)
+            .iter()
+            .all(|v| v.rule != Rule::ForbiddenApi));
+    }
+}

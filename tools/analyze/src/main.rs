@@ -1,0 +1,111 @@
+//! CLI for the repo-invariant analyzer (`cargo run -p analyze`).
+//!
+//! Modes:
+//!
+//! * no operands — scan the default tree (`rust/src` + the analyzer's
+//!   own source) under the repo root, which is found by walking up from
+//!   the current directory until a `rust/src` appears;
+//! * `--root DIR` — use `DIR` as the repo root (a fixture tree in tests,
+//!   a worktree in CI);
+//! * explicit file/dir operands — scan just those, reported relative to
+//!   the root when they live under it.
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or IO error. CI
+//! treats this binary as a blocking gate, so the output format —
+//! `path:line: ARnnn (rule-name): message` — is stable.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use analyze::{scan_paths, scan_tree, ALL_RULES, DEFAULT_SCAN_DIRS};
+
+/// Walk up from `start` to the first directory containing `rust/src`.
+fn find_root(start: PathBuf) -> Option<PathBuf> {
+    let mut dir = start;
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn usage() {
+    eprintln!("usage: analyze [--root DIR] [--list-rules] [paths...]");
+    eprintln!("  scans {} for invariant violations", DEFAULT_SCAN_DIRS.join(" and "));
+}
+
+fn main() -> ExitCode {
+    let mut root_arg: Option<PathBuf> = None;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(d) => root_arg = Some(PathBuf::from(d)),
+                None => {
+                    usage();
+                    return ExitCode::from(2);
+                }
+            },
+            "--list-rules" => {
+                for r in ALL_RULES {
+                    println!("{} {}", r.id(), r.name());
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                usage();
+                return ExitCode::SUCCESS;
+            }
+            _ => paths.push(PathBuf::from(a)),
+        }
+    }
+
+    let cwd = match std::env::current_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("analyze: cannot read current dir: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let root = match root_arg.or_else(|| find_root(cwd)) {
+        Some(r) => r,
+        None => {
+            eprintln!("analyze: no repo root (a directory containing rust/src) found; use --root");
+            return ExitCode::from(2);
+        }
+    };
+
+    let scanned = if paths.is_empty() {
+        scan_tree(&root)
+    } else {
+        scan_paths(&root, &paths)
+    };
+    let (violations, files) = match scanned {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("analyze: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!(
+            "analyze: OK — {files} file(s) clean under {} rule(s)",
+            ALL_RULES.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "analyze: {} violation(s) across {files} scanned file(s)",
+            violations.len()
+        );
+        ExitCode::FAILURE
+    }
+}

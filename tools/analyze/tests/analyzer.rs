@@ -1,0 +1,142 @@
+//! Analyzer acceptance tests: every rule trips on its seeded fixture at
+//! the exact `file:line`, the clean fixture and the real repo tree scan
+//! clean, and the binary's exit codes match the CI contract.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use analyze::{scan_source, scan_tree, Rule};
+
+fn fixtures_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn repo_root() -> PathBuf {
+    // tools/analyze -> tools -> repo root
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("repo root above tools/analyze")
+        .to_path_buf()
+}
+
+fn scan_fixture(rel: &str) -> Vec<analyze::Violation> {
+    let src = std::fs::read_to_string(fixtures_root().join(rel))
+        .unwrap_or_else(|e| panic!("read fixture {rel}: {e}"));
+    scan_source(rel, &src)
+}
+
+#[test]
+fn forbidden_api_fixture_trips_ar003_at_exact_lines() {
+    let v = scan_fixture("rust/src/quant/forbidden_api.rs");
+    assert!(
+        v.iter().all(|x| x.rule == Rule::ForbiddenApi),
+        "only AR003 expected, got {v:?}"
+    );
+    let lines: Vec<usize> = v.iter().map(|x| x.line).collect();
+    assert_eq!(
+        lines,
+        vec![4, 5, 6, 7, 11],
+        "unwrap, expect, Instant::now, process::exit, thread::spawn: {v:?}"
+    );
+    assert!(v.iter().all(|x| x.rule.id() == "AR003"));
+}
+
+#[test]
+fn missing_safety_fixture_trips_ar001_once() {
+    let v = scan_fixture("rust/src/linalg/missing_safety.rs");
+    assert_eq!(v.len(), 1, "exactly the uncommented unsafe block: {v:?}");
+    assert_eq!(v[0].rule, Rule::UnsafeNeedsSafety);
+    assert_eq!(v[0].rule.id(), "AR001");
+    assert_eq!(v[0].line, 4);
+}
+
+#[test]
+fn no_scalar_sibling_fixture_trips_ar002_at_fn_line() {
+    let v = scan_fixture("rust/src/linalg/no_scalar_sibling.rs");
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, Rule::SimdScalarSibling);
+    assert_eq!(v[0].rule.id(), "AR002");
+    assert_eq!(v[0].line, 5, "reported at the #[target_feature] fn");
+}
+
+#[test]
+fn missing_module_doc_fixture_trips_ar004() {
+    let v = scan_fixture("rust/src/util/missing_module_doc.rs");
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].rule, Rule::ModuleDoc);
+    assert_eq!(v[0].rule.id(), "AR004");
+    assert_eq!(v[0].line, 1);
+}
+
+#[test]
+fn clean_fixture_scans_clean() {
+    let v = scan_fixture("rust/src/quant/clean.rs");
+    assert!(v.is_empty(), "clean fixture must pass every rule: {v:?}");
+}
+
+#[test]
+fn fixture_tree_scan_finds_every_seeded_rule() {
+    let (v, files) = scan_tree(&fixtures_root()).expect("scan fixtures");
+    assert_eq!(files, 5, "five fixture files");
+    for rule in [
+        Rule::UnsafeNeedsSafety,
+        Rule::SimdScalarSibling,
+        Rule::ForbiddenApi,
+        Rule::ModuleDoc,
+    ] {
+        assert!(
+            v.iter().any(|x| x.rule == rule),
+            "rule {} not tripped by fixtures: {v:?}",
+            rule.id()
+        );
+    }
+}
+
+#[test]
+fn repo_tree_scans_clean() {
+    let root = repo_root();
+    assert!(
+        root.join("rust/src").is_dir(),
+        "repo root misresolved: {root:?}"
+    );
+    let (v, files) = scan_tree(&root).expect("scan repo");
+    assert!(files > 40, "expected the full source tree, saw {files} files");
+    assert!(
+        v.is_empty(),
+        "the swept repo must scan clean; violations:\n{}",
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn binary_exits_nonzero_on_fixture_violations_and_zero_on_repo() {
+    let bad = Command::new(env!("CARGO_BIN_EXE_analyze"))
+        .arg("--root")
+        .arg(fixtures_root())
+        .output()
+        .expect("run analyze on fixtures");
+    assert!(
+        !bad.status.success(),
+        "seeded violations must exit nonzero; stdout: {}",
+        String::from_utf8_lossy(&bad.stdout)
+    );
+    let stdout = String::from_utf8_lossy(&bad.stdout);
+    assert!(stdout.contains("AR001"), "report names rule IDs: {stdout}");
+    assert!(
+        stdout.contains("rust/src/linalg/missing_safety.rs:4:"),
+        "report carries file:line spans: {stdout}"
+    );
+
+    let good = Command::new(env!("CARGO_BIN_EXE_analyze"))
+        .arg("--root")
+        .arg(repo_root())
+        .output()
+        .expect("run analyze on repo");
+    assert!(
+        good.status.success(),
+        "swept repo must exit zero; stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&good.stdout),
+        String::from_utf8_lossy(&good.stderr)
+    );
+}

@@ -1,0 +1,11 @@
+//! Fixture: `unsafe` without a SAFETY argument (AR001).
+
+pub fn read_first(p: *const f32) -> f32 {
+    unsafe { *p }
+}
+
+/// SAFETY: caller passes a valid, aligned, readable pointer.
+pub unsafe fn read_ok(p: *const f32) -> f32 {
+    // SAFETY: caller contract above.
+    unsafe { *p }
+}

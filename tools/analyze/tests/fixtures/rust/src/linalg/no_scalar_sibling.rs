@@ -1,0 +1,8 @@
+//! Fixture: `#[target_feature]` without a scalar sibling (AR002).
+
+/// SAFETY: caller must ensure AVX support and a non-empty slice.
+#[target_feature(enable = "avx")]
+pub unsafe fn sum_avx(xs: &[f32]) -> f32 {
+    // SAFETY: caller contract above.
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,21 @@
+//! Fixture: forbidden APIs in a kernel hot path (AR003).
+
+pub fn hot(x: Option<f32>) -> f32 {
+    let v = x.unwrap();
+    let w = x.expect("present");
+    let _t = std::time::Instant::now();
+    std::process::exit((v + w) as i32);
+}
+
+pub fn spawns() {
+    let h = std::thread::spawn(|| 1);
+    let _ = h;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let _ = Some(1).unwrap();
+    }
+}

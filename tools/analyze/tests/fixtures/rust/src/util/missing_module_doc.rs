@@ -1,0 +1,2 @@
+// A line comment is not a module doc.
+pub fn noop() {}
