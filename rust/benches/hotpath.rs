@@ -15,6 +15,8 @@
 //!   * `--quick`  — smoke profile (CI): short budget, host benches only
 //!   * `--json P` — write the collected host stats to P (the committed
 //!     `BENCH_host.json` baseline)
+//!   * `--only S` — run only benches whose name contains S (host benches
+//!     only; the CI tracing-overhead gate uses `--only serve_e2e`)
 
 mod common;
 
@@ -45,20 +47,27 @@ use attention_round::util::threadpool;
 struct Args {
     quick: bool,
     json_path: Option<PathBuf>,
+    only: Option<String>,
 }
 
 fn parse_args() -> Args {
     let mut quick = false;
     let mut json_path = None;
+    let mut only = None;
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
         match a.as_str() {
             "--quick" => quick = true,
             "--json" => json_path = it.next().map(PathBuf::from),
+            "--only" => only = it.next(),
             _ => {}
         }
     }
-    Args { quick, json_path }
+    Args {
+        quick,
+        json_path,
+        only,
+    }
 }
 
 fn host_benches(b: &Bencher) -> Vec<Stats> {
@@ -470,17 +479,21 @@ fn device_benches() {
 
 fn main() {
     let args = parse_args();
-    let b = if args.quick {
+    let mut b = if args.quick {
         Bencher::quick()
     } else {
         Bencher::default()
     };
-    let stats = host_benches(&b);
+    b.only = args.only.clone();
+    let mut stats = host_benches(&b);
+    // filtered-out rows come back as iters==0 placeholders; drop them so
+    // a --only run never pollutes the committed baseline
+    stats.retain(|s| s.iters > 0);
     if let Some(p) = &args.json_path {
         write_json(p, &stats).expect("write bench json");
         println!("wrote {} host bench entries to {}", stats.len(), p.display());
     }
-    if !args.quick {
+    if !args.quick && args.only.is_none() {
         device_benches();
     }
 }

@@ -55,6 +55,12 @@ pub struct Bencher {
     /// Max iterations regardless of budget (slow end-to-end benches).
     pub max_iters: usize,
     pub warmup_iters: usize,
+    /// Substring filter (`--only` in the bench binaries): names not
+    /// containing it are skipped entirely — no warmup, no samples — and
+    /// return an `iters == 0` placeholder the caller drops before
+    /// writing a baseline. Lets CI time a single row (e.g. the serve
+    /// rows for the tracing-overhead gate) without paying for the rest.
+    pub only: Option<String>,
 }
 
 impl Default for Bencher {
@@ -63,6 +69,7 @@ impl Default for Bencher {
             budget: Duration::from_secs(3),
             max_iters: 1000,
             warmup_iters: 2,
+            only: None,
         }
     }
 }
@@ -74,10 +81,16 @@ impl Bencher {
             budget: Duration::from_millis(500),
             max_iters: 10,
             warmup_iters: 1,
+            only: None,
         }
     }
 
     pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        if let Some(pat) = &self.only {
+            if !name.contains(pat.as_str()) {
+                return compute_stats(name, &[]);
+            }
+        }
         for _ in 0..self.warmup_iters {
             std::hint::black_box(f());
         }
@@ -195,11 +208,28 @@ mod tests {
             budget: Duration::from_millis(1),
             max_iters: 100,
             warmup_iters: 0,
+            only: None,
         };
         let mut count = 0usize;
         let s = b.run("noop", || count += 1);
         assert!(s.iters >= 3);
         assert!(count >= 3);
+    }
+
+    #[test]
+    fn only_filter_skips_without_running() {
+        let b = Bencher {
+            budget: Duration::from_millis(1),
+            max_iters: 100,
+            warmup_iters: 2,
+            only: Some("serve".into()),
+        };
+        let mut ran = 0usize;
+        let skipped = b.run("host/unrelated_bench", || ran += 1);
+        assert_eq!(skipped.iters, 0, "filtered row must not execute");
+        assert_eq!(ran, 0, "not even warmup");
+        let kept = b.run("host/serve_smoke", || ran += 1);
+        assert!(kept.iters >= 3);
     }
 
     #[test]

@@ -16,8 +16,6 @@
 //! here respects that thread-local cap, so N concurrent runs split one
 //! pool's width instead of each claiming all of it.
 
-use std::time::Instant;
-
 use crate::backend::Backend;
 use crate::coordinator::calibrate::{calibrate_adaround, calibrate_attention};
 use crate::coordinator::capture::{capture, reference_outputs, ActCache};
@@ -31,6 +29,7 @@ use crate::quant::rounding::{self, Rounding};
 use crate::quant::scale::mse_optimal_scale_with;
 use crate::quant::QGrid;
 use crate::tensor::Tensor;
+use crate::trace::{self, Category};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 use crate::util::threadpool;
@@ -101,7 +100,10 @@ pub fn quantize_and_eval(
     calib: &Split,
     eval: &Split,
 ) -> Result<Outcome> {
-    let t0 = Instant::now();
+    // one clock for every timing number (satellite of the trace PR):
+    // wall_s comes off the tracer epoch, same source as every span
+    let t0_us = trace::clock_us();
+    let _run_span = trace::span(Category::Pipeline, format!("quantize:{}", spec.model));
     let model = backend.load_model(manifest, &spec.model)?;
     let k = model.num_layers();
     assert_eq!(spec.wbits.len(), k, "wbits arity");
@@ -115,6 +117,7 @@ pub fn quantize_and_eval(
     let needs_capture = spec.abits.is_some()
         || matches!(cfg.method, Rounding::Attention | Rounding::AdaRound);
     let mut cache: Option<ActCache> = if needs_capture {
+        let _span = trace::span(Category::Pipeline, "capture");
         Some(capture(
             backend,
             manifest,
@@ -136,6 +139,8 @@ pub fn quantize_and_eval(
         let layer = &model.info.layers[li];
         let w_fp = &model.weights[li];
         let bits = spec.wbits[li];
+        let _layer_span =
+            trace::span(Category::Calib, format!("layer:{}:{bits}b", layer.name));
 
         // Optional quantized-prefix re-capture (config flag).
         if let (Some(c), true) = (&cache, cfg.recapture_every > 0) {
@@ -174,14 +179,17 @@ pub fn quantize_and_eval(
                 let yref = backend.metrics().time("pipeline.reference_outputs", || {
                     reference_outputs(backend, layer, &x, w_fp, cb)
                 })?;
-                let cal = if cfg.method == Rounding::Attention {
-                    calibrate_attention(
-                        backend, layer, w_fp, &x, &yref, bits, cfg, scan_k, cb, &mut rng,
-                    )?
-                } else {
-                    calibrate_adaround(
-                        backend, layer, w_fp, &x, &yref, bits, cfg, scan_k, cb, &mut rng,
-                    )?
+                let cal = {
+                    let _span = trace::span(Category::Calib, "calibrate");
+                    if cfg.method == Rounding::Attention {
+                        calibrate_attention(
+                            backend, layer, w_fp, &x, &yref, bits, cfg, scan_k, cb, &mut rng,
+                        )?
+                    } else {
+                        calibrate_adaround(
+                            backend, layer, w_fp, &x, &yref, bits, cfg, scan_k, cb, &mut rng,
+                        )?
+                    }
                 };
                 log::debug!(
                     "{}/{}: {}b loss {:.3e} -> {:.3e}",
@@ -203,7 +211,10 @@ pub fn quantize_and_eval(
                 )
             }
             method => {
-                let scale = mse_optimal_scale_with(pool, w_fp.data(), bits)?;
+                let scale = {
+                    let _span = trace::span(Category::Calib, "scale-search");
+                    mse_optimal_scale_with(pool, w_fp.data(), bits)?
+                };
                 let grid = QGrid::signed(bits, scale)?;
                 // The only allocation is the output buffer the Tensor
                 // keeps; the kernels write into it in parallel chunks.
@@ -243,11 +254,14 @@ pub fn quantize_and_eval(
         per_layer.push(outcome);
     }
 
-    let acc = match (&act_bits, spec.abits) {
-        (Some(bits_a), Some(_)) => evaluate_actq(
-            backend, manifest, &model, &qweights, &act_params, bits_a, eval,
-        )?,
-        _ => evaluate(backend, manifest, &model, &qweights, eval)?,
+    let acc = {
+        let _span = trace::span(Category::Pipeline, "evaluate");
+        match (&act_bits, spec.abits) {
+            (Some(bits_a), Some(_)) => evaluate_actq(
+                backend, manifest, &model, &qweights, &act_params, bits_a, eval,
+            )?,
+            _ => evaluate(backend, manifest, &model, &qweights, eval)?,
+        }
     };
 
     Ok(Outcome {
@@ -259,7 +273,7 @@ pub fn quantize_and_eval(
         qweights,
         act_params: spec.abits.map(|_| act_params),
         act_bits,
-        wall_s: t0.elapsed().as_secs_f64(),
+        wall_s: (trace::clock_us().saturating_sub(t0_us)) as f64 / 1e6,
     })
 }
 

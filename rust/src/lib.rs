@@ -34,6 +34,9 @@
 //! * [`serve`] — batched serving: hot prepared model, bounded request
 //!   queue with admission control, micro-batching worker, latency /
 //!   throughput metrics.
+//! * [`trace`] — unified tracing: span ring buffers, Chrome trace-event
+//!   export (`--trace`), windowed serve telemetry; the process clock
+//!   every timing number comes from.
 //! * [`report`] — tables, ASCII charts, CSV.
 //! * [`bench_harness`] — the in-repo criterion replacement.
 //!
@@ -61,6 +64,7 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 
 pub use util::error::{Error, Result};

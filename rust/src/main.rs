@@ -38,6 +38,7 @@ use attention_round::quant::observer::{observe_with, ActQuantParams};
 use attention_round::quant::rounding::Rounding;
 use attention_round::report::pct;
 use attention_round::serve;
+use attention_round::trace;
 use attention_round::util::args::Parser;
 use attention_round::util::{error::Error, error::Result, logging};
 
@@ -77,6 +78,7 @@ fn parser() -> Parser {
         .opt("chaos", None, "serve: fault-injection scenario (worker-crash|slow-consumer|latency-spike|burst|mixed-size) or 'matrix' for all")
         .opt("artifact", None, "packed artifact dir (serve or evaluate a saved quantized model)")
         .opt("pack-out", None, "pack: artifact output dir (default <out>/qmodels/<model>-<tag>)")
+        .opt("trace", None, "write a Chrome trace-event JSON of this run to the given path (load in Perfetto / chrome://tracing)")
         .flag("mixed", "pack: Algorithm-1 per-layer bits from --bits/--eps2 instead of uniform --wbits")
         .flag("no-verify", "serve: skip the bit-identity check against direct forward")
         .flag("save", "persist the quantized model under <out>/qmodels/ (packed v2 artifact)")
@@ -107,7 +109,20 @@ fn run(argv: &[String]) -> Result<()> {
     let cmd = a.positional[0].as_str();
     let artifacts = a.get("artifacts")?.to_string();
 
-    match cmd {
+    let trace_path = a.get("trace").ok().map(PathBuf::from);
+    if trace_path.is_some() {
+        if trace::available() {
+            trace::enable();
+            trace::set_thread_label("main");
+        } else {
+            log::warn!(
+                "--trace requested but this binary was built without the \
+                 `trace` feature; no trace will be written"
+            );
+        }
+    }
+
+    let result = match cmd {
         "info" => info(&artifacts, &a),
         "evaluate" => cmd_evaluate(&artifacts, &a),
         "quantize" => cmd_quantize(&artifacts, &a),
@@ -117,7 +132,19 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&artifacts, &a),
         "reproduce" => cmd_reproduce(&artifacts, &a),
         other => Err(Error::config(format!("unknown subcommand {other:?}"))),
+    };
+
+    // export even when the subcommand failed: a trace of the run that
+    // died is exactly the one worth looking at
+    if let Some(path) = trace_path {
+        if trace::available() {
+            match trace::chrome::export(&path) {
+                Ok(n) => println!("wrote {n} trace events to {}", path.display()),
+                Err(e) => log::warn!("trace export to {} failed: {e}", path.display()),
+            }
+        }
     }
+    result
 }
 
 fn info(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()> {
@@ -342,6 +369,9 @@ fn cmd_pack(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()
     let out = quantize_and_eval(
         ctx.backend.as_ref(), &ctx.manifest, &spec, &cfg, &ctx.calib, &ctx.eval,
     )?;
+    // the pack span lives here (not in deploy/) — kernel-adjacent
+    // modules stay clock-free per the analyzer's AR003 scope
+    let pack_span = trace::span(trace::Category::Pack, format!("pack:{model_name}"));
     let packed = deploy::PackedModel::from_outcome(&out, lengths.as_deref())?;
     let tag = format!(
         "pack-{}-{}a{}",
@@ -354,6 +384,7 @@ fn cmd_pack(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()
         Err(_) => state::default_dir(&ctx.out_dir, &model_name, &tag),
     };
     packed.save(&dir)?;
+    drop(pack_span);
     println!("{}", deploy::compression_table(&packed).render());
     println!(
         "{model_name} via {:?} on {}: top-1 {}% (FP {}%), {:.1}s",
@@ -455,6 +486,11 @@ fn print_serve_report(ctx: &Ctx, report: &serve::ServeReport) -> Result<()> {
     let json_path = ctx.out_dir.join("serve.json");
     std::fs::write(&json_path, &json)?;
     println!("wrote {}", json_path.display());
+    // the windowed telemetry goes to its own file so the serve.json
+    // schema (frozen by golden-key tests) stays untouched
+    let tl_path = ctx.out_dir.join("serve.timeline.json");
+    std::fs::write(&tl_path, report.timeline.to_json())?;
+    println!("wrote {}", tl_path.display());
     Ok(())
 }
 

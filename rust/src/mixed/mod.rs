@@ -16,6 +16,7 @@ pub mod kmeans;
 use crate::io::manifest::LayerInfo;
 use crate::linalg::{log2_det_spd, Mat};
 use crate::tensor::Tensor;
+use crate::trace::{self, Category};
 use crate::util::error::{Error, Result};
 use crate::util::threadpool::{self, ThreadPool};
 
@@ -139,10 +140,17 @@ pub fn allocate_with(
     bits_sorted.sort_unstable();
 
     // Step 1-5: coding lengths, one layer per pool task.
+    let _alloc_span =
+        trace::span(Category::Alloc, format!("allocate:{}layers", layers.len()));
     let k_layers = layers.len();
     let seq = ThreadPool::seq();
     let lengths: Vec<f64> = pool
         .scope_map(k_layers, |i| -> Result<f64> {
+            // per-layer span on the *pool worker's* lane — coding-length
+            // cost is the allocate phase's hot part and varies by orders
+            // of magnitude across layers
+            let _span =
+                trace::span(Category::Alloc, format!("coding-length:{}", layers[i].name));
             let mat = coding_view(&weights[i], layers[i].coding_n, layers[i].coding_m)?;
             coding_length_with(&seq, &mat, eps2)
         })

@@ -35,6 +35,7 @@ use crate::backend::Backend;
 use crate::io::manifest::Manifest;
 use crate::serve::metrics::ServeReport;
 use crate::serve::ServeConfig;
+use crate::trace::{self, Category};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
@@ -202,12 +203,16 @@ impl WorkerChaos {
     pub fn before_batch(&self) {
         let n = self.batches.fetch_add(1, Ordering::SeqCst);
         if self.panic_on.contains(&n) {
+            // named injection instant *before* the panic, so the exported
+            // trace points at the exact injection behind a FAIL verdict
+            trace::instant(Category::Chaos, format!("inject:panic@batch{n}"));
             panic!("chaos: injected worker panic at batch {n}");
         }
         if self.spike_every > 0
             && !self.spike.is_zero()
             && n % self.spike_every == self.spike_every - 1
         {
+            trace::instant(Category::Chaos, format!("inject:spike@batch{n}"));
             std::thread::sleep(self.spike);
         }
     }
@@ -419,5 +424,41 @@ mod tests {
         assert!(j.get("pass").unwrap().as_bool().unwrap());
         assert_eq!(j.get("restarts").unwrap().as_f64().unwrap(), 2.0);
         assert!(v.line().contains("PASS"));
+    }
+
+    #[test]
+    fn verdict_json_golden_keys() {
+        // schema freeze: downstream tooling (validate_serve.py, the CI
+        // chaos-smoke job) keys on exactly this set — adding or renaming
+        // a field must update this test *and* the consumers
+        let v = SloVerdict {
+            scenario: "quiet".into(),
+            p99_s: 0.5,
+            p99_target_s: 1.0,
+            p99_ok: true,
+            lost: 0,
+            accounting_balanced: true,
+            restarts: 0,
+            pass: true,
+        };
+        let j = crate::util::json::parse(&v.to_json()).unwrap();
+        let mut keys: Vec<&str> = match &j {
+            crate::util::json::Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("verdict must serialize to an object, got {other:?}"),
+        };
+        keys.sort_unstable();
+        assert_eq!(
+            keys,
+            vec![
+                "accounting_balanced",
+                "lost",
+                "p99_ok",
+                "p99_s",
+                "p99_target_s",
+                "pass",
+                "restarts",
+                "scenario",
+            ]
+        );
     }
 }

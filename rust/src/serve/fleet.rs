@@ -34,6 +34,7 @@ use crate::backend::PreparedModel;
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::queue::{RequestQueue, ServeOutcome, ServeResponse};
 use crate::serve::worker::{run_worker, WorkerConfig};
+use crate::trace::{self, Category};
 
 /// Supervision knobs.
 #[derive(Debug, Clone)]
@@ -126,6 +127,10 @@ pub fn supervise(
             Err(payload) => {
                 let msg = panic_message(&payload);
                 if restarts >= fleet.max_restarts {
+                    trace::instant(
+                        Category::Serve,
+                        format!("worker-{worker_id}:breaker-open"),
+                    );
                     log::error!(
                         "serve fleet: worker {worker_id} panicked ({msg}) after \
                          {restarts} restarts — circuit breaker open, giving up"
@@ -134,6 +139,10 @@ pub fn supervise(
                 }
                 restarts += 1;
                 metrics.record_restart();
+                trace::instant(
+                    Category::Serve,
+                    format!("worker-{worker_id}:restart-{restarts}"),
+                );
                 log::warn!(
                     "serve fleet: worker {worker_id} panicked ({msg}); \
                      restart {restarts}/{} after {backoff:?}",

@@ -32,9 +32,14 @@ use std::time::Duration;
 use crate::bench_harness::{fmt_dur, Stats};
 use crate::report::Table;
 use crate::tensor::ops;
+use crate::trace::timeline::{Timeline, TimelineReport};
 
 #[derive(Default)]
 struct MetricsInner {
+    /// Per-second telemetry buckets, fed from the same recording sites
+    /// (and under the same lock) as the run totals — see
+    /// `trace::timeline` for the invariant this buys.
+    timeline: Timeline,
     latencies_s: Vec<f32>,
     batch_real: Vec<u32>,
     depth_samples: Vec<u32>,
@@ -63,16 +68,18 @@ impl ServeMetrics {
 
     /// One request entering the system (before its first push attempt).
     pub fn record_submitted(&self) {
-        self.inner.lock().unwrap().submitted += 1;
+        let mut g = self.inner.lock().unwrap();
+        g.submitted += 1;
+        let sec = g.timeline.now_sec();
+        g.timeline.record_submitted(sec);
     }
 
     /// Admission→response latency of one *answered* request.
     pub fn record_latency(&self, d: Duration) {
-        self.inner
-            .lock()
-            .unwrap()
-            .latencies_s
-            .push(d.as_secs_f32());
+        let mut g = self.inner.lock().unwrap();
+        g.latencies_s.push(d.as_secs_f32());
+        let sec = g.timeline.now_sec();
+        g.timeline.record_completed(sec, d.as_secs_f64());
     }
 
     /// One executed batch on `worker_id`: `real` request rows and
@@ -85,11 +92,16 @@ impl ServeMetrics {
             g.worker_batches.resize(worker_id + 1, 0);
         }
         g.worker_batches[worker_id] += 1;
+        let sec = g.timeline.now_sec();
+        g.timeline.record_batch(sec, worker_id, real, padded);
     }
 
     /// Queue depth observed right after an accepted push.
     pub fn record_depth(&self, depth: usize) {
-        self.inner.lock().unwrap().depth_samples.push(depth as u32);
+        let mut g = self.inner.lock().unwrap();
+        g.depth_samples.push(depth as u32);
+        let sec = g.timeline.now_sec();
+        g.timeline.record_depth(sec, depth);
     }
 
     /// One admission-control rejection (queue full; the producer may
@@ -101,17 +113,26 @@ impl ServeMetrics {
     /// One request whose *terminal* state is an admission rejection
     /// (queue closed before it ever got in).
     pub fn record_rejected_final(&self) {
-        self.inner.lock().unwrap().rejected_final += 1;
+        let mut g = self.inner.lock().unwrap();
+        g.rejected_final += 1;
+        let sec = g.timeline.now_sec();
+        g.timeline.record_rejected_final(sec);
     }
 
     /// One request shed past its deadline (terminal `Expired`).
     pub fn record_expired(&self) {
-        self.inner.lock().unwrap().expired += 1;
+        let mut g = self.inner.lock().unwrap();
+        g.expired += 1;
+        let sec = g.timeline.now_sec();
+        g.timeline.record_expired(sec);
     }
 
     /// One request answered with a failure (terminal `Failed`).
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        let mut g = self.inner.lock().unwrap();
+        g.errors += 1;
+        let sec = g.timeline.now_sec();
+        g.timeline.record_error(sec);
     }
 
     /// One supervised worker restart after a panic.
@@ -186,6 +207,7 @@ impl ServeMetrics {
             wall_s,
             throughput_rps: if wall_s > 0.0 { n as f64 / wall_s } else { 0.0 },
             latencies_s: g.latencies_s.clone(),
+            timeline: g.timeline.report(),
         }
     }
 }
@@ -233,6 +255,10 @@ pub struct ServeReport {
     pub throughput_rps: f64,
     /// Raw per-request latencies (seconds) for downstream stats.
     pub latencies_s: Vec<f32>,
+    /// Per-second telemetry buckets; serialized separately as
+    /// `serve.timeline.json` (never into `to_json` — the `serve.json`
+    /// key set is frozen by the golden-key test below).
+    pub timeline: TimelineReport,
 }
 
 impl ServeReport {
@@ -475,6 +501,74 @@ mod tests {
         assert_eq!(r.worker_batches, vec![0]);
         // JSON stays parseable with zero samples
         assert!(crate::util::json::parse(&r.to_json()).is_ok());
+    }
+
+    /// Golden-key schema test: the exact top-level key set of
+    /// `serve.json`'s `"serve"` object. CI smoke jobs grep these keys;
+    /// additions/removals must update this list *and* those greps
+    /// deliberately.
+    #[test]
+    fn serve_json_golden_keys() {
+        let r = filled().report("host", "synthnet", 16, 64, 2, 0.5);
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        let top: Vec<&str> = match &j {
+            crate::util::json::Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("expected object, got {other:?}"),
+        };
+        assert_eq!(top, vec!["serve"]);
+        let keys: Vec<&str> = match j.get("serve").unwrap() {
+            crate::util::json::Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("expected object, got {other:?}"),
+        };
+        assert_eq!(
+            keys,
+            vec![
+                "accounting_balanced",
+                "backend",
+                "batch_size_max",
+                "batch_size_mean",
+                "batches",
+                "completed",
+                "errors",
+                "expired",
+                "latency_s",
+                "max_batch",
+                "model",
+                "padded_rows",
+                "queue_depth",
+                "queue_depth_max",
+                "queue_depth_mean",
+                "rejected",
+                "rejected_final",
+                "restarts",
+                "submitted",
+                "throughput_rps",
+                "wall_s",
+                "workers",
+            ]
+        );
+        let lat_keys: Vec<&str> = match j.get("serve").unwrap().get("latency_s").unwrap() {
+            crate::util::json::Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("expected object, got {other:?}"),
+        };
+        assert_eq!(lat_keys, vec!["max", "mean", "min", "p50", "p95", "p99"]);
+    }
+
+    /// The timeline rides the same recording sites, so its bucket totals
+    /// must agree with the report's counters exactly.
+    #[test]
+    fn timeline_totals_match_report_counters() {
+        let r = filled().report("host", "synthnet", 16, 64, 2, 0.5);
+        assert_eq!(r.timeline.submitted_total(), r.submitted);
+        assert_eq!(
+            r.timeline.terminal_total(),
+            r.completed + r.rejected_final + r.expired + r.errors
+        );
+        assert!(r.timeline.accounting_balanced());
+        assert!(
+            crate::util::json::parse(&r.timeline.to_json()).is_ok(),
+            "timeline JSON stays parseable"
+        );
     }
 
     #[test]

@@ -66,6 +66,7 @@ use crate::deploy::artifact::PackedModel;
 use crate::io::manifest::{DatasetInfo, Manifest};
 use crate::quant::observer::ActQuantParams;
 use crate::tensor::Tensor;
+use crate::trace::{self, Category};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 use crate::util::threadpool;
@@ -222,11 +223,17 @@ fn run_session(
     let alive = AtomicUsize::new(workers);
     let (rtx, rrx) = channel::<ServeResponse>();
     let mut responses: Vec<Option<Tensor>> = vec![None; total];
+    let _session_span = trace::span(
+        Category::Serve,
+        format!("session:{total}req:{workers}w"),
+    );
     std::thread::scope(|s| {
         for (wid, (prepared, wcfg)) in prepareds.iter().zip(&wcfgs).enumerate() {
             let (queue, metrics, fleet, alive) =
                 (&queue, serve_metrics, &cfg.fleet, &alive);
             s.spawn(move || {
+                // one exported trace lane per fleet worker
+                trace::set_thread_label(&format!("worker-{wid}"));
                 supervise(wid, prepared.as_ref(), queue, wcfg, metrics, fleet, alive)
             });
         }
@@ -239,10 +246,12 @@ fn run_session(
             let rtx = rtx.clone();
             let (queue, metrics) = (&queue, serve_metrics);
             s.spawn(move || {
+                trace::set_thread_label(&format!("producer-{p}"));
                 let mut gate = ArrivalGate::new(arrivals, chaos_seed ^ p as u64);
                 for i in lo..hi {
                     gate.wait();
                     metrics.record_submitted();
+                    trace::instant(Category::Serve, "admit");
                     let now = Instant::now();
                     let mut req = ServeRequest {
                         id: i as u64,
@@ -256,11 +265,17 @@ fn run_session(
                         match queue.push(req) {
                             Ok(depth) => {
                                 metrics.record_depth(depth);
+                                trace::counter(
+                                    Category::Serve,
+                                    "queue_depth",
+                                    depth as f64,
+                                );
                                 break;
                             }
                             Err(rej) => match rej.error {
                                 AdmissionError::QueueFull { .. } => {
                                     metrics.record_rejected();
+                                    trace::instant(Category::Serve, "shed:queue-full");
                                     req = rej.request;
                                     // the deadline keeps running while we
                                     // fight for admission: shed here too
@@ -311,19 +326,23 @@ fn run_session(
                     }
                     match resp.outcome {
                         ServeOutcome::Answer(t) => {
+                            trace::instant(Category::Serve, "respond");
                             if let Some(slot) = responses.get_mut(resp.id as usize) {
                                 *slot = Some(t);
                             }
                         }
                         ServeOutcome::Rejected(e) => {
                             serve_metrics.record_rejected_final();
+                            trace::instant(Category::Serve, "terminal:rejected");
                             log::debug!("serve: request {} rejected: {e}", resp.id);
                         }
                         ServeOutcome::Expired => {
                             serve_metrics.record_expired();
+                            trace::instant(Category::Serve, "terminal:expired");
                         }
                         ServeOutcome::Failed(msg) => {
                             serve_metrics.record_error();
+                            trace::instant(Category::Serve, "terminal:failed");
                             log::warn!("serve: request {} failed: {msg}", resp.id);
                         }
                     }

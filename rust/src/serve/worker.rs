@@ -39,6 +39,7 @@ use crate::serve::batcher;
 use crate::serve::chaos::WorkerChaos;
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::queue::{RequestQueue, ServeOutcome, ServeRequest, ServeResponse};
+use crate::trace::{self, Category};
 use crate::util::threadpool;
 
 /// Worker knobs (a subset of `serve::ServeConfig`, copied so the worker
@@ -160,6 +161,7 @@ pub fn run_worker(
         let mut pending = InFlight::new(popped);
         let shed = pending.shed_expired(Instant::now());
         if shed > 0 {
+            trace::instant(Category::Serve, format!("shed:{shed}-expired"));
             log::debug!("serve worker {worker_id}: shed {shed} expired requests");
         }
         while let Some(group) = pending.next_shape_group() {
@@ -176,6 +178,12 @@ pub fn run_worker(
                 padded,
             } = batch;
             let mut guard = InFlight::new(requests);
+            // the span guard sits above the chaos hook so an injected
+            // panic closes it during unwind — B/E stay balanced per tid
+            let batch_span = trace::span(
+                Category::Serve,
+                format!("batch:{}+{padded}pad", guard.requests.len()),
+            );
             // chaos fires while the guard owns the batch: an injected
             // panic fails over exactly these requests (plus whatever
             // `pending` still holds — also in flight)
@@ -186,6 +194,7 @@ pub fn run_worker(
                 Some((params, bits)) => prepared.forward_actq(&inputs, params, bits),
                 None => prepared.forward(&inputs),
             });
+            drop(batch_span);
             match out {
                 Ok(logits) => {
                     let requests = guard.take();
@@ -210,7 +219,10 @@ pub fn run_worker(
                         }
                     }
                 }
-                Err(e) => respond_failed(guard.take(), &e.to_string()),
+                Err(e) => {
+                    trace::instant(Category::Serve, "batch:forward-failed");
+                    respond_failed(guard.take(), &e.to_string());
+                }
             }
         }
     }

@@ -1,0 +1,200 @@
+//! Chrome trace-event JSON export (the `chrome://tracing` / Perfetto
+//! format).
+//!
+//! Emits the JSON-object form `{"traceEvents": [...]}` with:
+//!
+//! * `B`/`E` duration events per span (balanced per tid by the RAII
+//!   guards),
+//! * `i` instants (`"s": "t"`, thread-scoped),
+//! * `C` counters (`args.value`),
+//! * one `M` `thread_name` metadata row per labeled lane (fleet workers,
+//!   producers, the coordinator), and
+//! * a `trace_dropped_events` counter per thread whose ring wrapped, so
+//!   truncation is visible in the timeline instead of silent.
+//!
+//! Timestamps are already microseconds (the format's native unit). JSON
+//! is hand-rolled like `util::json` — names/labels go through the same
+//! escaper via [`crate::util::json::Json::str`].
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::{Kind, ThreadSnapshot};
+
+/// Single process lane; tids are the tracer's own per-thread ids.
+const PID: u64 = 1;
+
+fn quoted(s: &str) -> String {
+    Json::str(s).to_string_compact()
+}
+
+/// Render snapshots as a Chrome trace JSON string. Returns the document
+/// and the number of events written (metadata rows included).
+pub fn render(snapshots: &[ThreadSnapshot]) -> (String, usize) {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut count = 0usize;
+    let mut first = true;
+    let mut push = |out: &mut String, line: String, count: &mut usize, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        out.push_str(&line);
+        *count += 1;
+    };
+    for snap in snapshots {
+        if let Some(label) = &snap.label {
+            push(
+                &mut out,
+                format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{PID},\"tid\":{},\
+                     \"args\":{{\"name\":{}}}}}",
+                    snap.tid,
+                    quoted(label)
+                ),
+                &mut count,
+                &mut first,
+            );
+        }
+        for ev in &snap.events {
+            let mut line = String::new();
+            let _ = write!(
+                line,
+                "{{\"name\":{},\"cat\":\"{}\",\"pid\":{PID},\"tid\":{},\"ts\":{}",
+                quoted(&ev.name),
+                ev.cat.as_str(),
+                snap.tid,
+                ev.ts_us
+            );
+            match &ev.kind {
+                Kind::Begin => line.push_str(",\"ph\":\"B\"}"),
+                Kind::End => line.push_str(",\"ph\":\"E\"}"),
+                Kind::Instant => line.push_str(",\"ph\":\"i\",\"s\":\"t\"}"),
+                Kind::Counter(v) => {
+                    let _ = write!(line, ",\"ph\":\"C\",\"args\":{{\"value\":{}}}}}", Json::num(*v).to_string_compact());
+                }
+            }
+            push(&mut out, line, &mut count, &mut first);
+        }
+        if snap.dropped > 0 {
+            let ts = snap.events.last().map(|e| e.ts_us).unwrap_or(0);
+            push(
+                &mut out,
+                format!(
+                    "{{\"name\":\"trace_dropped_events\",\"cat\":\"serve\",\"pid\":{PID},\
+                     \"tid\":{},\"ts\":{},\"ph\":\"C\",\"args\":{{\"value\":{}}}}}",
+                    snap.tid, ts, snap.dropped
+                ),
+                &mut count,
+                &mut first,
+            );
+        }
+    }
+    out.push_str("\n]}\n");
+    (out, count)
+}
+
+/// Snapshot the live tracer and write the trace to `path`. Returns the
+/// number of events written.
+pub fn export(path: &Path) -> std::io::Result<usize> {
+    let snapshots = super::snapshot();
+    let (doc, count) = render(&snapshots);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(doc.as_bytes())?;
+    f.flush()?;
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::borrow::Cow;
+
+    use super::super::{Category, Event, Kind, ThreadSnapshot};
+    use super::*;
+    use crate::util::json;
+
+    fn snap(tid: u64, label: Option<&str>, events: Vec<Event>, dropped: u64) -> ThreadSnapshot {
+        ThreadSnapshot {
+            tid,
+            label: label.map(str::to_string),
+            events,
+            dropped,
+        }
+    }
+
+    fn ev(ts: u64, kind: Kind, name: &'static str) -> Event {
+        Event {
+            ts_us: ts,
+            kind,
+            cat: Category::Serve,
+            name: Cow::Borrowed(name),
+        }
+    }
+
+    #[test]
+    fn render_roundtrips_through_json_parser() {
+        let snaps = vec![
+            snap(
+                1,
+                Some("worker-0"),
+                vec![
+                    ev(0, Kind::Begin, "batch"),
+                    ev(5, Kind::Instant, "shed \"quoted\""),
+                    ev(9, Kind::End, "batch"),
+                    ev(10, Kind::Counter(3.0), "queue_depth"),
+                ],
+                0,
+            ),
+            snap(2, None, vec![ev(1, Kind::Instant, "admit")], 2),
+        ];
+        let (doc, count) = render(&snaps);
+        // worker-0: metadata + 4 events; tid 2: 1 event + dropped counter
+        assert_eq!(count, 7);
+        let j = json::parse(&doc).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 7);
+        let meta = &events[0];
+        assert_eq!(meta.get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(
+            meta.get("args").unwrap().get("name").unwrap().as_str().unwrap(),
+            "worker-0"
+        );
+        let begin = &events[1];
+        assert_eq!(begin.get("ph").unwrap().as_str().unwrap(), "B");
+        assert_eq!(begin.get("cat").unwrap().as_str().unwrap(), "serve");
+        assert_eq!(begin.get("ts").unwrap().as_f64().unwrap(), 0.0);
+        let inst = &events[2];
+        assert_eq!(inst.get("ph").unwrap().as_str().unwrap(), "i");
+        assert_eq!(
+            inst.get("name").unwrap().as_str().unwrap(),
+            "shed \"quoted\"",
+            "names with quotes survive escaping"
+        );
+        let counter = &events[4];
+        assert_eq!(counter.get("ph").unwrap().as_str().unwrap(), "C");
+        assert_eq!(
+            counter.get("args").unwrap().get("value").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        let dropped = &events[6];
+        assert_eq!(
+            dropped.get("name").unwrap().as_str().unwrap(),
+            "trace_dropped_events"
+        );
+        assert_eq!(
+            dropped.get("args").unwrap().get("value").unwrap().as_f64().unwrap(),
+            2.0
+        );
+    }
+
+    #[test]
+    fn empty_snapshot_is_valid_json() {
+        let (doc, count) = render(&[]);
+        assert_eq!(count, 0);
+        let j = json::parse(&doc).unwrap();
+        assert!(j.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+}

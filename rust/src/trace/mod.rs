@@ -1,0 +1,256 @@
+//! Unified tracing: spans, instants, counters, and the process clock.
+//!
+//! One subsystem replaces the repo's three disconnected timing stories
+//! (stderr log lines, `util::timer` phase sums, post-hoc serve metrics):
+//!
+//! * a global tracer gated on **one relaxed [`AtomicBool`]** — when
+//!   tracing is off every instrumentation site costs a single atomic
+//!   load and an untaken branch, **no clock read**, so kernel
+//!   bit-identity and the fused-vs-unfused perf gates are untouched
+//!   (CI asserts the serve path stays within 3% of a binary compiled
+//!   without the `trace` feature at all);
+//! * **per-thread ring buffers** ([`ring::Ring`]) behind a thread-local
+//!   handle — recording locks only the recording thread's own mutex
+//!   (uncontended in steady state), never a global one;
+//! * RAII [`span`] guards + [`instant`] / [`counter`] events with typed
+//!   [`Category`] lanes (`pipeline`, `calib`, `alloc`, `pack`, `serve`,
+//!   `chaos`);
+//! * a Chrome trace-event JSON exporter ([`chrome`]) loadable in
+//!   Perfetto, and per-second serve telemetry buckets ([`timeline`]).
+//!
+//! AR003 bans clock reads in the kernel modules (`quant`, `linalg`,
+//! `deploy`); the tracer clock therefore lives *here* and instrumentation
+//! stays at layer/batch granularity in the coordinator and serve layers —
+//! no waiver needed, kernels stay clock-free.
+//!
+//! The `trace` cargo feature (default-on) compiles the gate; without it
+//! [`enabled`] is a compile-time `false` and every site folds away — that
+//! is the "no-trace binary path" CI measures overhead against.
+
+pub mod chrome;
+pub mod ring;
+pub mod timeline;
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+pub use ring::{Event, Kind, Ring};
+
+/// Typed event lanes — one per layer that matters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    /// Coordinator phases (capture → … → evaluate) and whole-run spans.
+    Pipeline,
+    /// Per-layer scale search / calibration.
+    Calib,
+    /// Eq.-12 coding length + bit allocation.
+    Alloc,
+    /// Artifact bit-packing and writing.
+    Pack,
+    /// Request lifecycle: admit → queued → batched → forward → respond.
+    Serve,
+    /// Fault injections from the chaos harness.
+    Chaos,
+}
+
+impl Category {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Category::Pipeline => "pipeline",
+            Category::Calib => "calib",
+            Category::Alloc => "alloc",
+            Category::Pack => "pack",
+            Category::Serve => "serve",
+            Category::Chaos => "chaos",
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Whether this binary was compiled with the tracer at all.
+pub fn available() -> bool {
+    cfg!(feature = "trace")
+}
+
+/// The one-branch gate every instrumentation site checks first. With the
+/// `trace` feature off this is a compile-time `false` and the whole site
+/// is dead code.
+#[inline(always)]
+pub fn enabled() -> bool {
+    if cfg!(feature = "trace") {
+        ENABLED.load(Ordering::Relaxed)
+    } else {
+        false
+    }
+}
+
+/// Arm the tracer (also pins the clock epoch so timestamps start near 0).
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds on the process-wide monotonic trace clock. This is the
+/// *one* clock: `util::timer` phase sums and every trace timestamp read
+/// it, so EXPERIMENTS.md numbers and trace spans can never disagree.
+pub fn clock_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// One registered thread's buffer. The `Arc` outlives the thread so
+/// events survive scoped worker teardown until export.
+struct ThreadBuf {
+    tid: u64,
+    label: Mutex<Option<String>>,
+    ring: Mutex<Ring>,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Arc<ThreadBuf>>> = const { RefCell::new(None) };
+}
+
+fn with_local<R>(f: impl FnOnce(&ThreadBuf) -> R) -> R {
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let buf = Arc::new(ThreadBuf {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                label: Mutex::new(None),
+                ring: Mutex::new(Ring::new(ring::DEFAULT_CAPACITY)),
+            });
+            registry().lock().unwrap().push(Arc::clone(&buf));
+            *slot = Some(buf);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+fn record(kind: Kind, cat: Category, name: Cow<'static, str>) {
+    let ts_us = clock_us();
+    with_local(|buf| {
+        buf.ring.lock().unwrap().push(Event {
+            ts_us,
+            kind,
+            cat,
+            name,
+        })
+    });
+}
+
+/// Name this thread's lane in the exported trace (`worker-0`,
+/// `producer-2`, …). No-op while tracing is disabled.
+pub fn set_thread_label(label: &str) {
+    if !enabled() {
+        return;
+    }
+    let owned = label.to_string();
+    with_local(|buf| *buf.label.lock().unwrap() = Some(owned));
+}
+
+/// Point-in-time event (shed/expired/failed annotations, chaos
+/// injections).
+pub fn instant(cat: Category, name: impl Into<Cow<'static, str>>) {
+    if !enabled() {
+        return;
+    }
+    record(Kind::Instant, cat, name.into());
+}
+
+/// Named sampled value (queue depth and friends).
+pub fn counter(cat: Category, name: impl Into<Cow<'static, str>>, value: f64) {
+    if !enabled() {
+        return;
+    }
+    record(Kind::Counter(value), cat, name.into());
+}
+
+/// RAII span: records `Begin` now (if tracing is on) and the matching
+/// `End` on drop — including drops during panic unwinding, which is what
+/// keeps B/E balanced through chaos-injected worker crashes.
+pub struct SpanGuard {
+    open: Option<(Category, Cow<'static, str>)>,
+}
+
+impl SpanGuard {
+    /// Whether this guard actually opened a span (tracing was enabled).
+    pub fn is_armed(&self) -> bool {
+        self.open.is_some()
+    }
+}
+
+/// Open a span on this thread. Disabled tracer: one atomic load, no
+/// clock read, and the returned guard is inert.
+pub fn span(cat: Category, name: impl Into<Cow<'static, str>>) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { open: None };
+    }
+    let name = name.into();
+    record(Kind::Begin, cat, name.clone());
+    SpanGuard { open: Some((cat, name)) }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        // Close unconditionally once opened (even if the tracer was
+        // disabled mid-span) so every thread's B/E stream stays balanced.
+        if let Some((cat, name)) = self.open.take() {
+            record(Kind::End, cat, name);
+        }
+    }
+}
+
+/// One thread's exported view.
+pub struct ThreadSnapshot {
+    pub tid: u64,
+    pub label: Option<String>,
+    pub events: Vec<Event>,
+    pub dropped: u64,
+}
+
+/// Copy out every registered thread's buffer (threads may already have
+/// exited; their events persist through the registry `Arc`).
+pub fn snapshot() -> Vec<ThreadSnapshot> {
+    let registry = registry().lock().unwrap();
+    registry
+        .iter()
+        .map(|buf| {
+            let (events, dropped) = buf.ring.lock().unwrap().snapshot();
+            ThreadSnapshot {
+                tid: buf.tid,
+                label: buf.label.lock().unwrap().clone(),
+                events,
+                dropped,
+            }
+        })
+        .collect()
+}
+
+/// Disable tracing and clear every thread's buffer/label (test hygiene —
+/// thread registrations themselves are kept).
+pub fn reset() {
+    disable();
+    let registry = registry().lock().unwrap();
+    for buf in registry.iter() {
+        buf.ring.lock().unwrap().clear();
+        *buf.label.lock().unwrap() = None;
+    }
+}

@@ -1,0 +1,170 @@
+//! Fixed-capacity per-thread event ring.
+//!
+//! Each tracing thread owns one [`Ring`]; pushes never allocate past the
+//! configured capacity and never block anyone else. When the ring is full
+//! the *oldest* event is overwritten (recent history is what explains a
+//! failure) and a dropped-events count is kept so the exporter can emit an
+//! explicit counter instead of silently truncating the timeline.
+
+use std::borrow::Cow;
+
+use super::Category;
+
+/// Default per-thread capacity. At ~80 bytes/event this bounds a thread's
+/// trace memory to a few MiB; serve smoke runs (≤ a few thousand events
+/// per thread) never wrap.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// What one trace record means (Chrome trace-event phases `B`/`E`/`i`/`C`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Kind {
+    /// Span open — must be balanced by a later [`Kind::End`] on the same
+    /// thread (RAII guards in `trace` guarantee this, panics included).
+    Begin,
+    /// Span close.
+    End,
+    /// Point-in-time annotation (shed/expired/failed, chaos injections).
+    Instant,
+    /// Named sampled value (queue depth, dropped events).
+    Counter(f64),
+}
+
+/// One trace record. Timestamps are microseconds on the process-wide
+/// monotonic trace clock (`trace::clock_us`), so they are non-negative
+/// and per-thread monotone by construction.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub ts_us: u64,
+    pub kind: Kind,
+    pub cat: Category,
+    pub name: Cow<'static, str>,
+}
+
+/// Bounded event buffer: push overwrites oldest-first once full.
+pub struct Ring {
+    buf: Vec<Event>,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    pub fn new(capacity: usize) -> Self {
+        Ring {
+            buf: Vec::new(),
+            head: 0,
+            capacity: capacity.max(1),
+            dropped: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events overwritten so far (oldest-first).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events in insertion order (oldest surviving first) plus the
+    /// dropped count.
+    pub fn snapshot(&self) -> (Vec<Event>, u64) {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        (out, self.dropped)
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts: u64, name: &'static str) -> Event {
+        Event {
+            ts_us: ts,
+            kind: Kind::Instant,
+            cat: Category::Serve,
+            name: Cow::Borrowed(name),
+        }
+    }
+
+    #[test]
+    fn push_below_capacity_keeps_order() {
+        let mut r = Ring::new(4);
+        for i in 0..3 {
+            r.push(ev(i, "e"));
+        }
+        let (events, dropped) = r.snapshot();
+        assert_eq!(dropped, 0);
+        assert_eq!(
+            events.iter().map(|e| e.ts_us).collect::<Vec<_>>(),
+            [0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn wraparound_drops_oldest_first_and_counts() {
+        let mut r = Ring::new(4);
+        for i in 0..7 {
+            r.push(ev(i, "e"));
+        }
+        let (events, dropped) = r.snapshot();
+        assert_eq!(dropped, 3, "three oldest events overwritten");
+        assert_eq!(
+            events.iter().map(|e| e.ts_us).collect::<Vec<_>>(),
+            [3, 4, 5, 6],
+            "survivors are the newest, still in insertion order"
+        );
+        assert_eq!(r.len(), 4);
+    }
+
+    #[test]
+    fn clear_resets_dropped() {
+        let mut r = Ring::new(2);
+        for i in 0..5 {
+            r.push(ev(i, "e"));
+        }
+        assert!(r.dropped() > 0);
+        r.clear();
+        assert_eq!(r.dropped(), 0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_clamped_to_one() {
+        let mut r = Ring::new(0);
+        r.push(ev(0, "a"));
+        r.push(ev(1, "b"));
+        let (events, dropped) = r.snapshot();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].ts_us, 1);
+        assert_eq!(dropped, 1);
+    }
+}

@@ -1,0 +1,409 @@
+//! Windowed serve telemetry: per-second buckets of queue depth, batch
+//! occupancy, latency percentiles, and terminal outcomes.
+//!
+//! `ServeMetrics` feeds a [`Timeline`] from the same recording sites that
+//! maintain the run totals, so the per-bucket terminal counts obey the
+//! exact accounting invariant `ServeReport` enforces globally:
+//! Σ (completed + rejected_final + expired + errors) == Σ submitted.
+//! The flushed report lands next to `serve.json` as
+//! `<out>/serve.timeline.json` (see README "Observability" for the
+//! schema) and is what explains a FAIL verdict: which second the queue
+//! backed up, which worker stopped taking batches, when p99 broke.
+//!
+//! Unlike span tracing this is *always on* — it rides the locks
+//! `ServeMetrics` already takes, adding only a bucket-index computation
+//! per record.
+
+use std::time::Instant;
+
+/// Width of one bucket. Serve smoke runs last seconds; one-second
+/// windows give per-phase resolution without unbounded growth.
+pub const BUCKET_SECONDS: f64 = 1.0;
+
+/// Hard cap on bucket count (24 h); later records clamp into the final
+/// bucket rather than growing without bound.
+const MAX_BUCKETS: usize = 86_400;
+
+#[derive(Default, Clone)]
+struct Bucket {
+    submitted: u64,
+    completed: u64,
+    rejected_final: u64,
+    expired: u64,
+    errors: u64,
+    depth_sum: u64,
+    depth_samples: u64,
+    depth_max: u64,
+    batches: u64,
+    batch_rows: u64,
+    padded_rows: u64,
+    worker_batches: Vec<u64>,
+    latencies_s: Vec<f64>,
+}
+
+/// Accumulates per-second buckets. Owned by `ServeMetrics` behind its
+/// existing mutex; `sec` is seconds since session start.
+pub struct Timeline {
+    start: Instant,
+    buckets: Vec<Bucket>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Timeline {
+            start: Instant::now(),
+            buckets: Vec::new(),
+        }
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current bucket index for "now" on the timeline's own clock.
+    pub fn now_sec(&self) -> u64 {
+        self.start.elapsed().as_secs()
+    }
+
+    fn bucket(&mut self, sec: u64) -> &mut Bucket {
+        let idx = (sec as usize).min(MAX_BUCKETS - 1);
+        if self.buckets.len() <= idx {
+            self.buckets.resize(idx + 1, Bucket::default());
+        }
+        &mut self.buckets[idx]
+    }
+
+    pub fn record_submitted(&mut self, sec: u64) {
+        self.bucket(sec).submitted += 1;
+    }
+
+    pub fn record_completed(&mut self, sec: u64, latency_s: f64) {
+        let b = self.bucket(sec);
+        b.completed += 1;
+        b.latencies_s.push(latency_s);
+    }
+
+    pub fn record_rejected_final(&mut self, sec: u64) {
+        self.bucket(sec).rejected_final += 1;
+    }
+
+    pub fn record_expired(&mut self, sec: u64) {
+        self.bucket(sec).expired += 1;
+    }
+
+    pub fn record_error(&mut self, sec: u64) {
+        self.bucket(sec).errors += 1;
+    }
+
+    pub fn record_depth(&mut self, sec: u64, depth: usize) {
+        let b = self.bucket(sec);
+        b.depth_sum += depth as u64;
+        b.depth_samples += 1;
+        b.depth_max = b.depth_max.max(depth as u64);
+    }
+
+    pub fn record_batch(&mut self, sec: u64, worker_id: usize, real: usize, padded: usize) {
+        let b = self.bucket(sec);
+        b.batches += 1;
+        b.batch_rows += real as u64;
+        b.padded_rows += padded as u64;
+        if b.worker_batches.len() <= worker_id {
+            b.worker_batches.resize(worker_id + 1, 0);
+        }
+        b.worker_batches[worker_id] += 1;
+    }
+
+    /// Flush into the immutable report form (computes per-bucket
+    /// percentiles; worker vectors are padded to a common width).
+    pub fn report(&self) -> TimelineReport {
+        let workers = self
+            .buckets
+            .iter()
+            .map(|b| b.worker_batches.len())
+            .max()
+            .unwrap_or(0);
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .map(|(second, b)| {
+                let mut worker_batches = b.worker_batches.clone();
+                worker_batches.resize(workers, 0);
+                BucketReport {
+                    second: second as u64,
+                    submitted: b.submitted,
+                    completed: b.completed,
+                    rejected_final: b.rejected_final,
+                    expired: b.expired,
+                    errors: b.errors,
+                    queue_depth_mean: if b.depth_samples == 0 {
+                        0.0
+                    } else {
+                        b.depth_sum as f64 / b.depth_samples as f64
+                    },
+                    queue_depth_max: b.depth_max,
+                    batches: b.batches,
+                    batch_fill_mean: if b.batches == 0 {
+                        0.0
+                    } else {
+                        b.batch_rows as f64 / b.batches as f64
+                    },
+                    padded_rows: b.padded_rows,
+                    worker_batches,
+                    latency_p50_s: percentile(&b.latencies_s, 50.0),
+                    latency_p99_s: percentile(&b.latencies_s, 99.0),
+                }
+            })
+            .collect();
+        TimelineReport {
+            bucket_seconds: BUCKET_SECONDS,
+            buckets,
+        }
+    }
+}
+
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One flushed bucket (see the README schema table).
+#[derive(Debug, Clone)]
+pub struct BucketReport {
+    pub second: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected_final: u64,
+    pub expired: u64,
+    pub errors: u64,
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: u64,
+    pub batches: u64,
+    pub batch_fill_mean: f64,
+    pub padded_rows: u64,
+    pub worker_batches: Vec<u64>,
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+}
+
+/// The flushed timeline: what `serve.timeline.json` serializes.
+#[derive(Debug, Clone, Default)]
+pub struct TimelineReport {
+    pub bucket_seconds: f64,
+    pub buckets: Vec<BucketReport>,
+}
+
+impl TimelineReport {
+    pub fn submitted_total(&self) -> u64 {
+        self.buckets.iter().map(|b| b.submitted).sum()
+    }
+
+    pub fn terminal_total(&self) -> u64 {
+        self.buckets
+            .iter()
+            .map(|b| b.completed + b.rejected_final + b.expired + b.errors)
+            .sum()
+    }
+
+    /// The `ServeReport` invariant, per-bucket edition: every submitted
+    /// request reached exactly one terminal state somewhere on the
+    /// timeline.
+    pub fn accounting_balanced(&self) -> bool {
+        self.submitted_total() == self.terminal_total()
+    }
+
+    /// Hand-rolled JSON, same idiom as `ServeReport::to_json`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"serve_timeline\": {\n");
+        s.push_str(&format!(
+            "    \"bucket_seconds\": {},\n",
+            self.bucket_seconds
+        ));
+        s.push_str("    \"buckets\": [\n");
+        for (i, b) in self.buckets.iter().enumerate() {
+            let workers = b
+                .worker_batches
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join(", ");
+            s.push_str(&format!(
+                "      {{\"second\": {}, \"submitted\": {}, \"completed\": {}, \
+                 \"rejected_final\": {}, \"expired\": {}, \"errors\": {}, \
+                 \"queue_depth_mean\": {:.3}, \"queue_depth_max\": {}, \
+                 \"batches\": {}, \"batch_fill_mean\": {:.3}, \"padded_rows\": {}, \
+                 \"worker_batches\": [{}], \"latency_p50_s\": {:.6}, \
+                 \"latency_p99_s\": {:.6}}}{}\n",
+                b.second,
+                b.submitted,
+                b.completed,
+                b.rejected_final,
+                b.expired,
+                b.errors,
+                b.queue_depth_mean,
+                b.queue_depth_max,
+                b.batches,
+                b.batch_fill_mean,
+                b.padded_rows,
+                workers,
+                b.latency_p50_s,
+                b.latency_p99_s,
+                if i + 1 == self.buckets.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("    ],\n");
+        s.push_str(&format!(
+            "    \"totals\": {{\"submitted\": {}, \"completed\": {}, \"rejected_final\": {}, \
+             \"expired\": {}, \"errors\": {}, \"accounting_balanced\": {}}}\n",
+            self.submitted_total(),
+            self.buckets.iter().map(|b| b.completed).sum::<u64>(),
+            self.buckets.iter().map(|b| b.rejected_final).sum::<u64>(),
+            self.buckets.iter().map(|b| b.expired).sum::<u64>(),
+            self.buckets.iter().map(|b| b.errors).sum::<u64>(),
+            self.accounting_balanced()
+        ));
+        s.push_str("  }\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample_timeline() -> Timeline {
+        let mut t = Timeline::new();
+        // second 0: 3 in, 2 done on worker 0, 1 expired later
+        t.record_submitted(0);
+        t.record_submitted(0);
+        t.record_submitted(0);
+        t.record_depth(0, 2);
+        t.record_depth(0, 4);
+        t.record_batch(0, 0, 2, 1);
+        t.record_completed(0, 0.010);
+        t.record_completed(0, 0.030);
+        // second 2: the straggler expires, one more submit+error
+        t.record_submitted(2);
+        t.record_expired(2);
+        t.record_error(2);
+        t
+    }
+
+    #[test]
+    fn buckets_accumulate_and_balance() {
+        let r = sample_timeline().report();
+        assert_eq!(r.buckets.len(), 3, "gap second still materializes");
+        assert_eq!(r.buckets[0].submitted, 3);
+        assert_eq!(r.buckets[0].completed, 2);
+        assert_eq!(r.buckets[0].batches, 1);
+        assert!((r.buckets[0].queue_depth_mean - 3.0).abs() < 1e-12);
+        assert_eq!(r.buckets[0].queue_depth_max, 4);
+        assert_eq!(r.buckets[1].submitted, 0);
+        assert_eq!(r.buckets[2].expired, 1);
+        assert_eq!(r.buckets[2].errors, 1);
+        assert_eq!(r.submitted_total(), 4);
+        assert_eq!(r.terminal_total(), 4);
+        assert!(r.accounting_balanced());
+    }
+
+    #[test]
+    fn unbalanced_when_a_request_is_unaccounted() {
+        let mut t = sample_timeline();
+        t.record_submitted(2); // submitted but never terminal
+        assert!(!t.report().accounting_balanced());
+    }
+
+    #[test]
+    fn worker_vectors_padded_to_common_width() {
+        let mut t = Timeline::new();
+        t.record_batch(0, 0, 4, 0);
+        t.record_batch(1, 2, 3, 1);
+        let r = t.report();
+        assert_eq!(r.buckets[0].worker_batches, vec![1, 0, 0]);
+        assert_eq!(r.buckets[1].worker_batches, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn percentiles_from_bucket_latencies() {
+        let mut t = Timeline::new();
+        t.record_submitted(0);
+        for i in 1..=100 {
+            t.record_completed(0, i as f64 / 1000.0);
+        }
+        let r = t.report();
+        assert!((r.buckets[0].latency_p50_s - 0.050).abs() < 2e-3);
+        assert!((r.buckets[0].latency_p99_s - 0.099).abs() < 2e-3);
+    }
+
+    /// Golden-key schema test: downstream CI greps on these exact keys.
+    #[test]
+    fn timeline_json_golden_keys() {
+        let text = sample_timeline().report().to_json();
+        let j = json::parse(&text).unwrap();
+        let top: Vec<&str> = match &j {
+            json::Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("expected object, got {other:?}"),
+        };
+        assert_eq!(top, vec!["serve_timeline"]);
+        let inner = j.get("serve_timeline").unwrap();
+        let inner_keys: Vec<&str> = match inner {
+            json::Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("expected object, got {other:?}"),
+        };
+        assert_eq!(inner_keys, vec!["bucket_seconds", "buckets", "totals"]);
+        let bucket = &inner.get("buckets").unwrap().as_arr().unwrap()[0];
+        let bucket_keys: Vec<&str> = match bucket {
+            json::Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("expected object, got {other:?}"),
+        };
+        assert_eq!(
+            bucket_keys,
+            vec![
+                "batch_fill_mean",
+                "batches",
+                "completed",
+                "errors",
+                "expired",
+                "latency_p50_s",
+                "latency_p99_s",
+                "padded_rows",
+                "queue_depth_max",
+                "queue_depth_mean",
+                "rejected_final",
+                "second",
+                "submitted",
+                "worker_batches",
+            ]
+        );
+        let totals = inner.get("totals").unwrap();
+        let totals_keys: Vec<&str> = match totals {
+            json::Json::Obj(m) => m.keys().map(|k| k.as_str()).collect(),
+            other => panic!("expected object, got {other:?}"),
+        };
+        assert_eq!(
+            totals_keys,
+            vec![
+                "accounting_balanced",
+                "completed",
+                "errors",
+                "expired",
+                "rejected_final",
+                "submitted",
+            ]
+        );
+        assert!(totals
+            .get("accounting_balanced")
+            .unwrap()
+            .as_bool()
+            .unwrap());
+    }
+}

@@ -38,29 +38,80 @@ impl Log for StderrLogger {
 
 static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 
+/// The accepted `REPRO_LOG` values, most to least severe.
+pub const ACCEPTED_LEVELS: &[&str] = &["error", "warn", "info", "debug", "trace"];
+
+/// Map a `REPRO_LOG` value to a filter; `None` for anything not in
+/// [`ACCEPTED_LEVELS`] (a typo like `inf` must not silently demote to
+/// the default — the caller warns).
+fn parse_level(raw: &str) -> Option<LevelFilter> {
+    match raw {
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
 /// Install the logger (idempotent).
 pub fn init() {
     let logger = LOGGER.get_or_init(|| StderrLogger {
         start: Instant::now(),
     });
-    let level = match std::env::var("REPRO_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+    let raw = std::env::var("REPRO_LOG").ok();
+    let (level, bad_value) = match raw.as_deref() {
+        None => (LevelFilter::Info, None),
+        Some(v) => match parse_level(v) {
+            Some(l) => (l, None),
+            None => (LevelFilter::Info, Some(v.to_string())),
+        },
     };
     // set_logger fails if called twice; that's fine.
     let _ = log::set_logger(logger);
     log::set_max_level(level);
+    if let Some(bad) = bad_value {
+        // after set_max_level so the warning clears the (info) filter
+        log::warn!(
+            "unrecognized REPRO_LOG value {bad:?}; using \"info\" \
+             (accepted: {})",
+            ACCEPTED_LEVELS.join("|")
+        );
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use log::LevelFilter;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logger smoke test");
+    }
+
+    #[test]
+    fn level_parsing_accepts_exactly_the_documented_set() {
+        for (raw, want) in [
+            ("error", LevelFilter::Error),
+            ("warn", LevelFilter::Warn),
+            ("info", LevelFilter::Info),
+            ("debug", LevelFilter::Debug),
+            ("trace", LevelFilter::Trace),
+        ] {
+            assert_eq!(super::parse_level(raw), Some(want));
+        }
+        assert_eq!(super::ACCEPTED_LEVELS.len(), 5);
+    }
+
+    #[test]
+    fn unrecognized_level_is_flagged_not_swallowed() {
+        // the REPRO_LOG=inf bug: a typo'd value must parse to None (so
+        // init warns) instead of silently matching the default arm
+        for bad in ["inf", "INFO", "warning", "3", ""] {
+            assert_eq!(super::parse_level(bad), None, "{bad:?}");
+        }
     }
 }

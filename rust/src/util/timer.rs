@@ -3,10 +3,18 @@
 //! The coordinator reports per-phase wall-clock (capture / scale-search /
 //! calibrate / evaluate) in EXPERIMENTS.md; this is the source of those
 //! numbers.
+//!
+//! Since the trace PR this module is a *view* over the tracer's clock:
+//! every duration is measured as a [`crate::trace::clock_us`] pair (the
+//! same epoch every exported span timestamp uses), and both [`Metrics::
+//! time`] and [`Scope`] additionally open a `pipeline`-category span so
+//! timed phases show up in `--trace` output for free. One clock, one
+//! registry — no second `Instant` plumbing next to the tracer.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
-use std::time::Instant;
+
+use crate::trace::{self, Category};
 
 /// Accumulates named durations and counters across a run.
 #[derive(Default)]
@@ -35,10 +43,16 @@ impl Metrics {
         *m.counters.entry(name.to_string()).or_default() += by;
     }
 
+    /// Time `f` under `name`: accumulate the duration in the registry
+    /// and emit a `pipeline` span (visible in `--trace` exports when
+    /// tracing is enabled; one relaxed atomic load when it isn't).
     pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
-        let t0 = Instant::now();
+        let span = trace::span(Category::Pipeline, name.to_string());
+        let t0_us = trace::clock_us();
         let out = f();
-        self.add_duration(name, t0.elapsed().as_secs_f64());
+        let dt_us = trace::clock_us().saturating_sub(t0_us);
+        drop(span);
+        self.add_duration(name, dt_us as f64 / 1e6);
         out
     }
 
@@ -60,24 +74,28 @@ impl Metrics {
     }
 }
 
-/// RAII scope timer logging at debug level.
+/// RAII scope timer: logs at debug level on drop and doubles as a
+/// `pipeline`-category trace span over its lifetime.
 pub struct Scope<'a> {
     name: &'a str,
-    start: Instant,
+    start_us: u64,
+    _span: trace::SpanGuard,
 }
 
 impl<'a> Scope<'a> {
     pub fn new(name: &'a str) -> Self {
         Scope {
             name,
-            start: Instant::now(),
+            start_us: trace::clock_us(),
+            _span: trace::span(Category::Pipeline, name.to_string()),
         }
     }
 }
 
 impl Drop for Scope<'_> {
     fn drop(&mut self) {
-        log::debug!("{} took {:.3}s", self.name, self.start.elapsed().as_secs_f64());
+        let dt_us = trace::clock_us().saturating_sub(self.start_us);
+        log::debug!("{} took {:.3}s", self.name, dt_us as f64 / 1e6);
     }
 }
 
@@ -103,5 +121,13 @@ mod tests {
         let v = m.time("work", || 42);
         assert_eq!(v, 42);
         assert!(m.snapshot().0.contains_key("work"));
+    }
+
+    #[test]
+    fn scope_drops_cleanly_without_tracing() {
+        // Scope must be safe to use whether or not the tracer is on
+        // (and whether or not the `trace` feature is compiled in).
+        let s = Scope::new("scoped");
+        drop(s);
     }
 }

@@ -1,0 +1,262 @@
+//! Trace-validity suite for the unified tracing subsystem
+//! (`attention_round::trace`).
+//!
+//! The tracer is process-global (one enabled flag, one registry of
+//! per-thread rings), so every test here serializes on one mutex and
+//! calls `trace::reset()` first — they exercise *shared* state and must
+//! not interleave. Cross-thread invariants pinned:
+//!
+//! * every thread's Begin/End stream is balanced — **including** when a
+//!   span is dropped by a panic unwind (the chaos-injection path);
+//! * timestamps are non-negative and monotonic non-decreasing per
+//!   thread;
+//! * a disabled tracer records nothing — instrumentation sites are inert
+//!   branches, not buffered writes;
+//! * the Chrome exporter round-trips through `util::json::parse` with
+//!   per-thread `thread_name` metadata lanes;
+//! * ring wraparound drops oldest-first and surfaces the drop count.
+//!
+//! Everything is gated on `trace::available()`: the
+//! `--no-default-features` CI lane compiles the tracer out, and these
+//! tests must pass (vacuously) there too.
+
+use std::sync::Mutex;
+
+use attention_round::trace::{self, Category, Kind};
+use attention_round::util::json;
+
+/// Global-tracer-state serialization: `cargo test` runs tests in
+/// parallel threads within this binary.
+static TRACER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // a previous test panicking while holding the lock must not
+    // cascade — the tracer state is re-reset by every test anyway
+    TRACER_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[test]
+fn disabled_tracer_records_nothing() {
+    let _g = lock();
+    trace::reset();
+    assert!(!trace::enabled());
+    let span = trace::span(Category::Pipeline, "invisible");
+    trace::instant(Category::Serve, "also-invisible");
+    trace::counter(Category::Serve, "depth", 3.0);
+    assert!(!span.is_armed());
+    drop(span);
+    for snap in trace::snapshot() {
+        assert!(
+            snap.events.is_empty(),
+            "disabled tracer buffered {} events on tid {}",
+            snap.events.len(),
+            snap.tid
+        );
+    }
+}
+
+#[test]
+fn spans_balance_per_thread_and_timestamps_are_monotonic() {
+    let _g = lock();
+    trace::reset();
+    if !trace::available() {
+        return;
+    }
+    trace::enable();
+    {
+        let _outer = trace::span(Category::Pipeline, "outer");
+        for i in 0..4 {
+            let _inner = trace::span(Category::Calib, format!("layer:{i}"));
+            trace::instant(Category::Serve, "tick");
+        }
+    }
+    std::thread::scope(|s| {
+        for t in 0..3 {
+            s.spawn(move || {
+                trace::set_thread_label(&format!("worker-{t}"));
+                let _span = trace::span(Category::Serve, "batch");
+                trace::counter(Category::Serve, "queue_depth", t as f64);
+            });
+        }
+    });
+    trace::disable();
+
+    let snapshots = trace::snapshot();
+    assert!(snapshots.iter().any(|s| !s.events.is_empty()));
+    let mut worker_lanes = 0usize;
+    for snap in &snapshots {
+        let mut depth = 0i64;
+        let mut last_ts = 0u64;
+        for ev in &snap.events {
+            assert!(
+                ev.ts_us >= last_ts,
+                "tid {}: ts went backwards ({} after {})",
+                snap.tid,
+                ev.ts_us,
+                last_ts
+            );
+            last_ts = ev.ts_us;
+            match ev.kind {
+                Kind::Begin => depth += 1,
+                Kind::End => {
+                    depth -= 1;
+                    assert!(depth >= 0, "tid {}: End before Begin", snap.tid);
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0, "tid {}: unbalanced B/E stream", snap.tid);
+        if snap.label.as_deref().is_some_and(|l| l.starts_with("worker-")) {
+            worker_lanes += 1;
+        }
+    }
+    assert_eq!(worker_lanes, 3, "every labeled worker thread gets a lane");
+}
+
+#[test]
+fn panic_unwind_closes_open_spans() {
+    let _g = lock();
+    trace::reset();
+    if !trace::available() {
+        return;
+    }
+    trace::enable();
+    // same thread all the way down: the span guard must emit its End
+    // during the unwind, exactly like a chaos-injected worker panic
+    let r = std::panic::catch_unwind(|| {
+        let _span = trace::span(Category::Serve, "doomed-batch");
+        trace::instant(Category::Chaos, "inject:panic@batch0");
+        panic!("injected");
+    });
+    assert!(r.is_err());
+    trace::disable();
+
+    let snapshots = trace::snapshot();
+    let snap = snapshots
+        .iter()
+        .find(|s| s.events.iter().any(|e| e.name.contains("doomed-batch")))
+        .expect("the panicking thread's lane");
+    let begins = snap
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, Kind::Begin))
+        .count();
+    let ends = snap
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, Kind::End))
+        .count();
+    assert_eq!(begins, ends, "unwind must balance the B/E stream");
+    assert!(snap
+        .events
+        .iter()
+        .any(|e| matches!(e.kind, Kind::Instant) && e.name.starts_with("inject:")));
+}
+
+#[test]
+fn mid_span_disable_still_closes_the_span() {
+    let _g = lock();
+    trace::reset();
+    if !trace::available() {
+        return;
+    }
+    trace::enable();
+    let span = trace::span(Category::Pipeline, "straddler");
+    trace::disable();
+    drop(span); // End must still be recorded — the Begin is in the ring
+    let snapshots = trace::snapshot();
+    let snap = snapshots
+        .iter()
+        .find(|s| s.events.iter().any(|e| e.name.contains("straddler")))
+        .expect("the straddling span's lane");
+    let opens = snap
+        .events
+        .iter()
+        .filter(|e| e.name.contains("straddler") && matches!(e.kind, Kind::Begin))
+        .count();
+    let closes = snap
+        .events
+        .iter()
+        .filter(|e| e.name.contains("straddler") && matches!(e.kind, Kind::End))
+        .count();
+    assert_eq!(opens, 1);
+    assert_eq!(closes, 1, "disable between B and E must not orphan the B");
+}
+
+#[test]
+fn chrome_export_roundtrips_with_thread_lanes() {
+    let _g = lock();
+    trace::reset();
+    if !trace::available() {
+        return;
+    }
+    trace::enable();
+    trace::set_thread_label("main");
+    {
+        let _span = trace::span(Category::Pack, "pack:model");
+        trace::instant(Category::Chaos, "inject:spike@batch3");
+        trace::counter(Category::Serve, "queue_depth", 7.0);
+    }
+    trace::disable();
+
+    let path = std::env::temp_dir().join(format!(
+        "trace_export_test_{}.json",
+        std::process::id()
+    ));
+    let count = trace::chrome::export(&path).expect("export");
+    assert!(count >= 4, "M + B + i + C + E at minimum, got {count}");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let j = json::parse(&text).expect("exported trace must be valid JSON");
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), count);
+    let mut saw_meta = false;
+    let mut saw_begin = false;
+    let mut saw_instant = false;
+    let mut saw_counter = false;
+    for ev in events {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        match ph {
+            "M" => {
+                assert_eq!(ev.get("name").unwrap().as_str().unwrap(), "thread_name");
+                saw_meta = true;
+            }
+            "B" | "E" => {
+                assert!(ev.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+                saw_begin = true;
+            }
+            "i" => saw_instant = true,
+            "C" => {
+                let v = ev
+                    .get("args")
+                    .unwrap()
+                    .get("value")
+                    .unwrap()
+                    .as_f64()
+                    .unwrap();
+                assert_eq!(v, 7.0);
+                saw_counter = true;
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert!(saw_meta && saw_begin && saw_instant && saw_counter);
+}
+
+#[test]
+fn reset_clears_buffers_and_disables() {
+    let _g = lock();
+    trace::reset();
+    if !trace::available() {
+        return;
+    }
+    trace::enable();
+    trace::instant(Category::Serve, "pre-reset");
+    trace::reset();
+    assert!(!trace::enabled());
+    for snap in trace::snapshot() {
+        assert!(snap.events.is_empty());
+        assert!(snap.label.is_none());
+    }
+}

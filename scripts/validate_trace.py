@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Structural validator for `repro --trace` Chrome trace-event exports.
+
+Checks the invariants the tracing subsystem promises (the same ones
+`rust/tests/trace.rs` pins in-process, re-verified here on a real
+end-to-end export):
+
+  * the file is well-formed JSON of the object form {"traceEvents": [...]};
+  * every event carries name/ph/pid/tid/ts, with ts a non-negative number;
+  * per tid, Begin/End events are balanced and timestamps are monotonic
+    non-decreasing;
+  * instant events carry the thread scope ("s": "t");
+  * counter events carry a numeric args.value;
+  * with --workers N: exactly N `worker-<i>` thread_name lanes exist
+    (the fleet labeled every supervised worker);
+  * with --expect-chaos: at least one chaos-category instant exists
+    (the injection actually fired and was recorded);
+  * with --expect-cats a,b,...: every listed category appears.
+
+Usage:
+    scripts/validate_trace.py TRACE.json [--workers N] [--expect-chaos]
+        [--expect-cats pipeline,calib,...] [--min-events N]
+"""
+
+import argparse
+import json
+import re
+import sys
+
+KNOWN_PHASES = {"B", "E", "i", "C", "M"}
+
+
+def fail(msg):
+    print(f"validate_trace: FAIL -- {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON written by --trace")
+    ap.add_argument(
+        "--workers",
+        type=int,
+        default=None,
+        help="assert exactly this many worker-<i> thread_name lanes",
+    )
+    ap.add_argument(
+        "--expect-chaos",
+        action="store_true",
+        help="assert at least one chaos-category instant event",
+    )
+    ap.add_argument(
+        "--expect-cats",
+        default=None,
+        help="comma-separated categories that must each appear at least once",
+    )
+    ap.add_argument(
+        "--min-events",
+        type=int,
+        default=1,
+        help="minimum total event count (default 1: a trace was recorded)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {args.trace}: {e}")
+
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail('top level must be an object with a "traceEvents" array')
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        fail('"traceEvents" must be an array')
+    if len(events) < args.min_events:
+        fail(f"only {len(events)} events, expected >= {args.min_events}")
+
+    depth = {}  # tid -> open span count
+    last_ts = {}  # tid -> last timestamp seen
+    lanes = {}  # tid -> thread_name
+    cats = set()
+    chaos_instants = 0
+
+    for idx, ev in enumerate(events):
+        where = f"event #{idx}"
+        if not isinstance(ev, dict):
+            fail(f"{where}: not an object")
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in ev:
+                fail(f"{where}: missing {key!r}")
+        ph = ev["ph"]
+        if ph not in KNOWN_PHASES:
+            fail(f"{where}: unknown phase {ph!r}")
+        tid = ev["tid"]
+
+        if ph == "M":
+            if ev["name"] != "thread_name":
+                fail(f"{where}: unexpected metadata {ev['name']!r}")
+            lanes[tid] = ev.get("args", {}).get("name", "")
+            continue
+
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(f"{where}: bad ts {ts!r}")
+        if ts < last_ts.get(tid, 0):
+            fail(f"{where}: tid {tid} ts went backwards ({ts} < {last_ts[tid]})")
+        last_ts[tid] = ts
+        cats.add(ev.get("cat", ""))
+
+        if ph == "B":
+            depth[tid] = depth.get(tid, 0) + 1
+        elif ph == "E":
+            depth[tid] = depth.get(tid, 0) - 1
+            if depth[tid] < 0:
+                fail(f"{where}: tid {tid} has End before Begin")
+        elif ph == "i":
+            if ev.get("s") != "t":
+                fail(f"{where}: instant without thread scope")
+            if ev.get("cat") == "chaos":
+                chaos_instants += 1
+        elif ph == "C":
+            value = ev.get("args", {}).get("value")
+            if not isinstance(value, (int, float)):
+                fail(f"{where}: counter without numeric args.value")
+
+    unbalanced = {tid: d for tid, d in depth.items() if d != 0}
+    if unbalanced:
+        fail(f"unbalanced Begin/End per tid: {unbalanced}")
+
+    if args.workers is not None:
+        worker_lanes = sorted(
+            name for name in lanes.values() if re.fullmatch(r"worker-\d+", name)
+        )
+        if len(worker_lanes) != args.workers:
+            fail(
+                f"expected {args.workers} worker lanes, found "
+                f"{len(worker_lanes)}: {worker_lanes}"
+            )
+
+    if args.expect_chaos and chaos_instants == 0:
+        fail("no chaos-category instants recorded (injection never traced)")
+
+    if args.expect_cats:
+        want = {c.strip() for c in args.expect_cats.split(",") if c.strip()}
+        missing = want - cats
+        if missing:
+            fail(f"categories never seen: {sorted(missing)} (saw {sorted(cats)})")
+
+    print(
+        f"validate_trace: OK -- {len(events)} events, {len(lanes)} named lanes, "
+        f"{chaos_instants} chaos instants, categories {sorted(c for c in cats if c)}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
