@@ -72,8 +72,12 @@ use crate::util::timer::Metrics;
 /// Seed for the synthetic feature weights (fixed: the model IS its seed).
 const SYNTH_WEIGHT_SEED: u64 = 0xBEEF;
 /// Seed + sample count for the closed-form head calibration.
-const PROTO_SEED: u64 = 0xFEED;
-const PROTO_SAMPLES: usize = 384;
+/// `pub(crate)`: the progressive server (`deploy::progressive`) builds
+/// its truncated-depth readout heads from the same prototype draw, so a
+/// partial-depth answer is the nearest-class-mean readout this backend
+/// would have calibrated at that depth.
+pub(crate) const PROTO_SEED: u64 = 0xFEED;
+pub(crate) const PROTO_SAMPLES: usize = 384;
 
 pub struct HostBackend {
     pool: &'static ThreadPool,
@@ -107,8 +111,10 @@ fn is_linear(kind: &str) -> bool {
     matches!(kind, "linear" | "fc" | "dense")
 }
 
-/// Global average pool NHWC -> NC.
-fn avg_pool(x: &Tensor) -> Result<Tensor> {
+/// Global average pool NHWC -> NC. `pub(crate)`: the progressive
+/// server pools truncated-depth features exactly like the head
+/// calibration does.
+pub(crate) fn avg_pool(x: &Tensor) -> Result<Tensor> {
     let sh = x.shape();
     if sh.len() != 4 {
         return Err(Error::shape(format!("avg_pool wants 4-D, got {sh:?}")));
@@ -179,7 +185,14 @@ fn mat_transposed_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
 /// (property-tested in rust/tests/fused_kernel.rs).
 pub(crate) enum HostWeights<'w> {
     Dense(&'w [f32]),
-    Packed { bytes: &'w [u8], bits: u8, scale: f32 },
+    Packed {
+        bytes: &'w [u8],
+        bits: u8,
+        scale: f32,
+        /// Per-output-channel scales (last axis) for per-channel-
+        /// quantized layers; `None` applies `scale` uniformly.
+        scales: Option<&'w [f32]>,
+    },
 }
 
 /// Everything one layer application produces under the host execution
@@ -258,8 +271,20 @@ pub(crate) fn layer_pass<'x>(
             let wm = Mat::from_rows_f32(n, m, w_data)?;
             xm.matmul_with(pool, &wm)?.data
         }
-        HostWeights::Packed { bytes, bits, scale } => {
-            let pw = fused::PackedWeight { bytes, bits, scale, n, m };
+        HostWeights::Packed {
+            bytes,
+            bits,
+            scale,
+            scales,
+        } => {
+            let pw = fused::PackedWeight {
+                bytes,
+                bits,
+                scale,
+                scales,
+                n,
+                m,
+            };
             let mut z = Vec::new();
             fused::matmul_packed_with(pool, a.as_ref(), rows, &pw, &mut z)?;
             z
@@ -919,6 +944,13 @@ impl Backend for HostBackend {
         Ok(Box::new(crate::deploy::dequant::PackedHostForward::new(
             model, artifact,
         )?))
+    }
+
+    fn supports_progressive(&self) -> bool {
+        // deploy::progressive executes through this backend's
+        // layer_pass, so partial- and full-depth forwards are
+        // bit-identical to the packed host path.
+        true
     }
 
     fn prepare_layer<'a>(

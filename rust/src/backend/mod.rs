@@ -140,6 +140,16 @@ pub trait PreparedModel: Send + Sync {
     /// Every quantizable layer's input tensor plus the logits for one
     /// batch — the capture phase's unit of work.
     fn collect(&self, x: &Tensor) -> Result<(Vec<Tensor>, Tensor)>;
+
+    /// How many layers of the model are currently resident and
+    /// servable. `None` (the default) means the handle is fully
+    /// materialized and depth never changes; progressive handles
+    /// (`deploy::progressive::ProgressiveHandle`) report the live
+    /// resident prefix so serve workers can tag answers and metrics
+    /// with `depth_served`.
+    fn resident_depth(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// One layer's pre-activation map `y = layer(x, w)` staged for repeated
@@ -192,6 +202,15 @@ pub trait Backend: Send + Sync {
     /// manifest's npy checkpoints; the host backend additionally
     /// constructs synthetic models (empty `w_files`) in memory.
     fn load_model(&self, manifest: &Manifest, name: &str) -> Result<LoadedModel>;
+
+    /// Whether this backend can serve a chunked (v3) artifact
+    /// progressively — answering truncated-depth forwards while chunks
+    /// stream in (`deploy::progressive`). Defaults to `false`;
+    /// only backends whose layer execution path the progressive model
+    /// reuses bit-for-bit should claim support.
+    fn supports_progressive(&self) -> bool {
+        false
+    }
 
     /// Map a requested serve-fleet size onto this backend's resources.
     /// The default is the conservative single-worker topology; backends

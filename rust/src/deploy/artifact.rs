@@ -22,6 +22,33 @@
 //! f32 encoding for any layer where it does not hold, so `save ∘ load`
 //! is lossless for every input, packed or not.
 //!
+//! ## v3 (chunked, written by [`PackedModel::save_chunked`])
+//!
+//! ```text
+//! <dir>/qmodel.json    header: format_version 3, same per-layer
+//!                      metadata as v2 plus per-layer payload_bytes +
+//!                      checksum (every layer, both encodings)
+//! <dir>/qmodel.qpak    every layer payload concatenated in layer order
+//!                      (packed bitstreams verbatim; f32 fallback layers
+//!                      as raw little-endian f32), mmap-friendly
+//! <dir>/manifest.json  contiguous layer-range chunks over the .qpak
+//!                      with per-chunk byte extents + FNV checksums and
+//!                      min_runnable_depth (deploy::manifest)
+//! ```
+//!
+//! v3 exists for progressive serving ([`crate::deploy::progressive`]):
+//! a server can verify and swap in chunk prefixes instead of waiting
+//! for the whole model. [`PackedModel::load`] eager-loads v3 dirs like
+//! any other version, so `evaluate`/non-progressive `serve` work
+//! unchanged. Per-layer values are bit-identical across v2 and v3 —
+//! only the container differs.
+//!
+//! Layers may carry **per-channel scales** (`scales` array +
+//! `scale_axis`, always the last axis): element `i` of a layer with `m`
+//! output channels dequantizes with `scales[i % m]` instead of the
+//! per-tensor `scale`. `quant::perchannel` computes such grids;
+//! [`PackedModel::from_per_channel`] packs them.
+//!
 //! ## v1 (read-compatible)
 //!
 //! The original `coordinator::state` format: the same header keys at
@@ -39,10 +66,11 @@
 //! width mask on unpack) — all as typed [`Error::Parse`] values instead
 //! of a model that NaNs at forward time.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::coordinator::pipeline::Outcome;
 use crate::deploy::bitpack;
+use crate::deploy::manifest::{ArtifactManifest, ChunkEntry, QPAK_FILE};
 use crate::io::npy;
 use crate::quant::observer::ActQuantParams;
 use crate::quant::round_half_even;
@@ -51,8 +79,11 @@ use crate::util::error::{Error, Result};
 use crate::util::json::{self, Json};
 use crate::util::threadpool;
 
-/// Current written format version.
+/// Current written format version (single-file-per-layer layout).
 pub const FORMAT_VERSION: u32 = 2;
+
+/// Format version of the chunked layout ([`PackedModel::save_chunked`]).
+pub const CHUNKED_FORMAT_VERSION: u32 = 3;
 
 /// Integer grid floor for a signed symmetric `bits`-wide grid.
 fn grid_lo(bits: u8) -> i64 {
@@ -99,6 +130,11 @@ pub struct PackedLayer {
     /// Coding-length provenance from `mixed::allocate` (Eq. 12), when
     /// the pack ran under the paper's mixed-precision allocation.
     pub coding_length: Option<f64>,
+    /// Per-output-channel scales over the **last** shape axis: element
+    /// `i` dequantizes with `scales[i % channels]`. When present, the
+    /// per-tensor `scale` is provenance only (it holds `scales[0]`) —
+    /// every dequant path indexes `scales`.
+    pub scales: Option<Vec<f32>>,
 }
 
 impl PackedLayer {
@@ -116,8 +152,10 @@ impl PackedLayer {
 }
 
 /// In-memory layer payload (codes stay packed until dequantization).
+/// `pub(crate)` so the progressive chunk loader can hold decoded
+/// payloads without re-verifying them.
 #[derive(Debug, Clone)]
-enum Payload {
+pub(crate) enum Payload {
     Packed(Vec<u8>),
     F32(Tensor),
 }
@@ -127,7 +165,15 @@ enum Payload {
 /// resident f32 tensor of a lossless-fallback layer.
 #[derive(Debug, Clone, Copy)]
 pub enum LayerView<'a> {
-    Packed { bytes: &'a [u8], bits: u8, scale: f32 },
+    Packed {
+        bytes: &'a [u8],
+        bits: u8,
+        scale: f32,
+        /// Per-output-channel scales (last axis) when the layer was
+        /// quantized per channel; `None` means `scale` applies to every
+        /// element.
+        scales: Option<&'a [f32]>,
+    },
     F32(&'a Tensor),
 }
 
@@ -222,6 +268,7 @@ impl PackedModel {
                 encoding,
                 file,
                 coding_length: coding_lengths.map(|cl| cl[li]),
+                scales: None,
             });
             payloads.push(payload);
         }
@@ -234,6 +281,74 @@ impl PackedModel {
             layers,
             act_params: outcome.act_params.clone(),
             act_bits: outcome.act_bits.clone(),
+            payloads,
+        })
+    }
+
+    /// Build a packed artifact from per-channel-quantized layers (the
+    /// `quant::perchannel` path). Each entry is
+    /// `(name, bits, per-channel scales, quantized weights)`; element
+    /// `i` belongs to output channel `i % channels` (channels = last
+    /// shape axis) and must sit exactly on that channel's grid
+    /// `scales[c] · q`. No f32 fallback: per-channel scales exist
+    /// precisely to keep the packed encoding exact, so off-grid input
+    /// is an error rather than a silent storage downgrade.
+    pub fn from_per_channel(
+        model: &str,
+        method: &str,
+        acc: f64,
+        fp_acc: f64,
+        per_layer: Vec<(String, u8, Vec<f32>, Tensor)>,
+    ) -> Result<PackedModel> {
+        let pool = threadpool::global();
+        let mut layers = Vec::with_capacity(per_layer.len());
+        let mut payloads = Vec::with_capacity(per_layer.len());
+        for (li, (name, bits, scales, qw)) in per_layer.into_iter().enumerate() {
+            let channels = qw.shape().last().copied().unwrap_or(0);
+            if scales.is_empty() || scales.len() != channels {
+                return Err(Error::shape(format!(
+                    "{name}: {} per-channel scales for {channels} output channels",
+                    scales.len()
+                )));
+            }
+            for &s in &scales {
+                if !(s.is_finite() && s > 0.0) {
+                    return Err(Error::invariant(format!(
+                        "{name}: per-channel scale {s} must be finite and positive"
+                    )));
+                }
+            }
+            let codes = encode_codes_per_channel(qw.data(), &scales, bits)
+                .ok_or_else(|| {
+                    Error::invariant(format!(
+                        "{name}: weights are not exactly on the per-channel \
+                         {bits}-bit grid"
+                    ))
+                })?;
+            let mut packed = vec![0u8; bitpack::packed_len(codes.len(), bits)];
+            bitpack::pack_into_with(pool, &codes, bits, &mut packed)?;
+            let file = format!("{li:02}_{}.qbin", name.replace('.', "_"));
+            layers.push(PackedLayer {
+                name,
+                bits,
+                scale: scales[0],
+                shape: qw.shape().to_vec(),
+                encoding: Encoding::Packed,
+                file,
+                coding_length: None,
+                scales: Some(scales),
+            });
+            payloads.push(Payload::Packed(packed));
+        }
+        Ok(PackedModel {
+            format_version: FORMAT_VERSION,
+            model: model.to_string(),
+            method: method.to_string(),
+            acc,
+            fp_acc,
+            layers,
+            act_params: None,
+            act_bits: None,
             payloads,
         })
     }
@@ -258,9 +373,24 @@ impl PackedModel {
                 codes.resize(n, 0);
                 bitpack::unpack_into(bytes, l.bits, codes)?;
                 out.resize(n, 0.0);
-                let (s, lo) = (l.scale, grid_lo(l.bits));
-                for (o, &c) in out.iter_mut().zip(codes.iter()) {
-                    *o = s * ((c as i64 + lo) as f32);
+                let lo = grid_lo(l.bits);
+                match &l.scales {
+                    Some(ss) => {
+                        // per-channel: element i belongs to output
+                        // channel i % channels (last axis)
+                        let m = ss.len();
+                        for (i, (o, &c)) in
+                            out.iter_mut().zip(codes.iter()).enumerate()
+                        {
+                            *o = ss[i % m] * ((c as i64 + lo) as f32);
+                        }
+                    }
+                    None => {
+                        let s = l.scale;
+                        for (o, &c) in out.iter_mut().zip(codes.iter()) {
+                            *o = s * ((c as i64 + lo) as f32);
+                        }
+                    }
                 }
             }
             Payload::F32(t) => {
@@ -285,6 +415,7 @@ impl PackedModel {
                 bytes,
                 bits: l.bits,
                 scale: l.scale,
+                scales: l.scales.as_deref(),
             },
             Payload::F32(t) => LayerView::F32(t),
         })
@@ -435,6 +566,16 @@ impl PackedModel {
             if let Some(cl) = l.coding_length {
                 fields.push(("coding_length", Json::num(cl)));
             }
+            if let Some(ss) = &l.scales {
+                fields.push((
+                    "scales",
+                    Json::arr(ss.iter().map(|&s| Json::num(s as f64)).collect()),
+                ));
+                fields.push((
+                    "scale_axis",
+                    Json::num((l.shape.len().max(1) - 1) as f64),
+                ));
+            }
             layer_json.push(Json::obj(fields));
         }
         let mut fields = vec![
@@ -470,7 +611,141 @@ impl PackedModel {
         Ok(())
     }
 
-    /// Load an artifact directory — v2 packed or a legacy v1 f32 dir.
+    /// Write the artifact as a **v3 chunked directory**: one
+    /// `qmodel.qpak` holding every layer payload back-to-back (layer
+    /// order), a `manifest.json` splitting the layers into `n_chunks`
+    /// contiguous balanced ranges, and a v3 `qmodel.json` header
+    /// carrying per-layer `payload_bytes` + checksums (the intra-chunk
+    /// offset table). `min_runnable_depth` counts chunks — the shortest
+    /// verified prefix a progressive server may answer from.
+    pub fn save_chunked(
+        &self,
+        dir: &Path,
+        n_chunks: usize,
+        min_runnable_depth: usize,
+    ) -> Result<ArtifactManifest> {
+        std::fs::create_dir_all(dir)?;
+        let ranges = ArtifactManifest::plan_chunks(self.layers.len(), n_chunks)?;
+
+        // Concatenate every layer payload; record per-layer extents.
+        let mut qpak: Vec<u8> = Vec::new();
+        let mut lens = Vec::with_capacity(self.payloads.len());
+        let mut sums = Vec::with_capacity(self.payloads.len());
+        for (l, p) in self.layers.iter().zip(&self.payloads) {
+            let start = qpak.len();
+            match p {
+                Payload::Packed(bytes) => qpak.extend_from_slice(bytes),
+                Payload::F32(t) => {
+                    for v in t.data() {
+                        qpak.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            let len = qpak.len() - start;
+            if len != l.payload_bytes() {
+                return Err(Error::invariant(format!(
+                    "{}: payload is {len} bytes but the header computes {}",
+                    l.name,
+                    l.payload_bytes()
+                )));
+            }
+            lens.push(len);
+            sums.push(format!("{:016x}", fnv1a64(&qpak[start..])));
+        }
+
+        // Chunk table over the concatenated payloads.
+        let mut chunks = Vec::with_capacity(ranges.len());
+        let mut off = 0usize;
+        for (id, &(s, e)) in ranges.iter().enumerate() {
+            let bytes: usize = lens[s..e].iter().sum();
+            chunks.push(ChunkEntry {
+                id,
+                layer_start: s,
+                layer_end: e,
+                bytes: bytes as u64,
+                checksum: format!("{:016x}", fnv1a64(&qpak[off..off + bytes])),
+            });
+            off += bytes;
+        }
+        let manifest = ArtifactManifest {
+            chunks,
+            min_runnable_depth,
+        };
+        manifest.validate(self.layers.len())?;
+
+        let mut layer_json = Vec::with_capacity(self.layers.len());
+        for (li, l) in self.layers.iter().enumerate() {
+            let mut fields = vec![
+                ("name", Json::str(l.name.clone())),
+                ("bits", Json::num(l.bits as f64)),
+                ("scale", Json::num(l.scale as f64)),
+                (
+                    "shape",
+                    Json::arr(l.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+                ("encoding", Json::str(l.encoding.name())),
+                ("file", Json::str(QPAK_FILE)),
+                ("payload_bytes", Json::num(lens[li] as f64)),
+                ("checksum", Json::str(sums[li].clone())),
+            ];
+            if let Some(cl) = l.coding_length {
+                fields.push(("coding_length", Json::num(cl)));
+            }
+            if let Some(ss) = &l.scales {
+                fields.push((
+                    "scales",
+                    Json::arr(ss.iter().map(|&s| Json::num(s as f64)).collect()),
+                ));
+                fields.push((
+                    "scale_axis",
+                    Json::num((l.shape.len().max(1) - 1) as f64),
+                ));
+            }
+            layer_json.push(Json::obj(fields));
+        }
+        let mut fields = vec![
+            (
+                "format_version",
+                Json::num(CHUNKED_FORMAT_VERSION as f64),
+            ),
+            ("model", Json::str(self.model.clone())),
+            ("method", Json::str(self.method.clone())),
+            ("acc", Json::num(self.acc)),
+            ("fp_acc", Json::num(self.fp_acc)),
+            ("layers", Json::arr(layer_json)),
+        ];
+        if let Some(ap) = &self.act_params {
+            let aps = ap
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("scale", Json::num(p.scale as f64)),
+                        ("zero", Json::num(p.zero as f64)),
+                    ])
+                })
+                .collect();
+            fields.push(("act_params", Json::arr(aps)));
+        }
+        if let Some(ab) = &self.act_bits {
+            fields.push((
+                "act_bits",
+                Json::arr(ab.iter().map(|&b| Json::num(b as f64)).collect()),
+            ));
+        }
+        std::fs::write(dir.join(QPAK_FILE), &qpak)?;
+        manifest.save(dir)?;
+        std::fs::write(
+            dir.join("qmodel.json"),
+            Json::obj(fields).to_string_pretty(),
+        )?;
+        Ok(manifest)
+    }
+
+    /// Load an artifact directory — v3 chunked, v2 packed, or a legacy
+    /// v1 f32 dir. v3 payloads are eager-loaded here (evaluate and
+    /// non-progressive serve behave exactly as on a v2 dir); the
+    /// progressive server uses [`load_v3_meta`] instead to defer chunk
+    /// reads.
     pub fn load(dir: &Path) -> Result<PackedModel> {
         let j = json::parse_file(&dir.join("qmodel.json"))?;
         let version = j
@@ -481,8 +756,9 @@ impl PackedModel {
         match version {
             1 => load_v1(&j, dir),
             2 => load_v2(&j, dir),
+            3 => load_v3(&j, dir),
             other => Err(Error::parse(format!(
-                "qmodel.json: unsupported format_version {other} (this build reads 1..=2)"
+                "qmodel.json: unsupported format_version {other} (this build reads 1..=3)"
             ))),
         }
     }
@@ -526,6 +802,42 @@ fn encode_codes(qw: &[f32], scale: f32, bits: u8) -> Option<Vec<u32>> {
     Some(codes)
 }
 
+/// Per-channel variant of [`encode_codes`]: element `i` is gated
+/// against its own channel grid `scales[i % channels] · q`. Same
+/// exactness contract — `None` means some element does not reproduce
+/// bit-for-bit.
+fn encode_codes_per_channel(qw: &[f32], scales: &[f32], bits: u8) -> Option<Vec<u32>> {
+    if !(bitpack::MIN_BITS..=bitpack::MAX_BITS).contains(&bits) {
+        return None;
+    }
+    if scales.is_empty()
+        || qw.len() % scales.len() != 0
+        || scales.iter().any(|s| !(s.is_finite() && *s > 0.0))
+    {
+        return None;
+    }
+    let lo = grid_lo(bits);
+    let hi = -lo - 1;
+    let m = scales.len();
+    let mut codes = Vec::with_capacity(qw.len());
+    for (i, &v) in qw.iter().enumerate() {
+        let s = scales[i % m];
+        let q = round_half_even(v / s);
+        if !q.is_finite() {
+            return None;
+        }
+        let qi = q as i64;
+        if qi < lo || qi > hi {
+            return None;
+        }
+        if s * (qi as f32) != v {
+            return None;
+        }
+        codes.push((qi - lo) as u32);
+    }
+    Some(codes)
+}
+
 fn parse_scale(v: &Json, name: &str) -> Result<f32> {
     let s = v.as_f64()? as f32;
     if !(s.is_finite() && s > 0.0) {
@@ -534,6 +846,39 @@ fn parse_scale(v: &Json, name: &str) -> Result<f32> {
         )));
     }
     Ok(s)
+}
+
+/// Parse the optional per-channel `scales` + `scale_axis` pair of a
+/// layer record. The axis must be the last shape axis and the array
+/// length must equal that axis — per-channel means per output channel.
+fn parse_layer_scales(
+    l: &Json,
+    name: &str,
+    shape: &[usize],
+) -> Result<Option<Vec<f32>>> {
+    let Some(v) = l.opt("scales") else {
+        return Ok(None);
+    };
+    let axis = l.get("scale_axis")?.as_usize()?;
+    if axis + 1 != shape.len().max(1) {
+        return Err(Error::parse(format!(
+            "qmodel.json: layer {name}: scale_axis {axis} must be the last \
+             axis of shape {shape:?}"
+        )));
+    }
+    let channels = shape.last().copied().unwrap_or(0);
+    let arr = v.as_arr()?;
+    if arr.len() != channels {
+        return Err(Error::parse(format!(
+            "qmodel.json: layer {name}: {} scales for {channels} output channels",
+            arr.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(arr.len());
+    for s in arr {
+        out.push(parse_scale(s, name)?);
+    }
+    Ok(Some(out))
 }
 
 fn parse_bits(v: &Json, name: &str) -> Result<u8> {
@@ -636,6 +981,7 @@ fn load_v1(j: &Json, dir: &Path) -> Result<PackedModel> {
             encoding: Encoding::F32,
             file: f.clone(),
             coding_length: None,
+            scales: None,
         });
         payloads.push(Payload::F32(t));
     }
@@ -719,6 +1065,7 @@ fn load_v2(j: &Json, dir: &Path) -> Result<PackedModel> {
                 )))
             }
         };
+        let scales = parse_layer_scales(l, &name, &shape)?;
         layers.push(PackedLayer {
             name,
             bits,
@@ -730,6 +1077,7 @@ fn load_v2(j: &Json, dir: &Path) -> Result<PackedModel> {
                 .opt("coding_length")
                 .map(|v| v.as_f64())
                 .transpose()?,
+            scales,
         });
         payloads.push(payload);
     }
@@ -743,6 +1091,237 @@ fn load_v2(j: &Json, dir: &Path) -> Result<PackedModel> {
         layers,
         act_params,
         act_bits,
+        payloads,
+    })
+}
+
+/// Everything a v3 chunked artifact declares *without* its payload
+/// bytes: the parsed header layers, the validated chunk manifest, the
+/// per-layer extents inside `qmodel.qpak`, and the `.qpak` path itself.
+/// The progressive server ([`crate::deploy::progressive`]) opens this
+/// first, starts serving, and reads chunk extents as they verify.
+#[derive(Debug)]
+pub struct ChunkedMeta {
+    pub model: String,
+    pub method: String,
+    pub acc: f64,
+    pub fp_acc: f64,
+    pub layers: Vec<PackedLayer>,
+    pub act_params: Option<Vec<ActQuantParams>>,
+    pub act_bits: Option<Vec<u8>>,
+    /// Per-layer payload byte counts (layer order; the intra-chunk
+    /// offset table).
+    pub payload_lens: Vec<usize>,
+    /// Per-layer declared FNV-1a-64 hex checksums.
+    pub layer_checksums: Vec<String>,
+    pub manifest: ArtifactManifest,
+    /// Absolute path of the concatenated payload file.
+    pub qpak: PathBuf,
+}
+
+impl ChunkedMeta {
+    /// Byte offset of layer `li`'s payload inside `qmodel.qpak`.
+    pub fn layer_offset(&self, li: usize) -> u64 {
+        self.payload_lens[..li].iter().map(|&n| n as u64).sum()
+    }
+
+    /// The activation-quant deployment config, resolved exactly like
+    /// [`PackedModel::deployment_actq`] (v3 headers always carry
+    /// `act_bits` alongside `act_params`, so no v1 fallback applies).
+    pub fn deployment_actq(&self) -> Result<Option<(Vec<ActQuantParams>, Vec<u8>)>> {
+        match (&self.act_params, &self.act_bits) {
+            (Some(p), Some(b)) => Ok(Some((p.clone(), b.clone()))),
+            (Some(_), None) => Err(Error::parse(format!(
+                "artifact {}: v3 header has act_params but no act_bits",
+                self.model
+            ))),
+            _ => Ok(None),
+        }
+    }
+}
+
+/// Open a v3 chunked artifact's metadata without reading any payloads.
+pub fn load_v3_meta(dir: &Path) -> Result<ChunkedMeta> {
+    let j = json::parse_file(&dir.join("qmodel.json"))?;
+    let version = j
+        .opt("format_version")
+        .map(|v| v.as_usize())
+        .transpose()?
+        .unwrap_or(1);
+    if version != CHUNKED_FORMAT_VERSION as usize {
+        return Err(Error::parse(format!(
+            "qmodel.json: progressive serving needs a chunked v3 artifact, \
+             found format_version {version} (re-pack with `pack --chunks N`)"
+        )));
+    }
+    parse_v3_header(&j, dir)
+}
+
+fn parse_v3_header(j: &Json, dir: &Path) -> Result<ChunkedMeta> {
+    let layers_j = j.get("layers")?.as_arr()?;
+    let mut layers = Vec::with_capacity(layers_j.len());
+    let mut payload_lens = Vec::with_capacity(layers_j.len());
+    let mut layer_checksums = Vec::with_capacity(layers_j.len());
+    for l in layers_j {
+        let name = l.get("name")?.as_str()?.to_string();
+        let bits = parse_bits(l.get("bits")?, &name)?;
+        let scale = parse_scale(l.get("scale")?, &name)?;
+        let shape = l.get("shape")?.usize_vec()?;
+        let encoding = match l.get("encoding")?.as_str()? {
+            "qpack" => {
+                if !(bitpack::MIN_BITS..=bitpack::MAX_BITS).contains(&bits) {
+                    return Err(Error::parse(format!(
+                        "qmodel.json: layer {name}: packed width {bits} out of \
+                         range {}..={}",
+                        bitpack::MIN_BITS,
+                        bitpack::MAX_BITS
+                    )));
+                }
+                Encoding::Packed
+            }
+            "f32" => Encoding::F32,
+            other => {
+                return Err(Error::parse(format!(
+                    "qmodel.json: layer {name}: unknown encoding {other:?}"
+                )))
+            }
+        };
+        let scales = parse_layer_scales(l, &name, &shape)?;
+        let layer = PackedLayer {
+            name: name.clone(),
+            bits,
+            scale,
+            shape,
+            encoding,
+            file: QPAK_FILE.to_string(),
+            coding_length: l
+                .opt("coding_length")
+                .map(|v| v.as_f64())
+                .transpose()?,
+            scales,
+        };
+        let declared = l.get("payload_bytes")?.as_usize()?;
+        let want = layer.payload_bytes();
+        if declared != want {
+            return Err(Error::parse(format!(
+                "qmodel.json: layer {name}: payload_bytes {declared} but the \
+                 shape at this encoding needs {want}"
+            )));
+        }
+        payload_lens.push(declared);
+        layer_checksums.push(l.get("checksum")?.as_str()?.to_string());
+        layers.push(layer);
+    }
+    let (act_params, act_bits) = parse_act_config(j, layers.len())?;
+    let manifest = ArtifactManifest::load(dir)?;
+    manifest.validate(layers.len())?;
+    for c in &manifest.chunks {
+        let want: u64 = payload_lens[c.layer_start..c.layer_end]
+            .iter()
+            .map(|&n| n as u64)
+            .sum();
+        if c.bytes != want {
+            return Err(Error::parse(format!(
+                "manifest.json: chunk {}: {} bytes but layers {}..{} occupy {want}",
+                c.id, c.bytes, c.layer_start, c.layer_end
+            )));
+        }
+    }
+    Ok(ChunkedMeta {
+        model: j.get("model")?.as_str()?.to_string(),
+        method: j.get("method")?.as_str()?.to_string(),
+        acc: j.get("acc")?.as_f64()?,
+        fp_acc: j.get("fp_acc")?.as_f64()?,
+        layers,
+        act_params,
+        act_bits,
+        payload_lens,
+        layer_checksums,
+        manifest,
+        qpak: dir.join(QPAK_FILE),
+    })
+}
+
+/// Decode one layer payload slice from a v3 `.qpak` extent: checksum,
+/// padding, and shape verification included. Shared by the eager v3
+/// loader and the progressive chunk loader so a chunk that verifies is
+/// a chunk that serves.
+pub(crate) fn decode_v3_payload(
+    meta: &ChunkedMeta,
+    li: usize,
+    bytes: &[u8],
+) -> Result<Payload> {
+    let l = &meta.layers[li];
+    let n = l.params();
+    if bytes.len() != meta.payload_lens[li] {
+        return Err(Error::parse(format!(
+            "qmodel.qpak: layer {}: {} bytes sliced, header says {}",
+            l.name,
+            bytes.len(),
+            meta.payload_lens[li]
+        )));
+    }
+    let sum = format!("{:016x}", fnv1a64(bytes));
+    if sum != meta.layer_checksums[li] {
+        return Err(Error::parse(format!(
+            "qmodel.qpak: layer {}: checksum mismatch ({sum} vs header {})",
+            l.name, meta.layer_checksums[li]
+        )));
+    }
+    Ok(match l.encoding {
+        Encoding::Packed => {
+            bitpack::validate_padding(bytes, n, l.bits)
+                .map_err(|e| Error::parse(format!("qmodel.qpak: layer {}: {e}", l.name)))?;
+            Payload::Packed(bytes.to_vec())
+        }
+        Encoding::F32 => {
+            let mut vals = Vec::with_capacity(n);
+            for c in bytes.chunks_exact(4) {
+                vals.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            Payload::F32(Tensor::new(l.shape.clone(), vals)?)
+        }
+    })
+}
+
+fn load_v3(j: &Json, dir: &Path) -> Result<PackedModel> {
+    let meta = parse_v3_header(j, dir)?;
+    let data = std::fs::read(&meta.qpak)
+        .map_err(|e| Error::parse(format!("reading {}: {e}", meta.qpak.display())))?;
+    if data.len() as u64 != meta.manifest.total_bytes() {
+        return Err(Error::parse(format!(
+            "qmodel.qpak: {} bytes on disk, manifest says {} (truncated?)",
+            data.len(),
+            meta.manifest.total_bytes()
+        )));
+    }
+    for (k, c) in meta.manifest.chunks.iter().enumerate() {
+        let off = meta.manifest.chunk_offset(k) as usize;
+        let slice = &data[off..off + c.bytes as usize];
+        let sum = format!("{:016x}", fnv1a64(slice));
+        if sum != c.checksum {
+            return Err(Error::parse(format!(
+                "qmodel.qpak: chunk {}: checksum mismatch ({sum} vs manifest {})",
+                c.id, c.checksum
+            )));
+        }
+    }
+    let mut payloads = Vec::with_capacity(meta.layers.len());
+    let mut off = 0usize;
+    for li in 0..meta.layers.len() {
+        let len = meta.payload_lens[li];
+        payloads.push(decode_v3_payload(&meta, li, &data[off..off + len])?);
+        off += len;
+    }
+    Ok(PackedModel {
+        format_version: 3,
+        model: meta.model,
+        method: meta.method,
+        acc: meta.acc,
+        fp_acc: meta.fp_acc,
+        layers: meta.layers,
+        act_params: meta.act_params,
+        act_bits: meta.act_bits,
         payloads,
     })
 }
@@ -893,11 +1472,153 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(
             dir.join("qmodel.json"),
-            r#"{"format_version": 3, "model": "m", "method": "x", "acc": 0,
+            r#"{"format_version": 4, "model": "m", "method": "x", "acc": 0,
                 "fp_acc": 0, "layers": []}"#,
         )
         .unwrap();
         assert!(PackedModel::load(&dir).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn chunked_roundtrip_is_lossless_including_f32_fallback() {
+        let mut out = grid_outcome();
+        // one off-grid layer so the qpak carries both encodings
+        out.qweights[0] = Tensor::new(vec![24, 8], vec![0.0137; 24 * 8]).unwrap();
+        let art = PackedModel::from_outcome(&out, Some(&[12.5, 3.25])).unwrap();
+        assert_eq!(art.layers[0].encoding, Encoding::F32);
+        assert_eq!(art.layers[1].encoding, Encoding::Packed);
+        let dir = tmpdir("chunked");
+        let m = art.save_chunked(&dir, 2, 1).unwrap();
+        assert_eq!(m.chunks.len(), 2);
+        assert_eq!(m.full_depth(), 2);
+        assert!(dir.join(QPAK_FILE).is_file());
+        let back = PackedModel::load(&dir).unwrap();
+        assert_eq!(back.format_version, 3);
+        assert_eq!(back.layers[0].coding_length, Some(12.5));
+        assert_eq!(back.act_bits.as_deref(), Some(&[8u8, 4][..]));
+        for li in 0..2 {
+            assert_eq!(
+                back.dequantize(li).unwrap(),
+                out.qweights[li],
+                "layer {li} must round-trip exactly through the chunked layout"
+            );
+        }
+        // meta-only open agrees with the manifest
+        let meta = load_v3_meta(&dir).unwrap();
+        assert_eq!(meta.manifest, m);
+        assert_eq!(meta.layer_offset(1) as usize, meta.payload_lens[0]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn chunked_loader_rejects_truncation_corruption_and_bad_depth() {
+        let out = grid_outcome();
+        let art = PackedModel::from_outcome(&out, None).unwrap();
+        let dir = tmpdir("chunked_reject");
+        art.save_chunked(&dir, 2, 2).unwrap();
+        let qpak = dir.join(QPAK_FILE);
+        let orig = std::fs::read(&qpak).unwrap();
+        // truncated .qpak
+        std::fs::write(&qpak, &orig[..orig.len() - 1]).unwrap();
+        let e = PackedModel::load(&dir).unwrap_err().to_string();
+        assert!(e.contains("truncated"), "{e}");
+        // corrupted chunk byte -> chunk checksum mismatch
+        let mut bad = orig.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&qpak, &bad).unwrap();
+        let e = PackedModel::load(&dir).unwrap_err().to_string();
+        assert!(e.contains("checksum mismatch"), "{e}");
+        std::fs::write(&qpak, &orig).unwrap();
+        assert!(PackedModel::load(&dir).is_ok());
+        // zero min_runnable_depth in the manifest
+        let mf = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mf).unwrap();
+        std::fs::write(
+            &mf,
+            text.replace("\"min_runnable_depth\": 2", "\"min_runnable_depth\": 0"),
+        )
+        .unwrap();
+        let e = PackedModel::load(&dir).unwrap_err().to_string();
+        assert!(e.contains("min_runnable_depth must be > 0"), "{e}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_chunked_rejects_over_depth_min_runnable() {
+        let art = PackedModel::from_outcome(&grid_outcome(), None).unwrap();
+        let dir = tmpdir("chunked_depth");
+        let e = art.save_chunked(&dir, 2, 3).unwrap_err().to_string();
+        assert!(e.contains("exceeds"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn per_channel_roundtrip_is_lossless_v2_and_v3() {
+        // channel c of a [6, 4] layer uses scale ss[c]; every element
+        // sits exactly on its channel grid
+        let ss = vec![0.25f32, 0.5, 0.125, 1.0];
+        let mut w = Vec::with_capacity(6 * 4);
+        for i in 0..6 * 4 {
+            let q = (i as i64 % 15) - 7; // in the signed 4-bit range
+            w.push(ss[i % 4] * q as f32);
+        }
+        let t = Tensor::new(vec![6, 4], w).unwrap();
+        let art = PackedModel::from_per_channel(
+            "pc",
+            "perchannel",
+            0.5,
+            0.9,
+            vec![("fc".to_string(), 4, ss.clone(), t.clone())],
+        )
+        .unwrap();
+        assert_eq!(art.layers[0].encoding, Encoding::Packed);
+        assert_eq!(art.layers[0].scales.as_deref(), Some(&ss[..]));
+
+        let dir = tmpdir("per_channel_v2");
+        art.save(&dir).unwrap();
+        let hdr = std::fs::read_to_string(dir.join("qmodel.json")).unwrap();
+        assert!(hdr.contains("\"scales\""), "{hdr}");
+        assert!(hdr.contains("\"scale_axis\": 1"), "{hdr}");
+        let back = PackedModel::load(&dir).unwrap();
+        assert_eq!(back.layers[0].scales.as_deref(), Some(&ss[..]));
+        assert_eq!(back.dequantize(0).unwrap(), t);
+        match back.layer_view(0).unwrap() {
+            LayerView::Packed { scales, .. } => {
+                assert_eq!(scales, Some(&ss[..]));
+            }
+            LayerView::F32(_) => panic!("expected the packed encoding"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+
+        let dir = tmpdir("per_channel_v3");
+        art.save_chunked(&dir, 1, 1).unwrap();
+        let back = PackedModel::load(&dir).unwrap();
+        assert_eq!(back.layers[0].scales.as_deref(), Some(&ss[..]));
+        assert_eq!(back.dequantize(0).unwrap(), t);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn per_channel_rejects_off_grid_and_bad_scales() {
+        let t = Tensor::new(vec![2, 2], vec![0.3, 0.3, 0.3, 0.3]).unwrap();
+        // off the 0.25/0.5 channel grids
+        assert!(PackedModel::from_per_channel(
+            "pc",
+            "perchannel",
+            0.0,
+            0.0,
+            vec![("fc".to_string(), 4, vec![0.25, 0.5], t.clone())],
+        )
+        .is_err());
+        // arity mismatch: 3 scales for 2 channels
+        assert!(PackedModel::from_per_channel(
+            "pc",
+            "perchannel",
+            0.0,
+            0.0,
+            vec![("fc".to_string(), 4, vec![0.25, 0.5, 0.125], t)],
+        )
+        .is_err());
     }
 }

@@ -72,9 +72,17 @@ impl<'a> PackedHostForward<'a> {
             let pl = &self.artifact.layers[li];
             let nm = (pl.shape[0], pl.shape[1]);
             let weights = match self.artifact.layer_view(li)? {
-                LayerView::Packed { bytes, bits, scale } => {
-                    HostWeights::Packed { bytes, bits, scale }
-                }
+                LayerView::Packed {
+                    bytes,
+                    bits,
+                    scale,
+                    scales,
+                } => HostWeights::Packed {
+                    bytes,
+                    bits,
+                    scale,
+                    scales,
+                },
                 LayerView::F32(t) => HostWeights::Dense(t.data()),
             };
             let bias = self

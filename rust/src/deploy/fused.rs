@@ -46,6 +46,10 @@ pub struct PackedWeight<'a> {
     pub bytes: &'a [u8],
     pub bits: u8,
     pub scale: f32,
+    /// Per-output-channel scales over the last axis (length `m`).
+    /// `None` = per-tensor: every code dequantizes with `scale`.
+    /// `Some` overrides `scale`; column `j` uses `scales[j]`.
+    pub scales: Option<&'a [f32]>,
     /// Input dimension (weight rows).
     pub n: usize,
     /// Output dimension (weight columns).
@@ -95,6 +99,15 @@ pub fn matmul_packed_with(
             pw.bytes.len()
         )));
     }
+    if let Some(ss) = pw.scales {
+        if ss.len() != pw.m {
+            return Err(Error::shape(format!(
+                "fused matmul: {} per-channel scales for {} output channels",
+                ss.len(),
+                pw.m
+            )));
+        }
+    }
     let (n, m) = (pw.n, pw.m);
     out.clear();
     out.resize(rows * m, 0.0);
@@ -118,9 +131,22 @@ pub fn matmul_packed_with(
             let cnt = (t1 - t0) * m;
             bitpack::unpack_range(bytes, bits, t0 * m, &mut codes[..cnt]);
             // same f32 multiply as dequantize_layer_into, then the same
-            // exact widening Mat::from_rows_f32 performs
-            for (wv, &c) in wpanel[..cnt].iter_mut().zip(&codes[..cnt]) {
-                *wv = (s * ((c as i64 + lo) as f32)) as f64;
+            // exact widening Mat::from_rows_f32 performs. Panels start
+            // on whole-row boundaries (t0·m), so within the panel
+            // element k's output channel is simply k % m.
+            match pw.scales {
+                None => {
+                    for (wv, &c) in wpanel[..cnt].iter_mut().zip(&codes[..cnt]) {
+                        *wv = (s * ((c as i64 + lo) as f32)) as f64;
+                    }
+                }
+                Some(ss) => {
+                    for (k, (wv, &c)) in
+                        wpanel[..cnt].iter_mut().zip(&codes[..cnt]).enumerate()
+                    {
+                        *wv = (ss[k % m] * ((c as i64 + lo) as f32)) as f64;
+                    }
+                }
             }
             for (bi, crow) in block.chunks_mut(m).enumerate() {
                 let i = first_row + bi;
@@ -187,7 +213,7 @@ mod tests {
                 (64, 31, 2),
             ] {
                 let (bytes, scale) = random_packed(n, m, bits, 31 * n as u64 + bits as u64);
-                let pw = PackedWeight { bytes: &bytes, bits, scale, n, m };
+                let pw = PackedWeight { bytes: &bytes, bits, scale, scales: None, n, m };
                 let mut act = vec![0.0f32; rows * n];
                 Rng::new(77 + rows as u64).fill_gaussian(&mut act, 0.0, 1.0);
                 let mut got = Vec::new();
@@ -203,7 +229,7 @@ mod tests {
         // big enough to cross MIN_PAR_CHUNK and fan out for real
         let (rows, n, m) = (24, 300, 40);
         let (bytes, scale) = random_packed(n, m, 4, 0xF05);
-        let pw = PackedWeight { bytes: &bytes, bits: 4, scale, n, m };
+        let pw = PackedWeight { bytes: &bytes, bits: 4, scale, scales: None, n, m };
         let mut act = vec![0.0f32; rows * n];
         Rng::new(0xAC7).fill_gaussian(&mut act, 0.0, 0.5);
         let mut seq_out = Vec::new();
@@ -225,14 +251,14 @@ mod tests {
         let codes = vec![1u32 << (bits - 1); n * m];
         let bytes = bitpack::pack(&codes, bits).unwrap();
         let act = vec![1.0f32; 3 * n];
-        let pw = PackedWeight { bytes: &bytes, bits, scale: 0.07, n, m };
+        let pw = PackedWeight { bytes: &bytes, bits, scale: 0.07, scales: None, n, m };
         let mut out = Vec::new();
         matmul_packed_with(&seq, &act, 3, &pw, &mut out).unwrap();
         assert_eq!(out, unfused(&seq, &act, 3, &pw));
         assert!(out.iter().all(|&v| v == 0.0));
         // scale 0 collapses every weight to ±0.0
         let (bytes2, _) = random_packed(n, m, bits, 5);
-        let pw0 = PackedWeight { bytes: &bytes2, bits, scale: 0.0, n, m };
+        let pw0 = PackedWeight { bytes: &bytes2, bits, scale: 0.0, scales: None, n, m };
         let mut out0 = Vec::new();
         matmul_packed_with(&seq, &act, 3, &pw0, &mut out0).unwrap();
         assert_eq!(out0, unfused(&seq, &act, 3, &pw0));
@@ -243,11 +269,72 @@ mod tests {
         let (bytes, scale) = random_packed(4, 4, 4, 1);
         let act = vec![0.0f32; 8];
         let mut out = Vec::new();
-        let bad_bits = PackedWeight { bytes: &bytes, bits: 9, scale, n: 4, m: 4 };
+        let bad_bits =
+            PackedWeight { bytes: &bytes, bits: 9, scale, scales: None, n: 4, m: 4 };
         assert!(matmul_packed_with(&ThreadPool::seq(), &act, 2, &bad_bits, &mut out).is_err());
-        let pw = PackedWeight { bytes: &bytes, bits: 4, scale, n: 4, m: 4 };
+        let pw = PackedWeight { bytes: &bytes, bits: 4, scale, scales: None, n: 4, m: 4 };
         assert!(matmul_packed_with(&ThreadPool::seq(), &act, 3, &pw, &mut out).is_err());
-        let short = PackedWeight { bytes: &bytes[..4], bits: 4, scale, n: 4, m: 4 };
+        let short =
+            PackedWeight { bytes: &bytes[..4], bits: 4, scale, scales: None, n: 4, m: 4 };
         assert!(matmul_packed_with(&ThreadPool::seq(), &act, 2, &short, &mut out).is_err());
+        // per-channel scales must cover every output channel
+        let wrong = vec![0.1f32; 3];
+        let bad_ss = PackedWeight {
+            bytes: &bytes,
+            bits: 4,
+            scale,
+            scales: Some(&wrong),
+            n: 4,
+            m: 4,
+        };
+        assert!(matmul_packed_with(&ThreadPool::seq(), &act, 2, &bad_ss, &mut out).is_err());
+    }
+
+    /// Unfused reference for the per-channel path: dequantize column j
+    /// with scales[j], then the plain widened matmul.
+    fn unfused_per_channel(
+        pool: &ThreadPool,
+        a: &[f32],
+        rows: usize,
+        pw: &PackedWeight<'_>,
+        ss: &[f32],
+    ) -> Vec<f64> {
+        let mut codes = vec![0u32; pw.n * pw.m];
+        bitpack::unpack_into(pw.bytes, pw.bits, &mut codes).unwrap();
+        let lo = -(1i64 << (pw.bits - 1));
+        let w: Vec<f32> = codes
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| ss[i % pw.m] * ((c as i64 + lo) as f32))
+            .collect();
+        let am = Mat::from_rows_f32(rows, pw.n, a).unwrap();
+        let wm = Mat::from_rows_f32(pw.n, pw.m, &w).unwrap();
+        am.matmul_with(pool, &wm).unwrap().data
+    }
+
+    #[test]
+    fn per_channel_fused_matches_unfused_and_parallel() {
+        let (rows, n, m, bits) = (9usize, 130usize, 12usize, 4u8);
+        let (bytes, _) = random_packed(n, m, bits, 0xC0DE);
+        let ss: Vec<f32> = (0..m).map(|j| 0.01 + j as f32 * 0.007).collect();
+        let pw = PackedWeight {
+            bytes: &bytes,
+            bits,
+            scale: ss[0],
+            scales: Some(&ss),
+            n,
+            m,
+        };
+        let mut act = vec![0.0f32; rows * n];
+        Rng::new(0xBEE).fill_gaussian(&mut act, 0.0, 1.0);
+        let seq = ThreadPool::seq();
+        let mut got = Vec::new();
+        matmul_packed_with(&seq, &act, rows, &pw, &mut got).unwrap();
+        let want = unfused_per_channel(&seq, &act, rows, &pw, &ss);
+        assert_eq!(got, want, "per-channel fused must match unfused reference");
+        // and the row-block parallel split must not change a bit
+        let mut par = Vec::new();
+        matmul_packed_with(&ThreadPool::new(4), &act, rows, &pw, &mut par).unwrap();
+        assert_eq!(got, par);
     }
 }

@@ -1,0 +1,382 @@
+//! Chunk manifest for the v3 chunked artifact layout.
+//!
+//! A v3 artifact concatenates contiguous layer-range *chunks* into one
+//! mmap-friendly `qmodel.qpak` file and describes them in
+//! `manifest.json`:
+//!
+//! ```json
+//! {
+//!   "chunks": [
+//!     {"id": 0, "layer_start": 0, "layer_end": 2, "bytes": 4096,
+//!      "checksum": "af63dc4c8601ec8c"},
+//!     {"id": 1, "layer_start": 2, "layer_end": 4, "bytes": 1024,
+//!      "checksum": "…"}
+//!   ],
+//!   "min_runnable_depth": 1
+//! }
+//! ```
+//!
+//! Chunks are contiguous, non-overlapping, gap-free layer ranges in id
+//! order; `bytes` is the chunk's extent in `qmodel.qpak` (chunk `k`
+//! starts at the sum of all earlier chunks' `bytes` — the manifest *is*
+//! the offset table), and `checksum` is the FNV-1a-64 hex digest of that
+//! extent. `min_runnable_depth` counts **chunks**, not layers: a
+//! progressive server may start answering truncated-depth requests once
+//! the first `min_runnable_depth` chunks have verified
+//! ([`crate::deploy::progressive`]).
+//!
+//! Every malformed shape is a typed [`Error::Parse`] so loaders fail
+//! loudly instead of serving a half-wired model: empty chunk lists, zero
+//! or over-depth `min_runnable_depth`, empty per-chunk layer ranges, and
+//! overlapping or gapped ranges are all rejected by [`ArtifactManifest::
+//! validate`]; offset/length/checksum mismatches against the actual
+//! `.qpak` bytes are rejected by the v3 loader in
+//! [`crate::deploy::artifact`].
+
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// File name of the manifest inside an artifact directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// File name of the concatenated chunk payload file.
+pub const QPAK_FILE: &str = "qmodel.qpak";
+
+/// One contiguous layer-range chunk inside `qmodel.qpak`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkEntry {
+    /// Sequential chunk id (== index in [`ArtifactManifest::chunks`]).
+    pub id: usize,
+    /// First layer in the chunk (inclusive).
+    pub layer_start: usize,
+    /// One past the last layer in the chunk (exclusive).
+    pub layer_end: usize,
+    /// Extent of the chunk in `qmodel.qpak`, in bytes.
+    pub bytes: u64,
+    /// FNV-1a-64 hex digest of the chunk's bytes.
+    pub checksum: String,
+}
+
+impl ChunkEntry {
+    /// Number of layers covered by this chunk.
+    pub fn layers(&self) -> usize {
+        self.layer_end.saturating_sub(self.layer_start)
+    }
+}
+
+/// Parsed, validated `manifest.json`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactManifest {
+    /// Chunks in id order; contiguous and gap-free over `0..n_layers`.
+    pub chunks: Vec<ChunkEntry>,
+    /// Minimum number of **chunks** (a model prefix) that must be
+    /// resident before partial-depth serving may begin.
+    pub min_runnable_depth: usize,
+}
+
+impl ArtifactManifest {
+    /// Split `n_layers` into `n_chunks` contiguous, balanced layer
+    /// ranges (earlier chunks take the remainder, so sizes differ by at
+    /// most one layer). `n_chunks` is clamped to `n_layers`.
+    pub fn plan_chunks(n_layers: usize, n_chunks: usize) -> Result<Vec<(usize, usize)>> {
+        if n_layers == 0 {
+            return Err(Error::parse("plan_chunks: model has no layers"));
+        }
+        if n_chunks == 0 {
+            return Err(Error::parse("plan_chunks: chunk count must be > 0"));
+        }
+        let k = n_chunks.min(n_layers);
+        let base = n_layers / k;
+        let extra = n_layers % k;
+        let mut ranges = Vec::with_capacity(k);
+        let mut start = 0usize;
+        for i in 0..k {
+            let len = base + usize::from(i < extra);
+            ranges.push((start, start + len));
+            start += len;
+        }
+        Ok(ranges)
+    }
+
+    /// Structural validation against a model with `n_layers` layers.
+    ///
+    /// Mirrors the reference manifest test matrix: rejects empty chunk
+    /// lists, zero / over-depth `min_runnable_depth`, empty per-chunk
+    /// ranges, out-of-order ids, and overlapping or gapped ranges.
+    pub fn validate(&self, n_layers: usize) -> Result<()> {
+        if self.chunks.is_empty() {
+            return Err(Error::parse("manifest.json: chunks cannot be empty"));
+        }
+        if self.min_runnable_depth == 0 {
+            return Err(Error::parse(
+                "manifest.json: min_runnable_depth must be > 0",
+            ));
+        }
+        if self.min_runnable_depth > self.chunks.len() {
+            return Err(Error::parse(format!(
+                "manifest.json: min_runnable_depth {} exceeds the {} available chunks",
+                self.min_runnable_depth,
+                self.chunks.len()
+            )));
+        }
+        let mut expect_start = 0usize;
+        for (i, c) in self.chunks.iter().enumerate() {
+            if c.id != i {
+                return Err(Error::parse(format!(
+                    "manifest.json: chunk at index {i} has id {} (ids must be sequential)",
+                    c.id
+                )));
+            }
+            if c.layer_end <= c.layer_start {
+                return Err(Error::parse(format!(
+                    "manifest.json: chunk {} covers an empty layer range {}..{}",
+                    c.id, c.layer_start, c.layer_end
+                )));
+            }
+            if c.layer_start != expect_start {
+                return Err(Error::parse(format!(
+                    "manifest.json: chunk {} starts at layer {} but the previous \
+                     chunk ends at {} (ranges must be contiguous, neither \
+                     overlapping nor gapped)",
+                    c.id, c.layer_start, expect_start
+                )));
+            }
+            expect_start = c.layer_end;
+        }
+        if expect_start != n_layers {
+            return Err(Error::parse(format!(
+                "manifest.json: chunks cover layers 0..{expect_start} but the \
+                 model has {n_layers} layers"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Byte offset of chunk `idx` inside `qmodel.qpak` (the manifest's
+    /// `bytes` fields are the offset table).
+    pub fn chunk_offset(&self, idx: usize) -> u64 {
+        self.chunks[..idx].iter().map(|c| c.bytes).sum()
+    }
+
+    /// Total `qmodel.qpak` size implied by the manifest.
+    pub fn total_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.bytes).sum()
+    }
+
+    /// Full model depth (layers) implied by the manifest.
+    pub fn full_depth(&self) -> usize {
+        self.chunks.last().map(|c| c.layer_end).unwrap_or(0)
+    }
+
+    /// Layer depth reached once the first `resident` chunks are loaded.
+    pub fn depth_at(&self, resident: usize) -> usize {
+        if resident == 0 {
+            0
+        } else {
+            self.chunks[resident.min(self.chunks.len()) - 1].layer_end
+        }
+    }
+
+    // ---- JSON codec -------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "chunks",
+                Json::arr(
+                    self.chunks
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("id", Json::num(c.id as f64)),
+                                ("layer_start", Json::num(c.layer_start as f64)),
+                                ("layer_end", Json::num(c.layer_end as f64)),
+                                ("bytes", Json::num(c.bytes as f64)),
+                                ("checksum", Json::str(c.checksum.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "min_runnable_depth",
+                Json::num(self.min_runnable_depth as f64),
+            ),
+        ])
+    }
+
+    /// Parse (without structural validation — callers follow up with
+    /// [`ArtifactManifest::validate`] once the layer count is known).
+    pub fn from_json(j: &Json) -> Result<ArtifactManifest> {
+        let min_runnable_depth = j.get("min_runnable_depth")?.as_usize()?;
+        let mut chunks = Vec::new();
+        for c in j.get("chunks")?.as_arr()? {
+            chunks.push(ChunkEntry {
+                id: c.get("id")?.as_usize()?,
+                layer_start: c.get("layer_start")?.as_usize()?,
+                layer_end: c.get("layer_end")?.as_usize()?,
+                bytes: c.get("bytes")?.as_f64()? as u64,
+                checksum: c.get("checksum")?.as_str()?.to_string(),
+            });
+        }
+        Ok(ArtifactManifest {
+            chunks,
+            min_runnable_depth,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<ArtifactManifest> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    /// Write `manifest.json` into an artifact directory.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(MANIFEST_FILE);
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .map_err(|e| Error::parse(format!("writing {}: {e}", path.display())))?;
+        Ok(())
+    }
+
+    /// Read and parse `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        Self::from_json(&json::parse_file(&dir.join(MANIFEST_FILE))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ArtifactManifest {
+        ArtifactManifest {
+            chunks: vec![
+                ChunkEntry {
+                    id: 0,
+                    layer_start: 0,
+                    layer_end: 2,
+                    bytes: 128,
+                    checksum: "00".repeat(8),
+                },
+                ChunkEntry {
+                    id: 1,
+                    layer_start: 2,
+                    layer_end: 3,
+                    bytes: 64,
+                    checksum: "11".repeat(8),
+                },
+            ],
+            min_runnable_depth: 1,
+        }
+    }
+
+    #[test]
+    fn validates_correct_manifest() {
+        sample().validate(3).unwrap();
+    }
+
+    #[test]
+    fn rejects_empty_chunks() {
+        let m = ArtifactManifest {
+            chunks: Vec::new(),
+            min_runnable_depth: 1,
+        };
+        let e = m.validate(3).unwrap_err().to_string();
+        assert!(e.contains("chunks cannot be empty"), "{e}");
+    }
+
+    #[test]
+    fn rejects_zero_min_runnable_depth() {
+        let mut m = sample();
+        m.min_runnable_depth = 0;
+        let e = m.validate(3).unwrap_err().to_string();
+        assert!(e.contains("min_runnable_depth must be > 0"), "{e}");
+    }
+
+    #[test]
+    fn rejects_over_depth_min_runnable() {
+        let mut m = sample();
+        m.min_runnable_depth = 3;
+        let e = m.validate(3).unwrap_err().to_string();
+        assert!(e.contains("exceeds"), "{e}");
+    }
+
+    #[test]
+    fn rejects_empty_layer_range() {
+        let mut m = sample();
+        m.chunks[1].layer_end = 2; // start == end
+        let e = m.validate(3).unwrap_err().to_string();
+        assert!(e.contains("empty layer range"), "{e}");
+    }
+
+    #[test]
+    fn rejects_overlapping_ranges() {
+        let mut m = sample();
+        m.chunks[1].layer_start = 1; // overlaps chunk 0's 0..2
+        let e = m.validate(3).unwrap_err().to_string();
+        assert!(e.contains("contiguous"), "{e}");
+    }
+
+    #[test]
+    fn rejects_gapped_ranges() {
+        let mut m = sample();
+        m.chunks[1].layer_start = 3;
+        m.chunks[1].layer_end = 4;
+        let e = m.validate(4).unwrap_err().to_string();
+        assert!(e.contains("contiguous"), "{e}");
+    }
+
+    #[test]
+    fn rejects_out_of_order_ids() {
+        let mut m = sample();
+        m.chunks[1].id = 5;
+        let e = m.validate(3).unwrap_err().to_string();
+        assert!(e.contains("sequential"), "{e}");
+    }
+
+    #[test]
+    fn rejects_wrong_total_coverage() {
+        let e = sample().validate(5).unwrap_err().to_string();
+        assert!(e.contains("5 layers"), "{e}");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let m = sample();
+        let back = ArtifactManifest::parse(&m.to_json().to_string_pretty()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn invalid_json_is_a_parse_error() {
+        assert!(ArtifactManifest::parse("{not json").is_err());
+        // structurally valid JSON, wrong schema
+        assert!(ArtifactManifest::parse("{\"chunks\": 3}").is_err());
+        assert!(ArtifactManifest::parse("[]").is_err());
+    }
+
+    #[test]
+    fn offsets_follow_the_bytes_fields() {
+        let m = sample();
+        assert_eq!(m.chunk_offset(0), 0);
+        assert_eq!(m.chunk_offset(1), 128);
+        assert_eq!(m.total_bytes(), 192);
+        assert_eq!(m.full_depth(), 3);
+        assert_eq!(m.depth_at(0), 0);
+        assert_eq!(m.depth_at(1), 2);
+        assert_eq!(m.depth_at(2), 3);
+    }
+
+    #[test]
+    fn plan_chunks_is_balanced_and_contiguous() {
+        assert_eq!(
+            ArtifactManifest::plan_chunks(5, 3).unwrap(),
+            vec![(0, 2), (2, 4), (4, 5)]
+        );
+        assert_eq!(ArtifactManifest::plan_chunks(2, 8).unwrap(), vec![(0, 1), (1, 2)]);
+        assert_eq!(ArtifactManifest::plan_chunks(4, 1).unwrap(), vec![(0, 4)]);
+        assert!(ArtifactManifest::plan_chunks(0, 2).is_err());
+        assert!(ArtifactManifest::plan_chunks(4, 0).is_err());
+    }
+}

@@ -40,17 +40,33 @@
 //!   `backend::host::layer_pass`.
 //! * [`report`] — per-layer and total compression accounting (packed
 //!   vs f32 bytes, effective bits/weight) as table + JSON.
+//! * [`manifest`] — the v3 chunk manifest: contiguous layer-range
+//!   chunks over one concatenated `qmodel.qpak`, per-chunk byte
+//!   extents + FNV checksums, and the `min_runnable_depth` serving
+//!   floor; strict typed-Parse validation (empty chunks, zero/over
+//!   depth, overlap/gap, coverage).
+//! * [`progressive`] — partial-depth serving over a chunked artifact:
+//!   answers at the deepest resident prefix (nearest-class-mean
+//!   readout at chunk boundaries, tagged `depth_served`) while a
+//!   loader thread verifies and hot-swaps chunks in lock-free,
+//!   converging to bit-identical full-depth serving.
 //!
-//! CLI: `repro pack` quantizes and writes an artifact; `repro serve
-//! --artifact <dir>` loads one (with its activation-quant deployment
-//! config) and serves it through the `serve` queue/batcher.
+//! CLI: `repro pack` quantizes and writes an artifact (`--chunks N`
+//! emits the v3 chunked layout); `repro serve --artifact <dir>` loads
+//! one (with its activation-quant deployment config) and serves it
+//! through the `serve` queue/batcher (`--progressive` for
+//! partial-depth serving off a v3 dir).
 
 pub mod artifact;
 pub mod bitpack;
 pub mod dequant;
 pub mod fused;
+pub mod manifest;
+pub mod progressive;
 pub mod report;
 
 pub use artifact::{is_artifact_dir, LayerView, PackedModel};
 pub use dequant::PackedHostForward;
+pub use manifest::{ArtifactManifest, ChunkEntry};
+pub use progressive::{ProgressiveHandle, ProgressiveModel};
 pub use report::{compression_table, summarize, Compression};

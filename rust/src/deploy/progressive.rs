@@ -1,0 +1,515 @@
+//! Progressive partial-depth serving over a chunked (v3) artifact.
+//!
+//! A v2 artifact is all-or-nothing: a fleet worker cannot answer a
+//! single request until every layer is loaded and verified — the
+//! cold-start bottleneck for the million-user north star (ROADMAP
+//! item 2). The v3 chunked layout (`deploy::manifest` +
+//! `PackedModel::save_chunked`) makes layers independently decodable
+//! units, so load order becomes a serving policy:
+//!
+//! * [`ProgressiveModel`] opens the artifact's metadata only
+//!   ([`crate::deploy::artifact::load_v3_meta`]) — no payload reads —
+//!   and exposes a chunk table where each chunk is absent until a
+//!   loader thread verifies it ([`ProgressiveModel::load_chunk`]).
+//! * As soon as the first `min_runnable_depth` chunks are resident the
+//!   model answers **truncated-depth** forwards: features through the
+//!   deepest resident prefix (the exact `layer_pass` chain the packed
+//!   host path runs), global-average-pooled if 4-D, read out through a
+//!   nearest-class-mean head calibrated at that depth from the same
+//!   prototype draw the synthetic head uses (`PROTO_SEED` /
+//!   `PROTO_SAMPLES`). Answers are tagged with the depth that served
+//!   them.
+//! * Remaining chunks hot-swap in lock-free: each chunk slot is a
+//!   write-once cell the loader fills *before* publishing it with a
+//!   single release-store of the resident count. Readers
+//!   acquire-load the count and never block on the loader — no Mutex
+//!   anywhere on the forward path, same reader discipline as
+//!   `PackedHostForward`.
+//!
+//! Once every chunk is resident, a forward is **bit-identical** to
+//! [`crate::deploy::dequant::PackedHostForward`] on the same artifact:
+//! both walk the same payloads through the same `layer_pass` in the
+//! same order (asserted in rust/tests/progressive.rs).
+
+use std::io::{Read as _, Seek, SeekFrom};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use crate::backend::host::{avg_pool, fake_quant_act, layer_pass, HostWeights};
+use crate::backend::host::{PROTO_SAMPLES, PROTO_SEED};
+use crate::backend::PreparedModel;
+use crate::coordinator::model::LoadedModel;
+use crate::data::synth;
+use crate::deploy::artifact::{decode_v3_payload, ChunkedMeta, Payload};
+use crate::quant::observer::ActQuantParams;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::threadpool::{self, ThreadPool};
+
+/// How long a blocked reader naps between residency checks. Short
+/// enough that first-answer latency is dominated by chunk decode, long
+/// enough not to spin a core.
+const WAIT_NAP: Duration = Duration::from_micros(200);
+
+/// Truncated-depth readout calibrated at one chunk boundary:
+/// `W[:,c] = μ_c`, `b_c = −‖μ_c‖²/2` over the prototype draw — the
+/// same closed-form nearest-class-mean head the synthetic model
+/// builder calibrates for the full feature stack.
+struct Head {
+    /// `[features, classes]`, row-major like every layer weight.
+    w: Tensor,
+    /// Per-class bias.
+    b: Vec<f32>,
+}
+
+/// A chunked artifact being served while it loads.
+///
+/// Readers (`forward*`) and the single loader (`load_chunk`, called
+/// with ascending chunk ids from one thread) synchronize only through
+/// `resident`: the loader fills the write-once chunk slot and head
+/// slot first, then release-stores the new resident count; readers
+/// acquire-load the count and touch only slots at indices below it.
+pub struct ProgressiveModel<'a> {
+    pool: &'static ThreadPool,
+    model: &'a LoadedModel,
+    meta: ChunkedMeta,
+    /// `layer → (chunk index, index within that chunk's payload vec)`.
+    layer_chunk: Vec<(usize, usize)>,
+    /// Write-once decoded payloads, one slot per chunk.
+    chunks: Vec<OnceLock<Vec<Payload>>>,
+    /// Write-once partial-depth readouts; slot `k` serves residency
+    /// `k + 1` chunks. The last slot stays empty — full residency uses
+    /// the model's real classifier head.
+    heads: Vec<OnceLock<Head>>,
+    /// Number of verified-resident chunks (monotone 0 → chunk count).
+    resident: AtomicUsize,
+    /// Rows answered at less than full depth (serve telemetry).
+    partial_rows: AtomicU64,
+    /// Set by the loader on a fatal load error so blocked readers fail
+    /// fast instead of waiting forever.
+    failed: AtomicBool,
+}
+
+impl<'a> ProgressiveModel<'a> {
+    /// Validate the chunked metadata against the execution model and
+    /// stage an empty chunk table. Reads no payload bytes.
+    pub fn open(model: &'a LoadedModel, meta: ChunkedMeta) -> Result<Self> {
+        let k = model.num_layers();
+        if meta.layers.len() != k {
+            return Err(Error::shape(format!(
+                "artifact {}: {} layers, model {} has {k}",
+                meta.model,
+                meta.layers.len(),
+                model.info.name
+            )));
+        }
+        for (li, (pl, w)) in meta.layers.iter().zip(&model.weights).enumerate() {
+            if pl.name != model.info.layers[li].name {
+                return Err(Error::shape(format!(
+                    "layer {li}: artifact has {:?}, model has {:?}",
+                    pl.name, model.info.layers[li].name
+                )));
+            }
+            if pl.shape != w.shape() {
+                return Err(Error::shape(format!(
+                    "{}: artifact shape {:?}, model shape {:?}",
+                    pl.name,
+                    pl.shape,
+                    w.shape()
+                )));
+            }
+            if pl.shape.len() != 2 {
+                return Err(Error::shape(format!(
+                    "{}: host backend executes 2-D (conv-as-matmul) weights, \
+                     got {:?} — use the PJRT backend for real checkpoints",
+                    pl.name, pl.shape
+                )));
+            }
+        }
+        let nc = meta.manifest.chunks.len();
+        let mut layer_chunk = vec![(0usize, 0usize); k];
+        for (ci, c) in meta.manifest.chunks.iter().enumerate() {
+            for li in c.layer_start..c.layer_end {
+                layer_chunk[li] = (ci, li - c.layer_start);
+            }
+        }
+        Ok(ProgressiveModel {
+            pool: threadpool::global(),
+            model,
+            meta,
+            layer_chunk,
+            chunks: (0..nc).map(|_| OnceLock::new()).collect(),
+            heads: (0..nc).map(|_| OnceLock::new()).collect(),
+            resident: AtomicUsize::new(0),
+            partial_rows: AtomicU64::new(0),
+            failed: AtomicBool::new(false),
+        })
+    }
+
+    /// The chunked metadata this model serves from.
+    pub fn meta(&self) -> &ChunkedMeta {
+        &self.meta
+    }
+
+    /// Total chunks in the artifact.
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Chunks that must be resident before the first answer.
+    pub fn min_runnable(&self) -> usize {
+        self.meta.manifest.min_runnable_depth
+    }
+
+    /// Verified-resident chunk count right now.
+    pub fn resident_chunks(&self) -> usize {
+        self.resident.load(Ordering::Acquire)
+    }
+
+    /// Layers servable right now (the deepest resident prefix).
+    pub fn resident_depth(&self) -> usize {
+        self.meta.manifest.depth_at(self.resident_chunks())
+    }
+
+    /// The model's full layer depth.
+    pub fn full_depth(&self) -> usize {
+        self.meta.layers.len()
+    }
+
+    /// Rows answered at less than full depth so far.
+    pub fn partial_rows(&self) -> u64 {
+        self.partial_rows.load(Ordering::Relaxed)
+    }
+
+    /// Whether the loader declared a fatal error.
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::Acquire)
+    }
+
+    /// Declare the load failed: blocked readers return an error
+    /// instead of napping forever. Called by the serve-side loader
+    /// when [`ProgressiveModel::load_chunk`] errors.
+    pub fn mark_failed(&self) {
+        self.failed.store(true, Ordering::Release);
+    }
+
+    /// Read, verify, and publish chunk `k` from `qmodel.qpak`. Chunks
+    /// must be loaded in ascending order by a single loader thread —
+    /// `k` must equal the current resident count. For every chunk but
+    /// the last this also calibrates the partial-depth readout head at
+    /// the chunk's boundary *before* publishing, so a reader that
+    /// observes residency `k + 1` always finds its head.
+    pub fn load_chunk(&self, k: usize) -> Result<()> {
+        let rc = self.resident.load(Ordering::Acquire);
+        if k != rc {
+            return Err(Error::invariant(format!(
+                "progressive loader: chunk {k} loaded out of order \
+                 ({rc} chunks resident)"
+            )));
+        }
+        let c = &self.meta.manifest.chunks[k];
+        let off = self.meta.manifest.chunk_offset(k);
+        let len = c.bytes as usize;
+        let mut f = std::fs::File::open(&self.meta.qpak)?;
+        f.seek(SeekFrom::Start(off))?;
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf).map_err(|e| {
+            Error::parse(format!(
+                "qmodel.qpak: chunk {}: reading {len} bytes at offset {off}: \
+                 {e} (truncated?)",
+                c.id
+            ))
+        })?;
+        let sum = format!("{:016x}", crate::deploy::artifact::fnv1a64(&buf));
+        if sum != c.checksum {
+            return Err(Error::parse(format!(
+                "qmodel.qpak: chunk {}: checksum mismatch ({sum} vs manifest {})",
+                c.id, c.checksum
+            )));
+        }
+        let mut payloads = Vec::with_capacity(c.layers());
+        let mut pos = 0usize;
+        for li in c.layer_start..c.layer_end {
+            let n = self.meta.payload_lens[li];
+            payloads.push(decode_v3_payload(&self.meta, li, &buf[pos..pos + n])?);
+            pos += n;
+        }
+        if self.chunks[k].set(payloads).is_err() {
+            return Err(Error::invariant(format!(
+                "progressive loader: chunk {k} published twice"
+            )));
+        }
+        if k + 1 < self.chunks.len() {
+            let head = self.build_head(c.layer_end)?;
+            if self.heads[k].set(head).is_err() {
+                return Err(Error::invariant(format!(
+                    "progressive loader: head {k} published twice"
+                )));
+            }
+        }
+        self.resident.store(k + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Block (napping) until at least `min_runnable_depth` chunks are
+    /// resident; returns the resident count observed.
+    fn wait_runnable(&self) -> Result<usize> {
+        let need = self.min_runnable();
+        loop {
+            if self.is_failed() {
+                return Err(Error::runtime(
+                    "progressive model: chunk loader failed; artifact not servable",
+                ));
+            }
+            let rc = self.resident.load(Ordering::Acquire);
+            if rc >= need {
+                return Ok(rc);
+            }
+            std::thread::sleep(WAIT_NAP);
+        }
+    }
+
+    /// Block (napping) until every chunk is resident.
+    fn wait_full(&self) -> Result<()> {
+        loop {
+            if self.is_failed() {
+                return Err(Error::runtime(
+                    "progressive model: chunk loader failed; artifact not servable",
+                ));
+            }
+            if self.resident.load(Ordering::Acquire) == self.chunks.len() {
+                return Ok(());
+            }
+            std::thread::sleep(WAIT_NAP);
+        }
+    }
+
+    /// Run the first `depth` layers off the resident payloads —
+    /// exactly the `PackedHostForward::run` loop, so full depth is
+    /// bit-identical to the non-progressive packed path.
+    fn run_prefix(
+        &self,
+        x: &Tensor,
+        depth: usize,
+        mut record: Option<&mut Vec<Tensor>>,
+        actq: Option<(&[ActQuantParams], &[u8])>,
+    ) -> Result<Tensor> {
+        let mut cur = x.clone();
+        for li in 0..depth {
+            let layer = &self.model.info.layers[li];
+            let pl = &self.meta.layers[li];
+            let nm = (pl.shape[0], pl.shape[1]);
+            let (ci, within) = self.layer_chunk[li];
+            let payloads = self.chunks[ci].get().ok_or_else(|| {
+                Error::invariant(format!(
+                    "progressive forward: layer {li} read before chunk {ci} resident"
+                ))
+            })?;
+            let weights = match &payloads[within] {
+                Payload::Packed(bytes) => HostWeights::Packed {
+                    bytes,
+                    bits: pl.bits,
+                    scale: pl.scale,
+                    scales: pl.scales.as_deref(),
+                },
+                Payload::F32(t) => HostWeights::Dense(t.data()),
+            };
+            let bias = self
+                .model
+                .biases
+                .get(li)
+                .map(|b| b.data())
+                .unwrap_or(&[]);
+            let tf: Option<Box<dyn Fn(&mut [f32])>> = actq.map(|(params, bits)| {
+                let (p, b) = (params[li], bits[li]);
+                Box::new(move |a: &mut [f32]| fake_quant_act(a, &p, b))
+                    as Box<dyn Fn(&mut [f32])>
+            });
+            // scope the pass so its borrow of `cur` ends before
+            // reassignment
+            let next = {
+                let pass =
+                    layer_pass(self.pool, layer, weights, nm, bias, &cur, tf.as_deref(), true)?;
+                if let Some(rec) = record.as_mut() {
+                    rec.push(Tensor::new(pass.in_shape.clone(), pass.a.to_vec())?);
+                }
+                pass.out.ok_or_else(|| {
+                    Error::invariant("layer_pass(want_out=true) returned no output")
+                })?
+            };
+            cur = next;
+        }
+        Ok(cur)
+    }
+
+    /// Calibrate the nearest-class-mean readout at `depth` layers:
+    /// the synthetic head construction, verbatim, over the features
+    /// the resident prefix produces for the fixed prototype draw.
+    fn build_head(&self, depth: usize) -> Result<Head> {
+        let (imgs, labels) = synth::generate(PROTO_SAMPLES, PROTO_SEED);
+        let mut feats = self.run_prefix(&imgs, depth, None, None)?;
+        if feats.shape().len() == 4 {
+            feats = avg_pool(&feats)?;
+        }
+        let f = feats.shape()[1];
+        let k = self.model.num_layers();
+        let hm = self.model.info.layers[k - 1].wshape[1];
+        let mut sums = vec![0.0f64; f * hm];
+        let mut counts = vec![0usize; hm];
+        for (bi, &lab) in labels.iter().enumerate() {
+            let c = lab as usize % hm;
+            counts[c] += 1;
+            for (j, &v) in feats.data()[bi * f..(bi + 1) * f].iter().enumerate() {
+                sums[j * hm + c] += v as f64;
+            }
+        }
+        let mut wh = vec![0.0f32; f * hm];
+        let mut bh = vec![0.0f32; hm];
+        for c in 0..hm {
+            if counts[c] == 0 {
+                continue;
+            }
+            let inv = 1.0 / counts[c] as f64;
+            let mut norm2 = 0.0f64;
+            for j in 0..f {
+                let mu = sums[j * hm + c] * inv;
+                wh[j * hm + c] = mu as f32;
+                norm2 += mu * mu;
+            }
+            bh[c] = (-0.5 * norm2) as f32;
+        }
+        Ok(Head {
+            w: Tensor::new(vec![f, hm], wh)?,
+            b: bh,
+        })
+    }
+
+    /// Apply the chunk-boundary head to prefix features (pooled if
+    /// 4-D): `logits = f · W + b`, f64 accumulate like `layer_pass`.
+    fn partial_logits(&self, feats: Tensor, rc: usize) -> Result<Tensor> {
+        let head = self.heads[rc - 1].get().ok_or_else(|| {
+            Error::invariant(format!(
+                "progressive forward: no readout head at residency {rc}"
+            ))
+        })?;
+        let feats = if feats.shape().len() == 4 {
+            avg_pool(&feats)?
+        } else {
+            feats
+        };
+        let (rows, f) = (feats.shape()[0], feats.shape()[1]);
+        let hm = head.b.len();
+        if head.w.shape()[0] != f {
+            return Err(Error::shape(format!(
+                "progressive head expects {} features, prefix produces {f}",
+                head.w.shape()[0]
+            )));
+        }
+        let (fd, wd) = (feats.data(), head.w.data());
+        let mut out = vec![0.0f32; rows * hm];
+        for i in 0..rows {
+            let frow = &fd[i * f..(i + 1) * f];
+            let orow = &mut out[i * hm..(i + 1) * hm];
+            for c in 0..hm {
+                let mut acc = head.b[c] as f64;
+                for (j, &v) in frow.iter().enumerate() {
+                    acc += v as f64 * wd[j * hm + c] as f64;
+                }
+                orow[c] = acc as f32;
+            }
+        }
+        Tensor::new(vec![rows, hm], out)
+    }
+
+    /// Forward at an explicit residency (`rc` chunks, all verified
+    /// resident): the deterministic core of progressive serving,
+    /// `pub` so tests can pin a depth. Returns the logits and the
+    /// layer depth that served them.
+    pub fn forward_at_chunks(
+        &self,
+        x: &Tensor,
+        rc: usize,
+        actq: Option<(&[ActQuantParams], &[u8])>,
+    ) -> Result<(Tensor, usize)> {
+        if rc == 0 || rc > self.resident_chunks() {
+            return Err(Error::invariant(format!(
+                "forward_at_chunks: {rc} chunks requested, {} resident",
+                self.resident_chunks()
+            )));
+        }
+        let depth = self.meta.manifest.depth_at(rc);
+        let full = self.full_depth();
+        if depth == full {
+            let logits = self.run_prefix(x, full, None, actq)?;
+            return Ok((logits, full));
+        }
+        let feats = self.run_prefix(x, depth, None, actq)?;
+        let logits = self.partial_logits(feats, rc)?;
+        self.partial_rows
+            .fetch_add(logits.shape()[0] as u64, Ordering::Relaxed);
+        Ok((logits, depth))
+    }
+
+    /// Forward at whatever depth is resident right now, waiting (if
+    /// needed) for the first `min_runnable_depth` chunks. Returns the
+    /// logits and the `depth_served` tag.
+    pub fn forward_with_depth(&self, x: &Tensor) -> Result<(Tensor, usize)> {
+        let rc = self.wait_runnable()?;
+        self.forward_at_chunks(x, rc, None)
+    }
+
+    /// A [`PreparedModel`] view for fleet workers; cheap, one per
+    /// worker.
+    pub fn handle(&'a self) -> ProgressiveHandle<'a> {
+        ProgressiveHandle { pm: self }
+    }
+}
+
+/// Per-worker [`PreparedModel`] over a shared [`ProgressiveModel`] —
+/// the handle `serve::fleet` workers drive. Forwards serve at the
+/// current resident depth; `collect` (capture semantics) waits for
+/// full residency since it must record every layer.
+pub struct ProgressiveHandle<'a> {
+    pm: &'a ProgressiveModel<'a>,
+}
+
+impl PreparedModel for ProgressiveHandle<'_> {
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        Ok(self.pm.forward_with_depth(x)?.0)
+    }
+
+    fn forward_actq(
+        &self,
+        x: &Tensor,
+        act_params: &[ActQuantParams],
+        act_bits: &[u8],
+    ) -> Result<Tensor> {
+        let k = self.pm.full_depth();
+        if act_params.len() != k || act_bits.len() != k {
+            return Err(Error::shape(format!(
+                "expected {k} activation params/bits, got {}/{}",
+                act_params.len(),
+                act_bits.len()
+            )));
+        }
+        let rc = self.pm.wait_runnable()?;
+        Ok(self
+            .pm
+            .forward_at_chunks(x, rc, Some((act_params, act_bits)))?
+            .0)
+    }
+
+    fn collect(&self, x: &Tensor) -> Result<(Vec<Tensor>, Tensor)> {
+        self.pm.wait_full()?;
+        let mut rec = Vec::with_capacity(self.pm.full_depth());
+        let logits = self
+            .pm
+            .run_prefix(x, self.pm.full_depth(), Some(&mut rec), None)?;
+        Ok((rec, logits))
+    }
+
+    fn resident_depth(&self) -> Option<usize> {
+        Some(self.pm.resident_depth())
+    }
+}

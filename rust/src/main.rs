@@ -7,10 +7,12 @@
 //! repro quantize  --model M --wbits B [--abits B] [--method ...]
 //! repro allocate  --model M --bits 3,4,5,6      Algorithm-1 bit allocation
 //! repro pack      --model M [--mixed|--wbits B] [--abits B] [--pack-out D]
+//!                 [--chunks N]                  chunked v3 layout + manifest
 //! repro qat       --model M --steps N           budgeted STE-QAT
 //! repro serve     --requests N [--batch B --max-wait-us U --queue-depth D]
 //!                 [--workers N --deadline-ms D --chaos <scenario|matrix>]
-//! repro serve     --artifact DIR                serve a packed artifact
+//! repro serve     --artifact DIR [--progressive]  serve a packed artifact
+//!                 (progressive streams a chunked v3 artifact in while serving)
 //! repro reproduce <table1..5|fig2|fig3|fig4|fig5|all>
 //! ```
 //!
@@ -75,11 +77,14 @@ fn parser() -> Parser {
         .opt("worker-width", Some("0"), "serve: per-worker inner-parallelism cap (0 = split the pool across the fleet)")
         .opt("workers", Some("1"), "serve: fleet size (supervised workers off the one queue)")
         .opt("deadline-ms", None, "serve: per-request deadline in ms (expired requests are shed, never served stale)")
-        .opt("chaos", None, "serve: fault-injection scenario (worker-crash|slow-consumer|latency-spike|burst|mixed-size) or 'matrix' for all")
+        .opt("chaos", None, "serve: fault-injection scenario (worker-crash|slow-consumer|latency-spike|burst|mixed-size|slow-loader) or 'matrix' for all")
         .opt("artifact", None, "packed artifact dir (serve or evaluate a saved quantized model)")
         .opt("pack-out", None, "pack: artifact output dir (default <out>/qmodels/<model>-<tag>)")
+        .opt("chunks", None, "pack: emit the chunked v3 layout (qmodel.qpak + manifest.json) split into N layer-range chunks")
+        .opt("min-depth", Some("1"), "pack: min_runnable_depth recorded in the chunk manifest (chunks needed before progressive serving answers)")
         .opt("trace", None, "write a Chrome trace-event JSON of this run to the given path (load in Perfetto / chrome://tracing)")
         .flag("mixed", "pack: Algorithm-1 per-layer bits from --bits/--eps2 instead of uniform --wbits")
+        .flag("progressive", "serve: progressively load a chunked (v3) artifact, answering partial-depth while chunks stream in")
         .flag("no-verify", "serve: skip the bit-identity check against direct forward")
         .flag("save", "persist the quantized model under <out>/qmodels/ (packed v2 artifact)")
         .flag("help", "print usage")
@@ -383,7 +388,19 @@ fn cmd_pack(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()
         Ok(d) => PathBuf::from(d),
         Err(_) => state::default_dir(&ctx.out_dir, &model_name, &tag),
     };
-    packed.save(&dir)?;
+    let chunked = a
+        .get("chunks")
+        .ok()
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .map_err(|_| Error::config("bad --chunks"))?;
+    let chunk_manifest = match chunked {
+        Some(n) => Some(packed.save_chunked(&dir, n, a.get_usize("min-depth")?)?),
+        None => {
+            packed.save(&dir)?;
+            None
+        }
+    };
     drop(pack_span);
     println!("{}", deploy::compression_table(&packed).render());
     println!(
@@ -408,6 +425,17 @@ fn cmd_pack(artifacts: &str, a: &attention_round::util::args::Args) -> Result<()
         summary.ratio,
         summary.effective_bits
     );
+    if let Some(m) = &chunk_manifest {
+        println!(
+            "chunked artifact: {} chunks over {} layers, min_runnable_depth {}, \
+             {} qpak bytes ({})",
+            m.chunks.len(),
+            m.full_depth(),
+            m.min_runnable_depth,
+            m.total_bytes(),
+            dir.join("manifest.json").display()
+        );
+    }
     Ok(())
 }
 
@@ -583,6 +611,48 @@ fn cmd_serve(artifacts: &str, a: &attention_round::util::args::Args) -> Result<(
                  single scenario name with --artifact",
             ));
         }
+        if a.has_flag("progressive") {
+            // the chunked artifact carries its own deployment config and
+            // the progressive model applies it; an --abits override would
+            // deploy a different model than the operator packed
+            if a.get("abits").is_ok() {
+                return Err(Error::config(
+                    "--abits conflicts with --progressive: the chunked artifact \
+                     already carries its deployment config (re-pack with a \
+                     different --abits instead)",
+                ));
+            }
+            println!(
+                "serving {requests} requests ({producers} producers) progressively \
+                 from chunked artifact {dir} on [{}], batch ≤{} / wait {}µs / queue {}",
+                ctx.backend.platform(),
+                cfg.max_batch,
+                cfg.max_wait.as_micros(),
+                cfg.queue_depth
+            );
+            let report = serve::run_progressive_load_generator(
+                ctx.backend.as_ref(),
+                &ctx.manifest,
+                std::path::Path::new(dir),
+                &cfg,
+                requests,
+                producers,
+            )?;
+            print_serve_report(&ctx, &report)?;
+            print_chaos_verdict(&cfg, &report)?;
+            if cfg.verify {
+                println!(
+                    "verified: converged progressive outputs bit-identical to \
+                     the dequantized direct forward"
+                );
+            }
+            println!(
+                "progressive: converged to full depth {} ({} partial-depth rows served)",
+                report.resident_depth, report.depth_served_partial
+            );
+            println!("{}", shutdown_line(&report));
+            return Ok(());
+        }
         let art = deploy::PackedModel::load(std::path::Path::new(dir))?;
         if let Ok(s) = a.get("abits") {
             // A saved W+A artifact already carries its deployment
@@ -635,6 +705,11 @@ fn cmd_serve(artifacts: &str, a: &attention_round::util::args::Args) -> Result<(
         return Ok(());
     }
 
+    if a.has_flag("progressive") {
+        return Err(Error::config(
+            "--progressive needs --artifact DIR (a chunked v3 artifact)",
+        ));
+    }
     let model_name = pick_model(&ctx, a)?;
     if let Ok(s) = a.get("abits") {
         let abits: u8 = s.parse().map_err(|_| Error::config("bad --abits"))?;

@@ -51,6 +51,7 @@ pub const SCENARIOS: &[&str] = &[
     "latency-spike",
     "burst",
     "mixed-size",
+    "slow-loader",
 ];
 
 /// How load-generator producers pace their submissions.
@@ -92,6 +93,11 @@ pub struct ChaosSpec {
     /// batch by shape (never error a well-formed request for sharing a
     /// pop with a different-sized neighbour).
     pub mixed_sizes: bool,
+    /// Sleep injected before each progressive chunk load — models a
+    /// slow artifact store so the fleet must answer partial-depth
+    /// requests for a while before full-depth convergence (only
+    /// meaningful under `serve --artifact --progressive`).
+    pub chunk_load_delay: Duration,
     /// Per-request deadline this scenario runs under (applied when the
     /// operator didn't pass `--deadline-ms` explicitly).
     pub deadline: Option<Duration>,
@@ -110,6 +116,7 @@ impl ChaosSpec {
             spike_every: 0,
             spike: Duration::ZERO,
             collector_delay: Duration::ZERO,
+            chunk_load_delay: Duration::ZERO,
             arrivals: Arrivals::Greedy,
             mixed_sizes: false,
             deadline: None,
@@ -160,6 +167,15 @@ impl ChaosSpec {
             // serve both sizes correctly (zero errors)
             "mixed-size" => ChaosSpec {
                 mixed_sizes: true,
+                ..base
+            },
+            // chunks arrive slowly from the artifact store: the fleet
+            // must answer truncated-depth requests while loading, then
+            // converge to full depth (a plain non-progressive run
+            // ignores the delay and serves normally)
+            "slow-loader" => ChaosSpec {
+                chunk_load_delay: Duration::from_millis(25),
+                arrivals: Arrivals::Poisson { rps: 600.0 },
                 ..base
             },
             other => {

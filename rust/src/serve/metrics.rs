@@ -51,6 +51,11 @@ struct MetricsInner {
     expired: u64,
     errors: u64,
     restarts: u64,
+    /// Deepest resident layer prefix observed (progressive serving;
+    /// stays 0 on non-progressive runs).
+    resident_depth_max: u64,
+    /// Rows answered at less than full depth (progressive serving).
+    partial_rows: u64,
 }
 
 /// Shared collector: producers record admission samples, workers record
@@ -140,6 +145,22 @@ impl ServeMetrics {
         self.inner.lock().unwrap().restarts += 1;
     }
 
+    /// The resident layer depth a worker (or the progressive loader)
+    /// observed — monotone max into the run total, and bucketed into
+    /// the timeline so depth convergence is visible per second.
+    pub fn record_resident_depth(&self, depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.resident_depth_max = g.resident_depth_max.max(depth as u64);
+        let sec = g.timeline.now_sec();
+        g.timeline.record_resident_depth(sec, depth);
+    }
+
+    /// Rows answered at less than full depth (reported once by the
+    /// progressive driver at shutdown).
+    pub fn record_partial_rows(&self, rows: u64) {
+        self.inner.lock().unwrap().partial_rows += rows;
+    }
+
     /// Summarize into a report. `workers` is the fleet size; `wall_s` is
     /// the whole run's wall clock (throughput = completed / wall).
     pub fn report(
@@ -194,6 +215,8 @@ impl ServeMetrics {
             batches,
             worker_batches,
             padded_rows: g.padded_rows,
+            resident_depth: g.resident_depth_max,
+            depth_served_partial: g.partial_rows,
             batch_mean,
             batch_max,
             depth_mean,
@@ -241,6 +264,11 @@ pub struct ServeReport {
     pub worker_batches: Vec<u64>,
     /// Zero pad rows executed across all batches.
     pub padded_rows: u64,
+    /// Deepest resident layer prefix observed (0 = non-progressive run;
+    /// equals the model's full depth once a progressive run converges).
+    pub resident_depth: u64,
+    /// Rows answered at less than full depth (0 = non-progressive run).
+    pub depth_served_partial: u64,
     pub batch_mean: f64,
     pub batch_max: u64,
     pub depth_mean: f64,
@@ -300,6 +328,8 @@ impl ServeReport {
                 "    \"batches\": {},\n",
                 "    \"worker_batches\": [{}],\n",
                 "    \"padded_rows\": {},\n",
+                "    \"resident_depth\": {},\n",
+                "    \"depth_served_partial\": {},\n",
                 "    \"batch_size_mean\": {:e},\n",
                 "    \"batch_size_max\": {},\n",
                 "    \"queue_depth_mean\": {:e},\n",
@@ -327,6 +357,8 @@ impl ServeReport {
             self.batches,
             worker_batches,
             self.padded_rows,
+            self.resident_depth,
+            self.depth_served_partial,
             self.batch_mean,
             self.batch_max,
             self.depth_mean,
@@ -383,6 +415,17 @@ impl ServeReport {
             ),
             ("padded rows", self.padded_rows.to_string()),
             (
+                "resident depth (progressive)",
+                if self.resident_depth == 0 {
+                    "n/a".into()
+                } else {
+                    format!(
+                        "{} ({} partial-depth rows)",
+                        self.resident_depth, self.depth_served_partial
+                    )
+                },
+            ),
+            (
                 "batch size mean/max",
                 format!("{:.2} / {}", self.batch_mean, self.batch_max),
             ),
@@ -435,6 +478,9 @@ mod tests {
         m.record_expired();
         m.record_error();
         m.record_restart();
+        m.record_resident_depth(2);
+        m.record_resident_depth(3);
+        m.record_partial_rows(5);
         m
     }
 
@@ -451,6 +497,8 @@ mod tests {
         assert_eq!(r.batches, 2);
         assert_eq!(r.worker_batches, vec![1, 1]);
         assert_eq!(r.padded_rows, 12);
+        assert_eq!(r.resident_depth, 3, "resident depth is a monotone max");
+        assert_eq!(r.depth_served_partial, 5);
         assert_eq!(r.batch_max, 16);
         assert!((r.batch_mean - 10.0).abs() < 1e-9);
         assert_eq!(r.depth_max, 9);
@@ -529,6 +577,7 @@ mod tests {
                 "batch_size_mean",
                 "batches",
                 "completed",
+                "depth_served_partial",
                 "errors",
                 "expired",
                 "latency_s",
@@ -540,6 +589,7 @@ mod tests {
                 "queue_depth_mean",
                 "rejected",
                 "rejected_final",
+                "resident_depth",
                 "restarts",
                 "submitted",
                 "throughput_rps",

@@ -55,6 +55,7 @@ pub mod metrics;
 pub mod queue;
 pub mod worker;
 
+use std::path::Path;
 use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -63,6 +64,7 @@ use std::time::{Duration, Instant};
 use crate::backend::{Backend, PreparedModel};
 use crate::data::synth;
 use crate::deploy::artifact::PackedModel;
+use crate::deploy::progressive::ProgressiveModel;
 use crate::io::manifest::{DatasetInfo, Manifest};
 use crate::quant::observer::ActQuantParams;
 use crate::tensor::Tensor;
@@ -539,6 +541,162 @@ pub fn run_artifact_load_generator(
     Ok(serve_metrics.report(
         backend.name(),
         &artifact.model,
+        cfg.max_batch.max(1),
+        cfg.queue_depth.max(1),
+        workers,
+        wall_s,
+    ))
+}
+
+/// Serve a **chunked (v3) artifact progressively** (`repro serve
+/// --artifact <dir> --progressive`): open the manifest only, start the
+/// fleet immediately, and stream chunks in on a loader thread while
+/// workers answer. Requests arriving before full residency are served
+/// at the deepest resident prefix (partial depth, nearest-class-mean
+/// readout); once every chunk verifies, serving is bit-identical to
+/// the non-progressive packed path — checked post-convergence against
+/// [`Backend::prepare_artifact`] when `cfg.verify` is set (per-answer
+/// verification is impossible mid-load: a partial-depth answer is
+/// *supposed* to differ from the full-depth forward).
+///
+/// The chaos `slow-loader` scenario injects `chunk_load_delay` before
+/// each chunk so the partial-depth phase is long enough to observe;
+/// chunk loads are traced as `chunk:load:<id>` spans on the
+/// `chunk-loader` lane and the resident depth lands in the metrics
+/// timeline per second.
+pub fn run_progressive_load_generator(
+    backend: &dyn Backend,
+    manifest: &Manifest,
+    artifact_dir: &Path,
+    cfg: &ServeConfig,
+    total: usize,
+    producers: usize,
+) -> Result<ServeReport> {
+    if total == 0 {
+        return Err(Error::config("serve: need at least one request"));
+    }
+    if !backend.supports_progressive() {
+        return Err(Error::config(format!(
+            "serve: backend {:?} does not support progressive artifact \
+             serving (host only for now)",
+            backend.name()
+        )));
+    }
+    let producers = producers.clamp(1, total);
+    let meta = crate::deploy::artifact::load_v3_meta(artifact_dir)?;
+    let model = backend.load_model(manifest, &meta.model)?;
+    let mut cfg = cfg.clone();
+    if let Some(actq) = meta.deployment_actq()? {
+        cfg.actq = Some(actq);
+    }
+    let (workers, width) = resolve_topology(backend, &cfg);
+    let pm = ProgressiveModel::open(&model, meta)?;
+    let chunk_delay = cfg
+        .chaos
+        .as_ref()
+        .map_or(Duration::ZERO, |c| c.chunk_load_delay);
+    let mixed = cfg.chaos.as_ref().is_some_and(|c| c.mixed_sizes);
+    let samples = gen_request_inputs(total, &manifest.dataset, mixed)?;
+    let serve_metrics = ServeMetrics::new();
+    let t0 = Instant::now();
+    let (responses, loader_res) = std::thread::scope(|s| {
+        let loader = s.spawn(|| -> Result<()> {
+            trace::set_thread_label("chunk-loader");
+            for k in 0..pm.chunk_count() {
+                if !chunk_delay.is_zero() {
+                    // chaos slow-loader: the artifact store is slow
+                    std::thread::sleep(chunk_delay);
+                }
+                let span = trace::span(Category::Serve, format!("chunk:load:{k}"));
+                let r = pm.load_chunk(k);
+                drop(span);
+                if let Err(e) = r {
+                    // wake blocked readers with an error instead of a
+                    // forever-nap
+                    pm.mark_failed();
+                    return Err(e);
+                }
+                serve_metrics.record_resident_depth(pm.resident_depth());
+            }
+            Ok(())
+        });
+        let prepareds: Vec<Box<dyn PreparedModel + '_>> = (0..workers)
+            .map(|_| Box::new(pm.handle()) as Box<dyn PreparedModel + '_>)
+            .collect();
+        let responses = run_session(
+            &prepareds,
+            &samples,
+            &cfg,
+            width,
+            producers,
+            &serve_metrics,
+        );
+        let loader_res = match loader.join() {
+            Ok(r) => r,
+            Err(_) => Err(Error::runtime("progressive chunk loader panicked")),
+        };
+        (responses, loader_res)
+    });
+    loader_res?;
+    if cfg.chaos.is_none() && cfg.deadline.is_none() {
+        // fault-free run: every request must have been answered (at
+        // some depth) — progressive loading is not a license to drop
+        if let Some(i) = responses.iter().position(|r| r.is_none()) {
+            return Err(Error::invariant(format!(
+                "progressive serve: request {i} got no successful response"
+            )));
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    if pm.resident_chunks() != pm.chunk_count() {
+        return Err(Error::invariant(format!(
+            "progressive serve: loader finished with {}/{} chunks resident",
+            pm.resident_chunks(),
+            pm.chunk_count()
+        )));
+    }
+    // final state into the run totals: full depth + how much traffic
+    // was answered below it
+    serve_metrics.record_resident_depth(pm.resident_depth());
+    serve_metrics.record_partial_rows(pm.partial_rows());
+    if cfg.verify {
+        // post-convergence probe: with every chunk resident, the
+        // progressive forward must be bit-identical to the staged
+        // artifact path on the same samples
+        let artifact = PackedModel::load(artifact_dir)?;
+        let mut staged = Vec::new();
+        let direct = backend.prepare_artifact(&model, &artifact, &mut staged)?;
+        for sample in samples.iter().take(4) {
+            let mut shape = vec![1];
+            shape.extend(sample.shape().iter().copied());
+            let x = sample.clone().reshape(shape)?;
+            let rc = pm.chunk_count();
+            let (got, depth) = pm.forward_at_chunks(
+                &x,
+                rc,
+                cfg.actq.as_ref().map(|(p, b)| (p.as_slice(), b.as_slice())),
+            )?;
+            if depth != pm.full_depth() {
+                return Err(Error::invariant(
+                    "progressive serve: converged forward not at full depth",
+                ));
+            }
+            let want = match &cfg.actq {
+                Some((params, bits)) => direct.forward_actq(&x, params, bits)?,
+                None => direct.forward(&x)?,
+            };
+            if got.shape() != want.shape() || got.data() != want.data() {
+                return Err(Error::invariant(
+                    "progressive serve: converged forward is not bit-identical \
+                     to the packed artifact path",
+                ));
+            }
+        }
+    }
+    let model_name = pm.meta().model.clone();
+    Ok(serve_metrics.report(
+        backend.name(),
+        &model_name,
         cfg.max_batch.max(1),
         cfg.queue_depth.max(1),
         workers,

@@ -199,6 +199,11 @@ pub fn run_worker(
                 Ok(logits) => {
                     let requests = guard.take();
                     metrics.record_batch(worker_id, requests.len(), padded);
+                    // progressive handles report the live resident
+                    // prefix — the depth that served this batch
+                    if let Some(depth) = prepared.resident_depth() {
+                        metrics.record_resident_depth(depth);
+                    }
                     for (i, r) in requests.into_iter().enumerate() {
                         match logits.slice_axis0(i, 1) {
                             Ok(row) => {

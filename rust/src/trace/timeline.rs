@@ -37,6 +37,7 @@ struct Bucket {
     batches: u64,
     batch_rows: u64,
     padded_rows: u64,
+    resident_depth_max: u64,
     worker_batches: Vec<u64>,
     latencies_s: Vec<f64>,
 }
@@ -104,6 +105,13 @@ impl Timeline {
         b.depth_max = b.depth_max.max(depth as u64);
     }
 
+    /// Resident layer depth observed this second (progressive serving);
+    /// buckets keep the max so the depth ramp is visible per second.
+    pub fn record_resident_depth(&mut self, sec: u64, depth: usize) {
+        let b = self.bucket(sec);
+        b.resident_depth_max = b.resident_depth_max.max(depth as u64);
+    }
+
     pub fn record_batch(&mut self, sec: u64, worker_id: usize, real: usize, padded: usize) {
         let b = self.bucket(sec);
         b.batches += 1;
@@ -151,6 +159,7 @@ impl Timeline {
                         b.batch_rows as f64 / b.batches as f64
                     },
                     padded_rows: b.padded_rows,
+                    resident_depth: b.resident_depth_max,
                     worker_batches,
                     latency_p50_s: percentile(&b.latencies_s, 50.0),
                     latency_p99_s: percentile(&b.latencies_s, 99.0),
@@ -188,6 +197,9 @@ pub struct BucketReport {
     pub batches: u64,
     pub batch_fill_mean: f64,
     pub padded_rows: u64,
+    /// Deepest resident layer prefix observed this second (progressive
+    /// serving; 0 on non-progressive runs).
+    pub resident_depth: u64,
     pub worker_batches: Vec<u64>,
     pub latency_p50_s: f64,
     pub latency_p99_s: f64,
@@ -240,6 +252,7 @@ impl TimelineReport {
                  \"rejected_final\": {}, \"expired\": {}, \"errors\": {}, \
                  \"queue_depth_mean\": {:.3}, \"queue_depth_max\": {}, \
                  \"batches\": {}, \"batch_fill_mean\": {:.3}, \"padded_rows\": {}, \
+                 \"resident_depth\": {}, \
                  \"worker_batches\": [{}], \"latency_p50_s\": {:.6}, \
                  \"latency_p99_s\": {:.6}}}{}\n",
                 b.second,
@@ -253,6 +266,7 @@ impl TimelineReport {
                 b.batches,
                 b.batch_fill_mean,
                 b.padded_rows,
+                b.resident_depth,
                 workers,
                 b.latency_p50_s,
                 b.latency_p99_s,
@@ -289,6 +303,8 @@ mod tests {
         t.record_depth(0, 2);
         t.record_depth(0, 4);
         t.record_batch(0, 0, 2, 1);
+        t.record_resident_depth(0, 1);
+        t.record_resident_depth(0, 2);
         t.record_completed(0, 0.010);
         t.record_completed(0, 0.030);
         // second 2: the straggler expires, one more submit+error
@@ -307,6 +323,8 @@ mod tests {
         assert_eq!(r.buckets[0].batches, 1);
         assert!((r.buckets[0].queue_depth_mean - 3.0).abs() < 1e-12);
         assert_eq!(r.buckets[0].queue_depth_max, 4);
+        assert_eq!(r.buckets[0].resident_depth, 2, "bucket keeps the depth max");
+        assert_eq!(r.buckets[1].resident_depth, 0);
         assert_eq!(r.buckets[1].submitted, 0);
         assert_eq!(r.buckets[2].expired, 1);
         assert_eq!(r.buckets[2].errors, 1);
@@ -379,6 +397,7 @@ mod tests {
                 "queue_depth_max",
                 "queue_depth_mean",
                 "rejected_final",
+                "resident_depth",
                 "second",
                 "submitted",
                 "worker_batches",
